@@ -1,0 +1,45 @@
+//! Non-IID federation: sweep Nc (classes per client) and compare FedAvg vs
+//! T-FedAvg — the paper's §V-C experiment at example scale.
+//!
+//!     cargo run --release --example non_iid_clients
+
+use std::sync::Arc;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::run_experiment;
+use tfed::runtime::manifest::default_artifacts_dir;
+use tfed::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let have_artifacts = default_artifacts_dir().join("manifest.json").exists();
+    let engine = if have_artifacts {
+        Some(Arc::new(Engine::load(default_artifacts_dir())?))
+    } else {
+        eprintln!("artifacts/ missing -> native backend");
+        None
+    };
+
+    println!("== non-IID sweep (Nc = classes per client) ==");
+    println!("{:>4} {:>12} {:>12}", "Nc", "FedAvg", "T-FedAvg");
+    for nc in [2usize, 5, 10] {
+        let mut row = Vec::new();
+        for protocol in [Protocol::FedAvg, Protocol::TFedAvg] {
+            let mut cfg = ExperimentConfig::table2(protocol, Task::MnistLike, 11);
+            cfg.nc = nc;
+            cfg.rounds = 12;
+            cfg.train_samples = 4_000;
+            cfg.test_samples = 1_000;
+            cfg.native_backend = engine.is_none();
+            let backend =
+                make_backend(engine.clone(), "mlp", cfg.batch, engine.is_none())?;
+            let m = run_experiment(cfg, backend.as_ref())?;
+            row.push(m.best_acc());
+        }
+        println!("{:>4} {:>12.4} {:>12.4}", nc, row[0], row[1]);
+    }
+    println!();
+    println!("expected shape (paper Fig. 8): accuracy degrades as Nc shrinks;");
+    println!("T-FedAvg tracks FedAvg within noise at every Nc.");
+    Ok(())
+}

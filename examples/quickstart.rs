@@ -1,0 +1,63 @@
+//! Quickstart: train a federated MLP with T-FedAvg on the MNIST-like task
+//! and print the learning curve + communication costs.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Uses the PJRT backend when `artifacts/` is built, otherwise falls back
+//! to the pure-Rust native backend so the example always runs.
+
+use std::sync::Arc;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::Orchestrator;
+use tfed::metrics::mb;
+use tfed::runtime::manifest::default_artifacts_dir;
+use tfed::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 7);
+    cfg.rounds = 15;
+    cfg.train_samples = 4_000;
+    cfg.test_samples = 1_000;
+
+    let have_artifacts = default_artifacts_dir().join("manifest.json").exists();
+    let backend = if have_artifacts {
+        let engine = Arc::new(Engine::load(default_artifacts_dir())?);
+        make_backend(Some(engine), "mlp", cfg.batch, false)?
+    } else {
+        eprintln!("artifacts/ missing -> native backend (run `make artifacts` for PJRT)");
+        cfg.native_backend = true;
+        make_backend(None, "mlp", cfg.batch, true)?
+    };
+
+    println!("== T-FedAvg quickstart ==");
+    println!("{}", cfg.summary());
+    println!();
+    println!("{:>5} {:>12} {:>10} {:>12} {:>12}", "round", "train_loss", "test_acc", "up (KB)", "down (KB)");
+
+    let mut orch = Orchestrator::new(cfg, backend.as_ref())?;
+    for r in 1..=orch.cfg.rounds {
+        let rec = orch.round(r)?;
+        println!(
+            "{:>5} {:>12.4} {:>10.4} {:>12.1} {:>12.1}",
+            rec.round,
+            rec.train_loss,
+            rec.test_acc,
+            rec.up_bytes as f64 / 1024.0,
+            rec.down_bytes as f64 / 1024.0
+        );
+    }
+
+    let m = &orch.metrics;
+    println!();
+    println!("final accuracy : {:.4}", m.final_acc());
+    println!("best accuracy  : {:.4}", m.best_acc());
+    println!("total upstream : {:.2} MB", mb(m.total_up_bytes()));
+    println!("total downstream: {:.2} MB", mb(m.total_down_bytes()));
+    println!(
+        "(FedAvg would have moved ~16x more: {:.2} MB each way)",
+        mb(m.total_up_bytes() * 16)
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! The paper's motivating scenario (Fig. 2): branch factories with very
+//! different data volumes (unbalanced beta, eq. 29) and flaky connectivity
+//! (client dropout), training a shared model with T-FedAvg.
+//!
+//!     cargo run --release --example unbalanced_factories
+
+use std::sync::Arc;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::{FaultSpec, Orchestrator};
+use tfed::runtime::manifest::default_artifacts_dir;
+use tfed::runtime::Engine;
+use tfed::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let engine = if default_artifacts_dir().join("manifest.json").exists() {
+        Some(Arc::new(Engine::load(default_artifacts_dir())?))
+    } else {
+        eprintln!("artifacts/ missing -> native backend");
+        None
+    };
+
+    println!("== unbalanced factories (beta sweep + 20% dropout) ==");
+    println!(
+        "{:>6} {:>14} {:>10} {:>10}",
+        "beta", "shard sizes", "meas.beta", "best_acc"
+    );
+    for beta in [0.1, 0.4, 1.0] {
+        let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 31);
+        cfg.n_clients = 8;
+        cfg.beta = beta;
+        cfg.rounds = 12;
+        cfg.train_samples = 4_000;
+        cfg.test_samples = 1_000;
+        cfg.native_backend = engine.is_none();
+        let backend =
+            make_backend(engine.clone(), "mlp", cfg.batch, engine.is_none())?;
+        let mut orch = Orchestrator::with_faults(
+            cfg,
+            backend.as_ref(),
+            FaultSpec { client_dropout: 0.2 },
+        )?;
+        let sizes = orch.shard_sizes();
+        let measured = stats::unbalancedness(&sizes);
+        orch.run()?;
+        let sizes_str = format!("{}..{}", sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        println!(
+            "{:>6.1} {:>14} {:>10.3} {:>10.4}",
+            beta,
+            sizes_str,
+            measured,
+            orch.metrics.best_acc()
+        );
+    }
+    println!();
+    println!("expected shape (paper Fig. 11): accuracy is flat in beta —");
+    println!("unbalanced data sizes alone do not hurt federated training.");
+    Ok(())
+}

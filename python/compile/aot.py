@@ -1,0 +1,195 @@
+"""AOT entry point: lower every training/eval/quantize graph to HLO text.
+
+Run once at build time (`make artifacts`); the Rust coordinator is
+self-contained afterwards. Python never appears on the request path.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: the xla
+crate links xla_extension 0.5.1 which rejects jax>=0.5 protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<name>.hlo.txt   one per (model x mode x batch) + eval + quantize
+  artifacts/manifest.json    models, parameter layouts, artifact I/O specs —
+                             the single source of truth the Rust runtime loads
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import optim as optim_mod
+from . import train as train_mod
+from .models import MODELS, ModelDef
+
+# Paper hyperparameters (Table I + section III defaults).
+T_K = 0.05            # client threshold hyperparameter T_k (eq. 8)
+SERVER_DELTA = 0.05   # fixed downstream re-quantization threshold (Alg. 2)
+WQ_GRAD = "paper"     # Algorithm 1 gradient rule (ablation: "symmetric")
+WQ_INIT = 0.05        # per-layer w^q initialization (Alg. 2 "initialize w^q")
+
+# Per-model artifact plan. `train_batches` maps B -> NB (samples per
+# epoch-chunk call = B*NB); Fig. 7 sweeps B. Learning rates are presets for
+# the synthetic datasets (paper values kept in the comment).
+MODEL_PLAN = {
+    "mlp": {
+        "optimizer": "sgd",          # paper: SGD, lr 1e-4 on 60k MNIST
+        "default_lr": 0.05,
+        "train_batches": {16: 64, 32: 32, 64: 16, 128: 8},
+        "eval_batch": (128, 8),
+    },
+    "resnetlite": {
+        "optimizer": "adam",         # paper: Adam, lr 8e-3 on CIFAR10
+        "default_lr": 0.002,
+        "train_batches": {16: 32, 32: 16, 64: 8},
+        "eval_batch": (128, 4),
+    },
+}
+
+MODES = ("fp", "fttq", "ttq")
+
+_DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+
+
+def _to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _arg_specs(in_spec):
+    out = []
+    for s in in_spec:
+        dt = _DTYPES[s.get("dtype", "f32")]
+        out.append(jax.ShapeDtypeStruct(tuple(s["shape"]), dt))
+    return out
+
+
+def _norm_spec(spec):
+    """Fill in default dtype so the manifest is explicit."""
+    return [{"name": s["name"], "shape": list(s["shape"]),
+             "dtype": s.get("dtype", "f32"),
+             **({"quantized": True} if s.get("quantized") else {})}
+            for s in spec]
+
+
+def _build(model: ModelDef, mode: str, optimizer, batch: int, nb: int):
+    if mode == "fp":
+        return train_mod.build_fp_train_epoch(model, optimizer, batch, nb)
+    if mode == "fttq":
+        return train_mod.build_fttq_train_epoch(
+            model, optimizer, batch, nb, t=T_K, wq_grad=WQ_GRAD)
+    if mode == "ttq":
+        return train_mod.build_ttq_train_epoch(model, optimizer, batch, nb, t=T_K)
+    raise ValueError(mode)
+
+
+def emit(out_dir: str, models=None, quick: bool = False,
+         verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "t_k": T_K,
+        "server_delta": SERVER_DELTA,
+        "wq_grad": WQ_GRAD,
+        "wq_init": WQ_INIT,
+        "models": {},
+        "artifacts": {},
+    }
+    model_names = models or list(MODEL_PLAN)
+
+    def put(name, kind, model_name, mode, batch, nb, fn, in_spec, out_spec):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*_arg_specs(in_spec))
+        text = _to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "kind": kind,
+            "model": model_name,
+            "mode": mode,
+            "batch": batch,
+            "nb": nb,
+            "inputs": _norm_spec(in_spec),
+            "outputs": _norm_spec(out_spec),
+        }
+        if verbose:
+            print(f"  {name:<40} {len(text) / 1e6:6.2f} MB hlo  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    for mname in model_names:
+        plan = MODEL_PLAN[mname]
+        model = MODELS[mname]
+        optimizer = optim_mod.make(plan["optimizer"])
+        spec = _norm_spec(model.spec())
+        n_q = model.num_quantized()
+        wq_spec = [{"name": "wq", "shape": [n_q], "dtype": "f32"}]
+        ttq_spec = [{"name": "wp", "shape": [n_q], "dtype": "f32"},
+                    {"name": "wn", "shape": [n_q], "dtype": "f32"}]
+        manifest["models"][mname] = {
+            "input_dim": model.input_dim,
+            "num_classes": model.num_classes,
+            "optimizer": plan["optimizer"],
+            "default_lr": plan["default_lr"],
+            "params": spec,
+            "num_quantized": n_q,
+            "opt_state_fp": _norm_spec(optimizer.state_spec(model.spec())),
+            "opt_state_fttq": _norm_spec(
+                optimizer.state_spec(model.spec() + wq_spec)),
+            "opt_state_ttq": _norm_spec(
+                optimizer.state_spec(model.spec() + ttq_spec)),
+        }
+        if verbose:
+            print(f"model {mname}: {model.param_count()} params", flush=True)
+
+        batches = plan["train_batches"]
+        if quick:
+            # smallest batch only, tiny chunk — for fast test builds
+            b = min(batches)
+            batches = {b: 2}
+        for batch, nb in sorted(batches.items()):
+            for mode in MODES:
+                fn, ins, outs = _build(model, mode, optimizer, batch, nb)
+                put(f"{mname}_{mode}_train_b{batch}", "train", mname, mode,
+                    batch, nb, fn, ins, outs)
+
+        eb, enb = (min(plan["eval_batch"][0], 32), 2) if quick else plan["eval_batch"]
+        fn, ins, outs = train_mod.build_eval_chunk(model, eb, enb)
+        put(f"{mname}_eval_b{eb}", "eval", mname, "fp", eb, enb, fn, ins, outs)
+
+        fn, ins, outs = train_mod.build_quantize(model, t=T_K)
+        put(f"{mname}_quantize", "quantize", mname, "fttq", 0, 0, fn, ins, outs)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--models", nargs="*", default=None,
+                   help=f"subset of {list(MODEL_PLAN)}")
+    p.add_argument("--quick", action="store_true",
+                   help="emit a minimal artifact set (tests)")
+    args = p.parse_args(argv)
+    t0 = time.time()
+    manifest = emit(args.out, models=args.models, quick=args.quick)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""FTTQ / TTQ quantizers as `jax.custom_vjp` ops (paper Algorithm 1).
+
+The forward path ternarizes a weight layer with the L1 Pallas kernels; the
+backward path implements the paper's gradient rules (straight-through
+estimation adapted from TTQ [Zhu et al. 2016] to a single factor):
+
+  latent-weight gradient (STE, TTQ rule with one factor):
+      dJ/dtheta_i = wq * g_i          for i in I_p  or  i in I_n
+                  = g_i               for i in I_z  (|theta_s_i| <= Delta)
+
+  quantization-factor gradient (paper, Algorithm 1):
+      dJ/dwq = sum_{i in I_p} g_i                      (mode="paper")
+  the full-chain-rule variant (d theta_t / d wq = it):
+      dJ/dwq = sum_{i in I_p} g_i - sum_{i in I_n} g_i (mode="symmetric")
+  is kept as an ablation (DESIGN.md §5, ablation table).
+
+TTQ's original two-factor quantizer is implemented alongside because it is
+a paper baseline and Figs. 12-13 track w_p / w_n convergence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ternary as tkern
+from .kernels import ref as kref
+
+# Ablation switch, fixed at lowering time (artifacts bake one mode).
+WQ_GRAD_MODES = ("paper", "symmetric")
+
+
+def _fwd_common(theta, t, use_pallas: bool):
+    """scale (eq. 6) -> eq. 8 threshold -> sign pattern it (eq. 11)."""
+    theta_s = kref.scale(theta)
+    if use_pallas:
+        delta = tkern.threshold_mean(theta_s, t)
+        it = tkern.ternary_apply(theta_s, delta, jnp.ones((), theta.dtype))
+    else:
+        delta = kref.threshold_mean(theta_s, t)
+        it = kref.ternarize(theta_s, delta, jnp.ones((), theta.dtype))
+    return theta_s, delta, it
+
+
+def make_fttq(t: float = 0.05, wq_grad: str = "paper", use_pallas: bool = True):
+    """Build the FTTQ quantizer `q(theta, wq) -> theta_t` for one layer.
+
+    `t` is the client threshold hyperparameter T_k (eq. 8); `wq` is the
+    single trained quantization factor (a scalar per layer).
+    """
+    assert wq_grad in WQ_GRAD_MODES, wq_grad
+
+    @jax.custom_vjp
+    def quantize(theta, wq):
+        _, _, it = _fwd_common(theta, t, use_pallas)
+        return wq * it
+
+    def quantize_fwd(theta, wq):
+        _, delta, it = _fwd_common(theta, t, use_pallas)
+        return wq * it, (it, wq)
+
+    def quantize_bwd(res, g):
+        it, wq = res
+        pos = (it > 0).astype(g.dtype)
+        neg = (it < 0).astype(g.dtype)
+        zero = 1.0 - pos - neg
+        # TTQ STE rule, single factor: wq on the ternary support, 1 on zeros.
+        g_theta = g * (wq * (pos + neg) + zero)
+        # Support-mean normalization: Algorithm 1 writes a raw sum over I_p,
+        # but with |I_p| ~ 10^4 elements the factor step explodes for any
+        # practical lr (verified empirically — wq diverges to 1e12 within an
+        # epoch). Dividing by |I_p| keeps the update at weight scale and is
+        # consistent with the optimal-factor mean of eq. 20. Recorded as a
+        # reproduction deviation in DESIGN.md §7.
+        if wq_grad == "paper":
+            g_wq = jnp.sum(g * pos) / jnp.maximum(jnp.sum(pos), 1.0)
+        else:
+            g_wq = jnp.sum(g * it) / jnp.maximum(jnp.sum(pos + neg), 1.0)
+        return g_theta, g_wq.astype(jnp.result_type(wq))
+
+    quantize.defvjp(quantize_fwd, quantize_bwd)
+    return quantize
+
+
+def make_ttq(t: float = 0.05, use_pallas: bool = True):
+    """Original two-factor TTQ quantizer `q(theta, wp, wn) -> theta_t`.
+
+    theta_t = wp on I_p, -wn on I_n, 0 on I_z (wp, wn > 0 scalars).
+    Gradients per Zhu et al. 2016:
+      dJ/dwp =  sum_{I_p} g_i,   dJ/dwn = -sum_{I_n} g_i
+      dJ/dtheta = wp*g on I_p, wn*g on I_n, g on I_z.
+    Threshold: eq. 5, Delta = t * max|theta_s| (the TTQ heuristic).
+    """
+
+    def _fwd(theta):
+        theta_s = kref.scale(theta)
+        delta = kref.threshold_max(theta_s, t)
+        if use_pallas:
+            it = tkern.ternary_apply(theta_s, delta, jnp.ones((), theta.dtype))
+        else:
+            it = kref.ternarize(theta_s, delta, jnp.ones((), theta.dtype))
+        return it
+
+    @jax.custom_vjp
+    def quantize(theta, wp, wn):
+        it = _fwd(theta)
+        pos = (it > 0).astype(theta.dtype)
+        neg = (it < 0).astype(theta.dtype)
+        return wp * pos - wn * neg
+
+    def quantize_fwd(theta, wp, wn):
+        it = _fwd(theta)
+        pos = (it > 0).astype(theta.dtype)
+        neg = (it < 0).astype(theta.dtype)
+        return wp * pos - wn * neg, (pos, neg, wp, wn)
+
+    def quantize_bwd(res, g):
+        pos, neg, wp, wn = res
+        zero = 1.0 - pos - neg
+        g_theta = g * (wp * pos + wn * neg + zero)
+        # support-mean normalization (see make_fttq for rationale)
+        g_wp = jnp.sum(g * pos) / jnp.maximum(jnp.sum(pos), 1.0)
+        g_wn = -jnp.sum(g * neg) / jnp.maximum(jnp.sum(neg), 1.0)
+        return g_theta, g_wp.astype(jnp.result_type(wp)), g_wn.astype(jnp.result_type(wn))
+
+    quantize.defvjp(quantize_fwd, quantize_bwd)
+    return quantize
+
+
+def quantize_params(params, wqs, t: float = 0.05, use_pallas: bool = True):
+    """Ternarize a whole parameter list for upload (weights only).
+
+    params: list of (w, b); wqs: [wq per layer]. Returns (its, wqs, deltas)
+    where its are the {-1,0,+1} sign patterns — exactly what the T-FedAvg
+    upstream message carries (2-bit its + f32 wq per layer).
+    """
+    its, deltas = [], []
+    for (w, _b), _wq in zip(params, wqs):
+        if use_pallas:
+            _, it, delta = tkern.fttq_quantize(w, 1.0, t)
+        else:
+            _, it, delta = kref.fttq_quantize(w, 1.0, t)
+        its.append(it)
+        deltas.append(delta)
+    return its, wqs, deltas

@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for FTTQ ternarization + ternary matmul.
+
+`ref` holds the pure-jnp oracles; `ternary` / `ternary_matmul` the Pallas
+implementations (interpret=True). See DESIGN.md §Layer-1.
+"""
+from . import ref  # noqa: F401
+from .ternary import (  # noqa: F401
+    abs_mean,
+    abs_sum,
+    fttq_quantize,
+    requantize,
+    ternary_apply,
+    threshold_mean,
+)
+from .ternary_matmul import ternary_matmul  # noqa: F401

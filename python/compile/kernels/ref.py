@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+the most direct jnp form of the paper's equations (Xu et al., TNNLS 2020).
+pytest sweeps shapes/dtypes and asserts the Pallas kernels match these.
+
+Equation map (paper section III-A):
+  eq. 6   scale()            theta_s = g(theta), layer-wise map to [-1, 1]
+  eq. 7   threshold_max()    Delta = T * max|theta_s|
+  eq. 8   threshold_mean()   Delta = (T/m) * sum|theta_s|
+  eq. 10  mask = step(|theta_s| - Delta)
+  eq. 11  I_t  = sign(mask * theta_s)
+  eq. 12  theta_t = w_q * I_t
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scale(theta: jnp.ndarray) -> jnp.ndarray:
+    """Layer-wise scaling g: R^n -> [-1, 1] (eq. 6).
+
+    Divides by max|theta| over the whole layer. A zero layer maps to zero
+    (guarded so HLO never divides by zero).
+    """
+    m = jnp.max(jnp.abs(theta))
+    return theta / jnp.maximum(m, jnp.finfo(theta.dtype).tiny)
+
+
+def threshold_max(theta_s: jnp.ndarray, t) -> jnp.ndarray:
+    """Delta = T * max(|theta_s|) (eq. 7, the TTQ/TWN heuristic)."""
+    return t * jnp.max(jnp.abs(theta_s))
+
+
+def threshold_mean(theta_s: jnp.ndarray, t) -> jnp.ndarray:
+    """Delta = (T/m) * sum(|theta_s|) (eq. 8, the paper's criterion).
+
+    Sparsity-aware: a mostly-zero layer gets a lower threshold than eq. 7
+    would give, avoiding the homogeneity problem described after eq. 7.
+    """
+    return t * jnp.mean(jnp.abs(theta_s))
+
+
+def abs_mean(theta: jnp.ndarray) -> jnp.ndarray:
+    """mean(|theta|) — the reduction inside eq. 8."""
+    return jnp.mean(jnp.abs(theta))
+
+
+def ternarize(theta_s: jnp.ndarray, delta, wq) -> jnp.ndarray:
+    """theta_t = w_q * sign(step(|theta_s| - Delta) * theta_s) (eqs. 10-12).
+
+    step(0) convention: the paper's epsilon is the Heaviside step; we use
+    strict `|x| > Delta` so that Delta == 0 keeps exact zeros at zero,
+    matching sign(0) == 0 in eq. 11.
+    """
+    mask = (jnp.abs(theta_s) > delta).astype(theta_s.dtype)
+    return (wq * jnp.sign(theta_s) * mask).astype(theta_s.dtype)
+
+
+def ternary_indices(theta_s: jnp.ndarray, delta):
+    """(I_p, I_n) membership masks (eqs. 13-14)."""
+    return theta_s > delta, theta_s < -delta
+
+
+def requantize(theta: jnp.ndarray, delta) -> jnp.ndarray:
+    """Server-side re-quantization (Algorithm 2, downstream step).
+
+    sign(step(|theta| - Delta) * theta) with a *fixed* Delta (paper default
+    0.05) applied to the normalized global model. Output values are in
+    {-1, 0, +1}; no scaling factor — the downstream payload is pure ternary.
+    """
+    return ternarize(theta, delta, jnp.ones((), theta.dtype))
+
+
+def ternary_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x @ w where w is a ternarized weight matrix (values {-wq, 0, +wq}).
+
+    The oracle is just a dense matmul; the Pallas kernel tiles it for the
+    MXU. Accumulation is f32 regardless of input dtype.
+    """
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return acc.astype(x.dtype)
+
+
+def fttq_quantize(theta: jnp.ndarray, wq, t):
+    """Full FTTQ forward for one layer: scale -> threshold -> ternarize.
+
+    Returns (theta_t, it, delta) where it = sign-pattern in {-1, 0, +1}
+    and theta_t = wq * it (eq. 12).
+    """
+    theta_s = scale(theta)
+    delta = threshold_mean(theta_s, t)
+    it = ternarize(theta_s, delta, jnp.ones((), theta.dtype))
+    return wq * it, it, delta

@@ -1,0 +1,152 @@
+"""Pallas kernels for FTTQ ternarization (elementwise + reduction).
+
+TPU-shaped, lowered with interpret=True so they run on any PJRT backend
+(real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run —
+see DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+  ternary_apply(theta_s, delta, wq)  eqs. 10-12: wq * sign(mask . theta_s)
+  abs_sum(theta)                     partial reduction feeding eq. 8
+  requantize(theta, delta)           Algorithm 2 downstream: sign w/ fixed Delta
+
+Design notes (TPU thinking, even though we execute interpreted):
+  * elementwise kernels stream one (TILE_R, TILE_C) VMEM tile per grid step —
+    the VPU shape is (8, 128); tiles are multiples of that.
+  * scalars (delta, wq) ride along as (1, 1) blocks mapped to every grid
+    step, the Pallas idiom closest to SMEM scalar operands.
+  * the eq.-8 reduction is two-stage: a grid of per-tile |x| partial sums,
+    then a scalar combine in jnp — the TPU analogue of a block-level
+    tree reduction (no warp shuffles here).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-friendly tile shape: multiples of the (8, 128) VPU lane grid. §Perf:
+# tiles were originally (8, 128); a 784x30 layer then becomes a 98-step
+# grid, and interpret-mode lowering unrolls every step into its own
+# dynamic-slice/compute/update sequence (~2.1 ms per kernel call). (512,
+# 128) tiles keep VMEM per step at 256 KB (f32, well inside a 16 MB VMEM
+# with double buffering) and collapse the paper-scale layers to 1-2 grid
+# steps (~70x faster on the CPU interpret path, same TPU validity).
+TILE_R = 512
+TILE_C = 128
+
+
+def _pad2d(x: jnp.ndarray, tr: int, tc: int) -> jnp.ndarray:
+    r, c = x.shape
+    pr = (-r) % tr
+    pc = (-c) % tc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def _as2d(x: jnp.ndarray):
+    """View any-rank array as 2D (rows, lanes) for tiling; returns undo info."""
+    shape = x.shape
+    if x.ndim == 2:
+        return x, shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = min(n, TILE_C)
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, cols), shape
+
+
+def _ternary_apply_kernel(theta_ref, delta_ref, wq_ref, out_ref):
+    t = theta_ref[...]
+    delta = delta_ref[0, 0]
+    wq = wq_ref[0, 0]
+    mask = (jnp.abs(t) > delta).astype(t.dtype)
+    out_ref[...] = wq * jnp.sign(t) * mask
+
+
+def ternary_apply(theta_s: jnp.ndarray, delta, wq) -> jnp.ndarray:
+    """theta_t = wq * sign(step(|theta_s| - Delta) . theta_s) (eqs. 10-12)."""
+    dtype = theta_s.dtype
+    x2d, orig_shape = _as2d(theta_s)
+    x = _pad2d(x2d, TILE_R, TILE_C)
+    r, c = x.shape
+    grid = (r // TILE_R, c // TILE_C)
+    delta_arr = jnp.asarray(delta, dtype).reshape(1, 1)
+    wq_arr = jnp.asarray(wq, dtype).reshape(1, 1)
+    out = pl.pallas_call(
+        _ternary_apply_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, delta_arr, wq_arr)
+    out = out[: x2d.shape[0], : x2d.shape[1]]
+    if out.shape == orig_shape:
+        return out
+    n = 1
+    for d in orig_shape:
+        n *= d
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def _abs_sum_kernel(theta_ref, out_ref):
+    # f32 accumulation regardless of input dtype (bf16-safe).
+    out_ref[0, 0] = jnp.sum(jnp.abs(theta_ref[...]).astype(jnp.float32))
+
+
+def abs_sum(theta: jnp.ndarray) -> jnp.ndarray:
+    """sum(|theta|) via a two-stage grid reduction; returns f32 scalar."""
+    x2d, _ = _as2d(theta)
+    x = _pad2d(x2d, TILE_R, TILE_C)
+    r, c = x.shape
+    grid = (r // TILE_R, c // TILE_C)
+    partials = pl.pallas_call(
+        _abs_sum_kernel,
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        interpret=True,
+    )(x)
+    return jnp.sum(partials)
+
+
+def abs_mean(theta: jnp.ndarray) -> jnp.ndarray:
+    """mean(|theta|) over the *unpadded* element count (eq. 8 reduction)."""
+    n = 1
+    for d in theta.shape:
+        n *= d
+    return (abs_sum(theta) / jnp.float32(n)).astype(theta.dtype)
+
+
+def threshold_mean(theta_s: jnp.ndarray, t) -> jnp.ndarray:
+    """Delta = T * mean(|theta_s|) (eq. 8), kernel-backed."""
+    return (jnp.asarray(t, theta_s.dtype) * abs_mean(theta_s)).astype(theta_s.dtype)
+
+
+def requantize(theta: jnp.ndarray, delta) -> jnp.ndarray:
+    """Algorithm 2 downstream step: sign(step(|theta| - Delta) . theta)."""
+    return ternary_apply(theta, delta, jnp.ones((), theta.dtype))
+
+
+def fttq_quantize(theta: jnp.ndarray, wq, t):
+    """Kernel-backed FTTQ forward: scale -> eq.8 threshold -> ternarize.
+
+    Returns (theta_t, it, delta); matches kernels.ref.fttq_quantize.
+    """
+    m = jnp.max(jnp.abs(theta))
+    theta_s = theta / jnp.maximum(m, jnp.finfo(theta.dtype).tiny)
+    delta = threshold_mean(theta_s, t)
+    it = ternary_apply(theta_s, delta, jnp.ones((), theta.dtype))
+    return (jnp.asarray(wq, theta.dtype) * it).astype(theta.dtype), it, delta

@@ -1,0 +1,121 @@
+"""Pallas tiled matmul against ternarized weights — the forward hot-spot.
+
+x[B, I] @ w[I, O] where w has already been ternarized (values {-wq, 0, +wq}).
+This is where the paper's clients spend their FLOPs; on TPU it maps to the
+MXU systolic array:
+
+  * 3D grid (m, n, k): each (m, n) output tile accumulates over the k axis.
+  * block sizes default to (128, 128, 128) clipped to the padded operand —
+    the MXU native tile is 128x128; bf16 inputs with f32 accumulation is
+    the MXU contract, so the scratch accumulator is always f32.
+  * the k-loop is the innermost grid axis, so each output VMEM tile is
+    initialized at k == 0 and flushed implicitly at the last k step —
+    the BlockSpec equivalent of the CUDA shared-memory pipelined loop.
+
+Lowered with interpret=True for CPU-PJRT execution (DESIGN.md §Hardware-
+Adaptation); correctness vs kernels.ref.ternary_matmul is pytest-enforced.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+# §Perf: BK=128 made the 784-deep MLP matmul a 7-step accumulation loop;
+# BK=896 (7x128, ~1 MB VMEM for the operand tiles) collapses it to one MXU
+# pass per output tile. Still a multiple of the 128 lane width.
+DEFAULT_BK = 896
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jnp.ndarray, r: int, c: int) -> jnp.ndarray:
+    pr = (-x.shape[0]) % r
+    pc = (-x.shape[1]) % c
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def _pallas_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """x[B, I] @ w[I, O] with MXU-shaped Pallas tiling, f32 accumulation."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        f"bad matmul shapes {x.shape} @ {w.shape}"
+    )
+    out_dtype = x.dtype
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, max(8, -(-m // 8) * 8))
+    bn = min(bn, max(128, -(-n // 128) * 128))
+    bk = min(bk, max(128, -(-k // 128) * 128))
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n].astype(out_dtype)
+
+
+# Reverse-mode AD cannot see through pallas_call; the backward pass is the
+# pair of transposed matmuls, themselves run through the same Pallas kernel
+# (exactly how a production TPU kernel ships fwd + bwd kernels).
+@jax.custom_vjp
+def ternary_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return _pallas_matmul(x, w)
+
+
+def _tmm_fwd(x, w):
+    return _pallas_matmul(x, w), (x, w)
+
+
+def _tmm_bwd(res, g):
+    x, w = res
+    dx = _pallas_matmul(g, w.T)
+    dw = _pallas_matmul(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+ternary_matmul.defvjp(_tmm_fwd, _tmm_bwd)
+
+
+def vmem_bytes_estimate(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step (x, w, o tiles), for DESIGN §Perf."""
+    return itemsize * (bm * bk + bk * bn) + 4 * bm * bn
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, bm: int = DEFAULT_BM,
+                             bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> float:
+    """Fraction of MXU lanes doing useful work (padding waste), for §Perf."""
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    np_ = -(-n // bn) * bn
+    return (m * k * n) / float(mp * kp * np_)

@@ -1,0 +1,219 @@
+"""L2 model definitions: MLP (paper Table I) and ResNetLite (ResNet18* stand-in).
+
+Parameters are *positional lists* of arrays (w1, b1, w2, b2, ...) — never
+dict pytrees — so the lowered HLO parameter order is trivially deterministic
+and the Rust runtime can marshal by index. `spec()` returns the named layout
+that aot.py writes into artifacts/manifest.json.
+
+Quantized layers: every weight tensor (matmul + conv kernels); biases stay
+full-precision (they are <2% of parameters; DESIGN.md §3 notes the comm
+accounting treats them as f32 payload).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.ternary_matmul import ternary_matmul
+
+Params = List[jnp.ndarray]
+
+
+class ModelDef:
+    """Static description + pure apply functions for one architecture."""
+
+    name: str
+    input_dim: int
+    num_classes: int
+
+    def spec(self) -> List[dict]:
+        """[{name, shape, quantized}] in positional parameter order."""
+        raise NotImplementedError
+
+    def init(self, key) -> Params:
+        raise NotImplementedError
+
+    def apply_fp(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        """Full-precision forward -> logits [B, num_classes]."""
+        raise NotImplementedError
+
+    def apply_quantized(self, params: Params, wq: jnp.ndarray,
+                        quantizer: Callable) -> Callable:
+        """Return forward(x) that ternarizes weights with `quantizer`."""
+        raise NotImplementedError
+
+    # -- shared helpers ----------------------------------------------------
+    def quantized_indices(self) -> List[int]:
+        return [i for i, s in enumerate(self.spec()) if s["quantized"]]
+
+    def num_quantized(self) -> int:
+        return len(self.quantized_indices())
+
+    def param_count(self) -> int:
+        return sum(int(math.prod(s["shape"])) for s in self.spec())
+
+
+def _uniform_fanin(key, shape, fan_in, dtype=jnp.float32):
+    bound = 1.0 / math.sqrt(max(1, fan_in))
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+class MLP(ModelDef):
+    """784-30-20-10 feedforward net (paper Table I: ~24k params)."""
+
+    name = "mlp"
+    input_dim = 28 * 28
+    num_classes = 10
+    hidden = (30, 20)
+
+    def spec(self):
+        dims = [self.input_dim, *self.hidden, self.num_classes]
+        out = []
+        for li in range(len(dims) - 1):
+            out.append({"name": f"w{li+1}", "shape": [dims[li], dims[li+1]],
+                        "quantized": True})
+            out.append({"name": f"b{li+1}", "shape": [dims[li+1]],
+                        "quantized": False})
+        return out
+
+    def init(self, key) -> Params:
+        dims = [self.input_dim, *self.hidden, self.num_classes]
+        params: Params = []
+        for li in range(len(dims) - 1):
+            key, k1 = jax.random.split(key)
+            params.append(_uniform_fanin(k1, (dims[li], dims[li+1]), dims[li]))
+            params.append(jnp.zeros((dims[li+1],), jnp.float32))
+        return params
+
+    def apply_fp(self, params, x):
+        w1, b1, w2, b2, w3, b3 = params
+        h = jax.nn.relu(x @ w1 + b1)
+        h = jax.nn.relu(h @ w2 + b2)
+        return h @ w3 + b3
+
+    def _apply_tern(self, tws, params, x, use_pallas_matmul=True):
+        mm = ternary_matmul if use_pallas_matmul else jnp.matmul
+        _, b1, _, b2, _, b3 = params
+        h = jax.nn.relu(mm(x, tws[0]) + b1)
+        h = jax.nn.relu(mm(h, tws[1]) + b2)
+        return mm(h, tws[2]) + b3
+
+    def apply_quantized(self, params, wq, quantizer):
+        ws = [params[0], params[2], params[4]]
+        tws = [quantizer(w, wq[i]) for i, w in enumerate(ws)]
+
+        def forward(x):
+            return self._apply_tern(tws, params, x)
+
+        return forward
+
+    def apply_ttq(self, params, wp, wn, quantizer):
+        ws = [params[0], params[2], params[4]]
+        tws = [quantizer(w, wp[i], wn[i]) for i, w in enumerate(ws)]
+
+        def forward(x):
+            return self._apply_tern(tws, params, x)
+
+        return forward
+
+
+def _conv(x, w, b):
+    """3x3 SAME NHWC conv + bias."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _avgpool2(x):
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+class ResNetLite(ModelDef):
+    """Reduced residual CNN for the CIFAR10-like task (ResNet18* stand-in).
+
+    conv3x3(3->C) -> [conv3x3 -> relu -> conv3x3 + skip] -> relu
+    -> avgpool2 -> avgpool2 -> flatten -> dense(->64) -> dense(->10).
+    C = 32 gives ~53k parameters — the same MLP-vs-CNN contrast axis as the
+    paper at single-core-feasible scale (DESIGN.md §3 Substitutions).
+    """
+
+    name = "resnetlite"
+    side = 16
+    channels = 3
+    c = 32
+    fc = 64
+    num_classes = 10
+    input_dim = side * side * channels
+
+    def spec(self):
+        c, fc = self.c, self.fc
+        flat = (self.side // 4) * (self.side // 4) * c
+        return [
+            {"name": "conv1_w", "shape": [3, 3, self.channels, c], "quantized": True},
+            {"name": "conv1_b", "shape": [c], "quantized": False},
+            {"name": "conv2_w", "shape": [3, 3, c, c], "quantized": True},
+            {"name": "conv2_b", "shape": [c], "quantized": False},
+            {"name": "conv3_w", "shape": [3, 3, c, c], "quantized": True},
+            {"name": "conv3_b", "shape": [c], "quantized": False},
+            {"name": "fc1_w", "shape": [flat, fc], "quantized": True},
+            {"name": "fc1_b", "shape": [fc], "quantized": False},
+            {"name": "fc2_w", "shape": [fc, self.num_classes], "quantized": True},
+            {"name": "fc2_b", "shape": [self.num_classes], "quantized": False},
+        ]
+
+    def init(self, key) -> Params:
+        params: Params = []
+        for s in self.spec():
+            shape = tuple(s["shape"])
+            if s["quantized"]:
+                fan_in = math.prod(shape[:-1])
+                key, k1 = jax.random.split(key)
+                params.append(_uniform_fanin(k1, shape, fan_in))
+            else:
+                params.append(jnp.zeros(shape, jnp.float32))
+        return params
+
+    def _forward(self, ws, params, x, use_pallas_matmul=True):
+        mm = ternary_matmul if use_pallas_matmul else jnp.matmul
+        b = [params[1], params[3], params[5], params[7], params[9]]
+        img = x.reshape(x.shape[0], self.side, self.side, self.channels)
+        h = jax.nn.relu(_conv(img, ws[0], b[0]))
+        r = jax.nn.relu(_conv(h, ws[1], b[1]))
+        r = _conv(r, ws[2], b[2])
+        h = jax.nn.relu(h + r)
+        h = _avgpool2(_avgpool2(h))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(mm(h, ws[3]) + b[3])
+        return mm(h, ws[4]) + b[4]
+
+    def apply_fp(self, params, x):
+        ws = [params[0], params[2], params[4], params[6], params[8]]
+        return self._forward(ws, params, x, use_pallas_matmul=False)
+
+    def apply_quantized(self, params, wq, quantizer):
+        ws = [params[0], params[2], params[4], params[6], params[8]]
+        tws = [quantizer(w, wq[i]) for i, w in enumerate(ws)]
+
+        def forward(x):
+            return self._forward(tws, params, x)
+
+        return forward
+
+    def apply_ttq(self, params, wp, wn, quantizer):
+        ws = [params[0], params[2], params[4], params[6], params[8]]
+        tws = [quantizer(w, wp[i], wn[i]) for i, w in enumerate(ws)]
+
+        def forward(x):
+            return self._forward(tws, params, x)
+
+        return forward
+
+
+MODELS = {"mlp": MLP(), "resnetlite": ResNetLite()}

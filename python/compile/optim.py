@@ -1,0 +1,88 @@
+"""Minimal optimizers baked into the AOT training graphs (paper Table I).
+
+Positional-state design (like models.py): optimizer state is a flat list of
+arrays so the lowered HLO input/output order is deterministic for Rust.
+
+  SGD  — state []            (paper: MLP on MNIST, lr 1e-4)
+  Adam — state [m..., v..., step]  (paper: ResNet* on CIFAR10, lr 8e-3)
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Params = List[jnp.ndarray]
+
+
+class Optimizer:
+    name: str
+
+    def init_state(self, params: Params) -> Params:
+        raise NotImplementedError
+
+    def state_spec(self, param_spec: List[dict]) -> List[dict]:
+        """Named layout of the state arrays, for manifest.json."""
+        raise NotImplementedError
+
+    def update(self, params: Params, grads: Params, state: Params,
+               lr) -> Tuple[Params, Params]:
+        raise NotImplementedError
+
+
+class Sgd(Optimizer):
+    name = "sgd"
+
+    def init_state(self, params):
+        return []
+
+    def state_spec(self, param_spec):
+        return []
+
+    def update(self, params, grads, state, lr):
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return new_params, state
+
+
+class Adam(Optimizer):
+    name = "adam"
+
+    def __init__(self, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+        self.b1, self.b2, self.eps = b1, b2, eps
+
+    def init_state(self, params):
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        return m + v + [jnp.zeros((), jnp.float32)]
+
+    def state_spec(self, param_spec):
+        spec = []
+        for tag in ("adam_m", "adam_v"):
+            for s in param_spec:
+                spec.append({"name": f"{tag}_{s['name']}", "shape": s["shape"],
+                             "quantized": False})
+        spec.append({"name": "adam_step", "shape": [], "quantized": False})
+        return spec
+
+    def update(self, params, grads, state, lr):
+        n = len(params)
+        m, v, step = state[:n], state[n:2 * n], state[2 * n]
+        step = step + 1.0
+        b1, b2, eps = self.b1, self.b2, self.eps
+        new_m = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads)]
+        new_v = [b2 * vi + (1 - b2) * (g * g) for vi, g in zip(v, grads)]
+        bc1 = 1.0 - jnp.power(b1, step)
+        bc2 = 1.0 - jnp.power(b2, step)
+        new_params = [
+            p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            for p, mi, vi in zip(params, new_m, new_v)
+        ]
+        return new_params, new_m + new_v + [step]
+
+
+OPTIMIZERS = {"sgd": Sgd, "adam": Adam}
+
+
+def make(name: str) -> Optimizer:
+    return OPTIMIZERS[name]()

@@ -1,0 +1,281 @@
+"""L2 training/eval graph builders — the functions aot.py lowers to HLO.
+
+Each builder returns (fn, input_spec, output_spec) where fn takes/returns
+*positional* arrays only (no pytrees in the signature), so the HLO parameter
+order is exactly the spec order and the Rust runtime marshals by index.
+
+Graphs are *epoch-granular*: `lax.scan` over NB fixed-size batches with a
+per-sample {0,1} mask (padding => unbalanced client shards supported), so
+one PJRT call executes one local epoch — Python never appears at runtime.
+
+Modes:
+  fp    — full-precision local epoch       (Baseline / FedAvg clients)
+  fttq  — FTTQ quantization-aware epoch    (T-FedAvg clients; paper Alg. 1)
+  ttq   — two-factor TTQ epoch             (TTQ baseline; Figs. 12-13)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import fttq as fttq_mod
+from . import optim as optim_mod
+from .models import ModelDef
+
+
+def _masked_ce(logits: jnp.ndarray, y: jnp.ndarray, m: jnp.ndarray):
+    """(sum of masked CE loss, sum of mask). y: int32 labels, m: {0,1} f32."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.sum(nll * m), jnp.sum(m)
+
+
+def _epoch_scan(step_fn, carry, xs, ys, ms):
+    """scan step_fn over the batch axis; returns (carry, mean masked loss)."""
+    (carry, (loss_sum, mask_sum)) = lax.scan(
+        lambda c, b: step_fn(c, *b), carry, (xs, ys, ms))
+    return carry, loss_sum / jnp.maximum(mask_sum, 1.0)
+
+
+def _scan_accumulate(step_fn, carry, batches):
+    def body(c_acc, b):
+        c, (ls, ms_) = c_acc
+        c, (dls, dms) = step_fn(c, *b)
+        return (c, (ls + dls, ms_ + dms)), None
+
+    (carry, (loss_sum, mask_sum)), _ = lax.scan(
+        body, (carry, (jnp.zeros(()), jnp.zeros(()))), batches)
+    return carry, loss_sum, mask_sum
+
+
+# ---------------------------------------------------------------------------
+# train-epoch builders
+# ---------------------------------------------------------------------------
+
+def build_fp_train_epoch(model: ModelDef, optimizer: optim_mod.Optimizer,
+                         batch: int, nb: int):
+    """Full-precision local epoch (FedAvg / centralized baseline)."""
+    spec = model.spec()
+    n_params = len(spec)
+    opt_spec = optimizer.state_spec(spec)
+    n_opt = len(opt_spec)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        opt = list(args[n_params:n_params + n_opt])
+        xs, ys, ms, lr = args[n_params + n_opt:]
+
+        def loss_fn(params, x, y, m):
+            logits = model.apply_fp(params, x)
+            ls, msum = _masked_ce(logits, y, m)
+            return ls / jnp.maximum(msum, 1.0), (ls, msum)
+
+        def step(carry, x, y, m):
+            params, opt = carry
+            (_, (ls, msum)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, x, y, m)
+            params, opt = optimizer.update(params, grads, opt, lr)
+            return (params, opt), (ls, msum)
+
+        (params, opt), loss_sum, mask_sum = _scan_accumulate(
+            step, (params, opt), (xs, ys, ms))
+        mean_loss = loss_sum / jnp.maximum(mask_sum, 1.0)
+        return tuple(params) + tuple(opt) + (mean_loss,)
+
+    in_spec = (
+        spec
+        + opt_spec
+        + [{"name": "xs", "shape": [nb, batch, model.input_dim]},
+           {"name": "ys", "shape": [nb, batch], "dtype": "s32"},
+           {"name": "ms", "shape": [nb, batch]},
+           {"name": "lr", "shape": []}]
+    )
+    out_spec = spec + opt_spec + [{"name": "mean_loss", "shape": []}]
+    return fn, in_spec, out_spec
+
+
+def build_fttq_train_epoch(model: ModelDef, optimizer: optim_mod.Optimizer,
+                           batch: int, nb: int, t: float = 0.05,
+                           wq_grad: str = "paper", use_pallas: bool = True):
+    """FTTQ quantization-aware local epoch (paper Algorithm 1).
+
+    Extra trained input: wq vector, one factor per quantized layer.
+    """
+    spec = model.spec()
+    n_params = len(spec)
+    n_q = model.num_quantized()
+    wq_spec = [{"name": "wq", "shape": [n_q]}]
+    # optimizer state covers params + wq (wq is trained like any parameter)
+    opt_spec = optimizer.state_spec(spec + wq_spec)
+    n_opt = len(opt_spec)
+    quantizer = fttq_mod.make_fttq(t=t, wq_grad=wq_grad, use_pallas=use_pallas)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        wq = args[n_params]
+        opt = list(args[n_params + 1:n_params + 1 + n_opt])
+        xs, ys, ms, lr = args[n_params + 1 + n_opt:]
+
+        def loss_fn(params_wq, x, y, m):
+            params, wq = params_wq
+            forward = model.apply_quantized(params, wq, quantizer)
+            ls, msum = _masked_ce(forward(x), y, m)
+            return ls / jnp.maximum(msum, 1.0), (ls, msum)
+
+        def step(carry, x, y, m):
+            params, wq, opt = carry
+            (_, (ls, msum)), (g_params, g_wq) = jax.value_and_grad(
+                loss_fn, has_aux=True)((params, wq), x, y, m)
+            all_params, all_grads = params + [wq], g_params + [g_wq]
+            new_all, opt = optimizer.update(all_params, all_grads, opt, lr)
+            return (new_all[:-1], new_all[-1], opt), (ls, msum)
+
+        (params, wq, opt), loss_sum, mask_sum = _scan_accumulate(
+            step, (params, wq, opt), (xs, ys, ms))
+        mean_loss = loss_sum / jnp.maximum(mask_sum, 1.0)
+        return tuple(params) + (wq,) + tuple(opt) + (mean_loss,)
+
+    in_spec = (
+        spec + wq_spec + opt_spec
+        + [{"name": "xs", "shape": [nb, batch, model.input_dim]},
+           {"name": "ys", "shape": [nb, batch], "dtype": "s32"},
+           {"name": "ms", "shape": [nb, batch]},
+           {"name": "lr", "shape": []}]
+    )
+    out_spec = spec + wq_spec + opt_spec + [{"name": "mean_loss", "shape": []}]
+    return fn, in_spec, out_spec
+
+
+def build_ttq_train_epoch(model: ModelDef, optimizer: optim_mod.Optimizer,
+                          batch: int, nb: int, t: float = 0.05,
+                          use_pallas: bool = True):
+    """Two-factor TTQ epoch (baseline; tracks wp/wn for Figs. 12-13)."""
+    spec = model.spec()
+    n_params = len(spec)
+    n_q = model.num_quantized()
+    quantizer = fttq_mod.make_ttq(t=t, use_pallas=use_pallas)
+
+    factor_spec = [{"name": "wp", "shape": [n_q]}, {"name": "wn", "shape": [n_q]}]
+    opt_spec = optimizer.state_spec(spec + factor_spec)
+    n_opt = len(opt_spec)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        wp, wn = args[n_params], args[n_params + 1]
+        opt = list(args[n_params + 2:n_params + 2 + n_opt])
+        xs, ys, ms, lr = args[n_params + 2 + n_opt:]
+
+        def q_layer(w, p, n):
+            return quantizer(w, p, n)
+
+        def loss_fn(pw, x, y, m):
+            params, wp, wn = pw
+            forward = model.apply_ttq(params, wp, wn, q_layer)
+            ls, msum = _masked_ce(forward(x), y, m)
+            return ls / jnp.maximum(msum, 1.0), (ls, msum)
+
+        def step(carry, x, y, m):
+            params, wp, wn, opt = carry
+            (_, (ls, msum)), (gp, gwp, gwn) = jax.value_and_grad(
+                loss_fn, has_aux=True)((params, wp, wn), x, y, m)
+            all_p = params + [wp, wn]
+            all_g = gp + [gwp, gwn]
+            new_all, opt = optimizer.update(all_p, all_g, opt, lr)
+            return (new_all[:-2], new_all[-2], new_all[-1], opt), (ls, msum)
+
+        (params, wp, wn, opt), loss_sum, mask_sum = _scan_accumulate(
+            step, (params, wp, wn, opt), (xs, ys, ms))
+        mean_loss = loss_sum / jnp.maximum(mask_sum, 1.0)
+        return tuple(params) + (wp, wn) + tuple(opt) + (mean_loss,)
+
+    in_spec = (
+        spec + factor_spec + opt_spec
+        + [{"name": "xs", "shape": [nb, batch, model.input_dim]},
+           {"name": "ys", "shape": [nb, batch], "dtype": "s32"},
+           {"name": "ms", "shape": [nb, batch]},
+           {"name": "lr", "shape": []}]
+    )
+    out_spec = spec + factor_spec + opt_spec + [{"name": "mean_loss", "shape": []}]
+    return fn, in_spec, out_spec
+
+
+# ---------------------------------------------------------------------------
+# eval / quantize builders
+# ---------------------------------------------------------------------------
+
+def build_eval_chunk(model: ModelDef, batch: int, nb: int):
+    """scan over eval batches -> (loss_sum, correct, count).
+
+    Takes whatever parameter values it is given — full-precision for
+    FedAvg/Baseline, rebuilt ternary (wq * it) for T-FedAvg inference.
+    """
+    spec = model.spec()
+    n_params = len(spec)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        xs, ys, ms = args[n_params:]
+
+        def step(carry, batch):
+            x, y, m = batch
+            loss_sum, correct, count = carry
+            logits = model.apply_fp(params, x)
+            ls, msum = _masked_ce(logits, y, m)
+            pred = jnp.argmax(logits, axis=1)
+            correct = correct + jnp.sum((pred == y).astype(jnp.float32) * m)
+            return (loss_sum + ls, correct, count + msum), None
+
+        (loss_sum, correct, count), _ = lax.scan(
+            step, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())),
+            (xs, ys, ms))
+        return loss_sum, correct, count
+
+    in_spec = (
+        spec
+        + [{"name": "xs", "shape": [nb, batch, model.input_dim]},
+           {"name": "ys", "shape": [nb, batch], "dtype": "s32"},
+           {"name": "ms", "shape": [nb, batch]}]
+    )
+    out_spec = [{"name": "loss_sum", "shape": []},
+                {"name": "correct", "shape": []},
+                {"name": "count", "shape": []}]
+    return fn, in_spec, out_spec
+
+
+def build_quantize(model: ModelDef, t: float = 0.05, use_pallas: bool = True):
+    """Ternarize trained weights for upload: params -> (it..., delta...).
+
+    The sign patterns `it` (values in {-1,0,+1}, f32) are what the Rust
+    comms layer packs to 2 bits; wq rides along unchanged in the message.
+
+    Inputs are ONLY the quantized weight tensors: unused HLO parameters get
+    pruned during lowering, which would silently break the Rust runtime's
+    index-based marshalling if biases were declared but never read.
+    """
+    from .kernels import ternary as tkern
+    from .kernels import ref as kref
+
+    spec = model.spec()
+    q_idx = model.quantized_indices()
+
+    def fn(*weights):
+        its, deltas = [], []
+        for w in weights:
+            if use_pallas:
+                _, it, delta = tkern.fttq_quantize(w, 1.0, t)
+            else:
+                _, it, delta = kref.fttq_quantize(w, 1.0, t)
+            its.append(it)
+            deltas.append(delta)
+        return tuple(its) + tuple(deltas)
+
+    in_spec = [spec[i] for i in q_idx]
+    out_spec = (
+        [{"name": f"it_{spec[i]['name']}", "shape": spec[i]["shape"]} for i in q_idx]
+        + [{"name": f"delta_{spec[i]['name']}", "shape": []} for i in q_idx]
+    )
+    return fn, in_spec, out_spec

@@ -1,0 +1,91 @@
+"""aot.py manifest + HLO text consistency.
+
+Emits a --quick artifact set into a tmpdir and checks the manifest is
+self-consistent and the HLO text has the ENTRY signature the Rust runtime
+expects (one parameter per manifest input, tupled outputs).
+"""
+
+import json
+import math
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile.models import MODELS
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.emit(out, models=["mlp"], quick=True, verbose=False)
+    return out, manifest
+
+
+def test_manifest_round_trips_json(emitted):
+    out, manifest = emitted
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded == json.loads(json.dumps(manifest))
+    assert loaded["t_k"] == 0.05
+    assert loaded["server_delta"] == 0.05
+    assert loaded["wq_init"] == 0.05
+
+
+def test_artifact_files_exist(emitted):
+    out, manifest = emitted
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_entry_parameter_count(emitted):
+    """The ENTRY computation must declare one parameter per manifest input."""
+    out, manifest = emitted
+    for name, art in manifest["artifacts"].items():
+        with open(os.path.join(out, art["file"])) as f:
+            lines = f.read().splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        body = []
+        for l in lines[start + 1:]:
+            if l.startswith("}"):
+                break
+            body.append(l)
+        arity = sum(1 for l in body if re.search(r"= \S+ parameter\(\d+\)", l))
+        assert arity == len(art["inputs"]), (name, arity, len(art["inputs"]))
+
+
+def test_model_spec_matches_models_py(emitted):
+    _, manifest = emitted
+    m = manifest["models"]["mlp"]
+    model = MODELS["mlp"]
+    assert m["input_dim"] == model.input_dim
+    assert m["num_quantized"] == model.num_quantized()
+    names = [p["name"] for p in m["params"]]
+    assert names == [s["name"] for s in model.spec()]
+    total = sum(math.prod(p["shape"]) for p in m["params"])
+    assert total == model.param_count() == 24380
+
+
+def test_train_artifact_io_symmetry(emitted):
+    """train outputs = inputs minus (xs, ys, ms, lr) plus mean_loss."""
+    _, manifest = emitted
+    for name, art in manifest["artifacts"].items():
+        if art["kind"] != "train":
+            continue
+        in_names = [s["name"] for s in art["inputs"]]
+        out_names = [s["name"] for s in art["outputs"]]
+        assert in_names[-4:] == ["xs", "ys", "ms", "lr"]
+        assert out_names[-1] == "mean_loss"
+        assert in_names[:-4] == out_names[:-1], name
+        for si, so in zip(art["inputs"][:-4], art["outputs"][:-1]):
+            assert si["shape"] == so["shape"], (name, si, so)
+
+
+def test_batch_plan_covers_fig7():
+    """Fig. 7 sweeps local batch size; the plan must include >=3 sizes."""
+    assert len(aot.MODEL_PLAN["mlp"]["train_batches"]) >= 3
+    for b, nb in aot.MODEL_PLAN["mlp"]["train_batches"].items():
+        assert b * nb == 1024  # constant chunk size across the sweep

@@ -1,0 +1,194 @@
+"""FTTQ / TTQ quantizer properties — the paper's theory, executable.
+
+Covers:
+  * Proposition 4.2 (unbiasedness): E[FTTQ(theta)] == E[theta] == 0 for
+    theta ~ U(-1, 1).
+  * eq. 20 optimality: w* = mean(theta_i, i in I_p) minimizes
+    ||theta - w.I_p + w.I_n||^2 against perturbations.
+  * Algorithm 1 gradient rules (paper vs symmetric ablation).
+  * TTQ two-factor gradients and the Proposition 4.1 convergence trend.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fttq
+from compile.kernels import ref
+
+
+def _uniform(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Proposition 4.2 — unbiasedness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_unbiasedness_uniform_weights(seed):
+    """E[FTTQ(theta)] ~= 0 ~= E[theta] for theta ~ U(-1,1) (Prop 4.2)."""
+    theta = _uniform((200, 200), seed=seed)
+    q = fttq.make_fttq(t=0.05, use_pallas=False)
+    # w_q* from eq. 20: mean over I_p of scaled weights
+    ts = ref.scale(theta)
+    delta = ref.threshold_mean(ts, 0.05)
+    wq_star = jnp.mean(jnp.where(ts > delta, ts, 0.0)) / jnp.mean(ts > delta)
+    out = q(theta, wq_star)
+    n = theta.size
+    # mean of the quantizer output is an unbiased estimator of mean(theta);
+    # both are O(1/sqrt(n)) around 0.
+    assert abs(float(jnp.mean(out))) < 5.0 / np.sqrt(n)
+    assert abs(float(jnp.mean(theta))) < 5.0 / np.sqrt(n)
+
+
+def test_eq20_optimal_factor():
+    """w* = mean_{I_p}(theta) minimizes eq. 17/19 for the positive support."""
+    theta = _uniform((100, 100), seed=3)
+    delta = 0.3
+    ip = np.asarray(theta) > delta
+    inn = np.asarray(theta) < -delta
+    w_star = np.asarray(theta)[ip].mean()
+
+    def cost(wp, wn):
+        t = np.where(ip, wp, np.where(inn, -wn, 0.0))
+        return ((np.asarray(theta) - t) ** 2).sum()
+
+    wn_star = -np.asarray(theta)[inn].mean()
+    c0 = cost(w_star, wn_star)
+    for eps in (1e-3, 1e-2, 0.1):
+        assert cost(w_star + eps, wn_star) > c0
+        assert cost(w_star - eps, wn_star) > c0
+        assert cost(w_star, wn_star + eps) > c0
+        assert cost(w_star, wn_star - eps) > c0
+
+
+def test_prop41_symmetric_factors_converge_to_same_value():
+    """Prop 4.1: under U(-1,1), w_p* == w_n* (in expectation)."""
+    theta = _uniform((400, 400), seed=5)
+    delta = 0.3
+    arr = np.asarray(theta)
+    wp = arr[arr > delta].mean()
+    wn = -arr[arr < -delta].mean()
+    assert abs(wp - wn) < 0.01  # both ~ (1 + delta) / 2
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 gradients
+# ---------------------------------------------------------------------------
+
+def test_fttq_forward_is_ternary_times_wq():
+    theta = _uniform((30, 40), seed=1)
+    q = fttq.make_fttq(t=0.05, use_pallas=True)
+    out = np.asarray(q(theta, jnp.float32(0.37)))
+    vals = np.unique(out)
+    for v in vals:
+        assert min(abs(v - c) for c in (-0.37, 0.0, 0.37)) < 1e-6
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_fttq_pallas_matches_ref_path(use_pallas):
+    theta = _uniform((50, 20), seed=2)
+    qp = fttq.make_fttq(t=0.05, use_pallas=True)
+    qr = fttq.make_fttq(t=0.05, use_pallas=False)
+    np.testing.assert_allclose(qp(theta, 0.4), qr(theta, 0.4), rtol=1e-6)
+
+
+def test_wq_grad_paper_rule():
+    """dJ/dwq = mean over I_p of dJ/dtheta_t (Algorithm 1's sum,
+    support-mean normalized — DESIGN.md §7 reproduction deviation)."""
+    theta = _uniform((40, 40), seed=4)
+    q = fttq.make_fttq(t=0.05, wq_grad="paper", use_pallas=False)
+    g_out = _uniform((40, 40), seed=5)  # arbitrary upstream gradient
+
+    def f(wq):
+        return jnp.sum(q(theta, wq) * g_out)
+
+    g_wq = jax.grad(f)(jnp.float32(0.5))
+    ts = ref.scale(theta)
+    delta = ref.threshold_mean(ts, 0.05)
+    ip = np.asarray(ts) > float(delta)
+    expected = np.asarray(g_out)[ip].sum() / max(1, ip.sum())
+    np.testing.assert_allclose(g_wq, expected, rtol=1e-4)
+
+
+def test_wq_grad_symmetric_rule():
+    """ablation: dJ/dwq = mean of g*it over the ternary support."""
+    theta = _uniform((40, 40), seed=6)
+    q = fttq.make_fttq(t=0.05, wq_grad="symmetric", use_pallas=False)
+    g_out = _uniform((40, 40), seed=7)
+
+    def f(wq):
+        return jnp.sum(q(theta, wq) * g_out)
+
+    g_wq = jax.grad(f)(jnp.float32(0.5))
+    ts = ref.scale(theta)
+    delta = ref.threshold_mean(ts, 0.05)
+    it = np.sign(np.asarray(ts)) * (np.abs(np.asarray(ts)) > float(delta))
+    expected = (np.asarray(g_out) * it).sum() / max(1, (it != 0).sum())
+    np.testing.assert_allclose(g_wq, expected, rtol=1e-4)
+
+
+def test_theta_grad_ste_rule():
+    """dJ/dtheta = wq*g on the ternary support, g on the zero region."""
+    theta = _uniform((30, 30), seed=8)
+    wq = jnp.float32(0.7)
+    q = fttq.make_fttq(t=0.3, use_pallas=False)
+    g_out = _uniform((30, 30), seed=9)
+
+    def f(theta):
+        return jnp.sum(q(theta, wq) * g_out)
+
+    g_theta = np.asarray(jax.grad(f)(theta))
+    ts = ref.scale(theta)
+    delta = ref.threshold_mean(ts, 0.3)
+    support = np.abs(np.asarray(ts)) > float(delta)
+    expected = np.where(support, 0.7 * np.asarray(g_out), np.asarray(g_out))
+    np.testing.assert_allclose(g_theta, expected, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# TTQ two-factor
+# ---------------------------------------------------------------------------
+
+def test_ttq_forward_values():
+    theta = _uniform((30, 30), seed=10)
+    q = fttq.make_ttq(t=0.3, use_pallas=False)
+    out = np.asarray(q(theta, jnp.float32(0.6), jnp.float32(0.4)))
+    for v in np.unique(out):
+        assert min(abs(v - c) for c in (-0.4, 0.0, 0.6)) < 1e-6
+
+
+def test_ttq_grads():
+    theta = _uniform((25, 25), seed=11)
+    q = fttq.make_ttq(t=0.3, use_pallas=False)
+    g_out = _uniform((25, 25), seed=12)
+
+    def f(wp, wn):
+        return jnp.sum(q(theta, wp, wn) * g_out)
+
+    gp, gn = jax.grad(f, argnums=(0, 1))(jnp.float32(0.6), jnp.float32(0.4))
+    ts = ref.scale(theta)
+    delta = ref.threshold_max(ts, 0.3)
+    pos = np.asarray(ts) > float(delta)
+    neg = np.asarray(ts) < -float(delta)
+    np.testing.assert_allclose(
+        gp, np.asarray(g_out)[pos].sum() / max(1, pos.sum()), rtol=1e-4)
+    np.testing.assert_allclose(
+        gn, -np.asarray(g_out)[neg].sum() / max(1, neg.sum()), rtol=1e-4)
+
+
+def test_quantize_params_packs_weights_only():
+    from compile.models import MODELS
+    model = MODELS["mlp"]
+    params = model.init(jax.random.PRNGKey(0))
+    pairs = [(params[0], params[1]), (params[2], params[3]),
+             (params[4], params[5])]
+    its, wqs, deltas = fttq.quantize_params(pairs, [0.5, 0.5, 0.5])
+    assert len(its) == 3 and len(deltas) == 3
+    for it in its:
+        assert set(np.unique(np.asarray(it))).issubset({-1.0, 0.0, 1.0})

@@ -1,0 +1,213 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels.ref).
+
+hypothesis sweeps shapes/dtypes; every kernel must match ref within dtype
+tolerance. This is the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import ternary as tk
+from compile.kernels.ternary_matmul import (
+    mxu_utilization_estimate,
+    ternary_matmul,
+    vmem_bytes_estimate,
+)
+
+DIMS = st.integers(min_value=1, max_value=200)
+SMALL = st.integers(min_value=1, max_value=64)
+
+
+def _rand(shape, dtype=np.float32, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(dtype))
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ternary_apply
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(r=DIMS, c=DIMS, seed=st.integers(0, 2**31), wq=st.floats(0.001, 2.0),
+       t=st.floats(0.0, 1.0))
+def test_ternary_apply_matches_ref(r, c, seed, wq, t):
+    th = _rand((r, c), seed=seed)
+    ts = ref.scale(th)
+    delta = ref.threshold_mean(ts, t)
+    got = tk.ternary_apply(ts, delta, wq)
+    want = ref.ternarize(ts, delta, jnp.float32(wq))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31))
+def test_ternary_apply_1d_and_4d(n, seed):
+    # non-2D inputs go through the _as2d path
+    th = _rand((n,), seed=seed)
+    d = ref.threshold_mean(th, 0.05)
+    np.testing.assert_allclose(
+        tk.ternary_apply(th, d, 0.7), ref.ternarize(th, d, jnp.float32(0.7)),
+        rtol=1e-6)
+    th4 = _rand((3, 3, 2, 5), seed=seed + 1)
+    d4 = ref.threshold_mean(th4, 0.05)
+    np.testing.assert_allclose(
+        tk.ternary_apply(th4, d4, 0.7), ref.ternarize(th4, d4, jnp.float32(0.7)),
+        rtol=1e-6)
+
+
+def test_ternary_apply_values_are_ternary():
+    th = _rand((64, 64), seed=3)
+    out = np.asarray(tk.ternary_apply(th, 0.3, 1.0))
+    assert set(np.unique(out)).issubset({-1.0, 0.0, 1.0})
+
+
+def test_ternary_apply_zero_threshold_keeps_zeros():
+    th = jnp.asarray([[0.0, 1.0, -1.0, 0.5]])
+    out = np.asarray(tk.ternary_apply(th, 0.0, 1.0))
+    np.testing.assert_array_equal(out, [[0.0, 1.0, -1.0, 1.0]])
+
+
+def test_ternary_apply_bf16():
+    th = _rand((40, 40)).astype(jnp.bfloat16)
+    d = ref.threshold_mean(th, 0.05)
+    got = tk.ternary_apply(th, d, jnp.bfloat16(0.5)).astype(np.float32)
+    want = ref.ternarize(th, d, jnp.bfloat16(0.5)).astype(np.float32)
+    np.testing.assert_allclose(got, want, **_tol(jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# abs reduction / thresholds
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(r=DIMS, c=DIMS, seed=st.integers(0, 2**31))
+def test_abs_mean_matches_ref(r, c, seed):
+    th = _rand((r, c), seed=seed)
+    np.testing.assert_allclose(tk.abs_mean(th), ref.abs_mean(th),
+                               rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31),
+       t=st.floats(0.0, 1.0))
+def test_threshold_mean_matches_ref(n, seed, t):
+    th = _rand((n,), seed=seed)
+    np.testing.assert_allclose(tk.threshold_mean(th, t),
+                               ref.threshold_mean(th, t), rtol=1e-5, atol=1e-7)
+
+
+def test_threshold_mean_is_bounded_by_tk():
+    # eq. 9: Delta <= T_k when theta is scaled to [-1, 1]
+    th = ref.scale(_rand((100, 100), seed=7))
+    for t in (0.05, 0.3, 0.7, 1.0):
+        assert float(tk.threshold_mean(th, t)) <= t + 1e-6
+
+
+def test_abs_sum_padding_exact():
+    # padding must not leak into the sum: prime-ish sizes
+    th = _rand((13, 131), seed=11)
+    np.testing.assert_allclose(tk.abs_sum(th), np.abs(np.asarray(th)).sum(),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# requantize (server downstream step, Algorithm 2)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(r=SMALL, c=SMALL, seed=st.integers(0, 2**31),
+       delta=st.floats(0.0, 0.5))
+def test_requantize_matches_ref(r, c, seed, delta):
+    th = ref.scale(_rand((r, c), seed=seed))
+    np.testing.assert_allclose(tk.requantize(th, delta),
+                               ref.requantize(th, jnp.float32(delta)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ternary_matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand((m, k), seed=seed)
+    w = ref.ternarize(ref.scale(_rand((k, n), seed=seed + 1)),
+                      jnp.float32(0.02), jnp.float32(0.5))
+    got = ternary_matmul(x, w)
+    want = ref.ternary_matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_mlp_shapes_exact():
+    # the exact layer shapes used by the MLP artifacts
+    for (m, k, n) in [(64, 784, 30), (64, 30, 20), (64, 20, 10)]:
+        x = _rand((m, k), seed=m + k)
+        w = _rand((k, n), seed=n)
+        np.testing.assert_allclose(ternary_matmul(x, w),
+                                   ref.ternary_matmul(x, w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grads_match_dense():
+    x = _rand((8, 33), seed=1)
+    w = _rand((33, 9), seed=2)
+
+    def f_pallas(x, w):
+        return jnp.sum(ternary_matmul(x, w) ** 2)
+
+    def f_dense(x, w):
+        return jnp.sum((x @ w) ** 2)
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    hx, hw = jax.grad(f_dense, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, hx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, hw, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16():
+    x = _rand((16, 100)).astype(jnp.bfloat16)
+    w = _rand((100, 24)).astype(jnp.bfloat16)
+    got = ternary_matmul(x, w).astype(np.float32)
+    want = ref.ternary_matmul(x, w).astype(np.float32)
+    np.testing.assert_allclose(got, want, **_tol(jnp.bfloat16))
+
+
+def test_vmem_estimate_fits_tpu_budget():
+    # default tiles must fit a 16 MB VMEM with double buffering headroom
+    assert vmem_bytes_estimate(128, 128, 128) < 16 * 2**20 / 4
+
+
+def test_mxu_utilization_estimates():
+    assert mxu_utilization_estimate(128, 128, 128, bm=128, bn=128, bk=128) == 1.0
+    assert 0 < mxu_utilization_estimate(64, 784, 30) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# fttq_quantize (fused forward)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(r=SMALL, c=SMALL, seed=st.integers(0, 2**31),
+       wq=st.floats(0.001, 2.0), t=st.floats(0.0, 1.0))
+def test_fttq_quantize_matches_ref(r, c, seed, wq, t):
+    th = _rand((r, c), seed=seed)
+    qt, it, d = tk.fttq_quantize(th, jnp.float32(wq), t)
+    qt2, it2, d2 = ref.fttq_quantize(th, jnp.float32(wq), t)
+    np.testing.assert_allclose(qt, qt2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(it, it2, rtol=1e-6)
+    np.testing.assert_allclose(d, d2, rtol=1e-5, atol=1e-7)
+
+
+def test_fttq_zero_layer_is_stable():
+    th = jnp.zeros((16, 16))
+    qt, it, d = tk.fttq_quantize(th, 0.5, 0.05)
+    assert np.all(np.isfinite(np.asarray(qt)))
+    np.testing.assert_array_equal(np.asarray(qt), 0.0)

@@ -1,0 +1,128 @@
+//! Shared helpers for the bench binaries (included via #[path]).
+
+use std::sync::Arc;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::{make_backend, Backend};
+use tfed::coordinator::run_experiment;
+use tfed::metrics::RunMetrics;
+use tfed::runtime::manifest::default_artifacts_dir;
+use tfed::runtime::Engine;
+
+/// Global scale knob: TFED_BENCH_SCALE = quick | default | full.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Scale {
+    Quick,
+    Default,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("TFED_BENCH_SCALE").as_deref() {
+        Ok("quick") => Scale::Quick,
+        Ok("full") => Scale::Full,
+        _ => Scale::Default,
+    }
+}
+
+pub fn engine() -> Option<Arc<Engine>> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("NOTE: artifacts/ missing — PJRT benches degraded to native backend");
+        return None;
+    }
+    Some(Arc::new(Engine::load(default_artifacts_dir()).expect("engine")))
+}
+
+/// Scaled-down Table-II-style config for bench runs (single CPU core).
+/// `scale()` stretches rounds/samples toward the paper's setting.
+pub fn bench_cfg(protocol: Protocol, task: Task, seed: u64) -> ExperimentConfig {
+    let s = scale();
+    let mut cfg = ExperimentConfig::table2(protocol, task, seed);
+    match task {
+        Task::MnistLike => {
+            // B=16: T-FedAvg needs many local SGD steps per round to move
+            // its sign patterns (the paper's Fig.-7 small-batch advantage)
+            cfg.batch = 16;
+            cfg.rounds = match s {
+                Scale::Quick => 4,
+                Scale::Default => 12,
+                Scale::Full => 40,
+            };
+            cfg.train_samples = if s == Scale::Quick { 1_000 } else { 4_000 };
+            cfg.test_samples = if s == Scale::Quick { 500 } else { 1_000 };
+            cfg.local_epochs = if s == Scale::Quick { 1 } else { 3 };
+            cfg.lr = 0.15;
+        }
+        Task::CifarLike => {
+            if !protocol.is_centralized() {
+                cfg.n_clients = 2;
+            }
+            cfg.batch = 32;
+            cfg.rounds = match s {
+                Scale::Quick => 1,
+                Scale::Default => 3,
+                Scale::Full => 12,
+            };
+            cfg.train_samples = match s {
+                Scale::Quick => 160,
+                Scale::Default => 480,
+                Scale::Full => 3_200,
+            };
+            cfg.test_samples = if s == Scale::Quick { 100 } else { 300 };
+            cfg.local_epochs = 1;
+            cfg.lr = 0.002;
+        }
+    }
+    cfg
+}
+
+/// Build the backend for a config, preferring PJRT when available.
+pub fn backend_for(
+    engine: &Option<Arc<Engine>>,
+    cfg: &mut ExperimentConfig,
+) -> Box<dyn Backend> {
+    // CNN exists only as HLO artifacts; MLP can fall back to native
+    let use_native = engine.is_none() && cfg.task == Task::MnistLike;
+    cfg.native_backend = use_native;
+    if engine.is_none() && cfg.task == Task::CifarLike {
+        panic!("CIFAR-like benches need artifacts (run `make artifacts`)");
+    }
+    make_backend(engine.clone(), cfg.task.model_name(), cfg.batch, use_native)
+        .expect("backend")
+}
+
+pub fn run(cfg: ExperimentConfig, backend: &dyn Backend) -> RunMetrics {
+    run_experiment(cfg, backend).expect("experiment")
+}
+
+pub fn out_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("bench_out");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    let path = out_dir().join(name);
+    let mut s = String::from(header);
+    s.push('\n');
+    for r in rows {
+        s.push_str(r);
+        s.push('\n');
+    }
+    std::fs::write(&path, s).expect("write csv");
+    println!("  -> wrote {path:?}");
+}
+
+/// Which sections to run: args after `--` (cargo bench -- --table2); empty
+/// means all. The `--bench` flag cargo injects is ignored.
+pub fn selected_sections() -> Vec<String> {
+    std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && !a.is_empty())
+        .map(|a| a.trim_start_matches("--").to_string())
+        .collect()
+}
+
+pub fn section_enabled(sections: &[String], name: &str) -> bool {
+    sections.is_empty() || sections.iter().any(|s| s == name)
+}

@@ -1,0 +1,178 @@
+//! Microbenchmarks of the system's hot paths (§Perf substrate):
+//! codec pack/unpack throughput, message encode/decode, aggregation,
+//! quantization, local-epoch latency PJRT vs native.
+//!
+//!     cargo bench --bench microbench
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use tfed::comms::{pack_ternary, unpack_dequantize, unpack_ternary, Message};
+use tfed::coordinator::backend::{make_backend, TrainMode};
+use tfed::coordinator::client::ShardData;
+use tfed::coordinator::aggregation::weighted_average;
+use tfed::data::synth::SynthSpec;
+use tfed::model::{init_params, mlp_schema};
+use tfed::quant;
+use tfed::util::logging;
+use tfed::util::rng::Pcg;
+use tfed::util::timer::bench;
+
+fn main() {
+    logging::set_level(logging::Level::Warn);
+    let sections = selected_sections();
+    if section_enabled(&sections, "codec") {
+        bench_codec();
+    }
+    if section_enabled(&sections, "messages") {
+        bench_messages();
+    }
+    if section_enabled(&sections, "server") {
+        bench_server_math();
+    }
+    if section_enabled(&sections, "train") {
+        bench_train_paths();
+    }
+}
+
+fn bench_codec() {
+    println!("\n=== codec: 2-bit ternary pack/unpack ===");
+    let n = 1_000_000;
+    let mut rng = Pcg::seeded(1);
+    let it: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+    let packed = pack_ternary(&it);
+
+    let r = bench("pack_ternary 1M trits", 50, || {
+        std::hint::black_box(pack_ternary(&it));
+    });
+    println!("{}  ({:.2} GB/s in)", r.line(), n as f64 / r.mean_ns);
+    let r = bench("unpack_ternary 1M trits", 50, || {
+        std::hint::black_box(unpack_ternary(&packed).unwrap());
+    });
+    println!("{}  ({:.2} GB/s out)", r.line(), n as f64 / r.mean_ns);
+    let r = bench("unpack_dequantize 1M trits", 50, || {
+        std::hint::black_box(unpack_dequantize(&packed, 0.05).unwrap());
+    });
+    println!("{}  ({:.2} GB/s out)", r.line(), n as f64 / r.mean_ns);
+}
+
+fn bench_messages() {
+    println!("\n=== messages: encode/decode of real update payloads ===");
+    let schema = mlp_schema();
+    let mut rng = Pcg::seeded(2);
+    let params = init_params(&schema, &mut rng);
+    let qidx = schema.quantized_indices();
+    let mut patterns = Vec::new();
+    let mut deltas = Vec::new();
+    for &i in &qidx {
+        let (it, d) = quant::fttq_quantize(&params.tensors[i].data, 0.05);
+        patterns.push(it);
+        deltas.push(d);
+    }
+    let upd = tfed::comms::ternary_update(
+        0, 1000, &qidx, &patterns, &[0.1, 0.1, 0.1], &deltas, &params, 1.0,
+    );
+    let t_msg = Message::TernaryUpdate(upd);
+    let t_bytes = t_msg.encode();
+    let d_msg = Message::DenseUpdate(tfed::comms::dense_update(0, 1000, &params, 1.0));
+    let d_bytes = d_msg.encode();
+    println!(
+        "payload sizes: ternary {} B vs dense {} B ({:.1}x)",
+        t_bytes.len(),
+        d_bytes.len(),
+        d_bytes.len() as f64 / t_bytes.len() as f64
+    );
+    let r = bench("encode ternary update (mlp)", 200, || {
+        std::hint::black_box(t_msg.encode());
+    });
+    println!("{}", r.line());
+    let r = bench("decode ternary update (mlp)", 200, || {
+        std::hint::black_box(Message::decode(&t_bytes).unwrap());
+    });
+    println!("{}", r.line());
+    let r = bench("encode dense update (mlp)", 200, || {
+        std::hint::black_box(d_msg.encode());
+    });
+    println!("{}", r.line());
+}
+
+fn bench_server_math() {
+    println!("\n=== server math: aggregation + re-quantization ===");
+    let schema = mlp_schema();
+    let mut rng = Pcg::seeded(3);
+    let updates: Vec<(u64, tfed::model::ParamSet)> =
+        (0..10).map(|_| (100u64, init_params(&schema, &mut rng))).collect();
+    let r = bench("weighted_average 10 mlp clients", 200, || {
+        std::hint::black_box(weighted_average(&updates).unwrap());
+    });
+    println!("{}", r.line());
+
+    let global = init_params(&schema, &mut rng);
+    let qidx = schema.quantized_indices();
+    let r = bench("server requantize mlp", 200, || {
+        std::hint::black_box(quant::requantize_paramset(&global, &qidx, 0.05));
+    });
+    println!("{}", r.line());
+
+    let w = &global.tensors[0].data;
+    let r = bench("fttq_quantize 784x30 layer", 500, || {
+        std::hint::black_box(quant::fttq_quantize(w, 0.05));
+    });
+    println!("{}", r.line());
+}
+
+fn bench_train_paths() {
+    println!("\n=== local training: PJRT artifact vs native Rust (1 epoch) ===");
+    let (train, _) = SynthSpec::mnist_like(1_024, 10, 4).generate();
+    let data = ShardData::whole(&train);
+    let schema_params = {
+        let schema = mlp_schema();
+        let mut rng = Pcg::seeded(5);
+        init_params(&schema, &mut rng)
+    };
+
+    // native path
+    let native = make_backend(None, "mlp", 64, true).unwrap();
+    let mut rng = Pcg::seeded(6);
+    let r = bench("native fttq 1 epoch (1024 samples, B=64)", 8, || {
+        let mut rng2 = rng.fork(0);
+        std::hint::black_box(
+            native
+                .train_local(&schema_params, TrainMode::Fttq, &[], &data, 1, 0.1, &mut rng2)
+                .unwrap(),
+        );
+    });
+    println!("{}", r.line());
+
+    // PJRT path
+    if let Some(engine) = engine() {
+        let pjrt = make_backend(Some(engine.clone()), "mlp", 64, false).unwrap();
+        // warm the executable cache before timing
+        let mut rng2 = rng.fork(1);
+        pjrt.train_local(&schema_params, TrainMode::Fttq, &[], &data, 1, 0.1, &mut rng2)
+            .unwrap();
+        let r = bench("pjrt fttq 1 epoch (1024 samples, B=64)", 8, || {
+            let mut rng3 = rng.fork(2);
+            std::hint::black_box(
+                pjrt.train_local(&schema_params, TrainMode::Fttq, &[], &data, 1, 0.1, &mut rng3)
+                    .unwrap(),
+            );
+        });
+        println!("{}", r.line());
+        let r = bench("pjrt fp 1 epoch (1024 samples, B=64)", 8, || {
+            let mut rng3 = rng.fork(3);
+            std::hint::black_box(
+                pjrt.train_local(&schema_params, TrainMode::Fp, &[], &data, 1, 0.1, &mut rng3)
+                    .unwrap(),
+            );
+        });
+        println!("{}", r.line());
+        let test = ShardData::whole(&train);
+        let r = bench("pjrt eval 1024 samples", 8, || {
+            std::hint::black_box(pjrt.evaluate(&schema_params, &test).unwrap());
+        });
+        println!("{}", r.line());
+        println!("exec counts: {:?}", engine.exec_counts());
+    }
+}

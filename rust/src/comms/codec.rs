@@ -1,0 +1,171 @@
+//! 2-bit ternary packing: 4 trits per byte.
+//!
+//! Encoding per 2-bit cell: 00 -> 0, 01 -> +1, 10 -> -1 (11 unused). The
+//! upstream/downstream payload for one layer of n weights is
+//! ceil(n/4) bytes — 1/16 of the 4n bytes FedAvg ships, matching the
+//! paper's §III-B arithmetic.
+
+use anyhow::{bail, Result};
+
+/// A packed ternary tensor (one layer's sign pattern).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTernary {
+    pub len: usize,
+    pub bytes: Vec<u8>,
+}
+
+impl PackedTernary {
+    pub fn payload_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[inline]
+fn encode_trit(s: i8) -> u8 {
+    match s {
+        0 => 0b00,
+        1 => 0b01,
+        -1 => 0b10,
+        _ => unreachable!("non-ternary value {s}"),
+    }
+}
+
+#[inline]
+fn decode_trit(b: u8) -> Result<i8> {
+    match b {
+        0b00 => Ok(0),
+        0b01 => Ok(1),
+        0b10 => Ok(-1),
+        _ => bail!("invalid trit encoding 0b11"),
+    }
+}
+
+/// Pack a sign pattern ({-1, 0, +1} as i8) into 2-bit cells.
+pub fn pack_ternary(it: &[i8]) -> PackedTernary {
+    let mut bytes = vec![0u8; it.len().div_ceil(4)];
+    for (i, &s) in it.iter().enumerate() {
+        bytes[i / 4] |= encode_trit(s) << ((i % 4) * 2);
+    }
+    PackedTernary { len: it.len(), bytes }
+}
+
+/// Unpack back to the sign pattern; validates cell encoding.
+pub fn unpack_ternary(p: &PackedTernary) -> Result<Vec<i8>> {
+    if p.bytes.len() != p.len.div_ceil(4) {
+        bail!("packed length {} inconsistent with len {}", p.bytes.len(), p.len);
+    }
+    let mut out = Vec::with_capacity(p.len);
+    for i in 0..p.len {
+        let cell = (p.bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
+        out.push(decode_trit(cell)?);
+    }
+    // trailing cells of the last byte must be zero-padded
+    if p.len % 4 != 0 {
+        let last = p.bytes[p.bytes.len() - 1];
+        let used = (p.len % 4) * 2;
+        if last >> used != 0 {
+            bail!("non-zero padding bits in final byte");
+        }
+    }
+    Ok(out)
+}
+
+/// Unpack directly to dense f32 weights (wq * it) without the i8 hop —
+/// the hot-path variant used when materializing a downloaded model.
+pub fn unpack_dequantize(p: &PackedTernary, wq: f32) -> Result<Vec<f32>> {
+    // lookup table over all 256 byte values x 4 cells
+    let lut: [f32; 4] = [0.0, wq, -wq, f32::NAN];
+    let mut out = Vec::with_capacity(p.len);
+    let full_bytes = p.len / 4;
+    for &b in &p.bytes[..full_bytes] {
+        out.push(lut[(b & 3) as usize]);
+        out.push(lut[((b >> 2) & 3) as usize]);
+        out.push(lut[((b >> 4) & 3) as usize]);
+        out.push(lut[((b >> 6) & 3) as usize]);
+    }
+    for i in full_bytes * 4..p.len {
+        let cell = (p.bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
+        out.push(lut[cell as usize]);
+    }
+    if out.iter().any(|x| x.is_nan()) {
+        bail!("invalid trit encoding 0b11");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn roundtrip_small() {
+        for pattern in [
+            vec![],
+            vec![0i8],
+            vec![1, -1, 0],
+            vec![1, 1, 1, 1],
+            vec![-1, 0, 1, -1, 0],
+        ] {
+            let p = pack_ternary(&pattern);
+            assert_eq!(unpack_ternary(&p).unwrap(), pattern);
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall(128, |rng| {
+            let n = rng.below(4096) as usize;
+            let it: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+            let p = pack_ternary(&it);
+            assert_eq!(p.payload_bytes(), n.div_ceil(4));
+            assert_eq!(unpack_ternary(&p).unwrap(), it);
+        });
+    }
+
+    #[test]
+    fn sixteen_x_compression() {
+        // paper §III-B: 2-bit vs 32-bit => 16x on the weight payload
+        let n = 24_380; // MLP parameter count
+        let it = vec![1i8; n];
+        let p = pack_ternary(&it);
+        let fp32 = n * 4;
+        let ratio = fp32 as f64 / p.payload_bytes() as f64;
+        assert!((ratio - 16.0).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn dequantize_matches_unpack() {
+        forall(64, |rng| {
+            let n = rng.below(1000) as usize;
+            let it: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+            let wq = rng.next_f32() + 0.01;
+            let p = pack_ternary(&it);
+            let dense = unpack_dequantize(&p, wq).unwrap();
+            let via_i8: Vec<f32> =
+                unpack_ternary(&p).unwrap().iter().map(|&s| wq * s as f32).collect();
+            assert_eq!(dense, via_i8);
+        });
+    }
+
+    #[test]
+    fn rejects_corrupt_encoding() {
+        let mut p = pack_ternary(&[1, 1, 1, 1]);
+        p.bytes[0] = 0xFF; // 0b11 cells
+        assert!(unpack_ternary(&p).is_err());
+        assert!(unpack_dequantize(&p, 1.0).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_length() {
+        let p = PackedTernary { len: 10, bytes: vec![0; 1] };
+        assert!(unpack_ternary(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_dirty_padding() {
+        let mut p = pack_ternary(&[1, 1, 1]);
+        p.bytes[0] |= 0b01 << 6; // set the unused 4th cell
+        assert!(unpack_ternary(&p).is_err());
+    }
+}

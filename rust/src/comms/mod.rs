@@ -1,0 +1,14 @@
+//! Wire format + byte accounting for the federated message layer.
+//!
+//! The paper's headline claim (Table IV, ~16x compression of both upstream
+//! and downstream) lives here: T-FedAvg messages carry 2-bit-packed ternary
+//! weight patterns + one f32 `w^q` per layer, FedAvg messages carry raw f32
+//! tensors. Every serialized byte that would cross the network is counted
+//! by the in-process message bus, so the Table-IV bench measures *actual*
+//! payload sizes, not analytic estimates.
+
+pub mod codec;
+pub mod messages;
+
+pub use codec::{pack_ternary, unpack_dequantize, unpack_ternary, PackedTernary};
+pub use messages::*;

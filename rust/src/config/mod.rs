@@ -1,0 +1,283 @@
+//! Experiment configuration: the knobs of the paper's evaluation section.
+//!
+//! Presets mirror Table I + §V-A ("Basic configuration"); every bench and
+//! example builds an `ExperimentConfig`, validates it, and hands it to
+//! `coordinator::run_experiment`.
+
+use anyhow::{bail, Result};
+
+/// Which algorithm of Table II to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Protocol {
+    /// centralized full-precision SGD/Adam (paper "Baseline")
+    Baseline,
+    /// centralized two-factor trained ternary quantization (paper "TTQ")
+    Ttq,
+    /// canonical FedAvg (McMahan et al.)
+    FedAvg,
+    /// the paper's contribution
+    TFedAvg,
+}
+
+impl Protocol {
+    pub fn parse(s: &str) -> Result<Protocol> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "baseline" => Protocol::Baseline,
+            "ttq" => Protocol::Ttq,
+            "fedavg" => Protocol::FedAvg,
+            "tfedavg" | "t-fedavg" => Protocol::TFedAvg,
+            other => bail!("unknown protocol {other:?} (baseline|ttq|fedavg|tfedavg)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Protocol::Baseline => "Baseline",
+            Protocol::Ttq => "TTQ",
+            Protocol::FedAvg => "FedAvg",
+            Protocol::TFedAvg => "T-FedAvg",
+        }
+    }
+
+    pub fn is_centralized(&self) -> bool {
+        matches!(self, Protocol::Baseline | Protocol::Ttq)
+    }
+
+    /// Weight width reported in Table II.
+    pub fn weight_bits(&self) -> usize {
+        match self {
+            Protocol::Baseline | Protocol::FedAvg => 32,
+            Protocol::Ttq | Protocol::TFedAvg => 2,
+        }
+    }
+}
+
+/// Which synthetic task (DESIGN.md §3 substitution for MNIST/CIFAR10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// 28x28x1 -> MLP (paper: MNIST)
+    MnistLike,
+    /// 16x16x3 -> ResNetLite (paper: CIFAR10)
+    CifarLike,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "mnist" | "mnist-like" | "mnistlike" => Task::MnistLike,
+            "cifar" | "cifar10" | "cifar-like" | "cifarlike" => Task::CifarLike,
+            other => bail!("unknown task {other:?} (mnist|cifar)"),
+        })
+    }
+
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            Task::MnistLike => "mlp",
+            Task::CifarLike => "resnetlite",
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::MnistLike => "mnist-like",
+            Task::CifarLike => "cifar-like",
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub protocol: Protocol,
+    pub task: Task,
+    /// total clients N (paper default 100; Table II uses 10 full-part.)
+    pub n_clients: usize,
+    /// participation ratio lambda (selected = max(1, round(lambda*N)))
+    pub participation: f64,
+    /// classes per client Nc (>= 10 means IID)
+    pub nc: usize,
+    /// unbalancedness beta (eq. 29); 1.0 = balanced
+    pub beta: f64,
+    /// local batch size B (must have a matching train artifact)
+    pub batch: usize,
+    /// local epochs E per round
+    pub local_epochs: usize,
+    pub rounds: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// evaluate every k rounds (1 = every round)
+    pub eval_every: usize,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    /// run on the pure-Rust backend instead of PJRT (tests/props; MLP only)
+    pub native_backend: bool,
+}
+
+impl ExperimentConfig {
+    /// §V "Basic configuration" scaled to the synthetic datasets:
+    /// N=10 full participation, B=64, E=5 (Table II setting).
+    pub fn table2(protocol: Protocol, task: Task, seed: u64) -> Self {
+        let cfg = ExperimentConfig {
+            protocol,
+            task,
+            n_clients: 10,
+            participation: 1.0,
+            nc: 10,
+            beta: 1.0,
+            batch: 64,
+            local_epochs: 5,
+            rounds: 30,
+            lr: match task {
+                Task::MnistLike => 0.05,
+                Task::CifarLike => 0.002,
+            },
+            seed,
+            eval_every: 1,
+            train_samples: match task {
+                Task::MnistLike => 8_000,
+                Task::CifarLike => 4_000,
+            },
+            test_samples: 2_000,
+            native_backend: false,
+        };
+        if protocol.is_centralized() {
+            cfg.centralized()
+        } else {
+            cfg
+        }
+    }
+
+    /// Paper §V-D setting: N=100, lambda=0.1, E=5 (Table IV / Fig. 10).
+    pub fn large_federation(protocol: Protocol, task: Task, seed: u64) -> Self {
+        let mut c = Self::table2(protocol, task, seed);
+        c.n_clients = 100;
+        c.participation = 0.1;
+        c
+    }
+
+    pub fn selected_per_round(&self) -> usize {
+        ((self.participation * self.n_clients as f64).round() as usize)
+            .max(1)
+            .min(self.n_clients)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_clients == 0 {
+            bail!("n_clients must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.participation) || self.participation <= 0.0 {
+            bail!("participation must be in (0, 1]");
+        }
+        if self.nc == 0 {
+            bail!("nc must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.beta) || self.beta <= 0.0 {
+            bail!("beta must be in (0, 1]");
+        }
+        if self.batch == 0 || self.local_epochs == 0 || self.rounds == 0 {
+            bail!("batch, local_epochs, rounds must be > 0");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be > 0");
+        }
+        if self.train_samples < self.n_clients {
+            bail!("need at least one sample per client");
+        }
+        if self.protocol.is_centralized() && self.n_clients != 1 {
+            // centralized runs are modeled as a single client holding all data
+            bail!("centralized protocols require n_clients == 1 (got {})", self.n_clients);
+        }
+        if self.native_backend && self.task != Task::MnistLike {
+            bail!("native backend only implements the MLP task");
+        }
+        Ok(())
+    }
+
+    /// Normalize a centralized protocol config (1 client, full part.).
+    pub fn centralized(mut self) -> Self {
+        self.n_clients = 1;
+        self.participation = 1.0;
+        self.nc = usize::MAX;
+        self.beta = 1.0;
+        self
+    }
+
+    /// One-line summary for logs/metrics.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} on {} | N={} lambda={} Nc={} beta={} B={} E={} rounds={} lr={} seed={}",
+            self.protocol.name(),
+            self.task.name(),
+            self.n_clients,
+            self.participation,
+            if self.nc >= 10 { "IID".to_string() } else { self.nc.to_string() },
+            self.beta,
+            self.batch,
+            self.local_epochs,
+            self.rounds,
+            self.lr,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1)
+            .validate()
+            .unwrap();
+        ExperimentConfig::large_federation(Protocol::FedAvg, Task::CifarLike, 2)
+            .validate()
+            .unwrap();
+        ExperimentConfig::table2(Protocol::Baseline, Task::MnistLike, 3)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn selected_count() {
+        let mut c = ExperimentConfig::large_federation(Protocol::TFedAvg, Task::MnistLike, 1);
+        assert_eq!(c.selected_per_round(), 10);
+        c.participation = 0.34;
+        assert_eq!(c.selected_per_round(), 34);
+        c.participation = 0.001;
+        assert_eq!(c.selected_per_round(), 1);
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let ok = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        let cases: Vec<fn(&mut ExperimentConfig)> = vec![
+            |c| c.n_clients = 0,
+            |c| c.participation = 0.0,
+            |c| c.participation = 1.5,
+            |c| c.beta = 0.0,
+            |c| c.batch = 0,
+            |c| c.rounds = 0,
+            |c| c.eval_every = 0,
+            |c| c.train_samples = 2,
+        ];
+        for f in cases {
+            let mut c = ok.clone();
+            f(&mut c);
+            assert!(c.validate().is_err());
+        }
+        // centralized with many clients rejected
+        let mut c = ok.clone();
+        c.protocol = Protocol::Baseline;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn protocol_parse_and_bits() {
+        assert_eq!(Protocol::parse("t-fedavg").unwrap(), Protocol::TFedAvg);
+        assert_eq!(Protocol::parse("BASELINE").unwrap(), Protocol::Baseline);
+        assert!(Protocol::parse("x").is_err());
+        assert_eq!(Protocol::TFedAvg.weight_bits(), 2);
+        assert_eq!(Protocol::FedAvg.weight_bits(), 32);
+    }
+}

@@ -1,0 +1,115 @@
+//! Server aggregation: the FedAvg data-size-weighted average (eq. 2 /
+//! Algorithm 2 server step), applied to rebuilt client models.
+
+use anyhow::{bail, Result};
+
+use crate::model::ParamSet;
+
+/// theta_{r+1} = sum_k (|D_k| / sum |D_k|) * theta_k.
+pub fn weighted_average(updates: &[(u64, ParamSet)]) -> Result<ParamSet> {
+    if updates.is_empty() {
+        bail!("no updates to aggregate");
+    }
+    let total: u64 = updates.iter().map(|(n, _)| *n).sum();
+    if total == 0 {
+        bail!("all updates report zero samples");
+    }
+    let mut acc = updates[0].1.clone();
+    acc.scale(0.0);
+    for (n, p) in updates {
+        if p.tensors.len() != acc.tensors.len() {
+            bail!("update tensor count mismatch");
+        }
+        acc.axpy((*n as f64 / total as f64) as f32, p);
+    }
+    if !acc.is_finite() {
+        bail!("aggregated model contains non-finite values");
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests::toy_schema;
+    use crate::model::init_params;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(1);
+        let a = init_params(&schema, &mut rng);
+        let b = init_params(&schema, &mut rng);
+        let avg = weighted_average(&[(5, a.clone()), (5, b.clone())]).unwrap();
+        for i in 0..avg.tensors.len() {
+            for j in 0..avg.tensors[i].data.len() {
+                let want = 0.5 * (a.tensors[i].data[j] + b.tensors[i].data[j]);
+                assert!((avg.tensors[i].data[j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_update_is_identity() {
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(2);
+        let a = init_params(&schema, &mut rng);
+        let avg = weighted_average(&[(100, a.clone())]).unwrap();
+        assert!(avg.l2_distance(&a) < 1e-6);
+    }
+
+    #[test]
+    fn weights_proportional_to_samples() {
+        forall(32, |rng| {
+            let schema = toy_schema();
+            let mut prng = Pcg::seeded(rng.next_u64());
+            let a = init_params(&schema, &mut prng);
+            let b = init_params(&schema, &mut prng);
+            let na = 1 + rng.below(1000) as u64;
+            let nb = 1 + rng.below(1000) as u64;
+            let avg = weighted_average(&[(na, a.clone()), (nb, b.clone())]).unwrap();
+            let wa = na as f32 / (na + nb) as f32;
+            let v = avg.tensors[0].data[0];
+            let want = wa * a.tensors[0].data[0] + (1.0 - wa) * b.tensors[0].data[0];
+            assert!((v - want).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn convexity_bounds() {
+        // aggregate lies inside the coordinate-wise envelope of the inputs
+        forall(16, |rng| {
+            let schema = toy_schema();
+            let mut prng = Pcg::seeded(rng.next_u64());
+            let sets: Vec<(u64, ParamSet)> = (0..4)
+                .map(|_| (1 + rng.below(50) as u64, init_params(&schema, &mut prng)))
+                .collect();
+            let avg = weighted_average(&sets).unwrap();
+            for i in 0..avg.tensors.len() {
+                for j in 0..avg.tensors[i].data.len() {
+                    let lo = sets
+                        .iter()
+                        .map(|(_, p)| p.tensors[i].data[j])
+                        .fold(f32::INFINITY, f32::min);
+                    let hi = sets
+                        .iter()
+                        .map(|(_, p)| p.tensors[i].data[j])
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let v = avg.tensors[i].data[j];
+                    assert!(v >= lo - 1e-5 && v <= hi + 1e-5);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        assert!(weighted_average(&[]).is_err());
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(3);
+        let a = init_params(&schema, &mut rng);
+        assert!(weighted_average(&[(0, a)]).is_err());
+    }
+}

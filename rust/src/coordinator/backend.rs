@@ -1,0 +1,454 @@
+//! Compute backend abstraction: local training / eval / quantization.
+//!
+//! `PjrtBackend` drives the AOT HLO artifacts (the production path);
+//! `NativeBackend` runs the pure-Rust mirror (fast coordinator tests, and
+//! the cross-validation baseline for §Perf).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::client::{epoch_order, make_chunks, ShardData};
+use crate::model::{ModelSchema, ParamSet, Tensor};
+use crate::native::mlp::{Mode as NativeMode, NativeMlp};
+use crate::quant;
+use crate::runtime::manifest::{Dtype, IoSpec};
+use crate::runtime::{Engine, Value};
+use crate::util::rng::Pcg;
+
+/// Which local-training math to run (matches the artifact "mode").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    Fp,
+    Fttq,
+    Ttq,
+}
+
+impl TrainMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrainMode::Fp => "fp",
+            TrainMode::Fttq => "fttq",
+            TrainMode::Ttq => "ttq",
+        }
+    }
+}
+
+/// Result of one client's local round.
+#[derive(Clone, Debug)]
+pub struct LocalOutcome {
+    pub params: ParamSet,
+    /// fttq: trained w^q per quantized layer
+    pub wq: Vec<f32>,
+    /// ttq: trained factors (wp, wn) per quantized layer
+    pub wp: Vec<f32>,
+    pub wn: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+/// Local compute: E epochs of training, evaluation, upload quantization.
+pub trait Backend {
+    fn schema(&self) -> &ModelSchema;
+    fn t_k(&self) -> f32;
+    fn wq_init(&self) -> f32;
+    fn server_delta(&self) -> f32;
+
+    /// Train `epochs` local epochs from `start`. `factors0` seeds the
+    /// quantization factors: fttq wants L values (w^q per layer), ttq wants
+    /// 2L (wp then wn); ignored for fp.
+    fn train_local(
+        &self,
+        start: &ParamSet,
+        mode: TrainMode,
+        factors0: &[f32],
+        data: &ShardData,
+        epochs: usize,
+        lr: f32,
+        rng: &mut Pcg,
+    ) -> Result<LocalOutcome>;
+
+    /// FTTQ upload quantization of trained weights:
+    /// -> (ternary pattern per quantized layer, delta per layer).
+    fn quantize(&self, params: &ParamSet) -> Result<(Vec<Vec<i8>>, Vec<f32>)>;
+
+    /// (mean CE loss, accuracy) of `params` on `data`.
+    fn evaluate(&self, params: &ParamSet, data: &ShardData) -> Result<(f32, f32)>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Runs local training/eval through the compiled HLO artifacts.
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+    model: String,
+    schema: ModelSchema,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Arc<Engine>, model: &str, batch: usize) -> Result<PjrtBackend> {
+        let entry = engine.manifest.model(model)?;
+        let schema = entry.schema.clone();
+        // fail early if the batch size has no artifacts
+        engine.manifest.train_artifact(model, "fttq", batch)?;
+        Ok(PjrtBackend { engine, model: model.to_string(), schema, batch })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    fn opt_state_spec(&self, mode: TrainMode) -> Result<Vec<IoSpec>> {
+        let entry = self.engine.manifest.model(&self.model)?;
+        Ok(match mode {
+            TrainMode::Fp => entry.opt_state_fp.clone(),
+            TrainMode::Fttq => entry.opt_state_fttq.clone(),
+            TrainMode::Ttq => entry.opt_state_ttq.clone(),
+        })
+    }
+
+    fn zeros_for(spec: &[IoSpec]) -> Vec<Value> {
+        spec.iter()
+            .map(|s| match s.dtype {
+                Dtype::F32 => Value::F32 {
+                    shape: s.shape.clone(),
+                    data: vec![0.0; s.numel()],
+                },
+                Dtype::S32 => Value::I32 {
+                    shape: s.shape.clone(),
+                    data: vec![0; s.numel()],
+                },
+            })
+            .collect()
+    }
+
+    fn params_to_values(params: &ParamSet) -> Vec<Value> {
+        params
+            .tensors
+            .iter()
+            .map(|t| Value::F32 { shape: t.shape.clone(), data: t.data.clone() })
+            .collect()
+    }
+
+    fn values_to_params(&self, values: &[Value]) -> Result<ParamSet> {
+        let mut tensors = Vec::with_capacity(values.len());
+        for (v, spec) in values.iter().zip(&self.schema.params) {
+            tensors.push(Tensor::new(spec.shape.clone(), v.as_f32()?.to_vec())?);
+        }
+        Ok(ParamSet { tensors })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn schema(&self) -> &ModelSchema {
+        &self.schema
+    }
+
+    fn t_k(&self) -> f32 {
+        self.engine.manifest.t_k
+    }
+
+    fn wq_init(&self) -> f32 {
+        self.engine.manifest.wq_init
+    }
+
+    fn server_delta(&self) -> f32 {
+        self.engine.manifest.server_delta
+    }
+
+    fn train_local(
+        &self,
+        start: &ParamSet,
+        mode: TrainMode,
+        factors0: &[f32],
+        data: &ShardData,
+        epochs: usize,
+        lr: f32,
+        rng: &mut Pcg,
+    ) -> Result<LocalOutcome> {
+        if data.is_empty() {
+            bail!("client shard is empty");
+        }
+        let art = self
+            .engine
+            .manifest
+            .train_artifact(&self.model, mode.as_str(), self.batch)?
+            .clone();
+        let (b, nb) = (art.batch, art.nb);
+        let nq = self.schema.num_quantized();
+
+        let n_params = self.schema.params.len();
+        let mut params: Vec<Value> = Self::params_to_values(start);
+        // factor values
+        let mut factors: Vec<Value> = match mode {
+            TrainMode::Fp => vec![],
+            TrainMode::Fttq => {
+                let f = if factors0.is_empty() {
+                    vec![self.wq_init(); nq]
+                } else {
+                    factors0.to_vec()
+                };
+                if f.len() != nq {
+                    bail!("fttq wants {nq} factors, got {}", f.len());
+                }
+                vec![Value::f32(vec![nq], f)?]
+            }
+            TrainMode::Ttq => {
+                let f = if factors0.is_empty() {
+                    vec![self.wq_init(); 2 * nq]
+                } else {
+                    factors0.to_vec()
+                };
+                if f.len() != 2 * nq {
+                    bail!("ttq wants {} factors, got {}", 2 * nq, f.len());
+                }
+                vec![
+                    Value::f32(vec![nq], f[..nq].to_vec())?,
+                    Value::f32(vec![nq], f[nq..].to_vec())?,
+                ]
+            }
+        };
+        let n_factors = factors.len();
+        let mut opt: Vec<Value> = Self::zeros_for(&self.opt_state_spec(mode)?);
+        let n_opt = opt.len();
+
+        let mut loss_acc = 0f64;
+        let mut loss_n = 0f64;
+        for _ in 0..epochs {
+            let order = epoch_order(data.len(), rng);
+            for chunk in make_chunks(data, &order, b, nb) {
+                let mut inputs =
+                    Vec::with_capacity(n_params + n_factors + n_opt + 4);
+                inputs.extend(params.iter().cloned());
+                inputs.extend(factors.iter().cloned());
+                inputs.extend(opt.iter().cloned());
+                inputs.push(Value::f32(vec![nb, b, data.dim], chunk.xs)?);
+                inputs.push(Value::i32(vec![nb, b], chunk.ys)?);
+                inputs.push(Value::f32(vec![nb, b], chunk.ms)?);
+                inputs.push(Value::scalar_f32(lr));
+                let out = self.engine.execute(&art.name, &inputs)?;
+                let loss = out.last().unwrap().scalar()?;
+                loss_acc += loss as f64 * chunk.samples as f64;
+                loss_n += chunk.samples as f64;
+                params = out[..n_params].to_vec();
+                factors = out[n_params..n_params + n_factors].to_vec();
+                opt = out[n_params + n_factors..n_params + n_factors + n_opt].to_vec();
+            }
+        }
+
+        let params = self.values_to_params(&params)?;
+        let (wq, wp, wn) = match mode {
+            TrainMode::Fp => (vec![], vec![], vec![]),
+            TrainMode::Fttq => (factors[0].as_f32()?.to_vec(), vec![], vec![]),
+            TrainMode::Ttq => (
+                vec![],
+                factors[0].as_f32()?.to_vec(),
+                factors[1].as_f32()?.to_vec(),
+            ),
+        };
+        Ok(LocalOutcome {
+            params,
+            wq,
+            wp,
+            wn,
+            mean_loss: (loss_acc / loss_n.max(1.0)) as f32,
+        })
+    }
+
+    fn quantize(&self, params: &ParamSet) -> Result<(Vec<Vec<i8>>, Vec<f32>)> {
+        let art = self.engine.manifest.quantize_artifact(&self.model)?.clone();
+        let qidx = self.schema.quantized_indices();
+        let inputs: Vec<Value> = qidx
+            .iter()
+            .map(|&i| {
+                let t = &params.tensors[i];
+                Value::f32(t.shape.clone(), t.data.clone())
+            })
+            .collect::<Result<_>>()?;
+        let out = self.engine.execute(&art.name, &inputs)?;
+        let mut patterns = Vec::with_capacity(qidx.len());
+        let mut deltas = Vec::with_capacity(qidx.len());
+        for k in 0..qidx.len() {
+            let it_f32 = out[k].as_f32()?;
+            patterns.push(
+                it_f32
+                    .iter()
+                    .map(|&v| {
+                        if v > 0.5 {
+                            1i8
+                        } else if v < -0.5 {
+                            -1
+                        } else {
+                            0
+                        }
+                    })
+                    .collect(),
+            );
+            deltas.push(out[qidx.len() + k].scalar()?);
+        }
+        Ok((patterns, deltas))
+    }
+
+    fn evaluate(&self, params: &ParamSet, data: &ShardData) -> Result<(f32, f32)> {
+        let art = self.engine.manifest.eval_artifact(&self.model)?.clone();
+        let (b, nb) = (art.batch, art.nb);
+        let order: Vec<u32> = (0..data.len() as u32).collect();
+        let base = Self::params_to_values(params);
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut count = 0f64;
+        for chunk in make_chunks(data, &order, b, nb) {
+            let mut inputs = base.clone();
+            inputs.push(Value::f32(vec![nb, b, data.dim], chunk.xs)?);
+            inputs.push(Value::i32(vec![nb, b], chunk.ys)?);
+            inputs.push(Value::f32(vec![nb, b], chunk.ms)?);
+            let out = self.engine.execute(&art.name, &inputs)?;
+            loss_sum += out[0].scalar()? as f64;
+            correct += out[1].scalar()? as f64;
+            count += out[2].scalar()? as f64;
+        }
+        if count == 0.0 {
+            bail!("evaluated zero samples");
+        }
+        Ok(((loss_sum / count) as f32, (correct / count) as f32))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust backend over `native::NativeMlp` (fp + fttq modes, MLP only).
+pub struct NativeBackend {
+    schema: ModelSchema,
+    batch: usize,
+    t_k: f32,
+    wq_init: f32,
+    server_delta: f32,
+}
+
+impl NativeBackend {
+    pub fn new(schema: ModelSchema, batch: usize) -> NativeBackend {
+        NativeBackend { schema, batch, t_k: 0.05, wq_init: 0.05, server_delta: 0.05 }
+    }
+
+    fn net(&self, mode: TrainMode) -> Result<NativeMlp> {
+        let m = match mode {
+            TrainMode::Fp => NativeMode::Fp,
+            TrainMode::Fttq => NativeMode::Fttq,
+            TrainMode::Ttq => bail!("native backend does not implement TTQ"),
+        };
+        NativeMlp::from_schema(&self.schema, m, self.t_k)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn schema(&self) -> &ModelSchema {
+        &self.schema
+    }
+
+    fn t_k(&self) -> f32 {
+        self.t_k
+    }
+
+    fn wq_init(&self) -> f32 {
+        self.wq_init
+    }
+
+    fn server_delta(&self) -> f32 {
+        self.server_delta
+    }
+
+    fn train_local(
+        &self,
+        start: &ParamSet,
+        mode: TrainMode,
+        factors0: &[f32],
+        data: &ShardData,
+        epochs: usize,
+        lr: f32,
+        rng: &mut Pcg,
+    ) -> Result<LocalOutcome> {
+        if data.is_empty() {
+            bail!("client shard is empty");
+        }
+        let net = self.net(mode)?;
+        let nq = self.schema.num_quantized();
+        let mut params = start.clone();
+        let mut wq = match mode {
+            TrainMode::Fp => vec![],
+            _ => {
+                if factors0.is_empty() {
+                    vec![self.wq_init; nq]
+                } else {
+                    factors0.to_vec()
+                }
+            }
+        };
+        let dim = data.dim;
+        let mut loss_acc = 0f64;
+        let mut loss_n = 0f64;
+        for _ in 0..epochs {
+            let order = epoch_order(data.len(), rng);
+            for batch_idx in order.chunks(self.batch) {
+                let n = batch_idx.len();
+                let mut x = Vec::with_capacity(n * dim);
+                let mut y = Vec::with_capacity(n);
+                for &i in batch_idx {
+                    let i = i as usize;
+                    x.extend_from_slice(&data.x[i * dim..(i + 1) * dim]);
+                    y.push(data.y[i]);
+                }
+                let loss = net.train_batch(&mut params, &mut wq, &x, &y, n, lr)?;
+                loss_acc += loss as f64 * n as f64;
+                loss_n += n as f64;
+            }
+        }
+        Ok(LocalOutcome {
+            params,
+            wq,
+            wp: vec![],
+            wn: vec![],
+            mean_loss: (loss_acc / loss_n.max(1.0)) as f32,
+        })
+    }
+
+    fn quantize(&self, params: &ParamSet) -> Result<(Vec<Vec<i8>>, Vec<f32>)> {
+        let qidx = self.schema.quantized_indices();
+        let mut patterns = Vec::new();
+        let mut deltas = Vec::new();
+        for &i in &qidx {
+            let (it, d) = quant::fttq_quantize(&params.tensors[i].data, self.t_k);
+            patterns.push(it);
+            deltas.push(d);
+        }
+        Ok((patterns, deltas))
+    }
+
+    fn evaluate(&self, params: &ParamSet, data: &ShardData) -> Result<(f32, f32)> {
+        // evaluation is always full-precision math over the given values
+        let net = self.net(TrainMode::Fp)?;
+        Ok(net.evaluate(params, &[], &data.x, &data.y, data.len()))
+    }
+}
+
+/// Build the backend named by the config. The native backend needs no
+/// engine/artifacts (it carries the paper's MLP schema internally).
+pub fn make_backend(
+    engine: Option<Arc<Engine>>,
+    model: &str,
+    batch: usize,
+    native: bool,
+) -> Result<Box<dyn Backend>> {
+    if native {
+        if model != "mlp" {
+            bail!("native backend only implements the mlp model");
+        }
+        Ok(Box::new(NativeBackend::new(crate::model::mlp_schema(), batch)))
+    } else {
+        let engine = engine.ok_or_else(|| anyhow!("PJRT backend requires an engine"))?;
+        Ok(Box::new(PjrtBackend::new(engine, model, batch)?))
+    }
+}

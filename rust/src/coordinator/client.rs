@@ -1,0 +1,148 @@
+//! Client-side data handling: shard materialization + epoch-chunk batching.
+//!
+//! Train artifacts take fixed shapes [NB, B, dim]; a client shard of any
+//! size is covered by shuffling, splitting into NB*B-sample chunks, and
+//! zero-padding the tail with a {0,1} sample mask (the masked-loss graphs
+//! make padding exact — see python/tests/test_train.py).
+
+use crate::data::synth::Dataset;
+use crate::util::rng::Pcg;
+
+/// A client's materialized local data (features copied out of the shared
+/// dataset once, at setup).
+#[derive(Clone, Debug)]
+pub struct ShardData {
+    pub dim: usize,
+    pub num_classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+}
+
+impl ShardData {
+    pub fn from_dataset(data: &Dataset, indices: &[u32]) -> ShardData {
+        let mut x = Vec::with_capacity(indices.len() * data.dim);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(data.sample(i as usize));
+            y.push(data.labels[i as usize]);
+        }
+        ShardData { dim: data.dim, num_classes: data.num_classes, x, y }
+    }
+
+    pub fn whole(data: &Dataset) -> ShardData {
+        let idx: Vec<u32> = (0..data.len() as u32).collect();
+        Self::from_dataset(data, &idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// One padded chunk ready for a train/eval artifact call.
+pub struct Chunk {
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    pub ms: Vec<f32>,
+    /// real (unpadded) samples in this chunk
+    pub samples: usize,
+}
+
+/// Split `order` (indices into `data`) into chunks of `nb * b` samples,
+/// zero-padding the last chunk.
+pub fn make_chunks(data: &ShardData, order: &[u32], b: usize, nb: usize) -> Vec<Chunk> {
+    let cap = b * nb;
+    let dim = data.dim;
+    let mut chunks = Vec::with_capacity(order.len().div_ceil(cap));
+    for chunk_idx in order.chunks(cap) {
+        let mut xs = vec![0f32; cap * dim];
+        let mut ys = vec![0i32; cap];
+        let mut ms = vec![0f32; cap];
+        for (slot, &i) in chunk_idx.iter().enumerate() {
+            let i = i as usize;
+            xs[slot * dim..(slot + 1) * dim]
+                .copy_from_slice(&data.x[i * dim..(i + 1) * dim]);
+            ys[slot] = data.y[i] as i32;
+            ms[slot] = 1.0;
+        }
+        chunks.push(Chunk { xs, ys, ms, samples: chunk_idx.len() });
+    }
+    chunks
+}
+
+/// A shuffled epoch order over a shard.
+pub fn epoch_order(n: usize, rng: &mut Pcg) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(n: usize, dim: usize) -> ShardData {
+        ShardData {
+            dim,
+            num_classes: 10,
+            x: (0..n * dim).map(|i| i as f32).collect(),
+            y: (0..n as u32).map(|i| i % 10).collect(),
+        }
+    }
+
+    #[test]
+    fn chunks_cover_all_samples_once() {
+        let data = shard(100, 4);
+        let order: Vec<u32> = (0..100).collect();
+        let chunks = make_chunks(&data, &order, 8, 4); // cap 32
+        assert_eq!(chunks.len(), 4); // 32+32+32+4
+        let total: usize = chunks.iter().map(|c| c.samples).sum();
+        assert_eq!(total, 100);
+        // mask sums equal real sample counts
+        for c in &chunks {
+            let msum: f32 = c.ms.iter().sum();
+            assert_eq!(msum as usize, c.samples);
+        }
+        // padded tail is zeros with zero mask
+        let last = &chunks[3];
+        assert_eq!(last.samples, 4);
+        assert_eq!(last.ms[4], 0.0);
+        assert!(last.xs[4 * 4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn chunk_features_match_order() {
+        let data = shard(10, 2);
+        let order = vec![3u32, 7];
+        let chunks = make_chunks(&data, &order, 2, 1);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(&chunks[0].xs[..2], &[6.0, 7.0]); // sample 3
+        assert_eq!(chunks[0].ys[1], 7);
+    }
+
+    #[test]
+    fn epoch_order_is_permutation() {
+        let mut rng = Pcg::seeded(1);
+        let mut o = epoch_order(50, &mut rng);
+        o.sort_unstable();
+        assert_eq!(o, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn shard_from_dataset() {
+        let ds = Dataset {
+            dim: 3,
+            num_classes: 10,
+            features: (0..30).map(|i| i as f32).collect(),
+            labels: (0..10).collect(),
+        };
+        let s = ShardData::from_dataset(&ds, &[2, 5]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(&s.x[..3], &[6.0, 7.0, 8.0]);
+        assert_eq!(s.y, vec![2, 5]);
+    }
+}

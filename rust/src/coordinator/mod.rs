@@ -1,0 +1,18 @@
+//! The federated coordinator — Layer 3, the paper's protocol machinery.
+//!
+//! * `selection` — seeded client sampling (participation ratio lambda)
+//! * `aggregation` — data-size-weighted FedAvg averaging (eq. 2)
+//! * `client` — local shard materialization + epoch-chunk batching
+//! * `backend` — compute abstraction: PJRT artifacts or the native mirror
+//! * `server` — the round loops for Baseline / TTQ / FedAvg / T-FedAvg
+//!   (Algorithm 2), with every cross-"network" byte serialized and counted
+
+pub mod aggregation;
+pub mod backend;
+pub mod client;
+pub mod selection;
+pub mod server;
+
+pub use backend::{Backend, LocalOutcome, NativeBackend, PjrtBackend, TrainMode};
+pub use client::ShardData;
+pub use server::{run_experiment, Orchestrator};

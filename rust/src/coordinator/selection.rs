@@ -1,0 +1,71 @@
+//! Client selection: the paper's "randomly selected clients" with
+//! participation ratio lambda (§III-B Upstream).
+
+use crate::util::rng::Pcg;
+
+/// Select `k` distinct clients out of `n` for one round.
+pub fn select_clients(n: usize, k: usize, rng: &mut Pcg) -> Vec<usize> {
+    let k = k.min(n).max(1);
+    let mut picked = rng.choose(n, k);
+    picked.sort_unstable();
+    picked
+}
+
+/// Apply failure injection: each selected client independently drops out
+/// with probability `p`; at least one survivor is kept (the round would
+/// otherwise stall, matching a server that re-samples).
+pub fn apply_dropout(selected: &[usize], p: f64, rng: &mut Pcg) -> Vec<usize> {
+    if p <= 0.0 {
+        return selected.to_vec();
+    }
+    let mut kept: Vec<usize> =
+        selected.iter().copied().filter(|_| rng.next_f64() >= p).collect();
+    if kept.is_empty() && !selected.is_empty() {
+        let i = rng.below(selected.len() as u32) as usize;
+        kept.push(selected[i]);
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn selects_k_distinct_sorted() {
+        forall(64, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let k = 1 + rng.below(n as u32) as usize;
+            let s = select_clients(n, k, rng);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&c| c < n));
+        });
+    }
+
+    #[test]
+    fn different_rounds_select_differently() {
+        let mut rng = Pcg::seeded(1);
+        let a = select_clients(100, 10, &mut rng);
+        let b = select_clients(100, 10, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn dropout_keeps_at_least_one() {
+        forall(64, |rng| {
+            let sel: Vec<usize> = (0..10).collect();
+            let kept = apply_dropout(&sel, 0.99, rng);
+            assert!(!kept.is_empty());
+            assert!(kept.iter().all(|c| sel.contains(c)));
+        });
+    }
+
+    #[test]
+    fn zero_dropout_is_identity() {
+        let mut rng = Pcg::seeded(2);
+        let sel = vec![1, 5, 9];
+        assert_eq!(apply_dropout(&sel, 0.0, &mut rng), sel);
+    }
+}

@@ -1,0 +1,444 @@
+//! The round-based orchestrator: Algorithm 2 (T-FedAvg) plus the FedAvg,
+//! Baseline, and TTQ comparison loops.
+//!
+//! Every payload that would cross the network is serialized through
+//! `comms::Message` and its bytes counted — the Table-IV numbers are
+//! measured, not estimated. Execution is in-process and sequential (one
+//! CPU core); the message boundary is the fidelity point.
+
+use anyhow::{bail, Result};
+
+use crate::comms::{
+    dense_update, rebuild_update, ternary_update, unpack_dequantize, Message,
+    TernaryGlobal,
+};
+use crate::config::{ExperimentConfig, Protocol, Task};
+use crate::coordinator::aggregation::weighted_average;
+use crate::coordinator::backend::{Backend, TrainMode};
+use crate::coordinator::client::ShardData;
+use crate::coordinator::selection::{apply_dropout, select_clients};
+use crate::data::partition::{partition, PartitionSpec};
+use crate::data::synth::SynthSpec;
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::model::{init_params, ParamSet};
+use crate::quant;
+use crate::util::rng::Pcg;
+use crate::util::timer::Stopwatch;
+use crate::{debug, info};
+
+/// Failure-injection knob (robustness tests): probability that a selected
+/// client drops out of the round after selection.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSpec {
+    pub client_dropout: f64,
+}
+
+/// A fully-initialized experiment ready to run round-by-round.
+pub struct Orchestrator<'a> {
+    pub cfg: ExperimentConfig,
+    backend: &'a dyn Backend,
+    shards: Vec<ShardData>,
+    test: ShardData,
+    global: ParamSet,
+    /// TTQ factor state carried across rounds (wp || wn)
+    ttq_factors: Vec<f32>,
+    /// mean trained w^q of the previous round — broadcast as the clients'
+    /// next w^q init (Algorithm 2's "initialize w^q", our reading)
+    last_wq_mean: Vec<f32>,
+    rng: Pcg,
+    faults: FaultSpec,
+    pub metrics: RunMetrics,
+}
+
+impl<'a> Orchestrator<'a> {
+    pub fn new(cfg: ExperimentConfig, backend: &'a dyn Backend) -> Result<Self> {
+        Self::with_faults(cfg, backend, FaultSpec::default())
+    }
+
+    pub fn with_faults(
+        cfg: ExperimentConfig,
+        backend: &'a dyn Backend,
+        faults: FaultSpec,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let mut rng = Pcg::new(cfg.seed, 0xC0 + cfg.protocol.weight_bits() as u64);
+
+        // synthesize + shard the data
+        let spec = match cfg.task {
+            Task::MnistLike => SynthSpec::mnist_like(cfg.train_samples, cfg.test_samples, cfg.seed),
+            Task::CifarLike => SynthSpec::cifar_like(cfg.train_samples, cfg.test_samples, cfg.seed),
+        };
+        let (train, test) = spec.generate();
+        if train.dim != backend.schema().input_dim {
+            bail!(
+                "dataset dim {} != model input {}",
+                train.dim,
+                backend.schema().input_dim
+            );
+        }
+        let pspec = PartitionSpec {
+            n_clients: cfg.n_clients,
+            nc: cfg.nc,
+            beta: cfg.beta,
+            seed: cfg.seed ^ 0x51AB,
+        };
+        let part = partition(&train, &pspec)?;
+        let shards: Vec<ShardData> = part
+            .shards
+            .iter()
+            .map(|s| ShardData::from_dataset(&train, &s.indices))
+            .collect();
+        let test = ShardData::whole(&test);
+
+        let global = init_params(backend.schema(), &mut rng);
+        let nq = backend.schema().num_quantized();
+        let metrics = RunMetrics::new(cfg.summary());
+        info!("experiment: {}", cfg.summary());
+        Ok(Orchestrator {
+            cfg,
+            backend,
+            shards,
+            test,
+            global,
+            ttq_factors: vec![backend.wq_init(); 2 * nq],
+            last_wq_mean: vec![backend.wq_init(); nq],
+            rng,
+            faults,
+            metrics,
+        })
+    }
+
+    /// Current dense global model (server state).
+    pub fn global(&self) -> &ParamSet {
+        &self.global
+    }
+
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+
+    /// The ternary broadcast model a T-FedAvg client would download next
+    /// round (Algorithm 2 downstream payload materialized, bare {-1,0,+1}).
+    pub fn broadcast_model(&self) -> ParamSet {
+        let qidx = self.backend.schema().quantized_indices();
+        let patterns =
+            quant::requantize_paramset(&self.global, &qidx, self.backend.server_delta());
+        quant::rebuild_from_ternary(&self.global, &qidx, &patterns)
+    }
+
+    /// The 2-bit T-FedAvg *inference* model: the broadcast pattern scaled
+    /// per layer by the eq.-20 optimal factor (see quant::requantize_scaled
+    /// — client training is invariant to this rescaling, so it carries no
+    /// extra protocol bytes beyond one f32 per layer).
+    pub fn ternary_inference_model(&self) -> ParamSet {
+        let qidx = self.backend.schema().quantized_indices();
+        let mut out = self.global.clone();
+        for &i in &qidx {
+            let (it, wq) = quant::requantize_scaled(
+                &self.global.tensors[i].data,
+                self.backend.server_delta(),
+            );
+            for (dst, &s) in out.tensors[i].data.iter_mut().zip(&it) {
+                *dst = wq * s as f32;
+            }
+        }
+        out
+    }
+
+    /// Run one communication round. Returns the round record.
+    pub fn round(&mut self, round: usize) -> Result<RoundRecord> {
+        let sw = Stopwatch::start();
+        let k = self.cfg.selected_per_round();
+        let selected = select_clients(self.cfg.n_clients, k, &mut self.rng);
+        let selected = apply_dropout(&selected, self.faults.client_dropout, &mut self.rng);
+
+        let (train_loss, up, down, factors) = match self.cfg.protocol {
+            Protocol::TFedAvg => self.round_tfedavg(round, &selected)?,
+            Protocol::FedAvg => self.round_fedavg(round, &selected)?,
+            Protocol::Baseline => self.round_centralized(round, TrainMode::Fp)?,
+            Protocol::Ttq => self.round_centralized(round, TrainMode::Ttq)?,
+        };
+
+        let evaluated = round % self.cfg.eval_every == 0 || round == self.cfg.rounds;
+        let (test_loss, test_acc) = if evaluated {
+            let eval_model = match self.cfg.protocol {
+                // the paper reports the accuracy of the *quantized* model
+                Protocol::TFedAvg => self.ternary_inference_model(),
+                Protocol::Ttq => self.ttq_inference_model(),
+                _ => self.global.clone(),
+            };
+            self.backend.evaluate(&eval_model, &self.test)?
+        } else {
+            (f32::NAN, f32::NAN)
+        };
+
+        let rec = RoundRecord {
+            round,
+            train_loss,
+            test_acc,
+            test_loss,
+            up_bytes: up,
+            down_bytes: down,
+            wall_secs: sw.secs(),
+            selected,
+            factors,
+            evaluated,
+        };
+        if evaluated {
+            info!(
+                "round {round:>4}: loss={train_loss:.4} acc={test_acc:.4} up={}B down={}B",
+                up, down
+            );
+        }
+        self.metrics.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run all configured rounds.
+    pub fn run(&mut self) -> Result<()> {
+        for r in 1..=self.cfg.rounds {
+            self.round(r)?;
+        }
+        Ok(())
+    }
+
+    // -- T-FedAvg (Algorithm 2) --------------------------------------------
+    fn round_tfedavg(
+        &mut self,
+        round: usize,
+        selected: &[usize],
+    ) -> Result<(f32, u64, u64, Vec<f32>)> {
+        let schema = self.backend.schema().clone();
+        let qidx = schema.quantized_indices();
+        let shapes: Vec<Vec<usize>> =
+            schema.params.iter().map(|p| p.shape.clone()).collect();
+
+        // downstream: server re-quantizes the global model (fixed Delta)
+        // and broadcasts ternary patterns + fp biases
+        let patterns =
+            quant::requantize_paramset(&self.global, &qidx, self.backend.server_delta());
+        let down_msg = Message::TernaryGlobal(TernaryGlobal {
+            round: round as u32,
+            layers: qidx
+                .iter()
+                .zip(&patterns)
+                .map(|(&i, p)| (i as u32, crate::comms::pack_ternary(p)))
+                .collect(),
+            fp_tensors: schema
+                .params
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !qidx.contains(i))
+                .map(|(i, _)| (i as u32, self.global.tensors[i].data.clone()))
+                .collect(),
+            wq_init: self.last_wq_mean.clone(),
+        });
+        let down_bytes_each = down_msg.encode().len() as u64;
+        let down_bytes = down_bytes_each * selected.len() as u64;
+
+        let mut updates: Vec<(u64, ParamSet)> = Vec::with_capacity(selected.len());
+        let mut up_bytes = 0u64;
+        let mut loss_acc = 0f64;
+        let mut wq_mean = vec![0f32; qidx.len()];
+        for &cid in selected {
+            // client: decode the broadcast, rebuild local latent params
+            let (start, wq0) = match Message::decode(&down_msg.encode())? {
+                Message::TernaryGlobal(g) => {
+                    let mut p = ParamSet::zeros(&schema);
+                    for (i, packed) in &g.layers {
+                        let dense = unpack_dequantize(packed, 1.0)?;
+                        p.tensors[*i as usize].data = dense;
+                    }
+                    for (i, t) in &g.fp_tensors {
+                        p.tensors[*i as usize].data = t.clone();
+                    }
+                    (p, g.wq_init)
+                }
+                _ => bail!("wrong downstream message kind"),
+            };
+            // Algorithm 2: "initialize w^q" — seeded from the broadcast
+            // (previous round's aggregated factors; see TernaryGlobal)
+            let mut crng = self.rng.fork(cid as u64 + round as u64 * 7919);
+            let out = self.backend.train_local(
+                &start,
+                TrainMode::Fttq,
+                &wq0,
+                &self.shards[cid],
+                self.cfg.local_epochs,
+                self.cfg.lr,
+                &mut crng,
+            )?;
+            loss_acc += out.mean_loss as f64;
+            // upload: ternarize the trained latent weights + trained w^q
+            let (pats, deltas) = self.backend.quantize(&out.params)?;
+            let upd = ternary_update(
+                cid as u32,
+                self.shards[cid].len() as u64,
+                &qidx,
+                &pats,
+                &out.wq,
+                &deltas,
+                &out.params,
+                out.mean_loss,
+            );
+            let encoded = Message::TernaryUpdate(upd).encode();
+            up_bytes += encoded.len() as u64;
+            // server: decode + rebuild dense model (wq * it)
+            let upd = match Message::decode(&encoded)? {
+                Message::TernaryUpdate(u) => u,
+                _ => bail!("wrong upstream message kind"),
+            };
+            for (k, l) in upd.layers.iter().enumerate() {
+                wq_mean[k] += l.wq / selected.len() as f32;
+            }
+            let rebuilt = rebuild_update(&upd, &shapes)?;
+            updates.push((upd.num_samples, rebuilt));
+        }
+
+        // server aggregation (eq. 2)
+        self.global = weighted_average(&updates)?;
+        self.last_wq_mean = wq_mean.clone();
+        debug!("aggregated {} ternary updates", updates.len());
+        Ok((
+            (loss_acc / selected.len().max(1) as f64) as f32,
+            up_bytes,
+            down_bytes,
+            wq_mean,
+        ))
+    }
+
+    // -- FedAvg --------------------------------------------------------------
+    fn round_fedavg(
+        &mut self,
+        round: usize,
+        selected: &[usize],
+    ) -> Result<(f32, u64, u64, Vec<f32>)> {
+        let schema = self.backend.schema().clone();
+        let shapes: Vec<Vec<usize>> =
+            schema.params.iter().map(|p| p.shape.clone()).collect();
+        let down_msg = Message::DenseGlobal(crate::comms::DenseGlobal {
+            round: round as u32,
+            tensors: self.global.tensors.iter().map(|t| t.data.clone()).collect(),
+        });
+        let down_bytes_each = down_msg.encode().len() as u64;
+        let down_bytes = down_bytes_each * selected.len() as u64;
+
+        let mut updates = Vec::with_capacity(selected.len());
+        let mut up_bytes = 0u64;
+        let mut loss_acc = 0f64;
+        for &cid in selected {
+            let start = match Message::decode(&down_msg.encode())? {
+                Message::DenseGlobal(g) => {
+                    let mut p = ParamSet::zeros(&schema);
+                    for (t, data) in p.tensors.iter_mut().zip(g.tensors) {
+                        t.data = data;
+                    }
+                    p
+                }
+                _ => bail!("wrong downstream message kind"),
+            };
+            let mut crng = self.rng.fork(cid as u64 + round as u64 * 7919);
+            let out = self.backend.train_local(
+                &start,
+                TrainMode::Fp,
+                &[],
+                &self.shards[cid],
+                self.cfg.local_epochs,
+                self.cfg.lr,
+                &mut crng,
+            )?;
+            loss_acc += out.mean_loss as f64;
+            let upd =
+                dense_update(cid as u32, self.shards[cid].len() as u64, &out.params, out.mean_loss);
+            let encoded = Message::DenseUpdate(upd).encode();
+            up_bytes += encoded.len() as u64;
+            let upd = match Message::decode(&encoded)? {
+                Message::DenseUpdate(u) => u,
+                _ => bail!("wrong upstream message kind"),
+            };
+            let mut p = ParamSet::zeros(&schema);
+            for ((t, data), shape) in p.tensors.iter_mut().zip(upd.tensors).zip(&shapes) {
+                if t.data.len() != data.len() {
+                    bail!("tensor size mismatch for shape {shape:?}");
+                }
+                t.data = data;
+            }
+            updates.push((upd.num_samples, p));
+        }
+        self.global = weighted_average(&updates)?;
+        Ok((
+            (loss_acc / selected.len().max(1) as f64) as f32,
+            up_bytes,
+            down_bytes,
+            vec![],
+        ))
+    }
+
+    // -- centralized (Baseline / TTQ) ----------------------------------------
+    fn round_centralized(
+        &mut self,
+        round: usize,
+        mode: TrainMode,
+    ) -> Result<(f32, u64, u64, Vec<f32>)> {
+        let factors0 = match mode {
+            TrainMode::Ttq => self.ttq_factors.clone(),
+            _ => vec![],
+        };
+        let mut crng = self.rng.fork(round as u64);
+        let out = self.backend.train_local(
+            &self.global,
+            mode,
+            &factors0,
+            &self.shards[0],
+            self.cfg.local_epochs,
+            self.cfg.lr,
+            &mut crng,
+        )?;
+        self.global = out.params.clone();
+        let factors = match mode {
+            TrainMode::Ttq => {
+                // carry the trained factors into the next round (Fig. 12/13)
+                self.ttq_factors =
+                    out.wp.iter().chain(out.wn.iter()).copied().collect();
+                self.ttq_factors.clone()
+            }
+            _ => vec![],
+        };
+        Ok((out.mean_loss, 0, 0, factors))
+    }
+
+    /// Materialize the TTQ inference model: per layer, scale -> eq. 5
+    /// threshold -> {+wp, 0, -wn} (Zhu et al. inference path).
+    fn ttq_inference_model(&self) -> ParamSet {
+        let schema = self.backend.schema();
+        let qidx = schema.quantized_indices();
+        let nq = qidx.len();
+        let mut out = self.global.clone();
+        for (k, &i) in qidx.iter().enumerate() {
+            let theta_s = quant::scale(&self.global.tensors[i].data);
+            let delta = quant::threshold_max(&theta_s, self.backend.t_k());
+            let wp = self.ttq_factors[k];
+            let wn = self.ttq_factors[nq + k];
+            for (dst, &s) in out.tensors[i].data.iter_mut().zip(&theta_s) {
+                *dst = if s > delta {
+                    wp
+                } else if s < -delta {
+                    -wn
+                } else {
+                    0.0
+                };
+            }
+        }
+        out
+    }
+}
+
+/// Convenience: build an orchestrator and run it to completion.
+pub fn run_experiment(
+    cfg: ExperimentConfig,
+    backend: &dyn Backend,
+) -> Result<RunMetrics> {
+    let mut orch = Orchestrator::new(cfg, backend)?;
+    orch.run()?;
+    Ok(orch.metrics.clone())
+}

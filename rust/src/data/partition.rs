@@ -1,0 +1,316 @@
+//! Federated sharding: IID, Nc-class non-IID (Fig. 8/9), unbalanced beta
+//! splits (Fig. 11, eq. 29).
+
+use anyhow::{bail, Result};
+
+use crate::data::synth::Dataset;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// How to split a dataset across clients.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    pub n_clients: usize,
+    /// classes per client; == num_classes means IID (paper §V-A.3)
+    pub nc: usize,
+    /// unbalancedness ratio beta = median/max of client sizes (eq. 29);
+    /// 1.0 = balanced
+    pub beta: f64,
+    pub seed: u64,
+}
+
+impl PartitionSpec {
+    pub fn iid(n_clients: usize, seed: u64) -> Self {
+        PartitionSpec { n_clients, nc: usize::MAX, beta: 1.0, seed }
+    }
+
+    pub fn non_iid(n_clients: usize, nc: usize, seed: u64) -> Self {
+        PartitionSpec { n_clients, nc, beta: 1.0, seed }
+    }
+
+    pub fn unbalanced(n_clients: usize, beta: f64, seed: u64) -> Self {
+        PartitionSpec { n_clients, nc: usize::MAX, beta, seed }
+    }
+}
+
+/// One client's local data: indices into the shared dataset.
+#[derive(Clone, Debug)]
+pub struct ClientShard {
+    pub client_id: usize,
+    pub indices: Vec<u32>,
+}
+
+impl ClientShard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn class_histogram(&self, data: &Dataset) -> Vec<usize> {
+        let mut h = vec![0usize; data.num_classes];
+        for &i in &self.indices {
+            h[data.labels[i as usize] as usize] += 1;
+        }
+        h
+    }
+}
+
+/// The result of sharding a dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<ClientShard>,
+}
+
+impl Partition {
+    pub fn sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+
+    /// Measured unbalancedness (eq. 29) of this partition.
+    pub fn beta(&self) -> f64 {
+        stats::unbalancedness(&self.sizes())
+    }
+
+    /// Every sample must be assigned exactly once.
+    pub fn is_exact_cover(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for s in &self.shards {
+            for &i in &s.indices {
+                if seen[i as usize] {
+                    return false;
+                }
+                seen[i as usize] = true;
+            }
+        }
+        seen.iter().all(|&b| b)
+    }
+}
+
+/// Target client sizes for a given beta: geometric profile
+/// size_i = max * beta^(2i / (N-1)), normalized to sum to `total`.
+/// By construction median/max ~= beta.
+pub fn unbalanced_sizes(total: usize, n_clients: usize, beta: f64) -> Vec<usize> {
+    assert!(n_clients > 0);
+    assert!((0.0..=1.0).contains(&beta) && beta > 0.0, "beta in (0, 1]");
+    if n_clients == 1 {
+        return vec![total];
+    }
+    let raw: Vec<f64> = (0..n_clients)
+        .map(|i| beta.powf(2.0 * i as f64 / (n_clients as f64 - 1.0)))
+        .collect();
+    let s: f64 = raw.iter().sum();
+    let mut sizes: Vec<usize> = raw
+        .iter()
+        .map(|r| ((r / s) * total as f64).floor().max(1.0) as usize)
+        .collect();
+    // distribute the remainder deterministically to the largest clients
+    let mut assigned: usize = sizes.iter().sum();
+    let mut i = 0;
+    while assigned < total {
+        sizes[i % n_clients] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    while assigned > total {
+        let j = sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &s)| s)
+            .map(|(j, _)| j)
+            .unwrap();
+        sizes[j] -= 1;
+        assigned -= 1;
+    }
+    sizes
+}
+
+/// Split `data` across clients per `spec`.
+///
+/// * IID (`nc >= num_classes`): random permutation dealt out in
+///   `sizes`-length runs.
+/// * non-IID: client i is assigned classes {(i*nc + j) mod C}, j in 0..nc
+///   (each class held by exactly N*nc/C clients when divisible, matching
+///   Fig. 9: nc=2 -> disjoint labels, nc=5 -> partial overlap), and draws
+///   its quota evenly from per-class pools.
+pub fn partition(data: &Dataset, spec: &PartitionSpec) -> Result<Partition> {
+    if spec.n_clients == 0 {
+        bail!("n_clients must be > 0");
+    }
+    if data.len() < spec.n_clients {
+        bail!("{} samples cannot cover {} clients", data.len(), spec.n_clients);
+    }
+    let mut rng = Pcg::new(spec.seed, 0x5A4D);
+    let sizes = unbalanced_sizes(data.len(), spec.n_clients, spec.beta);
+    let c = data.num_classes;
+    let iid = spec.nc >= c;
+
+    let shards = if iid {
+        let mut order: Vec<u32> = (0..data.len() as u32).collect();
+        rng.shuffle(&mut order);
+        let mut shards = Vec::with_capacity(spec.n_clients);
+        let mut off = 0;
+        for (cid, &sz) in sizes.iter().enumerate() {
+            shards.push(ClientShard {
+                client_id: cid,
+                indices: order[off..off + sz].to_vec(),
+            });
+            off += sz;
+        }
+        shards
+    } else {
+        // per-class pools, shuffled
+        let mut pools: Vec<Vec<u32>> = vec![Vec::new(); c];
+        for (i, &y) in data.labels.iter().enumerate() {
+            pools[y as usize].push(i as u32);
+        }
+        for p in pools.iter_mut() {
+            rng.shuffle(p);
+        }
+        let mut cursor = vec![0usize; c];
+        let mut shards = Vec::with_capacity(spec.n_clients);
+        for (cid, &sz) in sizes.iter().enumerate() {
+            let classes: Vec<usize> =
+                (0..spec.nc).map(|j| (cid * spec.nc + j) % c).collect();
+            let mut idx = Vec::with_capacity(sz);
+            for (j, &k) in classes.iter().enumerate() {
+                // even quota, remainder to the first classes
+                let quota = sz / spec.nc + usize::from(j < sz % spec.nc);
+                let avail = pools[k].len() - cursor[k];
+                let take = quota.min(avail);
+                idx.extend_from_slice(&pools[k][cursor[k]..cursor[k] + take]);
+                cursor[k] += take;
+            }
+            shards.push(ClientShard { client_id: cid, indices: idx });
+        }
+        // leftovers (rounding / exhausted pools): deal to clients whose
+        // assigned classes match, else round-robin
+        let mut leftovers: Vec<u32> = Vec::new();
+        for (k, pool) in pools.iter().enumerate() {
+            leftovers.extend_from_slice(&pool[cursor[k]..]);
+        }
+        for (j, &i) in leftovers.iter().enumerate() {
+            let cid = j % spec.n_clients;
+            shards[cid].indices.push(i);
+        }
+        shards
+    };
+
+    Ok(Partition { shards })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::util::proptest::forall;
+
+    fn toy_data(n: usize) -> Dataset {
+        // tiny feature dim, balanced labels
+        Dataset {
+            dim: 2,
+            num_classes: 10,
+            features: vec![0.0; n * 2],
+            labels: (0..n as u32).map(|i| i % 10).collect(),
+        }
+    }
+
+    #[test]
+    fn iid_exact_cover_and_balance() {
+        let data = toy_data(1000);
+        let p = partition(&data, &PartitionSpec::iid(10, 1)).unwrap();
+        assert!(p.is_exact_cover(1000));
+        assert!(p.sizes().iter().all(|&s| s == 100));
+        assert!((p.beta() - 1.0).abs() < 1e-9);
+        // each client sees ~all classes
+        for s in &p.shards {
+            let h = s.class_histogram(&data);
+            assert!(h.iter().all(|&c| c > 0), "{h:?}");
+        }
+    }
+
+    #[test]
+    fn nc2_disjoint_classes() {
+        let data = toy_data(1000);
+        let p = partition(&data, &PartitionSpec::non_iid(10, 2, 2)).unwrap();
+        assert!(p.is_exact_cover(1000));
+        for s in &p.shards {
+            let h = s.class_histogram(&data);
+            let present = h.iter().filter(|&&c| c > 0).count();
+            assert!(present <= 3, "client {} classes {present} {h:?}", s.client_id);
+        }
+    }
+
+    #[test]
+    fn nc5_partial_overlap() {
+        let data = toy_data(2000);
+        let p = partition(&data, &PartitionSpec::non_iid(10, 5, 3)).unwrap();
+        assert!(p.is_exact_cover(2000));
+        for s in &p.shards {
+            let h = s.class_histogram(&data);
+            let present = h.iter().filter(|&&c| c > 0).count();
+            assert!((4..=6).contains(&present), "{h:?}");
+        }
+    }
+
+    #[test]
+    fn beta_controls_unbalance() {
+        for beta in [0.1, 0.3, 0.5, 1.0] {
+            let sizes = unbalanced_sizes(10_000, 30, beta);
+            assert_eq!(sizes.iter().sum::<usize>(), 10_000);
+            let measured = stats::unbalancedness(&sizes);
+            assert!(
+                (measured - beta).abs() < 0.12,
+                "beta={beta} measured={measured} sizes={sizes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbalanced_partition_cover() {
+        let data = toy_data(3000);
+        let p = partition(&data, &PartitionSpec::unbalanced(20, 0.2, 4)).unwrap();
+        assert!(p.is_exact_cover(3000));
+        assert!((p.beta() - 0.2).abs() < 0.12, "beta={}", p.beta());
+    }
+
+    #[test]
+    fn partition_properties() {
+        forall(32, |rng| {
+            let n = 500 + rng.below(2000) as usize;
+            let clients = 2 + rng.below(20) as usize;
+            let nc = 1 + rng.below(10) as usize;
+            let data = toy_data(n);
+            let spec = PartitionSpec { n_clients: clients, nc, beta: 1.0, seed: rng.next_u64() };
+            let p = partition(&data, &spec).unwrap();
+            assert!(p.is_exact_cover(n));
+            assert_eq!(p.shards.len(), clients);
+        });
+    }
+
+    #[test]
+    fn works_on_real_synth_data() {
+        let (train, _) = SynthSpec::mnist_like(500, 100, 5).generate();
+        let p = partition(&train, &PartitionSpec::non_iid(10, 2, 6)).unwrap();
+        assert!(p.is_exact_cover(500));
+    }
+
+    #[test]
+    fn errors_on_bad_specs() {
+        let data = toy_data(5);
+        assert!(partition(&data, &PartitionSpec::iid(0, 1)).is_err());
+        assert!(partition(&data, &PartitionSpec::iid(10, 1)).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = toy_data(800);
+        let a = partition(&data, &PartitionSpec::non_iid(10, 2, 9)).unwrap();
+        let b = partition(&data, &PartitionSpec::non_iid(10, 2, 9)).unwrap();
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+}

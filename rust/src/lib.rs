@@ -1,0 +1,27 @@
+//! # tfed — Ternary Compression for Communication-Efficient Federated Learning
+//!
+//! Rust + JAX + Pallas reproduction of Xu et al., *"Ternary Compression for
+//! Communication-Efficient Federated Learning"* (IEEE TNNLS 2020):
+//! the FTTQ quantizer and the T-FedAvg protocol, plus the FedAvg / TTQ /
+//! centralized baselines and the full paper evaluation harness.
+//!
+//! Architecture (see DESIGN.md):
+//! * **Layer 1** — Pallas kernels (ternarize, ternary matmul), authored in
+//!   `python/compile/kernels/`, AOT-lowered to HLO at build time.
+//! * **Layer 2** — JAX training/eval graphs (`python/compile/`), one HLO
+//!   artifact per (model × mode × batch size).
+//! * **Layer 3** — this crate: the federated coordinator (client selection,
+//!   round orchestration, aggregation, ternary re-quantization), the wire
+//!   codec with byte accounting, the data pipeline, and the PJRT runtime
+//!   that executes the artifacts. Python never runs at request time.
+
+pub mod comms;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod native;
+pub mod quant;
+pub mod runtime;
+pub mod util;

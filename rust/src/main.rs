@@ -1,0 +1,175 @@
+//! `tfed` — launcher for the T-FedAvg federated learning system.
+//!
+//! Subcommands:
+//!   run       run one experiment (protocol x task x federation knobs)
+//!   inspect   print the artifact manifest the runtime will use
+//!   selftest  PJRT smoke: load + execute every artifact kind once
+//!
+//! Examples:
+//!   tfed run --protocol tfedavg --task mnist --rounds 30
+//!   tfed run --protocol fedavg --task mnist --nc 2 --clients 10
+//!   tfed inspect
+//!   tfed selftest
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::{FaultSpec, Orchestrator};
+use tfed::metrics::mb;
+use tfed::runtime::manifest::default_artifacts_dir;
+use tfed::runtime::Engine;
+use tfed::util::cli::Cli;
+
+fn main() {
+    if let Err(e) = real_main() {
+        // --help surfaces as an "error" carrying the help text
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Cli::new("tfed — Ternary Compression for Communication-Efficient Federated Learning (TNNLS 2020 reproduction)")
+        .opt("protocol", "tfedavg", "baseline | ttq | fedavg | tfedavg")
+        .opt("task", "mnist", "mnist | cifar")
+        .opt("clients", "10", "total clients N")
+        .opt("participation", "1.0", "participation ratio lambda")
+        .opt("nc", "10", "classes per client (10 = IID)")
+        .opt("beta", "1.0", "unbalancedness ratio (eq. 29)")
+        .opt("batch", "64", "local batch size B")
+        .opt("epochs", "5", "local epochs E")
+        .opt("rounds", "30", "communication rounds")
+        .opt("lr", "0", "learning rate (0 = task default)")
+        .opt("seed", "42", "RNG seed")
+        .opt("train-samples", "0", "train set size (0 = task default)")
+        .opt("test-samples", "2000", "test set size")
+        .opt("eval-every", "1", "evaluate every k rounds")
+        .opt("dropout", "0.0", "client dropout probability (fault injection)")
+        .opt("out", "", "write metrics JSON/CSV to this path prefix")
+        .flag("native", "use the pure-Rust backend (MLP only)")
+        .flag("quiet", "suppress per-round logs")
+        .parse_env()?;
+
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("run");
+    match cmd {
+        "run" => cmd_run(&args),
+        "inspect" => cmd_inspect(),
+        "selftest" => cmd_selftest(),
+        other => bail!("unknown command {other:?} (run | inspect | selftest)"),
+    }
+}
+
+fn cmd_run(args: &tfed::util::cli::Args) -> Result<()> {
+    if args.flag("quiet") {
+        tfed::util::logging::set_level(tfed::util::logging::Level::Warn);
+    }
+    let protocol = Protocol::parse(&args.get("protocol")?)?;
+    let task = Task::parse(&args.get("task")?)?;
+    let mut cfg = ExperimentConfig::table2(protocol, task, args.get_u64("seed")?);
+    if !protocol.is_centralized() {
+        cfg.n_clients = args.get_usize("clients")?;
+        cfg.participation = args.get_f64("participation")?;
+        cfg.nc = args.get_usize("nc")?;
+        cfg.beta = args.get_f64("beta")?;
+    }
+    cfg.batch = args.get_usize("batch")?;
+    cfg.local_epochs = args.get_usize("epochs")?;
+    cfg.rounds = args.get_usize("rounds")?;
+    cfg.eval_every = args.get_usize("eval-every")?;
+    cfg.test_samples = args.get_usize("test-samples")?;
+    let lr = args.get_f32("lr")?;
+    if lr > 0.0 {
+        cfg.lr = lr;
+    }
+    let ts = args.get_usize("train-samples")?;
+    if ts > 0 {
+        cfg.train_samples = ts;
+    }
+    cfg.native_backend = args.flag("native");
+
+    let engine = if cfg.native_backend {
+        None
+    } else {
+        Some(Arc::new(Engine::load(default_artifacts_dir())?))
+    };
+    let backend = make_backend(
+        engine,
+        cfg.task.model_name(),
+        cfg.batch,
+        cfg.native_backend,
+    )?;
+    let faults = FaultSpec { client_dropout: args.get_f64("dropout")? };
+    let mut orch = Orchestrator::with_faults(cfg, backend.as_ref(), faults)?;
+    orch.run()?;
+
+    let m = &orch.metrics;
+    println!("== {} ==", m.config_summary);
+    println!("final acc  : {:.4}", m.final_acc());
+    println!("best acc   : {:.4}", m.best_acc());
+    println!("upstream   : {:.3} MB", mb(m.total_up_bytes()));
+    println!("downstream : {:.3} MB", mb(m.total_down_bytes()));
+    println!("wall time  : {:.1} s", m.total_wall_secs());
+    let out = args.get("out")?;
+    if !out.is_empty() {
+        m.write_json(format!("{out}.json"))?;
+        m.write_csv(format!("{out}.csv"))?;
+        println!("metrics    : {out}.json / {out}.csv");
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = tfed::runtime::Manifest::load(default_artifacts_dir())?;
+    println!("artifacts dir : {:?}", manifest.dir);
+    println!("T_k = {}  server Delta = {}  wq_grad = {}  wq_init = {}",
+        manifest.t_k, manifest.server_delta, manifest.wq_grad, manifest.wq_init);
+    for (name, entry) in &manifest.models {
+        println!(
+            "model {name}: {} params ({} quantized layers), optimizer {}, lr {}",
+            entry.schema.param_count(),
+            entry.num_quantized,
+            entry.schema.optimizer,
+            entry.schema.default_lr
+        );
+    }
+    println!("{:<42} {:>6} {:>5} {:>4} {:>7} {:>8}", "artifact", "kind", "B", "NB", "inputs", "outputs");
+    for (name, a) in &manifest.artifacts {
+        println!(
+            "{:<42} {:>6} {:>5} {:>4} {:>7} {:>8}",
+            name, a.kind, a.batch, a.nb, a.inputs.len(), a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    use tfed::coordinator::run_experiment;
+    let engine = Arc::new(Engine::load(default_artifacts_dir())?);
+    println!("PJRT platform OK; {} artifacts", engine.manifest.artifacts.len());
+    for task in [Task::MnistLike, Task::CifarLike] {
+        for protocol in [Protocol::FedAvg, Protocol::TFedAvg] {
+            let mut cfg = ExperimentConfig::table2(protocol, task, 1);
+            cfg.n_clients = 2;
+            cfg.rounds = 1;
+            cfg.local_epochs = 1;
+            cfg.train_samples = 200;
+            cfg.test_samples = 100;
+            cfg.batch = 16;
+            let backend =
+                make_backend(Some(engine.clone()), task.model_name(), cfg.batch, false)?;
+            let m = run_experiment(cfg, backend.as_ref())?;
+            println!(
+                "{:<10} {:<12} 1 round OK (loss {:.3}, acc {:.3})",
+                protocol.name(),
+                task.name(),
+                m.records[0].train_loss,
+                m.records[0].test_acc
+            );
+        }
+    }
+    println!("selftest OK");
+    Ok(())
+}

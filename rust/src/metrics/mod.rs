@@ -1,0 +1,213 @@
+//! Run metrics: per-round records + JSON/CSV sinks.
+//!
+//! Every experiment produces a `RunMetrics`; the bench harness turns these
+//! into the paper's tables/figures and EXPERIMENTS.md quotes them.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One communication round (or centralized epoch-group).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// mean local training loss across selected clients
+    pub train_loss: f32,
+    /// test accuracy of the reported model (quantized for T-FedAvg/TTQ)
+    pub test_acc: f32,
+    pub test_loss: f32,
+    /// upstream bytes this round (all selected clients)
+    pub up_bytes: u64,
+    /// downstream bytes this round
+    pub down_bytes: u64,
+    pub wall_secs: f64,
+    pub selected: Vec<usize>,
+    /// per-layer quantization factors, if the protocol has them:
+    /// T-FedAvg: mean w^q per layer; TTQ: [wp..., wn...]
+    pub factors: Vec<f32>,
+    /// evaluated this round?
+    pub evaluated: bool,
+}
+
+/// Whole-run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub config_summary: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunMetrics {
+    pub fn new(config_summary: String) -> Self {
+        RunMetrics { config_summary, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_acc(&self) -> f32 {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| r.evaluated)
+            .map(|r| r.test_acc)
+            .unwrap_or(0.0)
+    }
+
+    pub fn best_acc(&self) -> f32 {
+        self.records
+            .iter()
+            .filter(|r| r.evaluated)
+            .map(|r| r.test_acc)
+            .fold(0.0, f32::max)
+    }
+
+    pub fn total_up_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.up_bytes).sum()
+    }
+
+    pub fn total_down_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.down_bytes).sum()
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.wall_secs).sum()
+    }
+
+    /// Rounds needed to first reach `acc` (None if never).
+    pub fn rounds_to_acc(&self, acc: f32) -> Option<usize> {
+        self.records.iter().find(|r| r.evaluated && r.test_acc >= acc).map(|r| r.round)
+    }
+
+    /// Accuracy series (round, acc) at evaluated rounds — Fig. 6/10 data.
+    pub fn acc_series(&self) -> Vec<(usize, f32)> {
+        self.records
+            .iter()
+            .filter(|r| r.evaluated)
+            .map(|r| (r.round, r.test_acc))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", s(&self.config_summary)),
+            ("final_acc", num(self.final_acc() as f64)),
+            ("best_acc", num(self.best_acc() as f64)),
+            ("total_up_bytes", num(self.total_up_bytes() as f64)),
+            ("total_down_bytes", num(self.total_down_bytes() as f64)),
+            ("total_wall_secs", num(self.total_wall_secs())),
+            (
+                "rounds",
+                arr(self
+                    .records
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("round", num(r.round as f64)),
+                            ("train_loss", num(r.train_loss as f64)),
+                            ("test_acc", num(r.test_acc as f64)),
+                            ("test_loss", num(r.test_loss as f64)),
+                            ("up_bytes", num(r.up_bytes as f64)),
+                            ("down_bytes", num(r.down_bytes as f64)),
+                            ("wall_secs", num(r.wall_secs)),
+                            ("evaluated", Json::Bool(r.evaluated)),
+                            (
+                                "factors",
+                                arr(r.factors.iter().map(|&f| num(f as f64)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,train_loss,test_acc,test_loss,up_bytes,down_bytes,wall_secs,evaluated\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.4},{}\n",
+                r.round,
+                r.train_loss,
+                r.test_acc,
+                r.test_loss,
+                r.up_bytes,
+                r.down_bytes,
+                r.wall_secs,
+                r.evaluated as u8
+            ));
+        }
+        out
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_csv())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+}
+
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f32, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0,
+            test_acc: acc,
+            test_loss: 0.5,
+            up_bytes: up,
+            down_bytes: up,
+            wall_secs: 0.1,
+            selected: vec![0, 1],
+            factors: vec![0.1, 0.2],
+            evaluated: true,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = RunMetrics::new("test".into());
+        m.push(rec(1, 0.5, 100));
+        m.push(rec(2, 0.8, 100));
+        m.push(rec(3, 0.7, 100));
+        assert_eq!(m.final_acc(), 0.7);
+        assert_eq!(m.best_acc(), 0.8);
+        assert_eq!(m.total_up_bytes(), 300);
+        assert_eq!(m.rounds_to_acc(0.75), Some(2));
+        assert_eq!(m.rounds_to_acc(0.95), None);
+        assert_eq!(m.acc_series().len(), 3);
+    }
+
+    #[test]
+    fn json_and_csv_emit() {
+        let mut m = RunMetrics::new("cfg".into());
+        m.push(rec(1, 0.5, 42));
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"final_acc\""));
+        assert!(j.contains("\"up_bytes\":42"));
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 1);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn mb_conversion() {
+        assert!((mb(1024 * 1024) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,46 @@
+//! Parameter initialization matching python models.py.
+
+use crate::model::Tensor;
+use crate::util::rng::Pcg;
+
+/// U(-1/sqrt(fan_in), +1/sqrt(fan_in)) — models.py `_uniform_fanin`.
+pub fn uniform_fanin(shape: Vec<usize>, fan_in: usize, rng: &mut Pcg) -> Tensor {
+    let bound = 1.0 / (fan_in as f32).sqrt();
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.uniform(-bound, bound)).collect();
+    Tensor { shape, data }
+}
+
+/// N(0, sigma^2) initializer (used by synthetic data generators).
+pub fn normal(shape: Vec<usize>, sigma: f32, rng: &mut Pcg) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.normal() * sigma).collect();
+    Tensor { shape, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_bounds_and_spread() {
+        let mut rng = Pcg::seeded(1);
+        let t = uniform_fanin(vec![100, 100], 100, &mut rng);
+        let bound = 0.1;
+        assert!(t.data.iter().all(|x| x.abs() <= bound));
+        let mean: f32 = t.data.iter().sum::<f32>() / t.data.len() as f32;
+        assert!(mean.abs() < 0.01);
+        // fills the range, not clustered at zero
+        assert!(t.data.iter().any(|&x| x > 0.08));
+        assert!(t.data.iter().any(|&x| x < -0.08));
+    }
+
+    #[test]
+    fn normal_sigma() {
+        let mut rng = Pcg::seeded(2);
+        let t = normal(vec![10_000], 2.0, &mut rng);
+        let var: f32 =
+            t.data.iter().map(|x| x * x).sum::<f32>() / t.data.len() as f32;
+        assert!((var - 4.0).abs() < 0.3, "var={var}");
+    }
+}

@@ -1,0 +1,292 @@
+//! Model parameter schema: named tensors, shapes, flat f32 storage.
+//!
+//! Mirrors `artifacts/manifest.json` (written by python aot.py): each model
+//! is a positional list of named parameter tensors, some flagged
+//! `quantized`. The coordinator moves `ParamSet`s around; the runtime
+//! marshals them into PJRT literals by position.
+
+pub mod init;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg;
+
+/// Static description of one parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub quantized: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static description of a whole model (mirrors manifest["models"][name]).
+#[derive(Clone, Debug)]
+pub struct ModelSchema {
+    pub name: String,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub optimizer: String,
+    pub default_lr: f32,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSchema {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn quantized_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.quantized)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn num_quantized(&self) -> usize {
+        self.params.iter().filter(|p| p.quantized).count()
+    }
+
+    /// Bytes of a full-precision (f32) copy of the parameters — the FedAvg
+    /// per-message payload the paper's Table IV counts.
+    pub fn fp32_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+}
+
+/// One tensor's values (f32, row-major) tied to its spec index.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A model's parameter values, positionally matching `ModelSchema::params`.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    pub fn zeros(schema: &ModelSchema) -> Self {
+        ParamSet {
+            tensors: schema.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Validate against a schema (shapes + count).
+    pub fn check(&self, schema: &ModelSchema) -> Result<()> {
+        if self.tensors.len() != schema.params.len() {
+            bail!(
+                "param count mismatch: {} vs schema {}",
+                self.tensors.len(),
+                schema.params.len()
+            );
+        }
+        for (t, p) in self.tensors.iter().zip(&schema.params) {
+            if t.shape != p.shape {
+                bail!("{}: shape {:?} vs schema {:?}", p.name, t.shape, p.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Weighted in-place accumulate: self += weight * other (FedAvg rule).
+    pub fn axpy(&mut self, weight: f32, other: &ParamSet) {
+        assert_eq!(self.tensors.len(), other.tensors.len());
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            debug_assert_eq!(a.data.len(), b.data.len());
+            for (x, y) in a.data.iter_mut().zip(&b.data) {
+                *x += weight * y;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for t in &mut self.tensors {
+            for x in &mut t.data {
+                *x *= s;
+            }
+        }
+    }
+
+    /// L2 distance to another set (weight-divergence diagnostics, Lemma 4.1).
+    pub fn l2_distance(&self, other: &ParamSet) -> f64 {
+        let mut acc = 0f64;
+        for (a, b) in self.tensors.iter().zip(&other.tensors) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                let d = (*x - *y) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.tensors.iter().all(|t| t.data.iter().all(|x| x.is_finite()))
+    }
+}
+
+/// The MLP schema from the paper's Table I (784-30-20-10), identical to
+/// python models.py — usable without a manifest (native backend, tests).
+pub fn mlp_schema() -> ModelSchema {
+    let dims = [784usize, 30, 20, 10];
+    let mut params = Vec::new();
+    for li in 0..dims.len() - 1 {
+        params.push(ParamSpec {
+            name: format!("w{}", li + 1),
+            shape: vec![dims[li], dims[li + 1]],
+            quantized: true,
+        });
+        params.push(ParamSpec {
+            name: format!("b{}", li + 1),
+            shape: vec![dims[li + 1]],
+            quantized: false,
+        });
+    }
+    ModelSchema {
+        name: "mlp".into(),
+        input_dim: 784,
+        num_classes: 10,
+        optimizer: "sgd".into(),
+        default_lr: 0.05,
+        params,
+    }
+}
+
+/// Initialize parameters the same way models.py does: U(-1/sqrt(fan_in),
+/// 1/sqrt(fan_in)) for quantized weights, zeros for biases.
+pub fn init_params(schema: &ModelSchema, rng: &mut Pcg) -> ParamSet {
+    let tensors = schema
+        .params
+        .iter()
+        .map(|p| {
+            if p.quantized {
+                let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+                init::uniform_fanin(p.shape.clone(), fan_in.max(1), rng)
+            } else {
+                Tensor::zeros(p.shape.clone())
+            }
+        })
+        .collect();
+    ParamSet { tensors }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    pub fn toy_schema() -> ModelSchema {
+        ModelSchema {
+            name: "toy".into(),
+            input_dim: 4,
+            num_classes: 2,
+            optimizer: "sgd".into(),
+            default_lr: 0.1,
+            params: vec![
+                ParamSpec { name: "w1".into(), shape: vec![4, 3], quantized: true },
+                ParamSpec { name: "b1".into(), shape: vec![3], quantized: false },
+                ParamSpec { name: "w2".into(), shape: vec![3, 2], quantized: true },
+                ParamSpec { name: "b2".into(), shape: vec![2], quantized: false },
+            ],
+        }
+    }
+
+    #[test]
+    fn schema_counts() {
+        let s = toy_schema();
+        assert_eq!(s.param_count(), 12 + 3 + 6 + 2);
+        assert_eq!(s.quantized_indices(), vec![0, 2]);
+        assert_eq!(s.num_quantized(), 2);
+        assert_eq!(s.fp32_bytes(), 23 * 4);
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn init_respects_fanin_bound() {
+        let s = toy_schema();
+        let mut rng = Pcg::seeded(1);
+        let p = init_params(&s, &mut rng);
+        p.check(&s).unwrap();
+        let bound = 1.0 / (4f32).sqrt();
+        assert!(p.tensors[0].data.iter().all(|x| x.abs() <= bound));
+        assert!(p.tensors[1].data.iter().all(|&x| x == 0.0));
+        // not all zeros
+        assert!(p.tensors[0].data.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn axpy_is_weighted_sum() {
+        let s = toy_schema();
+        let mut rng = Pcg::seeded(2);
+        let a = init_params(&s, &mut rng);
+        let b = init_params(&s, &mut rng);
+        let mut acc = ParamSet::zeros(&s);
+        acc.axpy(0.25, &a);
+        acc.axpy(0.75, &b);
+        for i in 0..s.params.len() {
+            for j in 0..acc.tensors[i].data.len() {
+                let want = 0.25 * a.tensors[i].data[j] + 0.75 * b.tensors[i].data[j];
+                assert!((acc.tensors[i].data[j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn l2_distance_zero_for_self() {
+        let s = toy_schema();
+        let mut rng = Pcg::seeded(3);
+        let a = init_params(&s, &mut rng);
+        assert_eq!(a.l2_distance(&a), 0.0);
+        let mut b = a.clone();
+        b.tensors[0].data[0] += 3.0;
+        assert!((b.l2_distance(&a) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn check_catches_mismatch() {
+        let s = toy_schema();
+        let mut p = ParamSet::zeros(&s);
+        p.tensors.pop();
+        assert!(p.check(&s).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Pure-Rust reference backend: MLP forward/backward + SGD + FTTQ.
+//!
+//! Exists for three reasons:
+//!   1. cross-validation — the same math as the L2 JAX graphs, so the
+//!      integration tests can check the HLO artifacts end-to-end;
+//!   2. fast property tests over the coordinator (no PJRT compile cost);
+//!   3. a baseline for the §Perf comparison (XLA hot path vs naive Rust).
+//!
+//! Only the MLP is implemented natively (the CNN exists solely as an HLO
+//! artifact); the coordinator is generic over `LocalBackend`.
+
+pub mod mlp;
+
+pub use mlp::NativeMlp;

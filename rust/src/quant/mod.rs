@@ -1,0 +1,10 @@
+//! Ternary quantization math in Rust (paper §III), native mirror of
+//! `python/compile/kernels/ref.py`.
+//!
+//! Used on the server (Algorithm 2's downstream re-quantization runs in the
+//! coordinator, not through PJRT) and cross-checked against the HLO
+//! `*_quantize` artifacts in the integration tests.
+
+pub mod ternary;
+
+pub use ternary::*;

@@ -1,0 +1,127 @@
+//! The PJRT execution engine: compile HLO artifacts once, run many times.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::value::Value;
+use crate::{debug, info};
+
+/// Compiled-executable cache keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// executions per artifact (perf accounting)
+    exec_counts: Mutex<HashMap<String, u64>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        info!(
+            "PJRT engine up: platform={} artifacts={}",
+            client.platform_name(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let art = self.manifest.artifact(name)?;
+        let path = self.manifest.hlo_path(art);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (amortize JIT cost before timing).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with typed host values; returns outputs in the
+    /// manifest's output order. Input shapes/dtypes are validated against
+    /// the manifest before they reach PJRT.
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let art = self.manifest.artifact(name)?.clone();
+        self.validate_inputs(&art, inputs)?;
+        let exe = self.executable(name)?;
+        let literals: Result<Vec<xla::Literal>> =
+            inputs.iter().map(|v| v.to_literal()).collect();
+        let literals = literals?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple at top level
+        let parts = tuple.to_tuple()?;
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "{name}: HLO returned {} outputs, manifest says {}",
+                parts.len(),
+                art.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&art.outputs) {
+            out.push(Value::from_literal(lit, spec)?);
+        }
+        *self.exec_counts.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        debug!("executed {name} ({} inputs)", inputs.len());
+        Ok(out)
+    }
+
+    fn validate_inputs(&self, art: &ArtifactSpec, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest wants {}",
+                art.name,
+                inputs.len(),
+                art.inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&art.inputs) {
+            if !v.matches(spec) {
+                bail!(
+                    "{}: input {:?} expects shape {:?} dtype {:?}, got shape {:?}",
+                    art.name,
+                    spec.name,
+                    spec.shape,
+                    spec.dtype,
+                    v.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Executions per artifact so far (perf accounting).
+    pub fn exec_counts(&self) -> Vec<(String, u64)> {
+        let m = self.exec_counts.lock().unwrap();
+        let mut v: Vec<(String, u64)> = m.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort();
+        v
+    }
+}

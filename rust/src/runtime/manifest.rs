@@ -1,0 +1,260 @@
+//! artifacts/manifest.json loader — the contract between python aot.py and
+//! the Rust runtime (parameter order, shapes, dtypes, file names).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{ModelSchema, ParamSpec};
+use crate::util::json::Json;
+
+/// Dtype of one artifact input/output (only f32/s32 are emitted).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+/// One artifact input or output tensor.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: String,
+    pub mode: String,
+    pub batch: usize,
+    pub nb: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One model entry: schema + optimizer-state layouts per mode.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub schema: ModelSchema,
+    pub num_quantized: usize,
+    pub opt_state_fp: Vec<IoSpec>,
+    pub opt_state_fttq: Vec<IoSpec>,
+    pub opt_state_ttq: Vec<IoSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub t_k: f32,
+    pub server_delta: f32,
+    pub wq_grad: String,
+    pub wq_init: f32,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "s32" => Ok(Dtype::S32),
+        other => bail!("unsupported dtype {other}"),
+    }
+}
+
+fn parse_io_list(v: &Json) -> Result<Vec<IoSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.expect("name")?.as_str()?.to_string(),
+                shape: e.expect("shape")?.as_shape()?,
+                dtype: parse_dtype(
+                    e.get("dtype").map(|d| d.as_str()).transpose()?.unwrap_or("f32"),
+                )?,
+            })
+        })
+        .collect()
+}
+
+fn parse_param_list(v: &Json) -> Result<Vec<ParamSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(ParamSpec {
+                name: e.expect("name")?.as_str()?.to_string(),
+                shape: e.expect("shape")?.as_shape()?,
+                quantized: e
+                    .get("quantized")
+                    .map(|q| q.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.expect("models")?.as_obj()? {
+            let schema = ModelSchema {
+                name: name.clone(),
+                input_dim: m.expect("input_dim")?.as_usize()?,
+                num_classes: m.expect("num_classes")?.as_usize()?,
+                optimizer: m.expect("optimizer")?.as_str()?.to_string(),
+                default_lr: m.expect("default_lr")?.as_f64()? as f32,
+                params: parse_param_list(m.expect("params")?)?,
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    schema,
+                    num_quantized: m.expect("num_quantized")?.as_usize()?,
+                    opt_state_fp: parse_io_list(m.expect("opt_state_fp")?)?,
+                    opt_state_fttq: parse_io_list(m.expect("opt_state_fttq")?)?,
+                    opt_state_ttq: parse_io_list(m.expect("opt_state_ttq")?)?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in root.expect("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.expect("file")?.as_str()?.to_string(),
+                    kind: a.expect("kind")?.as_str()?.to_string(),
+                    model: a.expect("model")?.as_str()?.to_string(),
+                    mode: a.expect("mode")?.as_str()?.to_string(),
+                    batch: a.expect("batch")?.as_usize()?,
+                    nb: a.expect("nb")?.as_usize()?,
+                    inputs: parse_io_list(a.expect("inputs")?)?,
+                    outputs: parse_io_list(a.expect("outputs")?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            t_k: root.expect("t_k")?.as_f64()? as f32,
+            server_delta: root.expect("server_delta")?.as_f64()? as f32,
+            wq_grad: root.expect("wq_grad")?.as_str()?.to_string(),
+            wq_init: root.expect("wq_init")?.as_f64()? as f32,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model {name:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Find the train artifact for (model, mode, batch).
+    pub fn train_artifact(&self, model: &str, mode: &str, batch: usize) -> Result<&ArtifactSpec> {
+        self.artifact(&format!("{model}_{mode}_train_b{batch}"))
+    }
+
+    /// The eval artifact for a model (any batch size; there is one).
+    pub fn eval_artifact(&self, model: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| a.model == model && a.kind == "eval")
+            .ok_or_else(|| anyhow!("no eval artifact for model {model:?}"))
+    }
+
+    pub fn quantize_artifact(&self, model: &str) -> Result<&ArtifactSpec> {
+        self.artifact(&format!("{model}_quantize"))
+    }
+
+    /// Train batch sizes available for a model (Fig. 7 sweep).
+    pub fn train_batches(&self, model: &str) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.model == model && a.kind == "train" && a.mode == "fttq")
+            .map(|a| a.batch)
+            .collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+
+    pub fn hlo_path(&self, art: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}
+
+/// Locate the artifacts directory: $TFED_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TFED_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        assert!((m.t_k - 0.05).abs() < 1e-9);
+        assert!((m.server_delta - 0.05).abs() < 1e-9);
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.schema.input_dim, 784);
+        assert_eq!(mlp.schema.param_count(), 24_380);
+        assert_eq!(mlp.num_quantized, 3);
+        assert_eq!(mlp.schema.quantized_indices(), vec![0, 2, 4]);
+        // every artifact file exists
+        for a in m.artifacts.values() {
+            assert!(m.hlo_path(a).exists(), "{:?}", a.file);
+        }
+        // train artifact I/O symmetry (outputs = inputs - data + loss)
+        let t = m.train_artifact("mlp", "fttq", 64).unwrap();
+        assert_eq!(t.inputs.len(), t.outputs.len() + 3);
+        assert_eq!(t.batch, 64);
+        assert_eq!(t.nb, 16);
+        // fig. 7 sweep present
+        assert!(m.train_batches("mlp").len() >= 3);
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

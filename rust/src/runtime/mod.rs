@@ -1,0 +1,14 @@
+//! PJRT runtime: load `artifacts/manifest.json` + HLO text, compile once,
+//! execute from the coordinator's hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): HLO *text* is the
+//! interchange format — xla_extension 0.5.1 rejects jax>=0.5 serialized
+//! protos (64-bit instruction ids), while the text parser reassigns ids.
+
+pub mod engine;
+pub mod manifest;
+pub mod value;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelEntry};
+pub use value::Value;

@@ -1,0 +1,151 @@
+//! Host-side tensor values + PJRT literal marshalling.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{Dtype, IoSpec};
+
+/// A host tensor moving in/out of an artifact execution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Value> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Value::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Value> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Value::I32 { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Check against an artifact IoSpec (shape + dtype).
+    pub fn matches(&self, spec: &IoSpec) -> bool {
+        match (self, spec.dtype) {
+            (Value::F32 { shape, .. }, Dtype::F32) => shape == &spec.shape,
+            (Value::I32 { shape, .. }, Dtype::S32) => shape == &spec.shape,
+            _ => false,
+        }
+    }
+
+    /// Convert to an xla literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            Value::F32 { shape, data } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Value::I32 { shape, data } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an xla literal, trusting `spec` for shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
+        match spec.dtype {
+            Dtype::F32 => Ok(Value::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? }),
+            Dtype::S32 => Ok(Value::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Value::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Value::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Value::i32(vec![2], vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn matches_spec() {
+        let v = Value::f32(vec![4], vec![0.0; 4]).unwrap();
+        let s = IoSpec { name: "x".into(), shape: vec![4], dtype: Dtype::F32 };
+        assert!(v.matches(&s));
+        let s2 = IoSpec { name: "x".into(), shape: vec![4], dtype: Dtype::S32 };
+        assert!(!v.matches(&s2));
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = Value::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = v.to_literal().unwrap();
+        let spec = IoSpec { name: "t".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        let back = Value::from_literal(&lit, &spec).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar_and_i32() {
+        let v = Value::scalar_f32(0.5);
+        let lit = v.to_literal().unwrap();
+        let spec = IoSpec { name: "s".into(), shape: vec![], dtype: Dtype::F32 };
+        assert_eq!(Value::from_literal(&lit, &spec).unwrap().scalar().unwrap(), 0.5);
+
+        let vi = Value::i32(vec![3], vec![7, -1, 2]).unwrap();
+        let lit = vi.to_literal().unwrap();
+        let spec = IoSpec { name: "y".into(), shape: vec![3], dtype: Dtype::S32 };
+        assert_eq!(Value::from_literal(&lit, &spec).unwrap(), vi);
+    }
+}

@@ -1,0 +1,256 @@
+//! Hand-rolled CLI argument parser (offline stand-in for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! accessors with defaults, and auto-generated `--help` text from the
+//! declared options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declared option for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments plus the declared spec.
+#[derive(Debug)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    spec: Vec<OptSpec>,
+    prog: String,
+    about: &'static str,
+}
+
+pub struct Cli {
+    spec: Vec<OptSpec>,
+    about: &'static str,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli { spec: Vec::new(), about }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.spec.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.spec.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.spec.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn parse_env(self) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().collect();
+        self.parse(&argv)
+    }
+
+    pub fn parse(self, argv: &[String]) -> Result<Args> {
+        let prog = argv.first().cloned().unwrap_or_default();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.help_text(&prog));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    self.check_known(k)?;
+                    opts.insert(k.to_string(), v.to_string());
+                } else {
+                    self.check_known(body)?;
+                    let is_flag = self
+                        .spec
+                        .iter()
+                        .find(|s| s.name == body)
+                        .map(|s| s.is_flag)
+                        .unwrap_or(false);
+                    if is_flag {
+                        flags.push(body.to_string());
+                    } else {
+                        i += 1;
+                        let v = argv
+                            .get(i)
+                            .ok_or_else(|| anyhow!("--{body} expects a value"))?;
+                        opts.insert(body.to_string(), v.clone());
+                    }
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { opts, flags, positional, spec: self.spec, prog, about: self.about })
+    }
+
+    fn check_known(&self, name: &str) -> Result<()> {
+        if self.spec.iter().any(|s| s.name == name) {
+            Ok(())
+        } else {
+            bail!("unknown option --{name} (see --help)")
+        }
+    }
+
+    fn help_text(&self, prog: &str) -> String {
+        let mut out = format!("{}\n\nUsage: {prog} [options]\n\nOptions:\n", self.about);
+        for s in &self.spec {
+            let kind = if s.is_flag { "" } else { " <value>" };
+            let def = match &s.default {
+                Some(d) if !s.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  --{}{kind:<10} {}{def}\n", s.name, s.help));
+        }
+        out
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Result<String> {
+        if let Some(v) = self.opts.get(name) {
+            return Ok(v.clone());
+        }
+        if let Some(spec) = self.spec.iter().find(|s| s.name == name) {
+            if let Some(d) = &spec.default {
+                return Ok(d.clone());
+            }
+            bail!("missing required option --{name}");
+        }
+        bail!("option --{name} was never declared");
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name)?;
+        v.parse().map_err(|e| anyhow!("--{name}={v}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let v = self.get(name)?;
+        v.parse().map_err(|e| anyhow!("--{name}={v}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name)?;
+        v.parse().map_err(|e| anyhow!("--{name}={v}: {e}"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get_f64(name)? as f32)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list: `--betas 0.1,0.5,1.0`.
+    pub fn get_list_f64(&self, name: &str) -> Result<Vec<f64>> {
+        self.get(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn get_list_usize(&self, name: &str) -> Result<Vec<usize>> {
+        self.get(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn prog(&self) -> &str {
+        &self.prog
+    }
+
+    pub fn about(&self) -> &str {
+        self.about
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.split_whitespace().map(String::from))
+            .collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test tool")
+            .opt("rounds", "100", "number of rounds")
+            .opt("lr", "0.05", "learning rate")
+            .req("model", "model name")
+            .flag("quiet", "suppress logs")
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = cli().parse(&argv("--model mlp --rounds 7 --quiet run")).unwrap();
+        assert_eq!(a.get("model").unwrap(), "mlp");
+        assert_eq!(a.get_usize("rounds").unwrap(), 7);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.05); // default
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&argv("--model=mlp --lr=0.1")).unwrap();
+        assert_eq!(a.get("model").unwrap(), "mlp");
+        assert_eq!(a.get_f64("lr").unwrap(), 0.1);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = cli().parse(&argv("--rounds 5")).unwrap();
+        assert!(a.get("model").is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(&argv("--bogus 1")).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let c = Cli::new("t").opt("betas", "1.0", "beta list");
+        let a = c.parse(&argv("--betas 0.1,0.5,1.0")).unwrap();
+        assert_eq!(a.get_list_f64("betas").unwrap(), vec![0.1, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let err = cli().parse(&argv("--help")).unwrap_err();
+        let text = format!("{err}");
+        assert!(text.contains("--rounds"));
+        assert!(text.contains("test tool"));
+    }
+}

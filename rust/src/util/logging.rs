@@ -1,0 +1,108 @@
+//! Tiny leveled logger (offline stand-in for env_logger).
+//!
+//! Level comes from `TFED_LOG` (error|warn|info|debug|trace), default info.
+//! Output goes to stderr so stdout stays clean for bench CSV/tables.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let parsed = match std::env::var("TFED_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the level programmatically (benches silence info chatter).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
+    if !enabled(l) {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let secs = t0.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{secs:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,14 @@
+//! Infrastructure substrates built in-repo.
+//!
+//! This environment has no crates.io access beyond the vendored set
+//! (`xla`, `anyhow`, `thiserror`, ...), so the usual ecosystem pieces —
+//! `rand`, `serde`, `clap`, `criterion`, `proptest` — are implemented here
+//! at the scale this system needs (DESIGN.md §3 Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

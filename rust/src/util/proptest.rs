@@ -1,0 +1,99 @@
+//! Minimal property-testing harness (offline stand-in for proptest).
+//!
+//! `forall(cases, |rng| ...)` runs a closure over many seeded RNGs; on
+//! failure it reports the seed so the case is replayable:
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath)
+//! use tfed::util::proptest::forall;
+//! forall(64, |rng| {
+//!     let n = 1 + rng.below(100) as usize;
+//!     let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+//!     assert!(v.len() == n);
+//! });
+//! ```
+
+use crate::util::rng::Pcg;
+
+/// Base seed; override with TFED_PROP_SEED to reproduce a failure run.
+fn base_seed() -> u64 {
+    std::env::var("TFED_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF3D5_0001)
+}
+
+/// Run `f` for `cases` seeded RNGs; panics with the failing seed attached.
+pub fn forall(cases: u64, f: impl Fn(&mut Pcg) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg::seeded(seed);
+            f(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (TFED_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shrink-ish helper: random vec of length in [1, max_len].
+pub fn arb_vec_f32(rng: &mut Pcg, max_len: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below(max_len as u32) as usize;
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Random dims (r, c) with r*c <= cap.
+pub fn arb_dims(rng: &mut Pcg, cap: usize) -> (usize, usize) {
+    let r = 1 + rng.below(64) as usize;
+    let c_max = (cap / r).max(1).min(512);
+    let c = 1 + rng.below(c_max as u32) as usize;
+    (r, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(32, |rng| {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            forall(8, |rng| {
+                assert!(rng.next_f32() < 2.0); // passes
+                panic!("intentional");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("TFED_PROP_SEED"), "{msg}");
+    }
+
+    #[test]
+    fn arb_helpers_in_bounds() {
+        forall(16, |rng| {
+            let v = arb_vec_f32(rng, 100, 1.0);
+            assert!((1..=100).contains(&v.len()));
+            let (r, c) = arb_dims(rng, 4096);
+            assert!(r * c <= 4096 * 2); // r<=64, c<=cap/r
+        });
+    }
+}

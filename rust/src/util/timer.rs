@@ -1,0 +1,114 @@
+//! Timing + micro-bench loop (offline stand-in for criterion).
+//!
+//! `bench(name, iters, f)` warms up, measures per-iteration wall time, and
+//! returns summary stats; the bench binaries format these as the tables in
+//! bench_output.txt.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter  (median {:>8.3}, p95 {:>8.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.median_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench_with_warmup(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        median_ns: stats::median(&samples),
+        p95_ns: stats::quantile(&samples, 0.95),
+        min_ns: stats::min(&samples),
+        std_ns: stats::std_dev(&samples),
+    }
+}
+
+pub fn bench(name: &str, iters: usize, f: impl FnMut()) -> BenchResult {
+    bench_with_warmup(name, (iters / 10).max(1), iters, f)
+}
+
+/// Scoped wall-clock timer for coarse phases.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 10, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p95_ns + 1.0);
+        assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.ms() >= 1.0);
+    }
+}

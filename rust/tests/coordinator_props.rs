@@ -1,0 +1,170 @@
+//! Property tests over coordinator invariants (native backend — fast).
+
+use tfed::comms::{pack_ternary, unpack_dequantize, unpack_ternary, Message};
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::run_experiment;
+use tfed::data::partition::{partition, PartitionSpec};
+use tfed::data::synth::Dataset;
+use tfed::model::{init_params, mlp_schema};
+use tfed::quant;
+use tfed::util::proptest::forall;
+use tfed::util::rng::Pcg;
+
+#[test]
+fn prop_codec_roundtrip_any_pattern() {
+    forall(256, |rng| {
+        let n = rng.below(10_000) as usize;
+        let it: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+        let p = pack_ternary(&it);
+        assert_eq!(unpack_ternary(&p).unwrap(), it);
+        let wq = rng.next_f32() + 0.001;
+        let dense = unpack_dequantize(&p, wq).unwrap();
+        for (d, &s) in dense.iter().zip(&it) {
+            assert_eq!(*d, wq * s as f32);
+        }
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_cover_under_all_specs() {
+    forall(48, |rng| {
+        let n = 200 + rng.below(3000) as usize;
+        let data = Dataset {
+            dim: 1,
+            num_classes: 10,
+            features: vec![0.0; n],
+            labels: (0..n as u32).map(|i| i % 10).collect(),
+        };
+        let spec = PartitionSpec {
+            n_clients: 1 + rng.below(30) as usize,
+            nc: 1 + rng.below(12) as usize,
+            beta: 0.1 + 0.9 * rng.next_f64(),
+            seed: rng.next_u64(),
+        };
+        let p = partition(&data, &spec).unwrap();
+        assert!(p.is_exact_cover(n), "spec {spec:?}");
+        assert_eq!(p.shards.len(), spec.n_clients);
+        assert!(p.shards.iter().all(|s| !s.indices.is_empty()));
+    });
+}
+
+#[test]
+fn prop_requantize_always_ternary_and_deterministic() {
+    forall(64, |rng| {
+        let n = 1 + rng.below(5000) as usize;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() * (rng.next_f32() + 0.01)).collect();
+        let a = quant::server_requantize(&v, 0.05);
+        let b = quant::server_requantize(&v, 0.05);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| (-1..=1).contains(&s)));
+    });
+}
+
+#[test]
+fn prop_quantize_dequantize_reduces_or_preserves_support() {
+    // every nonzero of theta_t corresponds to |theta_s| > delta
+    forall(64, |rng| {
+        let n = 10 + rng.below(2000) as usize;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let (it, delta) = quant::fttq_quantize(&v, 0.05);
+        let s = quant::scale(&v);
+        for (x, &sgn) in s.iter().zip(&it) {
+            if sgn != 0 {
+                assert!(x.abs() > delta - 1e-6);
+                assert_eq!(x.signum() as i8, sgn);
+            } else {
+                assert!(x.abs() <= delta + 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_message_encode_decode_identity() {
+    forall(64, |rng| {
+        let schema = mlp_schema();
+        let mut prng = Pcg::seeded(rng.next_u64());
+        let params = init_params(&schema, &mut prng);
+        let qidx = schema.quantized_indices();
+        let mut patterns = Vec::new();
+        let mut deltas = Vec::new();
+        for &i in &qidx {
+            let (it, d) = quant::fttq_quantize(&params.tensors[i].data, 0.05);
+            patterns.push(it);
+            deltas.push(d);
+        }
+        let wqs: Vec<f32> = (0..qidx.len()).map(|_| rng.next_f32()).collect();
+        let upd = tfed::comms::ternary_update(
+            rng.below(100),
+            rng.below(10_000) as u64,
+            &qidx,
+            &patterns,
+            &wqs,
+            &deltas,
+            &params,
+            rng.next_f32(),
+        );
+        let msg = Message::TernaryUpdate(upd.clone());
+        match Message::decode(&msg.encode()).unwrap() {
+            Message::TernaryUpdate(got) => assert_eq!(got, upd),
+            _ => panic!("kind changed"),
+        }
+    });
+}
+
+#[test]
+fn prop_federated_run_never_produces_nan() {
+    // tiny sweeps across protocol / nc / beta / participation: the global
+    // model and all metrics stay finite
+    forall(6, |rng| {
+        let protocol = if rng.next_f32() < 0.5 { Protocol::TFedAvg } else { Protocol::FedAvg };
+        let mut cfg = ExperimentConfig::table2(protocol, Task::MnistLike, rng.next_u64());
+        cfg.n_clients = 3;
+        cfg.rounds = 2;
+        cfg.local_epochs = 1;
+        cfg.train_samples = 300;
+        cfg.test_samples = 120;
+        cfg.batch = 16;
+        cfg.lr = 0.05;
+        cfg.nc = 1 + rng.below(10) as usize;
+        cfg.beta = 0.2 + 0.8 * rng.next_f64();
+        cfg.participation = 0.5 + 0.5 * rng.next_f64();
+        cfg.native_backend = true;
+        let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+        let m = run_experiment(cfg, backend.as_ref()).unwrap();
+        for r in &m.records {
+            assert!(r.train_loss.is_finite());
+            if r.evaluated {
+                assert!(r.test_acc.is_finite() && (0.0..=1.0).contains(&r.test_acc));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_upstream_bytes_scale_with_selected_clients() {
+    forall(4, |rng| {
+        let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, rng.next_u64());
+        cfg.n_clients = 6;
+        cfg.rounds = 1;
+        cfg.local_epochs = 1;
+        cfg.train_samples = 600;
+        cfg.test_samples = 60;
+        cfg.batch = 16;
+        cfg.native_backend = true;
+        cfg.participation = 0.5;
+        let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+        let m_half = run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+        cfg.participation = 1.0;
+        let m_full = run_experiment(cfg, backend.as_ref()).unwrap();
+        let per_client_half = m_half.records[0].up_bytes as f64
+            / m_half.records[0].selected.len() as f64;
+        let per_client_full = m_full.records[0].up_bytes as f64
+            / m_full.records[0].selected.len() as f64;
+        // per-client payload is constant; totals scale with participation
+        assert!((per_client_half - per_client_full).abs() < 1.0);
+        assert_eq!(m_full.records[0].selected.len(), 6);
+        assert_eq!(m_half.records[0].selected.len(), 3);
+    });
+}

@@ -1,0 +1,187 @@
+//! End-to-end federated runs through the full coordinator stack.
+//!
+//! Native-backend tests always run (no artifacts needed); PJRT tests no-op
+//! with a note if `make artifacts` hasn't been run.
+
+use std::sync::Arc;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::{FaultSpec, Orchestrator};
+use tfed::coordinator::run_experiment;
+use tfed::runtime::manifest::default_artifacts_dir;
+use tfed::runtime::Engine;
+
+fn small_cfg(protocol: Protocol) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::table2(protocol, Task::MnistLike, 42);
+    cfg.n_clients = if protocol.is_centralized() { 1 } else { 4 };
+    cfg.rounds = 6;
+    cfg.local_epochs = 2;
+    cfg.train_samples = 600;
+    cfg.test_samples = 300;
+    cfg.batch = 16;
+    cfg.lr = 0.1;
+    cfg.native_backend = true;
+    cfg
+}
+
+#[test]
+fn native_fedavg_learns() {
+    let cfg = small_cfg(Protocol::FedAvg);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m = run_experiment(cfg, backend.as_ref()).unwrap();
+    assert_eq!(m.records.len(), 6);
+    let accs = m.acc_series();
+    let first = accs.first().unwrap().1;
+    let best = m.best_acc();
+    assert!(best > first.max(0.3), "first={first} best={best}");
+    // FedAvg moves no compressed bytes but full f32 models
+    let per_round_up = m.records[0].up_bytes;
+    assert!(per_round_up > 4 * 24_380, "up={per_round_up}");
+}
+
+#[test]
+fn native_tfedavg_learns_and_compresses() {
+    // T-FedAvg moves information through sign patterns only, so it needs
+    // more rounds/epochs than FedAvg to clear the same bar (paper Fig. 6:
+    // comparable converged accuracy, slower early progress on CIFAR).
+    let mut cfg = small_cfg(Protocol::TFedAvg);
+    cfg.rounds = 12;
+    cfg.local_epochs = 5;
+    cfg.lr = 0.2;
+    cfg.train_samples = 2000;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m = run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let best = m.best_acc();
+    // chance is 0.10; the hardened synthetic task (DESIGN.md §3) keeps the
+    // 12-round ternary budget around ~0.28 — assert clear learning, not a
+    // saturation level this horizon can't reach
+    assert!(best > 0.22, "best={best}");
+
+    // compression: compare to FedAvg bytes on the identical setup
+    let mut cfg_f = small_cfg(Protocol::FedAvg);
+    cfg_f.rounds = 12;
+    cfg_f.local_epochs = 5;
+    cfg_f.lr = 0.2;
+    cfg_f.train_samples = 2000;
+    let mf = run_experiment(cfg_f, backend.as_ref()).unwrap();
+    let ratio_up = mf.total_up_bytes() as f64 / m.total_up_bytes() as f64;
+    let ratio_down = mf.total_down_bytes() as f64 / m.total_down_bytes() as f64;
+    // paper §III-B: ~16x on weights; biases/overhead pull it slightly below
+    assert!(ratio_up > 12.0, "up ratio {ratio_up}");
+    assert!(ratio_down > 12.0, "down ratio {ratio_down}");
+
+    // w^q factors are reported each round and finite
+    let f = &m.records[0].factors;
+    assert_eq!(f.len(), 3);
+    assert!(f.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn native_baseline_centralized() {
+    let cfg = small_cfg(Protocol::Baseline);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m = run_experiment(cfg, backend.as_ref()).unwrap();
+    assert_eq!(m.total_up_bytes(), 0);
+    assert_eq!(m.total_down_bytes(), 0);
+    assert!(m.best_acc() > 0.3, "best={}", m.best_acc());
+}
+
+#[test]
+fn dropout_rounds_still_aggregate() {
+    let cfg = small_cfg(Protocol::TFedAvg);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut orch = Orchestrator::with_faults(
+        cfg,
+        backend.as_ref(),
+        FaultSpec { client_dropout: 0.7 },
+    )
+    .unwrap();
+    orch.run().unwrap();
+    // with 70% dropout some rounds ran with < 4 clients but all completed
+    assert_eq!(orch.metrics.records.len(), 6);
+    assert!(orch
+        .metrics
+        .records
+        .iter()
+        .any(|r| r.selected.len() < 4));
+    assert!(orch.global().is_finite());
+}
+
+#[test]
+fn non_iid_partition_flows_through() {
+    let mut cfg = small_cfg(Protocol::TFedAvg);
+    cfg.nc = 2;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m = run_experiment(cfg, backend.as_ref()).unwrap();
+    assert!(m.records.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn unbalanced_shards_flow_through() {
+    let mut cfg = small_cfg(Protocol::TFedAvg);
+    cfg.beta = 0.2;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut orch = Orchestrator::new(cfg, backend.as_ref()).unwrap();
+    let sizes = orch.shard_sizes();
+    let beta = tfed::util::stats::unbalancedness(&sizes);
+    assert!((beta - 0.2).abs() < 0.15, "beta={beta} sizes={sizes:?}");
+    orch.run().unwrap();
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = small_cfg(Protocol::TFedAvg);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let a = run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let b = run_experiment(cfg, backend.as_ref()).unwrap();
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.test_acc, y.test_acc);
+        assert_eq!(x.up_bytes, y.up_bytes);
+        assert_eq!(x.selected, y.selected);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT end-to-end (requires artifacts)
+// ---------------------------------------------------------------------------
+
+fn pjrt_engine() -> Option<Arc<Engine>> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping PJRT e2e: run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Engine::load(default_artifacts_dir()).unwrap()))
+}
+
+#[test]
+fn pjrt_tfedavg_round_trip() {
+    let Some(engine) = pjrt_engine() else { return };
+    let mut cfg = small_cfg(Protocol::TFedAvg);
+    cfg.native_backend = false;
+    cfg.rounds = 3;
+    let backend = make_backend(Some(engine), "mlp", cfg.batch, false).unwrap();
+    let m = run_experiment(cfg, backend.as_ref()).unwrap();
+    assert_eq!(m.records.len(), 3);
+    assert!(m.records.iter().all(|r| r.train_loss.is_finite()));
+    assert!(m.final_acc() > 0.1, "acc={}", m.final_acc());
+    // ternary upstream is ~16x smaller than the dense model
+    let up_per_client = m.records[0].up_bytes as f64 / m.records[0].selected.len() as f64;
+    assert!(up_per_client < 24_380.0, "up/client={up_per_client}");
+}
+
+#[test]
+fn pjrt_and_native_agree_on_fedavg_shape() {
+    // not bit-identical (different batching math paths) but both learn and
+    // produce comparable accuracy on the same small task
+    let Some(engine) = pjrt_engine() else { return };
+    let mut cfg = small_cfg(Protocol::FedAvg);
+    cfg.rounds = 4;
+    let native = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m_native = run_experiment(cfg.clone(), native.as_ref()).unwrap();
+    cfg.native_backend = false;
+    let pjrt = make_backend(Some(engine), "mlp", cfg.batch, false).unwrap();
+    let m_pjrt = run_experiment(cfg, pjrt.as_ref()).unwrap();
+    let (a, b) = (m_native.best_acc(), m_pjrt.best_acc());
+    assert!((a - b).abs() < 0.25, "native={a} pjrt={b}");
+}

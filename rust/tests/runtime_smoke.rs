@@ -1,0 +1,186 @@
+//! Integration: load real artifacts, execute train/eval/quantize through
+//! PJRT, cross-check quantize against the native Rust implementation.
+//!
+//! Requires `make artifacts`; tests no-op (with a note) if absent so
+//! `cargo test` still works on a fresh checkout.
+
+use tfed::model::init_params;
+use tfed::quant;
+use tfed::runtime::{manifest::default_artifacts_dir, Engine, Value};
+use tfed::util::rng::Pcg;
+
+fn engine() -> Option<Engine> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load(default_artifacts_dir()).expect("engine"))
+}
+
+fn param_values(engine: &Engine, model: &str, seed: u64) -> Vec<Value> {
+    let entry = engine.manifest.model(model).unwrap();
+    let mut rng = Pcg::seeded(seed);
+    let params = init_params(&entry.schema, &mut rng);
+    params
+        .tensors
+        .iter()
+        .map(|t| Value::f32(t.shape.clone(), t.data.clone()).unwrap())
+        .collect()
+}
+
+#[test]
+fn eval_artifact_runs_and_counts() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest.eval_artifact("mlp").unwrap().clone();
+    let (b, nb) = (art.batch, art.nb);
+    let mut inputs = param_values(&engine, "mlp", 1);
+    let mut rng = Pcg::seeded(2);
+    let xs: Vec<f32> = (0..nb * b * 784).map(|_| rng.normal()).collect();
+    let ys: Vec<i32> = (0..nb * b).map(|_| rng.below(10) as i32).collect();
+    let mut ms = vec![1.0f32; nb * b];
+    // mask out the last 10 samples
+    for m in ms.iter_mut().rev().take(10) {
+        *m = 0.0;
+    }
+    inputs.push(Value::f32(vec![nb, b, 784], xs).unwrap());
+    inputs.push(Value::i32(vec![nb, b], ys).unwrap());
+    inputs.push(Value::f32(vec![nb, b], ms).unwrap());
+    let out = engine.execute(&art.name, &inputs).unwrap();
+    assert_eq!(out.len(), 3);
+    let loss_sum = out[0].scalar().unwrap();
+    let correct = out[1].scalar().unwrap();
+    let count = out[2].scalar().unwrap();
+    assert_eq!(count, (nb * b - 10) as f32);
+    assert!(loss_sum > 0.0 && loss_sum.is_finite());
+    assert!(correct >= 0.0 && correct <= count);
+    // random init on random data ~ chance accuracy
+    let acc = correct / count;
+    assert!(acc < 0.5, "acc={acc}");
+}
+
+#[test]
+fn quantize_artifact_matches_native_quant() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest.quantize_artifact("mlp").unwrap().clone();
+    let entry = engine.manifest.model("mlp").unwrap().clone();
+    let mut rng = Pcg::seeded(3);
+    let params = init_params(&entry.schema, &mut rng);
+    let qidx = entry.schema.quantized_indices();
+    let inputs: Vec<Value> = qidx
+        .iter()
+        .map(|&i| {
+            let t = &params.tensors[i];
+            Value::f32(t.shape.clone(), t.data.clone()).unwrap()
+        })
+        .collect();
+    let out = engine.execute(&art.name, &inputs).unwrap();
+    assert_eq!(out.len(), 2 * qidx.len());
+    let t_k = engine.manifest.t_k;
+    for (k, &i) in qidx.iter().enumerate() {
+        let hlo_it = out[k].as_f32().unwrap();
+        let hlo_delta = out[qidx.len() + k].scalar().unwrap();
+        let (native_it, native_delta) = quant::fttq_quantize(&params.tensors[i].data, t_k);
+        assert!(
+            (hlo_delta - native_delta).abs() < 1e-5,
+            "layer {k}: delta {hlo_delta} vs {native_delta}"
+        );
+        let mut mismatches = 0usize;
+        for (a, &b) in hlo_it.iter().zip(&native_it) {
+            if (*a - b as f32).abs() > 0.5 {
+                mismatches += 1;
+            }
+        }
+        // identical math; allow a few boundary ties from float assoc.
+        assert!(
+            mismatches <= native_it.len() / 1000 + 1,
+            "layer {k}: {mismatches}/{} mismatches",
+            native_it.len()
+        );
+    }
+}
+
+#[test]
+fn fp_train_epoch_reduces_loss_and_matches_io() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest.train_artifact("mlp", "fp", 16).unwrap().clone();
+    let (b, nb) = (art.batch, art.nb);
+    let mut rng = Pcg::seeded(4);
+    // learnable toy task: label = argmax of a fixed linear map
+    let w_true: Vec<f32> = (0..784 * 10).map(|_| rng.normal()).collect();
+    let n = nb * b;
+    let xs: Vec<f32> = (0..n * 784).map(|_| rng.normal()).collect();
+    let ys: Vec<i32> = (0..n)
+        .map(|i| {
+            let mut best = (f32::NEG_INFINITY, 0);
+            for c in 0..10 {
+                let mut s = 0f32;
+                for k in 0..784 {
+                    s += xs[i * 784 + k] * w_true[k * 10 + c];
+                }
+                if s > best.0 {
+                    best = (s, c as i32);
+                }
+            }
+            best.1
+        })
+        .collect();
+    let ms = vec![1.0f32; n];
+
+    let mut params = param_values(&engine, "mlp", 5);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let mut inputs = params.clone();
+        inputs.push(Value::f32(vec![nb, b, 784], xs.clone()).unwrap());
+        inputs.push(Value::i32(vec![nb, b], ys.clone()).unwrap());
+        inputs.push(Value::f32(vec![nb, b], ms.clone()).unwrap());
+        inputs.push(Value::scalar_f32(0.3));
+        let out = engine.execute(&art.name, &inputs).unwrap();
+        assert_eq!(out.len(), art.outputs.len());
+        losses.push(out.last().unwrap().scalar().unwrap());
+        params = out[..6].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "losses {losses:?}"
+    );
+}
+
+#[test]
+fn fttq_train_epoch_trains_wq() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest.train_artifact("mlp", "fttq", 16).unwrap().clone();
+    let (b, nb) = (art.batch, art.nb);
+    let entry = engine.manifest.model("mlp").unwrap().clone();
+    let nq = entry.num_quantized;
+    let mut rng = Pcg::seeded(6);
+    let n = nb * b;
+    let xs: Vec<f32> = (0..n * 784).map(|_| rng.normal()).collect();
+    let ys: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    let ms = vec![1.0f32; n];
+
+    let mut inputs = param_values(&engine, "mlp", 7);
+    let wq0 = engine.manifest.wq_init;
+    inputs.push(Value::f32(vec![nq], vec![wq0; nq]).unwrap());
+    // sgd: empty opt state
+    inputs.push(Value::f32(vec![nb, b, 784], xs).unwrap());
+    inputs.push(Value::i32(vec![nb, b], ys).unwrap());
+    inputs.push(Value::f32(vec![nb, b], ms).unwrap());
+    inputs.push(Value::scalar_f32(0.05));
+    let out = engine.execute(&art.name, &inputs).unwrap();
+    let loss = out.last().unwrap().scalar().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let wq = out[6].as_f32().unwrap();
+    assert_eq!(wq.len(), nq);
+    assert!(wq.iter().any(|&w| (w - wq0).abs() > 1e-6), "wq did not move: {wq:?}");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(engine) = engine() else { return };
+    let art = engine.manifest.eval_artifact("mlp").unwrap().clone();
+    let inputs = vec![Value::scalar_f32(0.0); art.inputs.len()];
+    let err = engine.execute(&art.name, &inputs).unwrap_err();
+    assert!(format!("{err}").contains("expects shape"));
+    let err = engine.execute(&art.name, &[]).unwrap_err();
+    assert!(format!("{err}").contains("inputs"));
+}
