@@ -135,8 +135,10 @@ fn table3(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
 }
 
 /// Table IV: upstream/downstream MB for 100 rounds, N=100, lambda=0.1.
-/// Byte counts are measured from real serialized messages over 2 rounds
-/// and extrapolated (payload size per round is constant).
+/// Byte counts come straight from the transport layer's per-round
+/// `LinkStats` (frame headers included — this is wire traffic, not an
+/// analytic payload estimate), measured over 2 real rounds and
+/// extrapolated (payload size per round is constant).
 fn table4(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
     println!("\n=== Table IV: communication costs, 100 rounds, N=100, lambda=0.1, E=5 ===");
     println!(
@@ -167,8 +169,17 @@ fn table4(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
             }
             let backend = backend_for(engine, &mut cfg);
             let m = run(cfg, backend.as_ref());
+            // frame-layer totals recorded per round by the round driver
             let per_round_up = m.total_up_bytes() as f64 / m.records.len() as f64;
             let per_round_down = m.total_down_bytes() as f64 / m.records.len() as f64;
+            let frames = m.total_up_frames() + m.total_down_frames();
+            println!(
+                "  [{} {:?}] measured {} data frames over {} rounds",
+                protocol.name(),
+                task,
+                frames,
+                m.records.len()
+            );
             cells.push(per_round_up * rounds_target / (1024.0 * 1024.0));
             cells.push(per_round_down * rounds_target / (1024.0 * 1024.0));
         }

@@ -70,25 +70,72 @@ pub fn unpack_ternary(p: &PackedTernary) -> Result<Vec<i8>> {
     Ok(out)
 }
 
+/// A 2-bit cell is the invalid encoding 0b11 iff both of its bits are set;
+/// `b & (b >> 1)` lines those up on the low bit of each cell.
+#[inline]
+fn has_invalid_cell(b: u8) -> bool {
+    b & (b >> 1) & 0b0101_0101 != 0
+}
+
 /// Unpack directly to dense f32 weights (wq * it) without the i8 hop —
 /// the hot-path variant used when materializing a downloaded model.
+///
+/// Validity is checked up front with a per-byte bit trick (no post-hoc NaN
+/// scan), then the body is a straight 256-entry x 4-lane table copy: one
+/// LUT row per byte value replaces the per-element shift/mask loop.
 pub fn unpack_dequantize(p: &PackedTernary, wq: f32) -> Result<Vec<f32>> {
-    // lookup table over all 256 byte values x 4 cells
-    let lut: [f32; 4] = [0.0, wq, -wq, f32::NAN];
-    let mut out = Vec::with_capacity(p.len);
+    if p.bytes.len() != p.len.div_ceil(4) {
+        bail!("packed length {} inconsistent with len {}", p.bytes.len(), p.len);
+    }
+    // up-front 0b11-cell check; the tail byte is masked to its used cells
+    // (padding stays the concern of unpack_ternary's strict path)
     let full_bytes = p.len / 4;
-    for &b in &p.bytes[..full_bytes] {
-        out.push(lut[(b & 3) as usize]);
-        out.push(lut[((b >> 2) & 3) as usize]);
-        out.push(lut[((b >> 4) & 3) as usize]);
-        out.push(lut[((b >> 6) & 3) as usize]);
-    }
-    for i in full_bytes * 4..p.len {
-        let cell = (p.bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
-        out.push(lut[cell as usize]);
-    }
-    if out.iter().any(|x| x.is_nan()) {
+    if p.bytes[..full_bytes].iter().any(|&b| has_invalid_cell(b)) {
         bail!("invalid trit encoding 0b11");
+    }
+    let rem = p.len % 4;
+    if rem != 0 {
+        let used_mask = (1u8 << (rem * 2)) - 1;
+        if has_invalid_cell(p.bytes[full_bytes] & used_mask) {
+            bail!("invalid trit encoding 0b11");
+        }
+    }
+
+    let cell = [0.0f32, wq, -wq, 0.0];
+    let mut out = Vec::with_capacity(p.len);
+
+    // below this size the 1024-entry LUT fill would cost more than the
+    // unpack itself (e.g. the MLP's bias-sized layers): use the 4-entry
+    // cell table directly
+    if p.len < 4096 {
+        for &b in &p.bytes[..full_bytes] {
+            out.push(cell[(b & 3) as usize]);
+            out.push(cell[((b >> 2) & 3) as usize]);
+            out.push(cell[((b >> 4) & 3) as usize]);
+            out.push(cell[((b >> 6) & 3) as usize]);
+        }
+        if rem != 0 {
+            let b = p.bytes[full_bytes];
+            for lane in 0..rem {
+                out.push(cell[((b >> (2 * lane)) & 3) as usize]);
+            }
+        }
+        return Ok(out);
+    }
+
+    // 256-entry x 4-lane per-byte LUT (the 0b11 lane is unreachable after
+    // the validity check; 0.0 keeps the table total)
+    let mut lut = [[0.0f32; 4]; 256];
+    for (b, row) in lut.iter_mut().enumerate() {
+        for (lane, v) in row.iter_mut().enumerate() {
+            *v = cell[(b >> (2 * lane)) & 3];
+        }
+    }
+    for &b in &p.bytes[..full_bytes] {
+        out.extend_from_slice(&lut[b as usize]);
+    }
+    if rem != 0 {
+        out.extend_from_slice(&lut[p.bytes[full_bytes] as usize][..rem]);
     }
     Ok(out)
 }

@@ -248,12 +248,18 @@ pub fn rebuild_update(update: &TernaryUpdate, shapes: &[Vec<usize>]) -> Result<P
     let mut tensors: Vec<Option<Tensor>> = vec![None; shapes.len()];
     for l in &update.layers {
         let i = l.param_index as usize;
+        if i >= shapes.len() {
+            bail!("update layer index {i} out of range ({} params)", shapes.len());
+        }
         let it = unpack_ternary(&l.pattern)?;
         let data: Vec<f32> = it.iter().map(|&s| l.wq * s as f32).collect();
         tensors[i] = Some(Tensor::new(shapes[i].clone(), data)?);
     }
     for (i, data) in &update.fp_tensors {
         let i = *i as usize;
+        if i >= shapes.len() {
+            bail!("update tensor index {i} out of range ({} params)", shapes.len());
+        }
         tensors[i] = Some(Tensor::new(shapes[i].clone(), data.clone())?);
     }
     let tensors: Result<Vec<Tensor>> = tensors
@@ -265,31 +271,39 @@ pub fn rebuild_update(update: &TernaryUpdate, shapes: &[Vec<usize>]) -> Result<P
 }
 
 // ---------------------------------------------------------------------------
-// little-endian writer/reader
+// little-endian writer/reader (shared with transport::Ctrl payloads)
 // ---------------------------------------------------------------------------
 
-struct Writer {
+pub(crate) struct Writer {
     out: Vec<u8>,
 }
 
 impl Writer {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Writer { out: Vec::new() }
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.out
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
         self.out.push(v);
     }
 
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.out.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.out.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f32(&mut self, v: f32) {
+    pub(crate) fn f32(&mut self, v: f32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
         self.out.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -315,12 +329,21 @@ impl Writer {
     }
 }
 
-struct Reader<'a> {
+pub(crate) struct Reader<'a> {
     b: &'a [u8],
     i: usize,
 }
 
 impl<'a> Reader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    /// All input consumed? (trailing-bytes checks at the frame boundary)
+    pub(crate) fn exhausted(&self) -> bool {
+        self.i == self.b.len()
+    }
+
     /// Read a u32 length prefix and validate it against the bytes actually
     /// remaining, so a corrupt count can never trigger a huge allocation.
     fn count(&mut self, min_bytes_each: usize) -> Result<usize> {
@@ -341,20 +364,24 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f32s(&mut self) -> Result<Vec<f32>> {

@@ -86,7 +86,7 @@ impl Task {
 }
 
 /// Full experiment description.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub protocol: Protocol,
     pub task: Task,

@@ -47,7 +47,12 @@ pub struct LocalOutcome {
 }
 
 /// Local compute: E epochs of training, evaluation, upload quantization.
-pub trait Backend {
+///
+/// `Sync` is required because the concurrent round driver shares one
+/// backend across transport worker threads (all methods take `&self`; the
+/// native backend is stateless per call, and the PJRT engine is internally
+/// synchronized).
+pub trait Backend: Sync {
     fn schema(&self) -> &ModelSchema;
     fn t_k(&self) -> f32;
     fn wq_init(&self) -> f32;

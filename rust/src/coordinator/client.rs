@@ -1,11 +1,20 @@
-//! Client-side data handling: shard materialization + epoch-chunk batching.
+//! Client-side logic: shard materialization, epoch-chunk batching, and the
+//! protocol round handler (`ClientRuntime`) shared by the in-process
+//! `Loopback` transport and the remote `tfed client` process.
 //!
 //! Train artifacts take fixed shapes [NB, B, dim]; a client shard of any
 //! size is covered by shuffling, splitting into NB*B-sample chunks, and
 //! zero-padding the tail with a {0,1} sample mask (the masked-loss graphs
 //! make padding exact — see python/tests/test_train.py).
 
+use anyhow::{anyhow, bail, Result};
+
+use crate::comms::{
+    dense_update, ternary_update, unpack_dequantize, DenseGlobal, Message, TernaryGlobal,
+};
+use crate::coordinator::backend::{Backend, TrainMode};
 use crate::data::synth::Dataset;
+use crate::model::ParamSet;
 use crate::util::rng::Pcg;
 
 /// A client's materialized local data (features copied out of the shared
@@ -72,6 +81,119 @@ pub fn make_chunks(data: &ShardData, order: &[u32], b: usize, nb: usize) -> Vec<
         chunks.push(Chunk { xs, ys, ms, samples: chunk_idx.len() });
     }
     chunks
+}
+
+/// The client side of one protocol round: decode the broadcast, train
+/// locally, quantize, encode the upload. One instance per client; the
+/// `Loopback` transport holds them in-process, the `tfed client`
+/// subcommand holds exactly one in its own process. Stateless across
+/// rounds (all cross-round state travels in the messages), so a worker
+/// pool may drive different clients concurrently.
+pub struct ClientRuntime<'a> {
+    pub client_id: u32,
+    pub backend: &'a dyn Backend,
+    pub shard: ShardData,
+    pub local_epochs: usize,
+    pub lr: f32,
+}
+
+impl ClientRuntime<'_> {
+    /// Handle one downstream broadcast; returns the upstream update.
+    /// `rng` is the round-assigned generator (seeded by the server), so the
+    /// result is independent of where or when this client runs.
+    pub fn handle_round(&self, rng: &mut Pcg, down: &Message) -> Result<Message> {
+        match down {
+            Message::TernaryGlobal(g) => self.ternary_round(rng, g),
+            Message::DenseGlobal(g) => self.dense_round(rng, g),
+            other => bail!("client received upstream message kind {}", other.kind()),
+        }
+    }
+
+    /// T-FedAvg (Algorithm 2): rebuild bare {-1,0,+1} latent weights + fp
+    /// biases, train FTTQ from the broadcast w^q init, re-ternarize, upload.
+    fn ternary_round(&self, rng: &mut Pcg, g: &TernaryGlobal) -> Result<Message> {
+        let schema = self.backend.schema();
+        let mut start = ParamSet::zeros(schema);
+        for (i, packed) in &g.layers {
+            let idx = *i as usize;
+            let t = start
+                .tensors
+                .get_mut(idx)
+                .ok_or_else(|| anyhow!("broadcast layer index {idx} out of range"))?;
+            let dense = unpack_dequantize(packed, 1.0)?;
+            if dense.len() != t.data.len() {
+                bail!("broadcast layer {idx}: {} values for shape {:?}", dense.len(), t.shape);
+            }
+            t.data = dense;
+        }
+        for (i, data) in &g.fp_tensors {
+            let idx = *i as usize;
+            let t = start
+                .tensors
+                .get_mut(idx)
+                .ok_or_else(|| anyhow!("broadcast tensor index {idx} out of range"))?;
+            if data.len() != t.data.len() {
+                bail!("broadcast tensor {idx}: {} values for shape {:?}", data.len(), t.shape);
+            }
+            t.data = data.clone();
+        }
+        let out = self.backend.train_local(
+            &start,
+            TrainMode::Fttq,
+            &g.wq_init,
+            &self.shard,
+            self.local_epochs,
+            self.lr,
+            rng,
+        )?;
+        let (patterns, deltas) = self.backend.quantize(&out.params)?;
+        let qidx = schema.quantized_indices();
+        let upd = ternary_update(
+            self.client_id,
+            self.shard.len() as u64,
+            &qidx,
+            &patterns,
+            &out.wq,
+            &deltas,
+            &out.params,
+            out.mean_loss,
+        );
+        Ok(Message::TernaryUpdate(upd))
+    }
+
+    /// FedAvg: load the dense broadcast, train full precision, upload.
+    fn dense_round(&self, rng: &mut Pcg, g: &DenseGlobal) -> Result<Message> {
+        let schema = self.backend.schema();
+        let mut start = ParamSet::zeros(schema);
+        if g.tensors.len() != start.tensors.len() {
+            bail!(
+                "broadcast has {} tensors, model wants {}",
+                g.tensors.len(),
+                start.tensors.len()
+            );
+        }
+        for (t, data) in start.tensors.iter_mut().zip(&g.tensors) {
+            if data.len() != t.data.len() {
+                bail!("broadcast tensor: {} values for shape {:?}", data.len(), t.shape);
+            }
+            t.data = data.clone();
+        }
+        let out = self.backend.train_local(
+            &start,
+            TrainMode::Fp,
+            &[],
+            &self.shard,
+            self.local_epochs,
+            self.lr,
+            rng,
+        )?;
+        Ok(Message::DenseUpdate(dense_update(
+            self.client_id,
+            self.shard.len() as u64,
+            &out.params,
+            out.mean_loss,
+        )))
+    }
 }
 
 /// A shuffled epoch order over a shard.

@@ -2,10 +2,12 @@
 //!
 //! * `selection` — seeded client sampling (participation ratio lambda)
 //! * `aggregation` — data-size-weighted FedAvg averaging (eq. 2)
-//! * `client` — local shard materialization + epoch-chunk batching
+//! * `client` — local shard materialization + epoch-chunk batching + the
+//!   `ClientRuntime` round handler shared by loopback and remote clients
 //! * `backend` — compute abstraction: PJRT artifacts or the native mirror
-//! * `server` — the round loops for Baseline / TTQ / FedAvg / T-FedAvg
-//!   (Algorithm 2), with every cross-"network" byte serialized and counted
+//! * `server` — the round driver for Baseline / TTQ / FedAvg / T-FedAvg
+//!   (Algorithm 2): selected clients fan out over a `transport::Transport`
+//!   via a worker pool, and every cross-network byte is framed and counted
 
 pub mod aggregation;
 pub mod backend;
@@ -14,5 +16,5 @@ pub mod selection;
 pub mod server;
 
 pub use backend::{Backend, LocalOutcome, NativeBackend, PjrtBackend, TrainMode};
-pub use client::ShardData;
-pub use server::{run_experiment, Orchestrator};
+pub use client::{ClientRuntime, ShardData};
+pub use server::{materialize_data, materialize_shard, run_experiment, Orchestrator};

@@ -1,27 +1,33 @@
 //! The round-based orchestrator: Algorithm 2 (T-FedAvg) plus the FedAvg,
 //! Baseline, and TTQ comparison loops.
 //!
-//! Every payload that would cross the network is serialized through
-//! `comms::Message` and its bytes counted — the Table-IV numbers are
-//! measured, not estimated. Execution is in-process and sequential (one
-//! CPU core); the message boundary is the fidelity point.
+//! Federated rounds are driven through a [`Transport`]: every payload is
+//! framed, checksummed, and counted at the wire (`transport::LinkStats`),
+//! so the Table-IV numbers are measured, not estimated. The default
+//! transport is the in-process `Loopback`; `tfed serve` swaps in `Tcp` and
+//! the same driver runs a real multi-process federation. Selected clients
+//! are dispatched concurrently by a worker-thread pool; results are
+//! aggregated in selection order and client RNGs are server-derived, so
+//! runs are bit-for-bit reproducible at any worker count, on any
+//! transport.
 
-use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-use crate::comms::{
-    dense_update, rebuild_update, ternary_update, unpack_dequantize, Message,
-    TernaryGlobal,
-};
+use anyhow::{anyhow, bail, Result};
+
+use crate::comms::{pack_ternary, rebuild_update, DenseGlobal, Message, TernaryGlobal};
 use crate::config::{ExperimentConfig, Protocol, Task};
 use crate::coordinator::aggregation::weighted_average;
 use crate::coordinator::backend::{Backend, TrainMode};
-use crate::coordinator::client::ShardData;
+use crate::coordinator::client::{ClientRuntime, ShardData};
 use crate::coordinator::selection::{apply_dropout, select_clients};
 use crate::data::partition::{partition, PartitionSpec};
 use crate::data::synth::SynthSpec;
 use crate::metrics::{RoundRecord, RunMetrics};
-use crate::model::{init_params, ParamSet};
+use crate::model::{init_params, ModelSchema, ParamSet};
 use crate::quant;
+use crate::transport::{encode_data_frame, LinkStats, Loopback, RoundAssign, Transport};
 use crate::util::rng::Pcg;
 use crate::util::timer::Stopwatch;
 use crate::{debug, info};
@@ -33,11 +39,84 @@ pub struct FaultSpec {
     pub client_dropout: f64,
 }
 
+/// Synthesize the datasets and compute the client partition (indices only,
+/// no feature copies). Deterministic in `cfg` — every process rebuilds the
+/// same split.
+fn synth_partition(
+    cfg: &ExperimentConfig,
+    input_dim: usize,
+) -> Result<(crate::data::synth::Dataset, crate::data::synth::Dataset, crate::data::partition::Partition)> {
+    let spec = match cfg.task {
+        Task::MnistLike => SynthSpec::mnist_like(cfg.train_samples, cfg.test_samples, cfg.seed),
+        Task::CifarLike => SynthSpec::cifar_like(cfg.train_samples, cfg.test_samples, cfg.seed),
+    };
+    let (train, test) = spec.generate();
+    if train.dim != input_dim {
+        bail!("dataset dim {} != model input {}", train.dim, input_dim);
+    }
+    let pspec = PartitionSpec {
+        n_clients: cfg.n_clients,
+        nc: cfg.nc,
+        beta: cfg.beta,
+        seed: cfg.seed ^ 0x51AB,
+    };
+    let part = partition(&train, &pspec)?;
+    Ok((train, test, part))
+}
+
+/// Materialize every client shard plus the held-out test set (in-process
+/// federations, where all clients live in this address space).
+pub fn materialize_data(
+    cfg: &ExperimentConfig,
+    input_dim: usize,
+) -> Result<(Vec<ShardData>, ShardData)> {
+    let (train, test, part) = synth_partition(cfg, input_dim)?;
+    let shards: Vec<ShardData> = part
+        .shards
+        .iter()
+        .map(|s| ShardData::from_dataset(&train, &s.indices))
+        .collect();
+    Ok((shards, ShardData::whole(&test)))
+}
+
+/// Materialize exactly one client's shard — what a remote `tfed client`
+/// process needs. Avoids copying the other N-1 shards and the test set.
+pub fn materialize_shard(
+    cfg: &ExperimentConfig,
+    input_dim: usize,
+    client_id: usize,
+) -> Result<ShardData> {
+    let (train, _test, part) = synth_partition(cfg, input_dim)?;
+    let shard = part
+        .shards
+        .get(client_id)
+        .ok_or_else(|| anyhow!("client id {client_id} out of range"))?;
+    Ok(ShardData::from_dataset(&train, &shard.indices))
+}
+
+/// Round-driver worker threads: `TFED_WORKERS` env override, else one per
+/// core capped at 8 (client work is compute-bound; more adds no overlap).
+fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("TFED_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
 /// A fully-initialized experiment ready to run round-by-round.
 pub struct Orchestrator<'a> {
     pub cfg: ExperimentConfig,
     backend: &'a dyn Backend,
+    /// the links to the client fleet (loopback unless given via
+    /// `with_transport`); centralized protocols never touch it
+    transport: Box<dyn Transport + 'a>,
+    workers: usize,
+    /// local shards, retained only for the centralized protocols (the
+    /// federated ones live inside the transport's client runtimes)
     shards: Vec<ShardData>,
+    shard_sizes: Vec<usize>,
     test: ShardData,
     global: ParamSet,
     /// TTQ factor state carried across rounds (wp || wn)
@@ -47,6 +126,8 @@ pub struct Orchestrator<'a> {
     last_wq_mean: Vec<f32>,
     rng: Pcg,
     faults: FaultSpec,
+    /// cumulative transport stats at the last round boundary
+    stats_mark: LinkStats,
     pub metrics: RunMetrics,
 }
 
@@ -55,40 +136,78 @@ impl<'a> Orchestrator<'a> {
         Self::with_faults(cfg, backend, FaultSpec::default())
     }
 
+    /// Default setup: clients attached over an in-process `Loopback`
+    /// transport (full frame codec, identical accounting to TCP).
     pub fn with_faults(
         cfg: ExperimentConfig,
         backend: &'a dyn Backend,
         faults: FaultSpec,
     ) -> Result<Self> {
+        Self::build(cfg, backend, faults, None)
+    }
+
+    /// Attach an external transport (e.g. `TcpTransport` with remote
+    /// clients). The backend is still used server-side for evaluation and
+    /// downstream re-quantization.
+    pub fn with_transport(
+        cfg: ExperimentConfig,
+        backend: &'a dyn Backend,
+        faults: FaultSpec,
+        transport: Box<dyn Transport + 'a>,
+    ) -> Result<Self> {
+        if cfg.protocol.is_centralized() {
+            bail!("centralized protocols do not use a transport");
+        }
+        if transport.n_clients() < cfg.n_clients {
+            bail!(
+                "transport reaches {} clients, config wants {}",
+                transport.n_clients(),
+                cfg.n_clients
+            );
+        }
+        Self::build(cfg, backend, faults, Some(transport))
+    }
+
+    fn build(
+        cfg: ExperimentConfig,
+        backend: &'a dyn Backend,
+        faults: FaultSpec,
+        transport: Option<Box<dyn Transport + 'a>>,
+    ) -> Result<Self> {
         cfg.validate()?;
         let mut rng = Pcg::new(cfg.seed, 0xC0 + cfg.protocol.weight_bits() as u64);
 
-        // synthesize + shard the data
-        let spec = match cfg.task {
-            Task::MnistLike => SynthSpec::mnist_like(cfg.train_samples, cfg.test_samples, cfg.seed),
-            Task::CifarLike => SynthSpec::cifar_like(cfg.train_samples, cfg.test_samples, cfg.seed),
+        let input_dim = backend.schema().input_dim;
+        let (mut shards, shard_sizes, test) = if transport.is_some() {
+            // remote clients materialize their own shards; the server only
+            // needs the split sizes and the held-out test set
+            let (_train, test, part) = synth_partition(&cfg, input_dim)?;
+            let sizes: Vec<usize> = part.shards.iter().map(|s| s.indices.len()).collect();
+            (Vec::new(), sizes, ShardData::whole(&test))
+        } else {
+            let (shards, test) = materialize_data(&cfg, input_dim)?;
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            (shards, sizes, test)
         };
-        let (train, test) = spec.generate();
-        if train.dim != backend.schema().input_dim {
-            bail!(
-                "dataset dim {} != model input {}",
-                train.dim,
-                backend.schema().input_dim
-            );
-        }
-        let pspec = PartitionSpec {
-            n_clients: cfg.n_clients,
-            nc: cfg.nc,
-            beta: cfg.beta,
-            seed: cfg.seed ^ 0x51AB,
+
+        let transport: Box<dyn Transport + 'a> = match transport {
+            Some(t) => t,
+            None if cfg.protocol.is_centralized() => Box::new(Loopback::new(Vec::new())),
+            None => {
+                let runtimes: Vec<ClientRuntime<'a>> = shards
+                    .drain(..)
+                    .enumerate()
+                    .map(|(cid, shard)| ClientRuntime {
+                        client_id: cid as u32,
+                        backend,
+                        shard,
+                        local_epochs: cfg.local_epochs,
+                        lr: cfg.lr,
+                    })
+                    .collect();
+                Box::new(Loopback::new(runtimes))
+            }
         };
-        let part = partition(&train, &pspec)?;
-        let shards: Vec<ShardData> = part
-            .shards
-            .iter()
-            .map(|s| ShardData::from_dataset(&train, &s.indices))
-            .collect();
-        let test = ShardData::whole(&test);
 
         let global = init_params(backend.schema(), &mut rng);
         let nq = backend.schema().num_quantized();
@@ -97,15 +216,26 @@ impl<'a> Orchestrator<'a> {
         Ok(Orchestrator {
             cfg,
             backend,
+            transport,
+            workers: default_workers(),
             shards,
+            shard_sizes,
             test,
             global,
             ttq_factors: vec![backend.wq_init(); 2 * nq],
             last_wq_mean: vec![backend.wq_init(); nq],
             rng,
             faults,
+            stats_mark: LinkStats::default(),
             metrics,
         })
+    }
+
+    /// Override the round-driver worker-thread count (default: one per
+    /// core, capped at 8; `TFED_WORKERS` env). Results are identical at
+    /// any setting — only wall time changes.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
     }
 
     /// Current dense global model (server state).
@@ -114,7 +244,23 @@ impl<'a> Orchestrator<'a> {
     }
 
     pub fn shard_sizes(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.len()).collect()
+        self.shard_sizes.clone()
+    }
+
+    /// Cumulative transport-layer stats over all links.
+    pub fn transport_stats(&self) -> LinkStats {
+        self.transport.stats()
+    }
+
+    /// Per-link transport stats, indexed by client id.
+    pub fn link_stats(&self) -> Vec<LinkStats> {
+        self.transport.link_stats()
+    }
+
+    /// Notify remote clients that the experiment is over (no-op for the
+    /// loopback transport).
+    pub fn shutdown_transport(&self) -> Result<()> {
+        self.transport.shutdown()
     }
 
     /// The ternary broadcast model a T-FedAvg client would download next
@@ -152,12 +298,16 @@ impl<'a> Orchestrator<'a> {
         let selected = select_clients(self.cfg.n_clients, k, &mut self.rng);
         let selected = apply_dropout(&selected, self.faults.client_dropout, &mut self.rng);
 
-        let (train_loss, up, down, factors) = match self.cfg.protocol {
-            Protocol::TFedAvg => self.round_tfedavg(round, &selected)?,
-            Protocol::FedAvg => self.round_fedavg(round, &selected)?,
+        let (train_loss, factors) = match self.cfg.protocol {
+            Protocol::TFedAvg | Protocol::FedAvg => self.round_federated(round, &selected)?,
             Protocol::Baseline => self.round_centralized(round, TrainMode::Fp)?,
             Protocol::Ttq => self.round_centralized(round, TrainMode::Ttq)?,
         };
+
+        // communication cost measured at the frame layer
+        let stats = self.transport.stats();
+        let delta = stats.since(&self.stats_mark);
+        self.stats_mark = stats;
 
         let evaluated = round % self.cfg.eval_every == 0 || round == self.cfg.rounds;
         let (test_loss, test_acc) = if evaluated {
@@ -177,8 +327,10 @@ impl<'a> Orchestrator<'a> {
             train_loss,
             test_acc,
             test_loss,
-            up_bytes: up,
-            down_bytes: down,
+            up_bytes: delta.up_bytes,
+            down_bytes: delta.down_bytes,
+            up_frames: delta.up_frames,
+            down_frames: delta.down_frames,
             wall_secs: sw.secs(),
             selected,
             factors,
@@ -187,7 +339,7 @@ impl<'a> Orchestrator<'a> {
         if evaluated {
             info!(
                 "round {round:>4}: loss={train_loss:.4} acc={test_acc:.4} up={}B down={}B",
-                up, down
+                rec.up_bytes, rec.down_bytes
             );
         }
         self.metrics.push(rec.clone());
@@ -202,27 +354,116 @@ impl<'a> Orchestrator<'a> {
         Ok(())
     }
 
-    // -- T-FedAvg (Algorithm 2) --------------------------------------------
-    fn round_tfedavg(
+    // -- federated rounds (FedAvg + T-FedAvg, Algorithm 2) -------------------
+
+    fn round_federated(
         &mut self,
         round: usize,
         selected: &[usize],
-    ) -> Result<(f32, u64, u64, Vec<f32>)> {
+    ) -> Result<(f32, Vec<f32>)> {
         let schema = self.backend.schema().clone();
         let qidx = schema.quantized_indices();
         let shapes: Vec<Vec<usize>> =
             schema.params.iter().map(|p| p.shape.clone()).collect();
 
-        // downstream: server re-quantizes the global model (fixed Delta)
-        // and broadcasts ternary patterns + fp biases
+        let down_msg = match self.cfg.protocol {
+            Protocol::TFedAvg => Message::TernaryGlobal(self.ternary_broadcast(round, &schema)),
+            Protocol::FedAvg => Message::DenseGlobal(DenseGlobal {
+                round: round as u32,
+                tensors: self.global.tensors.iter().map(|t| t.data.clone()).collect(),
+            }),
+            _ => unreachable!("centralized protocols never reach round_federated"),
+        };
+
+        // derive the per-client RNGs up front, in selection order — the
+        // same `fork` draw sequence the sequential loop made, so runs
+        // reproduce bit-for-bit at any worker count or transport
+        let assigns: Vec<RoundAssign> = selected
+            .iter()
+            .map(|&cid| {
+                let tag = cid as u64 + round as u64 * 7919;
+                let (rng_seed, rng_stream) = self.rng.fork_params(tag);
+                RoundAssign { round: round as u32, client_id: cid as u32, rng_seed, rng_stream }
+            })
+            .collect();
+
+        let replies = self.dispatch(selected, &assigns, &down_msg)?;
+
+        // server side: decode + rebuild + aggregate, in selection order
+        let mut updates: Vec<(u64, ParamSet)> = Vec::with_capacity(selected.len());
+        let mut loss_acc = 0f64;
+        let mut wq_mean = vec![0f32; qidx.len()];
+        for (slot, reply) in replies.into_iter().enumerate() {
+            match (self.cfg.protocol, reply) {
+                (Protocol::TFedAvg, Message::TernaryUpdate(u)) => {
+                    if u.layers.len() != qidx.len() {
+                        bail!(
+                            "client {}: {} quantized layers, model has {}",
+                            selected[slot],
+                            u.layers.len(),
+                            qidx.len()
+                        );
+                    }
+                    for (k, l) in u.layers.iter().enumerate() {
+                        wq_mean[k] += l.wq / selected.len() as f32;
+                    }
+                    loss_acc += u.train_loss as f64;
+                    let rebuilt = rebuild_update(&u, &shapes)?;
+                    updates.push((u.num_samples, rebuilt));
+                }
+                (Protocol::FedAvg, Message::DenseUpdate(u)) => {
+                    loss_acc += u.train_loss as f64;
+                    let mut p = ParamSet::zeros(&schema);
+                    if u.tensors.len() != p.tensors.len() {
+                        bail!(
+                            "client {}: update has {} tensors, model wants {}",
+                            selected[slot],
+                            u.tensors.len(),
+                            p.tensors.len()
+                        );
+                    }
+                    for ((t, data), shape) in
+                        p.tensors.iter_mut().zip(u.tensors).zip(&shapes)
+                    {
+                        if t.data.len() != data.len() {
+                            bail!("tensor size mismatch for shape {shape:?}");
+                        }
+                        t.data = data;
+                    }
+                    updates.push((u.num_samples, p));
+                }
+                (_, other) => bail!(
+                    "client {} returned unexpected message kind {}",
+                    selected[slot],
+                    other.kind()
+                ),
+            }
+        }
+
+        // server aggregation (eq. 2)
+        self.global = weighted_average(&updates)?;
+        debug!("aggregated {} updates from {} clients", updates.len(), selected.len());
+        let factors = if self.cfg.protocol == Protocol::TFedAvg {
+            self.last_wq_mean = wq_mean.clone();
+            wq_mean
+        } else {
+            vec![]
+        };
+        Ok(((loss_acc / selected.len().max(1) as f64) as f32, factors))
+    }
+
+    /// Algorithm 2 downstream payload: server re-quantizes the global model
+    /// (fixed Delta) -> ternary patterns + fp biases + next-round w^q init.
+    fn ternary_broadcast(&self, round: usize, schema: &ModelSchema) -> TernaryGlobal {
+        let qidx = schema.quantized_indices();
         let patterns =
             quant::requantize_paramset(&self.global, &qidx, self.backend.server_delta());
-        let down_msg = Message::TernaryGlobal(TernaryGlobal {
+        TernaryGlobal {
             round: round as u32,
             layers: qidx
                 .iter()
                 .zip(&patterns)
-                .map(|(&i, p)| (i as u32, crate::comms::pack_ternary(p)))
+                .map(|(&i, p)| (i as u32, pack_ternary(p)))
                 .collect(),
             fp_tensors: schema
                 .params
@@ -232,154 +473,67 @@ impl<'a> Orchestrator<'a> {
                 .map(|(i, _)| (i as u32, self.global.tensors[i].data.clone()))
                 .collect(),
             wq_init: self.last_wq_mean.clone(),
-        });
-        let down_bytes_each = down_msg.encode().len() as u64;
-        let down_bytes = down_bytes_each * selected.len() as u64;
-
-        let mut updates: Vec<(u64, ParamSet)> = Vec::with_capacity(selected.len());
-        let mut up_bytes = 0u64;
-        let mut loss_acc = 0f64;
-        let mut wq_mean = vec![0f32; qidx.len()];
-        for &cid in selected {
-            // client: decode the broadcast, rebuild local latent params
-            let (start, wq0) = match Message::decode(&down_msg.encode())? {
-                Message::TernaryGlobal(g) => {
-                    let mut p = ParamSet::zeros(&schema);
-                    for (i, packed) in &g.layers {
-                        let dense = unpack_dequantize(packed, 1.0)?;
-                        p.tensors[*i as usize].data = dense;
-                    }
-                    for (i, t) in &g.fp_tensors {
-                        p.tensors[*i as usize].data = t.clone();
-                    }
-                    (p, g.wq_init)
-                }
-                _ => bail!("wrong downstream message kind"),
-            };
-            // Algorithm 2: "initialize w^q" — seeded from the broadcast
-            // (previous round's aggregated factors; see TernaryGlobal)
-            let mut crng = self.rng.fork(cid as u64 + round as u64 * 7919);
-            let out = self.backend.train_local(
-                &start,
-                TrainMode::Fttq,
-                &wq0,
-                &self.shards[cid],
-                self.cfg.local_epochs,
-                self.cfg.lr,
-                &mut crng,
-            )?;
-            loss_acc += out.mean_loss as f64;
-            // upload: ternarize the trained latent weights + trained w^q
-            let (pats, deltas) = self.backend.quantize(&out.params)?;
-            let upd = ternary_update(
-                cid as u32,
-                self.shards[cid].len() as u64,
-                &qidx,
-                &pats,
-                &out.wq,
-                &deltas,
-                &out.params,
-                out.mean_loss,
-            );
-            let encoded = Message::TernaryUpdate(upd).encode();
-            up_bytes += encoded.len() as u64;
-            // server: decode + rebuild dense model (wq * it)
-            let upd = match Message::decode(&encoded)? {
-                Message::TernaryUpdate(u) => u,
-                _ => bail!("wrong upstream message kind"),
-            };
-            for (k, l) in upd.layers.iter().enumerate() {
-                wq_mean[k] += l.wq / selected.len() as f32;
-            }
-            let rebuilt = rebuild_update(&upd, &shapes)?;
-            updates.push((upd.num_samples, rebuilt));
         }
-
-        // server aggregation (eq. 2)
-        self.global = weighted_average(&updates)?;
-        self.last_wq_mean = wq_mean.clone();
-        debug!("aggregated {} ternary updates", updates.len());
-        Ok((
-            (loss_acc / selected.len().max(1) as f64) as f32,
-            up_bytes,
-            down_bytes,
-            wq_mean,
-        ))
     }
 
-    // -- FedAvg --------------------------------------------------------------
-    fn round_fedavg(
-        &mut self,
-        round: usize,
+    /// Fan the round out over the transport with a worker pool. Results
+    /// come back indexed by selection slot, so downstream aggregation
+    /// order (and therefore float summation) is schedule-independent.
+    fn dispatch(
+        &self,
         selected: &[usize],
-    ) -> Result<(f32, u64, u64, Vec<f32>)> {
-        let schema = self.backend.schema().clone();
-        let shapes: Vec<Vec<usize>> =
-            schema.params.iter().map(|p| p.shape.clone()).collect();
-        let down_msg = Message::DenseGlobal(crate::comms::DenseGlobal {
-            round: round as u32,
-            tensors: self.global.tensors.iter().map(|t| t.data.clone()).collect(),
-        });
-        let down_bytes_each = down_msg.encode().len() as u64;
-        let down_bytes = down_bytes_each * selected.len() as u64;
-
-        let mut updates = Vec::with_capacity(selected.len());
-        let mut up_bytes = 0u64;
-        let mut loss_acc = 0f64;
-        for &cid in selected {
-            let start = match Message::decode(&down_msg.encode())? {
-                Message::DenseGlobal(g) => {
-                    let mut p = ParamSet::zeros(&schema);
-                    for (t, data) in p.tensors.iter_mut().zip(g.tensors) {
-                        t.data = data;
-                    }
-                    p
-                }
-                _ => bail!("wrong downstream message kind"),
-            };
-            let mut crng = self.rng.fork(cid as u64 + round as u64 * 7919);
-            let out = self.backend.train_local(
-                &start,
-                TrainMode::Fp,
-                &[],
-                &self.shards[cid],
-                self.cfg.local_epochs,
-                self.cfg.lr,
-                &mut crng,
-            )?;
-            loss_acc += out.mean_loss as f64;
-            let upd =
-                dense_update(cid as u32, self.shards[cid].len() as u64, &out.params, out.mean_loss);
-            let encoded = Message::DenseUpdate(upd).encode();
-            up_bytes += encoded.len() as u64;
-            let upd = match Message::decode(&encoded)? {
-                Message::DenseUpdate(u) => u,
-                _ => bail!("wrong upstream message kind"),
-            };
-            let mut p = ParamSet::zeros(&schema);
-            for ((t, data), shape) in p.tensors.iter_mut().zip(upd.tensors).zip(&shapes) {
-                if t.data.len() != data.len() {
-                    bail!("tensor size mismatch for shape {shape:?}");
-                }
-                t.data = data;
-            }
-            updates.push((upd.num_samples, p));
+        assigns: &[RoundAssign],
+        down: &Message,
+    ) -> Result<Vec<Message>> {
+        let n = selected.len();
+        if n == 0 {
+            return Ok(Vec::new());
         }
-        self.global = weighted_average(&updates)?;
-        Ok((
-            (loss_acc / selected.len().max(1) as f64) as f32,
-            up_bytes,
-            down_bytes,
-            vec![],
-        ))
+        // the broadcast is identical for every client: frame it once and
+        // fan the same buffer out
+        let down_wire = encode_data_frame(down)?;
+        let transport = self.transport.as_ref();
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            return selected
+                .iter()
+                .zip(assigns)
+                .map(|(&cid, a)| transport.round_trip(cid, a, &down_wire))
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<Message>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = transport.round_trip(selected[i], &assigns[i], &down_wire);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.into_inner()
+                    .unwrap()
+                    .unwrap_or_else(|| Err(anyhow!("client {} produced no reply", selected[i])))
+            })
+            .collect()
     }
 
     // -- centralized (Baseline / TTQ) ----------------------------------------
+
     fn round_centralized(
         &mut self,
         round: usize,
         mode: TrainMode,
-    ) -> Result<(f32, u64, u64, Vec<f32>)> {
+    ) -> Result<(f32, Vec<f32>)> {
         let factors0 = match mode {
             TrainMode::Ttq => self.ttq_factors.clone(),
             _ => vec![],
@@ -404,7 +558,7 @@ impl<'a> Orchestrator<'a> {
             }
             _ => vec![],
         };
-        Ok((out.mean_loss, 0, 0, factors))
+        Ok((out.mean_loss, factors))
     }
 
     /// Materialize the TTQ inference model: per layer, scale -> eq. 5

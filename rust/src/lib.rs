@@ -11,9 +11,11 @@
 //! * **Layer 2** — JAX training/eval graphs (`python/compile/`), one HLO
 //!   artifact per (model × mode × batch size).
 //! * **Layer 3** — this crate: the federated coordinator (client selection,
-//!   round orchestration, aggregation, ternary re-quantization), the wire
-//!   codec with byte accounting, the data pipeline, and the PJRT runtime
-//!   that executes the artifacts. Python never runs at request time.
+//!   concurrent round orchestration, aggregation, ternary re-quantization),
+//!   the wire codec with byte accounting, the `transport` subsystem
+//!   (framed wire protocol over in-process loopback or TCP), the data
+//!   pipeline, and the PJRT runtime that executes the artifacts. Python
+//!   never runs at request time.
 
 pub mod comms;
 pub mod config;
@@ -24,4 +26,5 @@ pub mod model;
 pub mod native;
 pub mod quant;
 pub mod runtime;
+pub mod transport;
 pub mod util;

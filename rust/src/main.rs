@@ -1,27 +1,34 @@
 //! `tfed` — launcher for the T-FedAvg federated learning system.
 //!
 //! Subcommands:
-//!   run       run one experiment (protocol x task x federation knobs)
+//!   run       run one experiment in-process (loopback transport)
+//!   serve     run the coordinator over TCP; waits for N `client` processes
+//!   client    join a coordinator as one federated client
 //!   inspect   print the artifact manifest the runtime will use
 //!   selftest  PJRT smoke: load + execute every artifact kind once
 //!
 //! Examples:
 //!   tfed run --protocol tfedavg --task mnist --rounds 30
 //!   tfed run --protocol fedavg --task mnist --nc 2 --clients 10
+//!   tfed serve --listen 127.0.0.1:7878 --clients 4 --native
+//!   tfed client --connect 127.0.0.1:7878 --client-id 0
 //!   tfed inspect
 //!   tfed selftest
 
+use std::io::Write;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
-use tfed::coordinator::server::{FaultSpec, Orchestrator};
-use tfed::metrics::mb;
+use tfed::coordinator::server::{materialize_shard, FaultSpec, Orchestrator};
+use tfed::coordinator::ClientRuntime;
+use tfed::metrics::{mb, RunMetrics};
 use tfed::runtime::manifest::default_artifacts_dir;
 use tfed::runtime::Engine;
-use tfed::util::cli::Cli;
+use tfed::transport::{TcpBinding, TcpClient};
+use tfed::util::cli::{Args, Cli};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -49,6 +56,10 @@ fn real_main() -> Result<()> {
         .opt("eval-every", "1", "evaluate every k rounds")
         .opt("dropout", "0.0", "client dropout probability (fault injection)")
         .opt("out", "", "write metrics JSON/CSV to this path prefix")
+        .opt("listen", "127.0.0.1:7878", "serve: TCP listen address (port 0 = ephemeral)")
+        .opt("connect", "", "client: coordinator address to dial")
+        .opt("client-id", "0", "client: this process's client id")
+        .opt("workers", "0", "round-driver worker threads (0 = auto)")
         .flag("native", "use the pure-Rust backend (MLP only)")
         .flag("quiet", "suppress per-round logs")
         .parse_env()?;
@@ -56,16 +67,16 @@ fn real_main() -> Result<()> {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("run");
     match cmd {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "inspect" => cmd_inspect(),
         "selftest" => cmd_selftest(),
-        other => bail!("unknown command {other:?} (run | inspect | selftest)"),
+        other => bail!("unknown command {other:?} (run | serve | client | inspect | selftest)"),
     }
 }
 
-fn cmd_run(args: &tfed::util::cli::Args) -> Result<()> {
-    if args.flag("quiet") {
-        tfed::util::logging::set_level(tfed::util::logging::Level::Warn);
-    }
+/// Assemble the experiment config from CLI knobs (shared by run + serve).
+fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
     let protocol = Protocol::parse(&args.get("protocol")?)?;
     let task = Task::parse(&args.get("task")?)?;
     let mut cfg = ExperimentConfig::table2(protocol, task, args.get_u64("seed")?);
@@ -89,12 +100,51 @@ fn cmd_run(args: &tfed::util::cli::Args) -> Result<()> {
         cfg.train_samples = ts;
     }
     cfg.native_backend = args.flag("native");
+    Ok(cfg)
+}
 
-    let engine = if cfg.native_backend {
-        None
+fn apply_quiet(args: &Args) {
+    if args.flag("quiet") {
+        tfed::util::logging::set_level(tfed::util::logging::Level::Warn);
+    }
+}
+
+fn engine_for(cfg: &ExperimentConfig) -> Result<Option<Arc<Engine>>> {
+    if cfg.native_backend {
+        Ok(None)
     } else {
-        Some(Arc::new(Engine::load(default_artifacts_dir())?))
-    };
+        Ok(Some(Arc::new(Engine::load(default_artifacts_dir())?)))
+    }
+}
+
+fn report(m: &RunMetrics, args: &Args) -> Result<()> {
+    println!("== {} ==", m.config_summary);
+    println!("final acc  : {:.4}", m.final_acc());
+    println!("best acc   : {:.4}", m.best_acc());
+    println!(
+        "upstream   : {:.3} MB in {} frames",
+        mb(m.total_up_bytes()),
+        m.total_up_frames()
+    );
+    println!(
+        "downstream : {:.3} MB in {} frames",
+        mb(m.total_down_bytes()),
+        m.total_down_frames()
+    );
+    println!("wall time  : {:.1} s", m.total_wall_secs());
+    let out = args.get("out")?;
+    if !out.is_empty() {
+        m.write_json(format!("{out}.json"))?;
+        m.write_csv(format!("{out}.csv"))?;
+        println!("metrics    : {out}.json / {out}.csv");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    apply_quiet(args);
+    let cfg = build_cfg(args)?;
+    let engine = engine_for(&cfg)?;
     let backend = make_backend(
         engine,
         cfg.task.model_name(),
@@ -103,21 +153,86 @@ fn cmd_run(args: &tfed::util::cli::Args) -> Result<()> {
     )?;
     let faults = FaultSpec { client_dropout: args.get_f64("dropout")? };
     let mut orch = Orchestrator::with_faults(cfg, backend.as_ref(), faults)?;
-    orch.run()?;
-
-    let m = &orch.metrics;
-    println!("== {} ==", m.config_summary);
-    println!("final acc  : {:.4}", m.final_acc());
-    println!("best acc   : {:.4}", m.best_acc());
-    println!("upstream   : {:.3} MB", mb(m.total_up_bytes()));
-    println!("downstream : {:.3} MB", mb(m.total_down_bytes()));
-    println!("wall time  : {:.1} s", m.total_wall_secs());
-    let out = args.get("out")?;
-    if !out.is_empty() {
-        m.write_json(format!("{out}.json"))?;
-        m.write_csv(format!("{out}.csv"))?;
-        println!("metrics    : {out}.json / {out}.csv");
+    let workers = args.get_usize("workers")?;
+    if workers > 0 {
+        orch.set_workers(workers);
     }
+    orch.run()?;
+    report(&orch.metrics, args)
+}
+
+/// Run the coordinator over TCP: bind, wait for the fleet, drive rounds.
+fn cmd_serve(args: &Args) -> Result<()> {
+    apply_quiet(args);
+    let cfg = build_cfg(args)?;
+    if cfg.protocol.is_centralized() {
+        bail!("serve requires a federated protocol (fedavg | tfedavg)");
+    }
+    let engine = engine_for(&cfg)?;
+    let backend = make_backend(
+        engine,
+        cfg.task.model_name(),
+        cfg.batch,
+        cfg.native_backend,
+    )?;
+    let binding = TcpBinding::bind(&args.get("listen")?)?;
+    let addr = binding.local_addr()?;
+    // flush before blocking: launcher scripts parse this line for the port
+    println!("listening on {addr} — waiting for {} clients", cfg.n_clients);
+    std::io::stdout().flush().ok();
+    let transport = binding.accept_clients(cfg.n_clients, &cfg)?;
+    let faults = FaultSpec { client_dropout: args.get_f64("dropout")? };
+    let mut orch =
+        Orchestrator::with_transport(cfg, backend.as_ref(), faults, Box::new(transport))?;
+    let workers = args.get_usize("workers")?;
+    if workers > 0 {
+        orch.set_workers(workers);
+    }
+    let run_result = orch.run();
+    // teardown failure must never mask the run's own error
+    if let Err(e) = orch.shutdown_transport() {
+        eprintln!("warning: shutdown notify failed: {e:#}");
+    }
+    run_result?;
+    report(&orch.metrics, args)
+}
+
+/// Join a coordinator as one client: the experiment config (and thus the
+/// local data shard) comes from the server; only model payloads cross the
+/// wire after the handshake.
+fn cmd_client(args: &Args) -> Result<()> {
+    apply_quiet(args);
+    let addr = args.get("connect")?;
+    if addr.is_empty() {
+        bail!("client requires --connect <host:port>");
+    }
+    let client_id = args.get_usize("client-id")? as u32;
+    let (mut client, cfg) = TcpClient::connect(&addr, client_id)?;
+    cfg.validate()?;
+    if client_id as usize >= cfg.n_clients {
+        bail!("client id {client_id} out of range for {} clients", cfg.n_clients);
+    }
+    println!("client {client_id}: joined [{}]", cfg.summary());
+    let engine = engine_for(&cfg)?;
+    let backend = make_backend(
+        engine,
+        cfg.task.model_name(),
+        cfg.batch,
+        cfg.native_backend,
+    )?;
+    let shard = materialize_shard(&cfg, backend.schema().input_dim, client_id as usize)?;
+    let runtime = ClientRuntime {
+        client_id,
+        backend: backend.as_ref(),
+        shard,
+        local_epochs: cfg.local_epochs,
+        lr: cfg.lr,
+    };
+    let rounds = client.serve(&runtime)?;
+    println!(
+        "client {client_id}: served {rounds} rounds — up {} B, down {} B, ctrl {} B",
+        client.stats.up_bytes, client.stats.down_bytes, client.stats.ctrl_bytes
+    );
     Ok(())
 }
 

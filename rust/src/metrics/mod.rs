@@ -18,10 +18,15 @@ pub struct RoundRecord {
     /// test accuracy of the reported model (quantized for T-FedAvg/TTQ)
     pub test_acc: f32,
     pub test_loss: f32,
-    /// upstream bytes this round (all selected clients)
+    /// upstream wire bytes this round, measured at the transport frame
+    /// layer (all selected clients, frame headers included)
     pub up_bytes: u64,
-    /// downstream bytes this round
+    /// downstream wire bytes this round
     pub down_bytes: u64,
+    /// upstream data frames this round (one per client upload)
+    pub up_frames: u64,
+    /// downstream data frames this round (one per client broadcast)
+    pub down_frames: u64,
     pub wall_secs: f64,
     pub selected: Vec<usize>,
     /// per-layer quantization factors, if the protocol has them:
@@ -72,6 +77,14 @@ impl RunMetrics {
         self.records.iter().map(|r| r.down_bytes).sum()
     }
 
+    pub fn total_up_frames(&self) -> u64 {
+        self.records.iter().map(|r| r.up_frames).sum()
+    }
+
+    pub fn total_down_frames(&self) -> u64 {
+        self.records.iter().map(|r| r.down_frames).sum()
+    }
+
     pub fn total_wall_secs(&self) -> f64 {
         self.records.iter().map(|r| r.wall_secs).sum()
     }
@@ -111,6 +124,8 @@ impl RunMetrics {
                             ("test_loss", num(r.test_loss as f64)),
                             ("up_bytes", num(r.up_bytes as f64)),
                             ("down_bytes", num(r.down_bytes as f64)),
+                            ("up_frames", num(r.up_frames as f64)),
+                            ("down_frames", num(r.down_frames as f64)),
                             ("wall_secs", num(r.wall_secs)),
                             ("evaluated", Json::Bool(r.evaluated)),
                             (
@@ -126,17 +141,19 @@ impl RunMetrics {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_acc,test_loss,up_bytes,down_bytes,wall_secs,evaluated\n",
+            "round,train_loss,test_acc,test_loss,up_bytes,down_bytes,up_frames,down_frames,wall_secs,evaluated\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.4},{}\n",
+                "{},{},{},{},{},{},{},{},{:.4},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_acc,
                 r.test_loss,
                 r.up_bytes,
                 r.down_bytes,
+                r.up_frames,
+                r.down_frames,
                 r.wall_secs,
                 r.evaluated as u8
             ));
@@ -171,6 +188,8 @@ mod tests {
             test_loss: 0.5,
             up_bytes: up,
             down_bytes: up,
+            up_frames: 2,
+            down_frames: 2,
             wall_secs: 0.1,
             selected: vec![0, 1],
             factors: vec![0.1, 0.2],
@@ -187,6 +206,8 @@ mod tests {
         assert_eq!(m.final_acc(), 0.7);
         assert_eq!(m.best_acc(), 0.8);
         assert_eq!(m.total_up_bytes(), 300);
+        assert_eq!(m.total_up_frames(), 6);
+        assert_eq!(m.total_down_frames(), 6);
         assert_eq!(m.rounds_to_acc(0.75), Some(2));
         assert_eq!(m.rounds_to_acc(0.95), None);
         assert_eq!(m.acc_series().len(), 3);

@@ -1,24 +1,52 @@
 //! The PJRT execution engine: compile HLO artifacts once, run many times.
+//!
+//! The `xla` crate (PJRT C API) is vendored, not on crates.io, so the real
+//! engine is behind the `pjrt` cargo feature. The default build substitutes
+//! a stub whose `load` fails with a clear message — every coordinator,
+//! transport, and bench path then runs on the pure-Rust native backend.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::sync::Mutex;
-use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
-use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::manifest::Manifest;
 use crate::runtime::value::Value;
+#[cfg(feature = "pjrt")]
+use crate::runtime::manifest::ArtifactSpec;
+#[cfg(feature = "pjrt")]
 use crate::{debug, info};
 
 /// Compiled-executable cache keyed by artifact name.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// executions per artifact (perf accounting)
     exec_counts: Mutex<HashMap<String, u64>>,
+    /// serializes every call into the xla C API (see the Sync impl below)
+    api_lock: Mutex<()>,
 }
 
+// SAFETY: the xla wrapper types hold raw pointers and are not Sync on
+// their own, so this impl is made conservative instead of assumed: every
+// path that touches the xla C API (literal marshalling, compile, execute,
+// transfer) runs under `api_lock`, and all remaining Engine state sits
+// behind its own Mutexes. The concurrent round driver therefore shares
+// one Engine across worker threads with xla calls fully serialized; if
+// the vendored PJRT client is ever verified reentrant, the lock scope can
+// be narrowed to regain device-level parallelism.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for Engine {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for Engine {}
+
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU PJRT client and load the manifest from `dir`.
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
@@ -34,16 +62,24 @@ impl Engine {
             manifest,
             cache: Mutex::new(HashMap::new()),
             exec_counts: Mutex::new(HashMap::new()),
+            api_lock: Mutex::new(()),
         })
     }
 
-    /// Compile (or fetch cached) an artifact's executable.
-    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    /// Compile (or fetch cached) an artifact's executable. Private: the
+    /// returned handle must only be driven under `api_lock` (see the Sync
+    /// impl), which `execute`/`warmup` guarantee.
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(name) {
             return Ok(exe.clone());
         }
         let art = self.manifest.artifact(name)?;
         let path = self.manifest.hlo_path(art);
+        let _api = self.api_lock.lock().unwrap();
+        // another worker may have compiled this while we waited for the API
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 path")?,
@@ -70,6 +106,8 @@ impl Engine {
         let art = self.manifest.artifact(name)?.clone();
         self.validate_inputs(&art, inputs)?;
         let exe = self.executable(name)?;
+        // marshal + execute + transfer are all xla calls: hold the API lock
+        let _api = self.api_lock.lock().unwrap();
         let literals: Result<Vec<xla::Literal>> =
             inputs.iter().map(|v| v.to_literal()).collect();
         let literals = literals?;
@@ -123,5 +161,38 @@ impl Engine {
         let mut v: Vec<(String, u64)> = m.iter().map(|(k, c)| (k.clone(), *c)).collect();
         v.sort();
         v
+    }
+}
+
+/// Stub engine compiled when the `pjrt` feature is off: keeps every call
+/// site type-checking while making the unavailability unmissable at the
+/// single entry point (`load`).
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        bail!(
+            "tfed was built without the `pjrt` feature (the vendored `xla` \
+             crate is absent); cannot load PJRT artifacts from {:?}. Use the \
+             native backend (--native), or vendor the xla crate and rebuild \
+             with `--features pjrt`.",
+            dir.as_ref()
+        )
+    }
+
+    pub fn warmup(&self, _names: &[&str]) -> Result<()> {
+        bail!("PJRT engine unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Value]) -> Result<Vec<Value>> {
+        bail!("PJRT engine unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn exec_counts(&self) -> Vec<(String, u64)> {
+        Vec::new()
     }
 }

@@ -77,6 +77,7 @@ impl Value {
     }
 
     /// Convert to an xla literal.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64>;
         let lit = match self {
@@ -99,6 +100,7 @@ impl Value {
     }
 
     /// Read back from an xla literal, trusting `spec` for shape/dtype.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
         match spec.dtype {
             Dtype::F32 => Ok(Value::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? }),
@@ -127,6 +129,7 @@ mod tests {
         assert!(!v.matches(&s2));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let v = Value::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
@@ -136,6 +139,7 @@ mod tests {
         assert_eq!(v, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_scalar_and_i32() {
         let v = Value::scalar_f32(0.5);

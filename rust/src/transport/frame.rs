@@ -1,0 +1,388 @@
+//! Length-prefixed, CRC-checked frame codec — the wire unit of the
+//! transport layer.
+//!
+//! Wire layout (all integers little-endian):
+//!
+//! | offset | size | field                              |
+//! |--------|------|------------------------------------|
+//! | 0      | 4    | magic `0x4D524654` ("TFRM")        |
+//! | 4      | 1    | version (currently 1)              |
+//! | 5      | 1    | kind ([`FrameKind`])               |
+//! | 6      | 4    | payload length (<= [`MAX_FRAME`])  |
+//! | 10     | 4    | CRC-32 (IEEE) of the payload       |
+//! | 14     | len  | payload                            |
+//!
+//! Data frames carry `comms::Message` bytes (which embed their own magic +
+//! kind tag — defense in depth); control frames carry the small
+//! [`super::Ctrl`] payloads that drive client registration and round
+//! assignment. Every decode path returns a typed [`FrameError`] — never a
+//! panic, never an unbounded allocation — so a corrupt or hostile peer
+//! cannot take down the coordinator.
+
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// "TFRM" — distinct from the message-layer magic "TFED".
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"TFRM");
+pub const FRAME_VERSION: u8 = 1;
+/// Fixed header size: magic + version + kind + length + CRC.
+pub const HEADER_BYTES: usize = 14;
+/// Upper bound on one frame's payload. The largest legitimate payload is a
+/// dense f32 model (~2.4 MB for the reduced ResNet); 64 MiB leaves room
+/// for much bigger models while keeping a corrupt length from triggering a
+/// giant allocation.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A `comms::Message` (model payload — counted in up/down stats).
+    Data = 1,
+    /// Client registration: "I am client N".
+    Hello = 2,
+    /// Server -> client: the serialized `ExperimentConfig`.
+    Config = 3,
+    /// Server -> client: per-round assignment (round, client, RNG seed).
+    Assign = 4,
+    /// Server -> client: the experiment is over, disconnect.
+    Shutdown = 5,
+}
+
+impl FrameKind {
+    pub fn from_u8(k: u8) -> Option<FrameKind> {
+        Some(match k {
+            1 => FrameKind::Data,
+            2 => FrameKind::Hello,
+            3 => FrameKind::Config,
+            4 => FrameKind::Assign,
+            5 => FrameKind::Shutdown,
+            _ => return None,
+        })
+    }
+
+    /// Control frames are accounted separately from model payloads.
+    pub fn is_ctrl(self) -> bool {
+        !matches!(self, FrameKind::Data)
+    }
+}
+
+/// Typed decode/IO errors. Corruption maps to a specific variant; nothing
+/// in this module panics on wire input.
+#[derive(Debug)]
+pub enum FrameError {
+    WrongMagic(u32),
+    BadVersion(u8),
+    UnknownKind(u8),
+    /// Declared payload length exceeds [`MAX_FRAME`].
+    Oversized { len: usize },
+    /// Ran out of bytes before the declared end of the frame.
+    Truncated { wanted: usize, got: usize },
+    /// A complete frame decoded but the buffer has bytes after it.
+    TrailingBytes { extra: usize },
+    CrcMismatch { expected: u32, got: u32 },
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::WrongMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            FrameError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            FrameError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversized { len } => {
+                write!(f, "frame payload length {len} exceeds MAX_FRAME {MAX_FRAME}")
+            }
+            FrameError::Truncated { wanted, got } => {
+                write!(f, "frame truncated: got {got} of {wanted} bytes")
+            }
+            FrameError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after frame")
+            }
+            FrameError::CrcMismatch { expected, got } => {
+                write!(f, "frame CRC mismatch: header says {expected:#010x}, payload hashes to {got:#010x}")
+            }
+            FrameError::Io(e) => write!(f, "frame I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320)
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 as used by Ethernet/zlib — detects any single-byte corruption.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Frame
+// ---------------------------------------------------------------------------
+
+/// One decoded frame: kind + owned payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A data frame wrapping serialized `comms::Message` bytes.
+    pub fn data(payload: Vec<u8>) -> Frame {
+        Frame { kind: FrameKind::Data, payload }
+    }
+
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        HEADER_BYTES + self.payload.len()
+    }
+
+    /// Serialize header + payload.
+    pub fn encode(&self) -> Result<Vec<u8>, FrameError> {
+        if self.payload.len() > MAX_FRAME {
+            return Err(FrameError::Oversized { len: self.payload.len() });
+        }
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        out.push(FRAME_VERSION);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        Ok(out)
+    }
+
+    /// Decode exactly one frame from `buf` (must contain the whole frame
+    /// and nothing else — the in-memory path used by `Loopback` and tests).
+    pub fn decode(buf: &[u8]) -> Result<Frame, FrameError> {
+        if buf.len() < HEADER_BYTES {
+            return Err(FrameError::Truncated { wanted: HEADER_BYTES, got: buf.len() });
+        }
+        let (kind, len, crc) = parse_header(buf[..HEADER_BYTES].try_into().unwrap())?;
+        let total = HEADER_BYTES + len;
+        if buf.len() < total {
+            return Err(FrameError::Truncated { wanted: total, got: buf.len() });
+        }
+        if buf.len() > total {
+            return Err(FrameError::TrailingBytes { extra: buf.len() - total });
+        }
+        let payload = &buf[HEADER_BYTES..];
+        let got = crc32(payload);
+        if got != crc {
+            return Err(FrameError::CrcMismatch { expected: crc, got });
+        }
+        Ok(Frame { kind, payload: payload.to_vec() })
+    }
+
+    /// Write the frame to a stream; returns the wire bytes written.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<usize, FrameError> {
+        let bytes = self.encode()?;
+        w.write_all(&bytes)?;
+        Ok(bytes.len())
+    }
+
+    /// Read exactly one frame from a stream. The length bound is checked
+    /// *before* the payload allocation, so a corrupt header cannot force a
+    /// huge buffer.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame, FrameError> {
+        let mut head = [0u8; HEADER_BYTES];
+        read_exact_counted(r, &mut head)?;
+        let (kind, len, crc) = parse_header(head)?;
+        let mut payload = vec![0u8; len];
+        read_exact_counted(r, &mut payload)?;
+        let got = crc32(&payload);
+        if got != crc {
+            return Err(FrameError::CrcMismatch { expected: crc, got });
+        }
+        Ok(Frame { kind, payload })
+    }
+}
+
+/// Validate a header; returns (kind, payload length, expected CRC).
+fn parse_header(head: [u8; HEADER_BYTES]) -> Result<(FrameKind, usize, u32), FrameError> {
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::WrongMagic(magic));
+    }
+    if head[4] != FRAME_VERSION {
+        return Err(FrameError::BadVersion(head[4]));
+    }
+    let kind = FrameKind::from_u8(head[5]).ok_or(FrameError::UnknownKind(head[5]))?;
+    let len = u32::from_le_bytes(head[6..10].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized { len });
+    }
+    let crc = u32::from_le_bytes(head[10..14].try_into().unwrap());
+    Ok((kind, len, crc))
+}
+
+/// `read_exact` that reports how many bytes arrived before EOF.
+fn read_exact_counted(r: &mut impl Read, buf: &mut [u8]) -> Result<(), FrameError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => return Err(FrameError::Truncated { wanted: buf.len(), got: off }),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn crc32_reference_vector() {
+        // the classic IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        for kind in [
+            FrameKind::Data,
+            FrameKind::Hello,
+            FrameKind::Config,
+            FrameKind::Assign,
+            FrameKind::Shutdown,
+        ] {
+            let f = Frame { kind, payload: vec![1, 2, 3, 250] };
+            let bytes = f.encode().unwrap();
+            assert_eq!(bytes.len(), f.wire_len());
+            assert_eq!(Frame::decode(&bytes).unwrap(), f);
+            // and through a stream
+            let mut cur = Cursor::new(bytes);
+            assert_eq!(Frame::read_from(&mut cur).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let f = Frame::data(vec![]);
+        let bytes = f.encode().unwrap();
+        assert_eq!(bytes.len(), HEADER_BYTES);
+        assert_eq!(Frame::decode(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn every_truncation_errors() {
+        let bytes = Frame::data(vec![9; 40]).encode().unwrap();
+        for cut in 0..bytes.len() {
+            let err = Frame::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Truncated { .. }),
+                "cut={cut}: {err}"
+            );
+            let mut cur = Cursor::new(&bytes[..cut]);
+            assert!(Frame::read_from(&mut cur).is_err(), "stream cut={cut}");
+        }
+    }
+
+    #[test]
+    fn every_byte_flip_errors() {
+        let bytes = Frame::data((0..64u8).collect()).encode().unwrap();
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0xFF;
+            assert!(Frame::decode(&bad).is_err(), "flip at {pos} went undetected");
+        }
+    }
+
+    #[test]
+    fn specific_error_variants() {
+        let good = Frame::data(vec![7; 8]).encode().unwrap();
+
+        let mut bad = good.clone();
+        bad[0] ^= 1;
+        assert!(matches!(Frame::decode(&bad).unwrap_err(), FrameError::WrongMagic(_)));
+
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(matches!(Frame::decode(&bad).unwrap_err(), FrameError::BadVersion(9)));
+
+        let mut bad = good.clone();
+        bad[5] = 77;
+        assert!(matches!(Frame::decode(&bad).unwrap_err(), FrameError::UnknownKind(77)));
+
+        // oversized declared length: rejected before any allocation
+        let mut bad = good.clone();
+        bad[6..10].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(Frame::decode(&bad).unwrap_err(), FrameError::Oversized { .. }));
+        let mut cur = Cursor::new(bad);
+        assert!(matches!(
+            Frame::read_from(&mut cur).unwrap_err(),
+            FrameError::Oversized { .. }
+        ));
+
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(matches!(Frame::decode(&bad).unwrap_err(), FrameError::CrcMismatch { .. }));
+
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(matches!(
+            Frame::decode(&bad).unwrap_err(),
+            FrameError::TrailingBytes { extra: 1 }
+        ));
+
+        // encode refuses oversized payloads outright
+        let too_big = Frame::data(vec![0; MAX_FRAME + 1]);
+        assert!(matches!(too_big.encode().unwrap_err(), FrameError::Oversized { .. }));
+    }
+
+    #[test]
+    fn back_to_back_frames_stream() {
+        let a = Frame::data(vec![1; 10]);
+        let b = Frame { kind: FrameKind::Shutdown, payload: vec![] };
+        let mut wire = Vec::new();
+        a.write_to(&mut wire).unwrap();
+        b.write_to(&mut wire).unwrap();
+        let mut cur = Cursor::new(wire);
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), a);
+        assert_eq!(Frame::read_from(&mut cur).unwrap(), b);
+        assert!(Frame::read_from(&mut cur).is_err()); // clean EOF -> Truncated
+    }
+}

@@ -1,0 +1,184 @@
+//! In-process transport: the client fleet lives behind channels-free
+//! mutex-guarded endpoints, but every payload still runs through the frame
+//! codec, so data-frame accounting and failure behavior are identical to
+//! TCP — `Loopback` and `Tcp` report the same up/down bytes and frames
+//! for the same run. (Ctrl counters differ by design: TCP additionally
+//! records the one-time Hello/Config handshake and the Shutdown frame,
+//! which have no loopback equivalent.)
+//!
+//! This is the default transport for `Orchestrator::new` (tests, benches,
+//! the single-process CLI) and the determinism reference the TCP
+//! integration test compares against.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comms::Message;
+use crate::coordinator::client::ClientRuntime;
+use crate::transport::frame::{Frame, FrameKind};
+use crate::transport::stats::LinkStats;
+use crate::transport::{Ctrl, RoundAssign, Transport};
+use crate::util::rng::Pcg;
+
+struct Link<'a> {
+    runtime: ClientRuntime<'a>,
+    stats: LinkStats,
+}
+
+/// In-process `Transport` over the full frame codec.
+pub struct Loopback<'a> {
+    links: Vec<Mutex<Link<'a>>>,
+}
+
+impl<'a> Loopback<'a> {
+    /// One link per client runtime; client ids are the vector positions
+    /// (runtime `client_id` fields must agree).
+    pub fn new(runtimes: Vec<ClientRuntime<'a>>) -> Loopback<'a> {
+        Loopback {
+            links: runtimes
+                .into_iter()
+                .map(|runtime| Mutex::new(Link { runtime, stats: LinkStats::default() }))
+                .collect(),
+        }
+    }
+}
+
+impl Transport for Loopback<'_> {
+    fn n_clients(&self) -> usize {
+        self.links.len()
+    }
+
+    fn round_trip(&self, cid: usize, assign: &RoundAssign, down_wire: &[u8]) -> Result<Message> {
+        let link = self
+            .links
+            .get(cid)
+            .ok_or_else(|| anyhow!("client {cid} not attached to loopback"))?;
+        let mut link = link.lock().unwrap();
+
+        // the round assignment crosses the "wire" like any control frame
+        let abytes = Ctrl::Assign(*assign).to_frame().encode()?;
+        link.stats.record_ctrl(abytes.len());
+        let assign = match Ctrl::from_frame(&Frame::decode(&abytes)?)? {
+            Ctrl::Assign(a) => a,
+            other => bail!("expected assign frame, got {other:?}"),
+        };
+
+        // downstream payload arrives as prebuilt frame bytes, decoded at
+        // the "client" exactly as the TCP path would
+        link.stats.record_down(down_wire.len());
+        let received = Frame::decode(down_wire)?;
+        if received.kind != FrameKind::Data {
+            bail!("expected data frame downstream");
+        }
+        let down = Message::decode(&received.payload)?;
+
+        // client-side work with the server-assigned RNG
+        let mut rng = Pcg::new(assign.rng_seed, assign.rng_stream);
+        let up = link.runtime.handle_round(&mut rng, &down)?;
+
+        // upstream payload back through the codec
+        let ubytes = Frame::data(up.encode()).encode()?;
+        link.stats.record_up(ubytes.len());
+        let up = Message::decode(&Frame::decode(&ubytes)?.payload)?;
+        link.stats.record_round_trip();
+        Ok(up)
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        self.links.iter().map(|l| l.lock().unwrap().stats).collect()
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::DenseGlobal;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::client::ShardData;
+    use crate::model::{init_params, mlp_schema};
+    use crate::transport::encode_data_frame;
+    use crate::transport::frame::HEADER_BYTES;
+
+    fn tiny_shard(seed: u64, n: usize) -> ShardData {
+        let mut rng = Pcg::seeded(seed);
+        ShardData {
+            dim: 784,
+            num_classes: 10,
+            x: (0..n * 784).map(|_| rng.normal() * 0.3).collect(),
+            y: (0..n as u32).map(|i| i % 10).collect(),
+        }
+    }
+
+    fn dense_broadcast(seed: u64) -> Message {
+        let schema = mlp_schema();
+        let mut rng = Pcg::seeded(seed);
+        let params = init_params(&schema, &mut rng);
+        Message::DenseGlobal(DenseGlobal {
+            round: 1,
+            tensors: params.tensors.iter().map(|t| t.data.clone()).collect(),
+        })
+    }
+
+    fn assign(cid: u32) -> RoundAssign {
+        RoundAssign { round: 1, client_id: cid, rng_seed: 99, rng_stream: cid as u64 }
+    }
+
+    #[test]
+    fn round_trip_counts_frames_and_bytes() {
+        let backend = NativeBackend::new(mlp_schema(), 8);
+        let lb = Loopback::new(vec![ClientRuntime {
+            client_id: 0,
+            backend: &backend,
+            shard: tiny_shard(1, 16),
+            local_epochs: 1,
+            lr: 0.05,
+        }]);
+        let down = dense_broadcast(2);
+        let wire = encode_data_frame(&down).unwrap();
+        let up = lb.round_trip(0, &assign(0), &wire).unwrap();
+        let s = lb.stats();
+        assert_eq!(s.down_bytes as usize, wire.len());
+        assert_eq!(wire.len(), down.encode().len() + HEADER_BYTES);
+        assert_eq!(s.up_bytes as usize, up.encode().len() + HEADER_BYTES);
+        assert_eq!((s.up_frames, s.down_frames, s.round_trips), (1, 1, 1));
+        assert!(s.ctrl_bytes > 0);
+        match up {
+            Message::DenseUpdate(u) => {
+                assert_eq!(u.client_id, 0);
+                assert_eq!(u.num_samples, 16);
+                assert!(u.train_loss.is_finite());
+            }
+            other => panic!("wrong reply {other:?}"),
+        }
+    }
+
+    #[test]
+    fn same_assignment_is_deterministic() {
+        let backend = NativeBackend::new(mlp_schema(), 8);
+        let mk = || {
+            Loopback::new(vec![ClientRuntime {
+                client_id: 0,
+                backend: &backend,
+                shard: tiny_shard(3, 12),
+                local_epochs: 1,
+                lr: 0.05,
+            }])
+        };
+        let wire = encode_data_frame(&dense_broadcast(4)).unwrap();
+        let a = mk().round_trip(0, &assign(0), &wire).unwrap();
+        let b = mk().round_trip(0, &assign(0), &wire).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unknown_client_is_clean_error() {
+        let lb = Loopback::new(vec![]);
+        let wire = encode_data_frame(&dense_broadcast(5)).unwrap();
+        assert!(lb.round_trip(0, &assign(0), &wire).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! The network boundary: framed wire protocol, transports, link stats.
+//!
+//! The seed coordinator counted bytes at a simulated in-process boundary;
+//! this subsystem moves the same `comms::Message` payloads through a real
+//! message-framing layer so the paper's Table-IV numbers are measured on
+//! actual wire traffic (see DESIGN.md §4):
+//!
+//! * `frame` — length-prefixed, CRC-checked frame codec with explicit
+//!   `MAX_FRAME` bounds and typed truncation/corruption errors
+//! * `stats` — per-link [`LinkStats`] (up/down bytes, frames, round trips)
+//! * `loopback` — in-process transport over the same codec: deterministic,
+//!   byte-for-byte identical accounting to TCP; the default for tests and
+//!   the single-process orchestrator
+//! * `tcp` — `std::net` transport, one threaded connection per client;
+//!   powers the `tfed serve` / `tfed client` subcommands
+//!
+//! ## Protocol
+//!
+//! ```text
+//! client                          server
+//!   | -- Hello{client_id} --------> |       (registration)
+//!   | <------- Config{cfg} -------- |       (experiment parameters)
+//!   |                               |  per round, per selected client:
+//!   | <--- Assign{round,seed} ----- |       (control)
+//!   | <--- Data{TernaryGlobal} ---- |       (downstream payload)
+//!   | ---- Data{TernaryUpdate} ---> |       (upstream payload)
+//!   | <-------- Shutdown ---------- |       (experiment over)
+//! ```
+//!
+//! The round assignment carries the server-derived RNG seed, so results are
+//! bit-identical regardless of transport, worker-thread interleaving, or
+//! process placement.
+
+pub mod frame;
+pub mod loopback;
+pub mod stats;
+pub mod tcp;
+
+use anyhow::{bail, Result};
+
+use crate::comms::messages::{Reader, Writer};
+use crate::comms::Message;
+use crate::config::{ExperimentConfig, Protocol, Task};
+
+pub use frame::{crc32, Frame, FrameError, FrameKind, HEADER_BYTES, MAX_FRAME};
+pub use loopback::Loopback;
+pub use stats::LinkStats;
+pub use tcp::{TcpBinding, TcpClient, TcpTransport};
+
+/// Per-round, per-client work order. `rng_seed`/`rng_stream` reproduce the
+/// exact `Pcg` the sequential seed orchestrator would have forked, so a
+/// remote client trains with the same randomness as an in-process one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundAssign {
+    pub round: u32,
+    pub client_id: u32,
+    pub rng_seed: u64,
+    pub rng_stream: u64,
+}
+
+/// Control-plane messages (everything that is not a model payload).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Ctrl {
+    Hello { client_id: u32 },
+    Config(ExperimentConfig),
+    Assign(RoundAssign),
+    Shutdown,
+}
+
+impl Ctrl {
+    pub fn to_frame(&self) -> Frame {
+        let mut w = Writer::new();
+        let kind = match self {
+            Ctrl::Hello { client_id } => {
+                w.u32(*client_id);
+                FrameKind::Hello
+            }
+            Ctrl::Config(cfg) => {
+                encode_config(&mut w, cfg);
+                FrameKind::Config
+            }
+            Ctrl::Assign(a) => {
+                w.u32(a.round);
+                w.u32(a.client_id);
+                w.u64(a.rng_seed);
+                w.u64(a.rng_stream);
+                FrameKind::Assign
+            }
+            Ctrl::Shutdown => FrameKind::Shutdown,
+        };
+        Frame { kind, payload: w.into_bytes() }
+    }
+
+    pub fn from_frame(f: &Frame) -> Result<Ctrl> {
+        let mut r = Reader::new(&f.payload);
+        let ctrl = match f.kind {
+            FrameKind::Hello => Ctrl::Hello { client_id: r.u32()? },
+            FrameKind::Config => Ctrl::Config(decode_config(&mut r)?),
+            FrameKind::Assign => Ctrl::Assign(RoundAssign {
+                round: r.u32()?,
+                client_id: r.u32()?,
+                rng_seed: r.u64()?,
+                rng_stream: r.u64()?,
+            }),
+            FrameKind::Shutdown => Ctrl::Shutdown,
+            FrameKind::Data => bail!("data frame is not a control message"),
+        };
+        if !r.exhausted() {
+            bail!("trailing bytes in {:?} control frame", f.kind);
+        }
+        Ok(ctrl)
+    }
+}
+
+fn encode_config(w: &mut Writer, cfg: &ExperimentConfig) {
+    w.u8(match cfg.protocol {
+        Protocol::Baseline => 0,
+        Protocol::Ttq => 1,
+        Protocol::FedAvg => 2,
+        Protocol::TFedAvg => 3,
+    });
+    w.u8(match cfg.task {
+        Task::MnistLike => 0,
+        Task::CifarLike => 1,
+    });
+    w.u64(cfg.n_clients as u64);
+    w.f64(cfg.participation);
+    w.u64(cfg.nc as u64);
+    w.f64(cfg.beta);
+    w.u64(cfg.batch as u64);
+    w.u64(cfg.local_epochs as u64);
+    w.u64(cfg.rounds as u64);
+    w.f32(cfg.lr);
+    w.u64(cfg.seed);
+    w.u64(cfg.eval_every as u64);
+    w.u64(cfg.train_samples as u64);
+    w.u64(cfg.test_samples as u64);
+    w.u8(cfg.native_backend as u8);
+}
+
+fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
+    let protocol = match r.u8()? {
+        0 => Protocol::Baseline,
+        1 => Protocol::Ttq,
+        2 => Protocol::FedAvg,
+        3 => Protocol::TFedAvg,
+        k => bail!("unknown protocol tag {k}"),
+    };
+    let task = match r.u8()? {
+        0 => Task::MnistLike,
+        1 => Task::CifarLike,
+        k => bail!("unknown task tag {k}"),
+    };
+    Ok(ExperimentConfig {
+        protocol,
+        task,
+        n_clients: r.u64()? as usize,
+        participation: r.f64()?,
+        nc: r.u64()? as usize,
+        beta: r.f64()?,
+        batch: r.u64()? as usize,
+        local_epochs: r.u64()? as usize,
+        rounds: r.u64()? as usize,
+        lr: r.f32()?,
+        seed: r.u64()?,
+        eval_every: r.u64()? as usize,
+        train_samples: r.u64()? as usize,
+        test_samples: r.u64()? as usize,
+        native_backend: r.u8()? != 0,
+    })
+}
+
+/// Encode a protocol message as one data frame's wire bytes. The round
+/// driver calls this once per round and fans the same buffer out to every
+/// selected client (broadcast payloads are identical per client, so
+/// re-serializing per link would be pure waste).
+pub fn encode_data_frame(msg: &Message) -> Result<Vec<u8>, FrameError> {
+    Frame::data(msg.encode()).encode()
+}
+
+/// Server-side view of the links to a fleet of clients.
+///
+/// Implementations must be callable from multiple round-driver worker
+/// threads concurrently for *distinct* client ids (per-link interior
+/// locking); per-client exchanges are strictly request/response.
+pub trait Transport: Sync {
+    /// Number of reachable clients (ids `0..n_clients`).
+    fn n_clients(&self) -> usize;
+
+    /// One full exchange with client `cid`: deliver the round assignment
+    /// and the downstream payload — `down_wire` is a pre-encoded data
+    /// frame from [`encode_data_frame`] — and return the client's
+    /// upstream payload.
+    fn round_trip(&self, cid: usize, assign: &RoundAssign, down_wire: &[u8]) -> Result<Message>;
+
+    /// Fleet-total stats (all links merged).
+    fn stats(&self) -> LinkStats {
+        let mut total = LinkStats::default();
+        for s in self.link_stats() {
+            total.merge(&s);
+        }
+        total
+    }
+
+    /// Per-link stats snapshot, indexed by client id.
+    fn link_stats(&self) -> Vec<LinkStats>;
+
+    /// Tell every client the experiment is over (no-op for loopback).
+    fn shutdown(&self) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctrl_frames_roundtrip() {
+        let cases = vec![
+            Ctrl::Hello { client_id: 42 },
+            Ctrl::Config(ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 7)),
+            Ctrl::Config(
+                ExperimentConfig::table2(Protocol::Baseline, Task::CifarLike, 1),
+            ),
+            Ctrl::Assign(RoundAssign {
+                round: 3,
+                client_id: 9,
+                rng_seed: 0xDEAD_BEEF_0BAD_CAFE,
+                rng_stream: 12345,
+            }),
+            Ctrl::Shutdown,
+        ];
+        for ctrl in cases {
+            let f = ctrl.to_frame();
+            assert!(f.kind.is_ctrl());
+            let bytes = f.encode().unwrap();
+            let back = Ctrl::from_frame(&Frame::decode(&bytes).unwrap()).unwrap();
+            assert_eq!(back, ctrl);
+        }
+    }
+
+    #[test]
+    fn config_codec_preserves_every_field() {
+        let mut cfg = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 99);
+        cfg.n_clients = 17;
+        cfg.participation = 0.31;
+        cfg.nc = 3;
+        cfg.beta = 0.45;
+        cfg.native_backend = true;
+        let f = Ctrl::Config(cfg.clone()).to_frame();
+        match Ctrl::from_frame(&f).unwrap() {
+            Ctrl::Config(got) => assert_eq!(got, cfg),
+            other => panic!("wrong ctrl {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ctrl_rejects_garbage() {
+        // truncated hello payload
+        let f = Frame { kind: FrameKind::Hello, payload: vec![1, 2] };
+        assert!(Ctrl::from_frame(&f).is_err());
+        // trailing bytes
+        let mut f = Ctrl::Hello { client_id: 1 }.to_frame();
+        f.payload.push(0);
+        assert!(Ctrl::from_frame(&f).is_err());
+        // data frames are not control messages
+        let f = Frame::data(vec![]);
+        assert!(Ctrl::from_frame(&f).is_err());
+        // unknown protocol tag
+        let mut f = Ctrl::Config(ExperimentConfig::table2(
+            Protocol::TFedAvg,
+            Task::MnistLike,
+            1,
+        ))
+        .to_frame();
+        f.payload[0] = 9;
+        assert!(Ctrl::from_frame(&f).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Per-link traffic accounting — the transport-layer source of truth for
+//! the paper's Table-IV communication numbers.
+//!
+//! Every byte is counted where it crosses (or, for `Loopback`, would
+//! cross) the wire: full frame size, header included. Model payloads
+//! (`FrameKind::Data`) land in the up/down counters the benches read;
+//! control frames (hello, config, round assignment, shutdown) are tracked
+//! separately so protocol overhead is visible but does not pollute the
+//! compression-ratio measurements.
+
+/// Counters for one server<->client link. Directions are named from the
+/// server's perspective: `up` = client -> server, `down` = server -> client.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// wire bytes of upstream data frames (header + payload)
+    pub up_bytes: u64,
+    /// wire bytes of downstream data frames
+    pub down_bytes: u64,
+    pub up_frames: u64,
+    pub down_frames: u64,
+    /// completed request/response exchanges
+    pub round_trips: u64,
+    /// wire bytes of control frames, both directions
+    pub ctrl_bytes: u64,
+    pub ctrl_frames: u64,
+}
+
+impl LinkStats {
+    pub fn record_up(&mut self, wire_bytes: usize) {
+        self.up_bytes += wire_bytes as u64;
+        self.up_frames += 1;
+    }
+
+    pub fn record_down(&mut self, wire_bytes: usize) {
+        self.down_bytes += wire_bytes as u64;
+        self.down_frames += 1;
+    }
+
+    pub fn record_ctrl(&mut self, wire_bytes: usize) {
+        self.ctrl_bytes += wire_bytes as u64;
+        self.ctrl_frames += 1;
+    }
+
+    pub fn record_round_trip(&mut self) {
+        self.round_trips += 1;
+    }
+
+    /// Fold another link's counters into this one (fleet totals).
+    pub fn merge(&mut self, other: &LinkStats) {
+        self.up_bytes += other.up_bytes;
+        self.down_bytes += other.down_bytes;
+        self.up_frames += other.up_frames;
+        self.down_frames += other.down_frames;
+        self.round_trips += other.round_trips;
+        self.ctrl_bytes += other.ctrl_bytes;
+        self.ctrl_frames += other.ctrl_frames;
+    }
+
+    /// Counter deltas since an earlier snapshot (per-round accounting).
+    pub fn since(&self, mark: &LinkStats) -> LinkStats {
+        LinkStats {
+            up_bytes: self.up_bytes.saturating_sub(mark.up_bytes),
+            down_bytes: self.down_bytes.saturating_sub(mark.down_bytes),
+            up_frames: self.up_frames.saturating_sub(mark.up_frames),
+            down_frames: self.down_frames.saturating_sub(mark.down_frames),
+            round_trips: self.round_trips.saturating_sub(mark.round_trips),
+            ctrl_bytes: self.ctrl_bytes.saturating_sub(mark.ctrl_bytes),
+            ctrl_frames: self.ctrl_frames.saturating_sub(mark.ctrl_frames),
+        }
+    }
+
+    /// All bytes moved over the link (data + control).
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes + self.ctrl_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut s = LinkStats::default();
+        s.record_down(100);
+        s.record_up(30);
+        s.record_ctrl(14);
+        s.record_round_trip();
+        assert_eq!(s.down_bytes, 100);
+        assert_eq!(s.up_bytes, 30);
+        assert_eq!(s.ctrl_bytes, 14);
+        assert_eq!((s.up_frames, s.down_frames, s.ctrl_frames), (1, 1, 1));
+        assert_eq!(s.round_trips, 1);
+        assert_eq!(s.total_bytes(), 144);
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = LinkStats::default();
+        a.record_up(10);
+        let mut b = LinkStats::default();
+        b.record_up(5);
+        b.record_down(7);
+        b.record_round_trip();
+        a.merge(&b);
+        assert_eq!(a.up_bytes, 15);
+        assert_eq!(a.up_frames, 2);
+        assert_eq!(a.down_bytes, 7);
+        assert_eq!(a.round_trips, 1);
+    }
+
+    #[test]
+    fn since_is_delta() {
+        let mut s = LinkStats::default();
+        s.record_up(10);
+        let mark = s;
+        s.record_up(25);
+        s.record_down(40);
+        let d = s.since(&mark);
+        assert_eq!(d.up_bytes, 25);
+        assert_eq!(d.up_frames, 1);
+        assert_eq!(d.down_bytes, 40);
+        assert_eq!(s.since(&s), LinkStats::default());
+    }
+}

@@ -1,0 +1,336 @@
+//! TCP transport over `std::net` — one connection per client, no external
+//! dependencies.
+//!
+//! Server side: [`TcpBinding::bind`] grabs the listen socket (port 0 gives
+//! an ephemeral port, reported by `local_addr`), then
+//! [`TcpBinding::accept_clients`] blocks until every expected client has
+//! registered with a `Hello` frame and been handed the serialized
+//! `ExperimentConfig`. The resulting [`TcpTransport`] serves the round
+//! driver: worker threads lock distinct per-client links and run strict
+//! request/response exchanges.
+//!
+//! Client side: [`TcpClient::connect`] dials, registers, and receives the
+//! config; [`TcpClient::serve`] then answers round assignments until the
+//! server says `Shutdown`. Used by the `tfed client` subcommand and the
+//! `tcp_round` example.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comms::Message;
+use crate::config::ExperimentConfig;
+use crate::coordinator::client::ClientRuntime;
+use crate::transport::frame::{Frame, FrameKind};
+use crate::transport::stats::LinkStats;
+use crate::transport::{Ctrl, RoundAssign, Transport};
+use crate::util::rng::Pcg;
+use crate::{info, warn};
+
+// ---------------------------------------------------------------------------
+// server side
+// ---------------------------------------------------------------------------
+
+/// How long a freshly-accepted connection gets to complete the
+/// Hello/Config registration exchange before it is dropped.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A bound-but-not-yet-populated listener. Splitting bind from accept lets
+/// callers learn the ephemeral port before clients dial in.
+pub struct TcpBinding {
+    listener: TcpListener,
+}
+
+impl TcpBinding {
+    pub fn bind(addr: &str) -> Result<TcpBinding> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(TcpBinding { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept connections until all `n` client slots (ids `0..n`) are
+    /// registered; each registrant is sent the experiment config. A peer
+    /// that fails its handshake — including one that connects and then
+    /// goes silent past [`HANDSHAKE_TIMEOUT`] — is dropped with a warning
+    /// and the slot stays open for a retry, so one bad dialer can stall
+    /// registration for at most the timeout, never poison the fleet.
+    pub fn accept_clients(self, n: usize, cfg: &ExperimentConfig) -> Result<TcpTransport> {
+        let mut slots: Vec<Option<(TcpStream, LinkStats)>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mut filled = 0;
+        while filled < n {
+            let (stream, peer) = self.listener.accept()?;
+            match Self::handshake(stream, n, cfg, &slots) {
+                Ok((cid, stream, stats)) => {
+                    slots[cid] = Some((stream, stats));
+                    filled += 1;
+                    info!("client {cid} registered from {peer} ({filled}/{n})");
+                }
+                Err(e) => warn!("rejected connection from {peer}: {e:#}"),
+            }
+        }
+        Ok(TcpTransport {
+            links: slots
+                .into_iter()
+                .map(|s| {
+                    let (stream, stats) = s.expect("all slots filled");
+                    Mutex::new(TcpLink { stream, stats })
+                })
+                .collect(),
+        })
+    }
+
+    fn handshake(
+        mut stream: TcpStream,
+        n: usize,
+        cfg: &ExperimentConfig,
+        slots: &[Option<(TcpStream, LinkStats)>],
+    ) -> Result<(usize, TcpStream, LinkStats)> {
+        stream.set_nodelay(true).ok();
+        // bound the registration exchange so a silent peer cannot wedge
+        // the accept loop; the timeout comes off again for round traffic
+        // (local training legitimately takes arbitrarily long)
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let mut stats = LinkStats::default();
+        let hello = Frame::read_from(&mut stream)?;
+        stats.record_ctrl(hello.wire_len());
+        let cid = match Ctrl::from_frame(&hello)? {
+            Ctrl::Hello { client_id } => client_id as usize,
+            other => bail!("expected hello, got {other:?}"),
+        };
+        if cid >= n {
+            bail!("client id {cid} out of range (expecting 0..{n})");
+        }
+        if slots[cid].is_some() {
+            bail!("client id {cid} already registered");
+        }
+        let sent = Ctrl::Config(cfg.clone()).to_frame().write_to(&mut stream)?;
+        stats.record_ctrl(sent);
+        stream.set_read_timeout(None)?;
+        Ok((cid, stream, stats))
+    }
+}
+
+struct TcpLink {
+    stream: TcpStream,
+    stats: LinkStats,
+}
+
+/// Server-side `Transport` over one TCP connection per client.
+pub struct TcpTransport {
+    links: Vec<Mutex<TcpLink>>,
+}
+
+impl Transport for TcpTransport {
+    fn n_clients(&self) -> usize {
+        self.links.len()
+    }
+
+    fn round_trip(&self, cid: usize, assign: &RoundAssign, down_wire: &[u8]) -> Result<Message> {
+        let link = self
+            .links
+            .get(cid)
+            .ok_or_else(|| anyhow!("client {cid} not connected"))?;
+        let mut link = link.lock().unwrap();
+        let sent = Ctrl::Assign(*assign).to_frame().write_to(&mut link.stream)?;
+        link.stats.record_ctrl(sent);
+        link.stream.write_all(down_wire)?;
+        link.stats.record_down(down_wire.len());
+        let reply = Frame::read_from(&mut link.stream)
+            .with_context(|| format!("reading client {cid} reply"))?;
+        if reply.kind != FrameKind::Data {
+            bail!("client {cid}: expected data frame, got {:?}", reply.kind);
+        }
+        link.stats.record_up(reply.wire_len());
+        link.stats.record_round_trip();
+        Ok(Message::decode(&reply.payload)?)
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        self.links.iter().map(|l| l.lock().unwrap().stats).collect()
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        for (cid, link) in self.links.iter().enumerate() {
+            let mut link = link.lock().unwrap();
+            if let Err(e) = Ctrl::Shutdown.to_frame().write_to(&mut link.stream) {
+                // a client that already hung up is not an error at teardown
+                warn!("client {cid}: shutdown notify failed: {e}");
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client side
+// ---------------------------------------------------------------------------
+
+/// One client's connection to the coordinator.
+pub struct TcpClient {
+    stream: TcpStream,
+    client_id: u32,
+    pub stats: LinkStats,
+}
+
+impl TcpClient {
+    /// Dial the coordinator, register as `client_id`, receive the
+    /// experiment config the fleet is running.
+    pub fn connect(addr: &str, client_id: u32) -> Result<(TcpClient, ExperimentConfig)> {
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("dialing {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let mut stats = LinkStats::default();
+        let sent = Ctrl::Hello { client_id }.to_frame().write_to(&mut stream)?;
+        stats.record_ctrl(sent);
+        let f = Frame::read_from(&mut stream)?;
+        stats.record_ctrl(f.wire_len());
+        let cfg = match Ctrl::from_frame(&f)? {
+            Ctrl::Config(cfg) => cfg,
+            other => bail!("expected config after hello, got {other:?}"),
+        };
+        Ok((TcpClient { stream, client_id, stats }, cfg))
+    }
+
+    /// Answer round assignments until the server sends `Shutdown`.
+    /// Returns the number of rounds served.
+    pub fn serve(&mut self, runtime: &ClientRuntime<'_>) -> Result<u64> {
+        let mut pending: Option<RoundAssign> = None;
+        let mut rounds = 0u64;
+        loop {
+            let f = Frame::read_from(&mut self.stream)?;
+            match f.kind {
+                FrameKind::Assign => {
+                    self.stats.record_ctrl(f.wire_len());
+                    let a = match Ctrl::from_frame(&f)? {
+                        Ctrl::Assign(a) => a,
+                        other => bail!("bad assign frame: {other:?}"),
+                    };
+                    if a.client_id != self.client_id {
+                        bail!(
+                            "assignment for client {} delivered to client {}",
+                            a.client_id,
+                            self.client_id
+                        );
+                    }
+                    pending = Some(a);
+                }
+                FrameKind::Data => {
+                    // server -> client is downstream from the link's view
+                    self.stats.record_down(f.wire_len());
+                    let a = pending
+                        .take()
+                        .ok_or_else(|| anyhow!("data frame with no round assignment"))?;
+                    let down = Message::decode(&f.payload)?;
+                    let mut rng = Pcg::new(a.rng_seed, a.rng_stream);
+                    let up = runtime.handle_round(&mut rng, &down)?;
+                    let sent = Frame::data(up.encode()).write_to(&mut self.stream)?;
+                    self.stats.record_up(sent);
+                    self.stats.record_round_trip();
+                    rounds += 1;
+                }
+                FrameKind::Shutdown => {
+                    self.stats.record_ctrl(f.wire_len());
+                    return Ok(rounds);
+                }
+                kind => bail!("unexpected frame kind {kind:?} on client link"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::DenseGlobal;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::client::ShardData;
+    use crate::model::{init_params, mlp_schema};
+
+    #[test]
+    fn handshake_round_trip_and_shutdown_over_localhost() {
+        let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap().to_string();
+        let cfg = ExperimentConfig::table2(
+            crate::config::Protocol::FedAvg,
+            crate::config::Task::MnistLike,
+            1,
+        );
+        let backend = NativeBackend::new(mlp_schema(), 8);
+
+        std::thread::scope(|s| {
+            let client = s.spawn(|| {
+                let (mut client, got_cfg) = TcpClient::connect(&addr, 0).unwrap();
+                let mut rng = Pcg::seeded(7);
+                let runtime = ClientRuntime {
+                    client_id: 0,
+                    backend: &backend,
+                    shard: ShardData {
+                        dim: 784,
+                        num_classes: 10,
+                        x: (0..784 * 8).map(|_| rng.normal() * 0.2).collect(),
+                        y: (0..8).collect(),
+                    },
+                    local_epochs: 1,
+                    lr: 0.05,
+                };
+                let rounds = client.serve(&runtime).unwrap();
+                (got_cfg, rounds, client.stats)
+            });
+
+            let transport = binding.accept_clients(1, &cfg).unwrap();
+            let schema = mlp_schema();
+            let mut rng = Pcg::seeded(3);
+            let params = init_params(&schema, &mut rng);
+            let down = Message::DenseGlobal(DenseGlobal {
+                round: 1,
+                tensors: params.tensors.iter().map(|t| t.data.clone()).collect(),
+            });
+            let down_wire = crate::transport::encode_data_frame(&down).unwrap();
+            let assign =
+                RoundAssign { round: 1, client_id: 0, rng_seed: 5, rng_stream: 0 };
+            let up = transport.round_trip(0, &assign, &down_wire).unwrap();
+            assert!(matches!(up, Message::DenseUpdate(_)));
+            transport.shutdown().unwrap();
+
+            let (got_cfg, rounds, client_stats) = client.join().unwrap();
+            assert_eq!(got_cfg, cfg);
+            assert_eq!(rounds, 1);
+            // both ends agree on the wire traffic (mirrored directions)
+            let server_stats = transport.stats();
+            assert_eq!(server_stats.down_bytes, client_stats.down_bytes);
+            assert_eq!(server_stats.up_bytes, client_stats.up_bytes);
+            assert!(server_stats.up_bytes > 0);
+        });
+    }
+
+    #[test]
+    fn out_of_range_hello_is_rejected_but_listener_survives() {
+        let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap().to_string();
+        let cfg = ExperimentConfig::table2(
+            crate::config::Protocol::FedAvg,
+            crate::config::Task::MnistLike,
+            2,
+        );
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // bad client: id out of range — server must reject and keep going
+                let bad = TcpClient::connect(&addr, 99);
+                assert!(bad.is_err());
+                // good client takes the slot afterwards
+                let (_client, got) = TcpClient::connect(&addr, 0).unwrap();
+                assert_eq!(got, cfg);
+            });
+            let transport = binding.accept_clients(1, &cfg).unwrap();
+            assert_eq!(transport.n_clients(), 1);
+        });
+    }
+}

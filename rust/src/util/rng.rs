@@ -29,10 +29,20 @@ impl Pcg {
         Self::new(seed, 0)
     }
 
+    /// The (seed, stream) pair `fork(tag)` builds its child from. The
+    /// round driver ships these over the transport so a remote client
+    /// constructs the exact generator a local `fork` would have returned;
+    /// sharing the mixing here keeps the two paths equivalent by
+    /// construction.
+    pub fn fork_params(&mut self, tag: u64) -> (u64, u64) {
+        let s = self.next_u64();
+        (s ^ tag.wrapping_mul(0x9E3779B97F4A7C15), tag)
+    }
+
     /// Derive an independent generator (used per-client / per-round).
     pub fn fork(&mut self, tag: u64) -> Pcg {
-        let s = self.next_u64();
-        Pcg::new(s ^ tag.wrapping_mul(0x9E3779B97F4A7C15), tag)
+        let (seed, stream) = self.fork_params(tag);
+        Pcg::new(seed, stream)
     }
 
     pub fn next_u32(&mut self) -> u32 {

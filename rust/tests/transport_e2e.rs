@@ -1,0 +1,238 @@
+//! End-to-end transport integration: a T-FedAvg federation over real TCP
+//! sockets on localhost must produce *identical* results — final global
+//! parameters and frame-layer byte counts — to the in-process loopback
+//! path, and the `serve` / `client` subcommands must do the same across
+//! OS processes.
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::{materialize_data, FaultSpec, Orchestrator};
+use tfed::coordinator::ClientRuntime;
+use tfed::transport::{TcpBinding, TcpClient};
+
+fn small_cfg(protocol: Protocol) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::table2(protocol, Task::MnistLike, 42);
+    cfg.n_clients = 3;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 300;
+    cfg.test_samples = 120;
+    cfg.batch = 16;
+    cfg.lr = 0.1;
+    cfg.native_backend = true;
+    cfg
+}
+
+/// Drive one experiment over TCP with in-thread clients; returns the
+/// orchestrator after the run for inspection.
+fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::metrics::RunMetrics, tfed::model::ParamSet) {
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap();
+    let (shards, _test) = materialize_data(cfg, backend.schema().input_dim).unwrap();
+    std::thread::scope(|s| {
+        for (cid, shard) in shards.into_iter().enumerate() {
+            let backend = backend.as_ref();
+            let want_cfg = cfg.clone();
+            s.spawn(move || {
+                let (mut client, got_cfg) =
+                    TcpClient::connect(&addr.to_string(), cid as u32).unwrap();
+                // the wire-delivered config is exactly the server's
+                assert_eq!(got_cfg, want_cfg);
+                let runtime = ClientRuntime {
+                    client_id: cid as u32,
+                    backend,
+                    shard,
+                    local_epochs: got_cfg.local_epochs,
+                    lr: got_cfg.lr,
+                };
+                let rounds = client.serve(&runtime).unwrap();
+                assert_eq!(rounds as usize, got_cfg.rounds);
+            });
+        }
+        let transport = binding.accept_clients(cfg.n_clients, cfg).unwrap();
+        let mut orch = Orchestrator::with_transport(
+            cfg.clone(),
+            backend.as_ref(),
+            FaultSpec::default(),
+            Box::new(transport),
+        )
+        .unwrap();
+        // shut the clients down before asserting, so a failed run reports
+        // the driver's error rather than client-side panics
+        let run_result = orch.run();
+        orch.shutdown_transport().unwrap();
+        run_result.unwrap();
+        (orch.metrics.clone(), orch.global().clone())
+    })
+}
+
+#[test]
+fn tcp_matches_loopback_bit_for_bit() {
+    for protocol in [Protocol::TFedAvg, Protocol::FedAvg] {
+        let cfg = small_cfg(protocol);
+        // loopback reference
+        let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+        let mut lb = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+        lb.run().unwrap();
+        // real sockets
+        let (tcp_metrics, tcp_global) = run_over_tcp(&cfg);
+
+        assert_eq!(
+            lb.global().l2_distance(&tcp_global),
+            0.0,
+            "{protocol:?}: global parameters diverged between transports"
+        );
+        assert_eq!(lb.metrics.records.len(), tcp_metrics.records.len());
+        for (l, t) in lb.metrics.records.iter().zip(&tcp_metrics.records) {
+            assert_eq!(l.up_bytes, t.up_bytes, "{protocol:?} round {}", l.round);
+            assert_eq!(l.down_bytes, t.down_bytes, "{protocol:?} round {}", l.round);
+            assert_eq!(l.up_frames, t.up_frames);
+            assert_eq!(l.down_frames, t.down_frames);
+            assert_eq!(l.selected, t.selected);
+            assert_eq!(l.test_acc.to_bits(), t.test_acc.to_bits());
+            assert_eq!(l.train_loss.to_bits(), t.train_loss.to_bits());
+        }
+        // one data frame each way per selected client per round
+        let sel: u64 = lb.metrics.records.iter().map(|r| r.selected.len() as u64).sum();
+        assert_eq!(lb.metrics.total_up_frames(), sel);
+        assert_eq!(lb.metrics.total_down_frames(), sel);
+    }
+}
+
+#[test]
+fn worker_pool_width_does_not_change_results() {
+    let cfg = small_cfg(Protocol::TFedAvg);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut serial = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+    serial.set_workers(1);
+    serial.run().unwrap();
+    let mut wide = Orchestrator::new(cfg, backend.as_ref()).unwrap();
+    wide.set_workers(8);
+    wide.run().unwrap();
+    assert_eq!(serial.global().l2_distance(wide.global()), 0.0);
+    for (a, b) in serial.metrics.records.iter().zip(&wide.metrics.records) {
+        assert_eq!(a.up_bytes, b.up_bytes);
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// true multi-process run via the serve/client subcommands
+// ---------------------------------------------------------------------------
+
+/// Kill a child process when the test panics or finishes.
+struct Reaper(Child);
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_timeout(child: &mut Child, limit: Duration, who: &str) -> std::process::ExitStatus {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if t0.elapsed() > limit {
+            panic!("{who} did not exit within {limit:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn serve_and_client_subcommands_run_a_round_across_processes() {
+    let bin = env!("CARGO_BIN_EXE_tfed");
+    let server = Command::new(bin)
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--protocol",
+            "tfedavg",
+            "--clients",
+            "2",
+            "--rounds",
+            "2",
+            "--epochs",
+            "1",
+            "--train-samples",
+            "300",
+            "--test-samples",
+            "100",
+            "--batch",
+            "16",
+            "--native",
+            "--quiet",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn serve");
+    let mut server = Reaper(server);
+    let mut reader = BufReader::new(server.0.stdout.take().unwrap());
+
+    // the serve subcommand prints its bound address before blocking
+    let addr = {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = reader.read_line(&mut line).expect("read server stdout");
+            assert!(n > 0, "server exited before printing its listen address");
+            if let Some(rest) = line.strip_prefix("listening on ") {
+                break rest.split_whitespace().next().unwrap().to_string();
+            }
+        }
+    };
+
+    let mut clients: Vec<Reaper> = (0..2)
+        .map(|cid| {
+            Reaper(
+                Command::new(bin)
+                    .args([
+                        "client",
+                        "--connect",
+                        &addr,
+                        "--client-id",
+                        &cid.to_string(),
+                        "--quiet",
+                    ])
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .expect("spawn client"),
+            )
+        })
+        .collect();
+
+    let limit = Duration::from_secs(120);
+    for (i, c) in clients.iter_mut().enumerate() {
+        let status = wait_timeout(&mut c.0, limit, &format!("client {i}"));
+        assert!(status.success(), "client {i} failed: {status}");
+    }
+    let status = wait_timeout(&mut server.0, limit, "server");
+    assert!(status.success(), "server failed: {status}");
+
+    let mut out = String::new();
+    reader.read_to_string(&mut out).unwrap();
+    assert!(out.contains("final acc"), "server summary missing:\n{out}");
+    assert!(out.contains("upstream"), "server summary missing upstream:\n{out}");
+
+    // the clients reported the rounds they served
+    for (i, c) in clients.iter_mut().enumerate() {
+        let mut cout = String::new();
+        c.0.stdout.take().unwrap().read_to_string(&mut cout).unwrap();
+        assert!(
+            cout.contains("served 2 rounds"),
+            "client {i} output unexpected:\n{cout}"
+        );
+    }
+}
