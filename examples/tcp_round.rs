@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
                         shard,
                         local_epochs: got_cfg.local_epochs,
                         lr: got_cfg.lr,
+                        codec: got_cfg.codec,
                     };
                     let rounds = client.serve(&runtime).expect("serve");
                     println!(

@@ -1,4 +1,7 @@
 //! Shared helpers for the bench binaries (included via #[path]).
+// Each bench binary includes this file as a private module and uses a
+// different subset of it; silence per-binary dead-code noise.
+#![allow(dead_code)]
 
 use std::sync::Arc;
 
@@ -22,6 +25,16 @@ pub fn scale() -> Scale {
         Ok("quick") => Scale::Quick,
         Ok("full") => Scale::Full,
         _ => Scale::Default,
+    }
+}
+
+/// The active scale as a string (recorded in machine-readable outputs so
+/// runs at different scales are never compared apples-to-oranges).
+pub fn scale_name() -> &'static str {
+    match scale() {
+        Scale::Quick => "quick",
+        Scale::Default => "default",
+        Scale::Full => "full",
     }
 }
 

@@ -7,7 +7,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::comms::codec::{pack_ternary, unpack_ternary, PackedTernary};
+use crate::compress::ternary::{pack_ternary, unpack_ternary, PackedTernary};
+use crate::compress::{CodecSpec, CompressedUpdate};
 use crate::model::ParamSet;
 use crate::model::Tensor;
 
@@ -63,12 +64,31 @@ pub struct DenseGlobal {
     pub tensors: Vec<Vec<f32>>,
 }
 
+/// Upstream payload from a client running a registry codec (fp16, quant,
+/// stc, ...): the codec's opaque per-tensor blobs behind its wire id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodedUpdate {
+    pub client_id: u32,
+    pub num_samples: u64,
+    pub train_loss: f32,
+    pub update: CompressedUpdate,
+}
+
+/// Downstream broadcast under a registry codec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodedGlobal {
+    pub round: u32,
+    pub update: CompressedUpdate,
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     TernaryUpdate(TernaryUpdate),
     DenseUpdate(DenseUpdate),
     TernaryGlobal(TernaryGlobal),
     DenseGlobal(DenseGlobal),
+    CodedUpdate(CodedUpdate),
+    CodedGlobal(CodedGlobal),
 }
 
 impl Message {
@@ -78,6 +98,8 @@ impl Message {
             Message::DenseUpdate(_) => 2,
             Message::TernaryGlobal(_) => 3,
             Message::DenseGlobal(_) => 4,
+            Message::CodedUpdate(_) => 5,
+            Message::CodedGlobal(_) => 6,
         }
     }
 
@@ -124,6 +146,16 @@ impl Message {
                 for t in &m.tensors {
                     w.f32s(t);
                 }
+            }
+            Message::CodedUpdate(m) => {
+                w.u32(m.client_id);
+                w.u64(m.num_samples);
+                w.f32(m.train_loss);
+                w.compressed(&m.update);
+            }
+            Message::CodedGlobal(m) => {
+                w.u32(m.round);
+                w.compressed(&m.update);
             }
         }
         w.out
@@ -189,6 +221,18 @@ impl Message {
                     tensors.push(r.f32s()?);
                 }
                 Message::DenseGlobal(DenseGlobal { round, tensors })
+            }
+            5 => {
+                let client_id = r.u32()?;
+                let num_samples = r.u64()?;
+                let train_loss = r.f32()?;
+                let update = r.compressed()?;
+                Message::CodedUpdate(CodedUpdate { client_id, num_samples, train_loss, update })
+            }
+            6 => {
+                let round = r.u32()?;
+                let update = r.compressed()?;
+                Message::CodedGlobal(CodedGlobal { round, update })
             }
             k => bail!("unknown message kind {k}"),
         };
@@ -314,10 +358,24 @@ impl Writer {
         }
     }
 
+    /// Raw bytes, no length prefix (fixed-size fields like codec headers).
+    pub(crate) fn bytes(&mut self, b: &[u8]) {
+        self.out.extend_from_slice(b);
+    }
+
     fn packed(&mut self, p: &PackedTernary) {
         self.u32(p.len as u32);
         self.u32(p.bytes.len() as u32);
         self.out.extend_from_slice(&p.bytes);
+    }
+
+    fn compressed(&mut self, u: &CompressedUpdate) {
+        self.bytes(&u.codec.to_wire());
+        self.u32(u.tensors.len() as u32);
+        for t in &u.tensors {
+            self.u32(t.len() as u32);
+            self.out.extend_from_slice(t);
+        }
     }
 
     fn fp_tensors(&mut self, ts: &[(u32, Vec<f32>)]) {
@@ -393,6 +451,11 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    /// Raw bytes, no length prefix (fixed-size fields like codec headers).
+    pub(crate) fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
     fn packed(&mut self) -> Result<PackedTernary> {
         let len = self.u32()? as usize;
         let nb = self.count(1)?;
@@ -400,6 +463,20 @@ impl<'a> Reader<'a> {
             bail!("packed byte count {nb} inconsistent with len {len}");
         }
         Ok(PackedTernary { len, bytes: self.take(nb)?.to_vec() })
+    }
+
+    fn compressed(&mut self) -> Result<CompressedUpdate> {
+        let codec = CodecSpec::from_wire(
+            self.take(CodecSpec::WIRE_BYTES)?.try_into().unwrap(),
+        )?;
+        // each tensor entry is at least its 4-byte length prefix
+        let n = self.count(4)?;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nb = self.count(1)?;
+            tensors.push(self.take(nb)?.to_vec());
+        }
+        Ok(CompressedUpdate { codec, tensors })
     }
 
     fn fp_tensors(&mut self) -> Result<Vec<(u32, Vec<f32>)>> {
@@ -534,5 +611,42 @@ mod tests {
         let (mut upd, _, shapes) = sample_ternary_update(6);
         upd.fp_tensors.clear();
         assert!(rebuild_update(&upd, &shapes).is_err());
+    }
+
+    #[test]
+    fn coded_messages_roundtrip_every_codec() {
+        use crate::compress::{self, codec_names};
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(11);
+        let params = init_params(&schema, &mut rng);
+        for name in codec_names() {
+            let codec = compress::build_named(name).unwrap();
+            let update = compress::compress(codec.as_ref(), &params, &mut rng).unwrap();
+            let up = CodedUpdate {
+                client_id: 3,
+                num_samples: 77,
+                train_loss: 0.25,
+                update: update.clone(),
+            };
+            let bytes = Message::CodedUpdate(up.clone()).encode();
+            assert_eq!(Message::decode(&bytes).unwrap(), Message::CodedUpdate(up));
+            let down = CodedGlobal { round: 4, update };
+            let bytes = Message::CodedGlobal(down.clone()).encode();
+            assert_eq!(Message::decode(&bytes).unwrap(), Message::CodedGlobal(down));
+        }
+    }
+
+    #[test]
+    fn coded_message_rejects_unknown_codec_id() {
+        let up = CodedUpdate {
+            client_id: 0,
+            num_samples: 1,
+            train_loss: 0.0,
+            update: CompressedUpdate { codec: CodecSpec::Fp16, tensors: vec![vec![1, 2]] },
+        };
+        let mut bytes = Message::CodedUpdate(up).encode();
+        // codec id sits right after magic(4) + kind(1) + client(4) + samples(8) + loss(4)
+        bytes[21] = 250;
+        assert!(Message::decode(&bytes).is_err());
     }
 }

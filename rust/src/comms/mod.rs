@@ -3,12 +3,19 @@
 //! The paper's headline claim (Table IV, ~16x compression of both upstream
 //! and downstream) lives here: T-FedAvg messages carry 2-bit-packed ternary
 //! weight patterns + one f32 `w^q` per layer, FedAvg messages carry raw f32
-//! tensors. Every serialized byte that would cross the network is counted
-//! by the in-process message bus, so the Table-IV bench measures *actual*
-//! payload sizes, not analytic estimates.
+//! tensors, and the generic `Coded*` messages carry any registered
+//! `compress` codec's opaque payload behind a codec-id header. Every
+//! serialized byte that would cross the network is counted at the
+//! transport frame layer, so the Table-IV bench measures *actual* payload
+//! sizes, not analytic estimates.
+//!
+//! The ternary pack/unpack primitives moved to `compress::ternary` (the
+//! codec registry's first implementation); they are re-exported here so
+//! `comms::{pack_ternary, ...}` callers keep working.
 
-pub mod codec;
 pub mod messages;
 
-pub use codec::{pack_ternary, unpack_dequantize, unpack_ternary, PackedTernary};
+pub use crate::compress::ternary::{
+    pack_ternary, unpack_dequantize, unpack_ternary, PackedTernary,
+};
 pub use messages::*;

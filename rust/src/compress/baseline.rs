@@ -1,0 +1,220 @@
+//! Calibration baselines: raw f32 passthrough (the FedAvg reference every
+//! compression ratio is measured against) and IEEE-754 half precision
+//! (the weakest "real" codec — exactly 2x, negligible error).
+
+use crate::compress::{CodecError, CodecSpec, Compressor};
+use crate::util::rng::Pcg;
+
+// ---------------------------------------------------------------------------
+// dense f32
+// ---------------------------------------------------------------------------
+
+/// Lossless little-endian f32 passthrough.
+pub struct DenseCodec;
+
+impl Compressor for DenseCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Dense
+    }
+
+    fn encode_tensor(&self, data: &[f32], _rng: &mut Pcg) -> Result<Vec<u8>, CodecError> {
+        let mut out = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn decode_tensor(&self, bytes: &[u8], numel: usize) -> Result<Vec<f32>, CodecError> {
+        if bytes.len() != numel * 4 {
+            return Err(CodecError::LengthMismatch { expected: numel * 4, got: bytes.len() });
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fp16
+// ---------------------------------------------------------------------------
+
+/// IEEE-754 binary16, round-to-nearest-even on encode.
+pub struct Fp16Codec;
+
+impl Compressor for Fp16Codec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Fp16
+    }
+
+    fn encode_tensor(&self, data: &[f32], _rng: &mut Pcg) -> Result<Vec<u8>, CodecError> {
+        let mut out = Vec::with_capacity(data.len() * 2);
+        for &v in data {
+            out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn decode_tensor(&self, bytes: &[u8], numel: usize) -> Result<Vec<f32>, CodecError> {
+        if bytes.len() != numel * 2 {
+            return Err(CodecError::LengthMismatch { expected: numel * 2, got: bytes.len() });
+        }
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| f16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// f32 -> binary16 bits, round-to-nearest-even; overflow saturates to
+/// infinity, NaN payload is preserved in the top mantissa bit.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 255 {
+        // inf / NaN (force a quiet-NaN bit so the payload never
+        // collapses to an infinity)
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127 + 15;
+    if unbiased >= 31 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased <= 0 {
+        // subnormal half (or zero): shift the 24-bit significand down
+        if unbiased < -10 {
+            return sign; // underflow -> signed zero
+        }
+        let full = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - unbiased) as u32;
+        return sign | round_shift(full, shift) as u16;
+    }
+    // normal: 23 -> 10 mantissa bits; the rounding carry may overflow
+    // into the exponent (and at the top, into infinity) — both correct
+    let v = ((unbiased as u32) << 10) | (man >> 13);
+    let v = v + round_increment(man, 13, v);
+    sign | v as u16
+}
+
+/// Drop `shift` low bits of `v` with round-to-nearest-even.
+fn round_shift(v: u32, shift: u32) -> u32 {
+    let out = v >> shift;
+    out + round_increment(v, shift, out)
+}
+
+/// 1 if dropping the low `shift` bits of `v` should round `out` up.
+fn round_increment(v: u32, shift: u32, out: u32) -> u32 {
+    let half = 1u32 << (shift - 1);
+    let rem = v & ((1u32 << shift) - 1);
+    (rem > half || (rem == half && out & 1 == 1)) as u32
+}
+
+/// binary16 bits -> f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // subnormal: man * 2^-24 is exactly representable in f32
+        let v = man as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn dense_is_bit_exact() {
+        forall(32, |rng| {
+            let n = rng.below(2000) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.normal() * 100.0).collect();
+            let c = DenseCodec;
+            let enc = c.encode_tensor(&v, rng).unwrap();
+            assert_eq!(enc.len(), n * 4);
+            let dec = c.decode_tensor(&enc, n).unwrap();
+            for (a, b) in dec.iter().zip(&v) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert!(c.decode_tensor(&enc, n + 1).is_err());
+        });
+    }
+
+    #[test]
+    fn f16_special_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // largest normal half
+        assert_eq!(f32_to_f16(1e6), 0x7C00); // overflow -> inf
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // smallest positive subnormal half = 2^-24
+        assert_eq!(f16_to_f32(0x0001), 1.0 / 16_777_216.0);
+        assert_eq!(f32_to_f16(1.0 / 16_777_216.0), 0x0001);
+        // underflow to zero
+        assert_eq!(f32_to_f16(1e-10), 0x0000);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_half_values() {
+        // every finite half value converts to f32 and back unchanged
+        for h in 0u16..=0xFFFF {
+            if (h >> 10) & 0x1F == 31 {
+                continue; // inf/NaN lane
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_error_within_half_ulp() {
+        forall(64, |rng| {
+            let v = rng.normal() * 8.0;
+            let d = f16_to_f32(f32_to_f16(v));
+            // relative error <= 2^-11 in the normal range
+            assert!(
+                (d - v).abs() <= v.abs() * (1.0 / 2048.0) + 1e-7,
+                "{v} -> {d}"
+            );
+        });
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half value
+        // (1 + 2^-10): ties go to the even mantissa (1.0)
+        let tie = 1.0 + 1.0 / 2048.0;
+        assert_eq!(f32_to_f16(tie), 0x3C00);
+        // just above the tie rounds up
+        let above = 1.0 + 1.5 / 2048.0;
+        assert_eq!(f32_to_f16(above), 0x3C01);
+    }
+
+    #[test]
+    fn fp16_codec_roundtrip_and_size() {
+        forall(32, |rng| {
+            let n = rng.below(1000) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let c = Fp16Codec;
+            let enc = c.encode_tensor(&v, rng).unwrap();
+            assert_eq!(enc.len(), n * 2);
+            let dec = c.decode_tensor(&enc, n).unwrap();
+            assert_eq!(dec.len(), n);
+            if n > 0 {
+                assert!(c.decode_tensor(&enc[..enc.len() - 1], n).is_err());
+            }
+        });
+    }
+}

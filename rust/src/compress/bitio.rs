@@ -1,0 +1,200 @@
+//! Bit-granular writer/reader shared by the sub-byte codecs (STC's
+//! Golomb–Rice streams, k-bit quantization cells).
+//!
+//! Bits are packed LSB-first within each byte. The reader is
+//! hostile-input safe: reading past the end is a typed
+//! [`CodecError::Truncated`], unary runs are explicitly bounded, and
+//! [`BitReader::expect_zero_padding`] rejects streams whose final-byte
+//! padding bits are non-zero — a corrupt-but-length-valid tail can never
+//! decode silently.
+
+use crate::compress::CodecError;
+
+/// Append-only bit sink; `finish()` yields the zero-padded byte buffer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    nbits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> BitWriter {
+        BitWriter::default()
+    }
+
+    pub fn push_bit(&mut self, bit: bool) {
+        let slot = self.nbits % 8;
+        if slot == 0 {
+            self.out.push(0);
+        }
+        if bit {
+            *self.out.last_mut().unwrap() |= 1 << slot;
+        }
+        self.nbits += 1;
+    }
+
+    /// Push the low `n` bits of `v`, LSB first.
+    pub fn push_bits(&mut self, v: u32, n: u32) {
+        debug_assert!(n <= 32);
+        for i in 0..n {
+            self.push_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Unary code: `q` one-bits terminated by a zero-bit.
+    pub fn push_unary(&mut self, q: u32) {
+        for _ in 0..q {
+            self.push_bit(true);
+        }
+        self.push_bit(false);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.nbits
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.out
+    }
+}
+
+/// Sequential bit reader over a byte slice.
+pub struct BitReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(b: &'a [u8]) -> BitReader<'a> {
+        BitReader { b, pos: 0 }
+    }
+
+    fn len_bits(&self) -> usize {
+        self.b.len() * 8
+    }
+
+    pub fn read_bit(&mut self) -> Result<bool, CodecError> {
+        if self.pos >= self.len_bits() {
+            return Err(CodecError::Truncated { wanted: self.pos + 1, got: self.len_bits() });
+        }
+        let bit = (self.b[self.pos / 8] >> (self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Ok(bit)
+    }
+
+    /// Read `n` bits, LSB first.
+    pub fn read_bits(&mut self, n: u32) -> Result<u32, CodecError> {
+        debug_assert!(n <= 32);
+        let mut v = 0u32;
+        for i in 0..n {
+            if self.read_bit()? {
+                v |= 1 << i;
+            }
+        }
+        Ok(v)
+    }
+
+    /// Read a unary run of ones terminated by a zero. A run longer than
+    /// `max` is corrupt (the caller knows a content-derived bound).
+    pub fn read_unary(&mut self, max: u32) -> Result<u32, CodecError> {
+        let mut q = 0u32;
+        while self.read_bit()? {
+            q += 1;
+            if q > max {
+                return Err(CodecError::Corrupt("unary run exceeds content bound"));
+            }
+        }
+        Ok(q)
+    }
+
+    /// After all content is read: fewer than 8 bits may remain and every
+    /// one of them must be zero.
+    pub fn expect_zero_padding(&mut self) -> Result<(), CodecError> {
+        if self.len_bits() - self.pos >= 8 {
+            return Err(CodecError::Corrupt("trailing bytes after bitstream"));
+        }
+        while self.pos < self.len_bits() {
+            if self.read_bit()? {
+                return Err(CodecError::Corrupt("non-zero padding bits in final byte"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn bits_roundtrip() {
+        forall(64, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let widths: Vec<u32> = (0..n).map(|_| 1 + rng.below(24)).collect();
+            let vals: Vec<u32> = widths
+                .iter()
+                .map(|&w| rng.next_u32() & ((1u32 << w) - 1))
+                .collect();
+            let mut w = BitWriter::new();
+            for (&v, &n) in vals.iter().zip(&widths) {
+                w.push_bits(v, n);
+            }
+            let total = w.bit_len();
+            let bytes = w.finish();
+            assert_eq!(bytes.len(), total.div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            for (&v, &n) in vals.iter().zip(&widths) {
+                assert_eq!(r.read_bits(n).unwrap(), v);
+            }
+            r.expect_zero_padding().unwrap();
+        });
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let mut w = BitWriter::new();
+        for q in [0u32, 1, 7, 13, 100] {
+            w.push_unary(q);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for q in [0u32, 1, 7, 13, 100] {
+            assert_eq!(r.read_unary(1000).unwrap(), q);
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_truncated() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.read_bits(8).unwrap(), 0xFF);
+        assert!(matches!(r.read_bit(), Err(CodecError::Truncated { .. })));
+    }
+
+    #[test]
+    fn unbounded_unary_is_corrupt_or_truncated() {
+        // all-ones never terminates: must hit the bound, not spin
+        let mut r = BitReader::new(&[0xFF, 0xFF]);
+        assert!(matches!(r.read_unary(8), Err(CodecError::Corrupt(_))));
+        // without the bound being hit first, the end of input reports
+        let mut r = BitReader::new(&[0xFF]);
+        assert!(matches!(r.read_unary(100), Err(CodecError::Truncated { .. })));
+    }
+
+    #[test]
+    fn dirty_padding_rejected() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b101, 3);
+        let mut bytes = w.finish();
+        bytes[0] |= 1 << 6; // set a padding bit
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert!(matches!(r.expect_zero_padding(), Err(CodecError::Corrupt(_))));
+    }
+
+    #[test]
+    fn whole_trailing_byte_rejected() {
+        let mut r = BitReader::new(&[0, 0]);
+        assert!(matches!(r.expect_zero_padding(), Err(CodecError::Corrupt(_))));
+    }
+}

@@ -1,0 +1,440 @@
+//! Pluggable update-compression subsystem: a codec registry behind the
+//! [`Compressor`] trait.
+//!
+//! The seed repo hardwired one compressed path — 2-bit ternary packing —
+//! into the message layer. This subsystem turns payload compression into a
+//! first-class axis of the experiment grid, so the paper's T-FedAvg
+//! protocol can run head-to-head against the strongest competing codec
+//! families under one measurement harness (ROADMAP: scenario diversity):
+//!
+//! * `ternary`  — the paper's 2-bit packing (§III-B), ported here from
+//!   `comms/codec.rs`; also usable as a generic post-training codec.
+//! * `stc`      — sparse ternary compression (Sattler et al. §III):
+//!   magnitude top-k to a single ± mean-magnitude value, index gaps
+//!   Golomb–Rice coded.
+//! * `quant<k>` — stochastic uniform k-bit quantization (k in 1..=8),
+//!   unbiased in expectation, driven by the server-seeded per-client
+//!   `Pcg` so runs stay bit-reproducible at any worker count.
+//! * `fp16` / `dense` — calibration baselines (half precision, raw f32).
+//!
+//! Every codec encodes one flat f32 tensor to an opaque payload and back;
+//! [`compress`]/[`decompress`] lift that to whole `ParamSet`s. Codec
+//! identity travels on the wire as a fixed 10-byte [`CodecSpec`] header
+//! (see `comms::messages`) and is negotiated per round in the
+//! `transport::RoundAssign`. Decoding is hostile-input safe: every failure
+//! is a typed [`CodecError`], never a panic or unbounded allocation.
+
+pub mod baseline;
+pub mod bitio;
+pub mod quantize;
+pub mod stc;
+pub mod ternary;
+
+pub use baseline::{DenseCodec, Fp16Codec};
+pub use quantize::QuantCodec;
+pub use stc::StcCodec;
+pub use ternary::{
+    pack_ternary, unpack_dequantize, unpack_ternary, PackedTernary, TernaryCodec,
+};
+
+use std::fmt;
+
+use anyhow::{anyhow, bail};
+
+use crate::model::{ParamSet, Tensor};
+use crate::util::rng::Pcg;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// Typed decode/encode errors. Corrupt wire input maps to a specific
+/// variant; nothing in this subsystem panics on payload bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodecError {
+    /// Wire codec id does not name a registered codec.
+    UnknownCodec(u8),
+    /// Codec parameters out of range (bad `k`, bad bit width, ...).
+    BadParams(String),
+    /// Payload ended before the declared content did.
+    Truncated { wanted: usize, got: usize },
+    /// Payload length disagrees with the expected element count.
+    LengthMismatch { expected: usize, got: usize },
+    /// Payload is internally inconsistent (invalid encoding, index out of
+    /// range, non-zero padding, non-finite scale, ...).
+    Corrupt(&'static str),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::UnknownCodec(id) => write!(f, "unknown codec id {id}"),
+            CodecError::BadParams(msg) => write!(f, "bad codec parameters: {msg}"),
+            CodecError::Truncated { wanted, got } => {
+                write!(f, "payload truncated: wanted {wanted}, got {got}")
+            }
+            CodecError::LengthMismatch { expected, got } => {
+                write!(f, "payload length mismatch: expected {expected}, got {got}")
+            }
+            CodecError::Corrupt(msg) => write!(f, "corrupt payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------------------
+// codec identity
+// ---------------------------------------------------------------------------
+
+/// A fully-parameterized codec choice — the unit of wire negotiation.
+///
+/// Parsed from strings like `ternary`, `fp16`, `quant8`, `stc:k=0.01`
+/// (the CLI `--codec` flag) and serialized as a fixed [`Self::WIRE_BYTES`]
+/// header inside messages, the `Config` handshake, and each round's
+/// `Assign` frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecSpec {
+    /// The paper's 2-bit ternary packing (T-FedAvg's native format).
+    Ternary,
+    /// Raw little-endian f32 — the FedAvg baseline, zero loss.
+    Dense,
+    /// IEEE half precision, round-to-nearest-even.
+    Fp16,
+    /// Stochastic uniform quantization to `bits`-bit cells (1..=8).
+    Quant { bits: u8 },
+    /// Sparse ternary compression: top `k` fraction by magnitude.
+    Stc { k: f64 },
+}
+
+impl CodecSpec {
+    /// Fixed wire size: id byte + bits byte + 8-byte f64 parameter.
+    pub const WIRE_BYTES: usize = 10;
+
+    /// Stable wire id (never reuse a retired value).
+    pub fn id(&self) -> u8 {
+        match self {
+            CodecSpec::Ternary => 1,
+            CodecSpec::Dense => 2,
+            CodecSpec::Fp16 => 3,
+            CodecSpec::Quant { .. } => 4,
+            CodecSpec::Stc { .. } => 5,
+        }
+    }
+
+    /// Canonical name, parseable by [`CodecSpec::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            CodecSpec::Ternary => "ternary".into(),
+            CodecSpec::Dense => "dense".into(),
+            CodecSpec::Fp16 => "fp16".into(),
+            CodecSpec::Quant { bits } => format!("quant{bits}"),
+            CodecSpec::Stc { k } => format!("stc:k={k}"),
+        }
+    }
+
+    /// Parameter validation shared by the CLI parser, the config
+    /// validator, and the wire decoder.
+    pub fn check(&self) -> Result<(), CodecError> {
+        match *self {
+            CodecSpec::Quant { bits } => {
+                if !(1..=8).contains(&bits) {
+                    return Err(CodecError::BadParams(format!(
+                        "quant bit width must be in 1..=8, got {bits}"
+                    )));
+                }
+            }
+            CodecSpec::Stc { k } => {
+                if !(k.is_finite() && k > 0.0 && k <= 1.0) {
+                    return Err(CodecError::BadParams(format!(
+                        "stc sparsity k must be in (0, 1], got {k}"
+                    )));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Parse a `--codec` string: `ternary`, `dense`, `fp16`, `quant<bits>`
+    /// (or `quant:bits=<b>`), `stc:k=<fraction>` (default k=0.01).
+    pub fn parse(spec: &str) -> anyhow::Result<CodecSpec> {
+        let (name, params) = match spec.split_once(':') {
+            Some((n, p)) => (n.to_ascii_lowercase(), p),
+            None => (spec.to_ascii_lowercase(), ""),
+        };
+        let mut kv = std::collections::BTreeMap::new();
+        for part in params.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("codec param {part:?} is not key=value"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let out = match name.as_str() {
+            "ternary" => CodecSpec::Ternary,
+            "dense" | "fp32" => CodecSpec::Dense,
+            "fp16" | "half" => CodecSpec::Fp16,
+            "stc" | "topk" => CodecSpec::Stc { k: take_f64(&mut kv, "k", 0.01)? },
+            _ => {
+                if let Some(rest) = name.strip_prefix("quant") {
+                    // bit width is an integer: reject "4.9" / "-3" at
+                    // parse time instead of silently truncating
+                    let raw = if rest.is_empty() {
+                        kv.remove("bits").unwrap_or_else(|| "8".into())
+                    } else {
+                        rest.to_string()
+                    };
+                    let bits = raw
+                        .parse()
+                        .map_err(|e| anyhow!("codec bit width {raw:?}: {e}"))?;
+                    CodecSpec::Quant { bits }
+                } else {
+                    bail!(
+                        "unknown codec {name:?} \
+                         (ternary | dense | fp16 | quant<bits> | stc:k=<frac>)"
+                    );
+                }
+            }
+        };
+        if let Some(k) = kv.keys().next() {
+            bail!("codec {name:?} does not take parameter {k:?}");
+        }
+        out.check()?;
+        Ok(out)
+    }
+
+    /// Fixed-size wire form (id, bits, f64 param; unused fields zero).
+    pub fn to_wire(&self) -> [u8; Self::WIRE_BYTES] {
+        let mut b = [0u8; Self::WIRE_BYTES];
+        b[0] = self.id();
+        match self {
+            CodecSpec::Quant { bits } => b[1] = *bits,
+            CodecSpec::Stc { k } => b[2..10].copy_from_slice(&k.to_le_bytes()),
+            _ => {}
+        }
+        b
+    }
+
+    pub fn from_wire(b: [u8; Self::WIRE_BYTES]) -> Result<CodecSpec, CodecError> {
+        let spec = match b[0] {
+            1 => CodecSpec::Ternary,
+            2 => CodecSpec::Dense,
+            3 => CodecSpec::Fp16,
+            4 => CodecSpec::Quant { bits: b[1] },
+            5 => CodecSpec::Stc { k: f64::from_le_bytes(b[2..10].try_into().unwrap()) },
+            id => return Err(CodecError::UnknownCodec(id)),
+        };
+        spec.check()?;
+        Ok(spec)
+    }
+}
+
+fn take_f64(
+    kv: &mut std::collections::BTreeMap<String, String>,
+    key: &str,
+    default: f64,
+) -> anyhow::Result<f64> {
+    match kv.remove(key) {
+        Some(v) => v.parse().map_err(|e| anyhow!("codec param {key}={v}: {e}")),
+        None => Ok(default),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the trait + registry
+// ---------------------------------------------------------------------------
+
+/// One payload codec. Implementations are stateless per call (`&self`) and
+/// shared across round-driver worker threads.
+pub trait Compressor: Send + Sync {
+    /// The spec this instance was built from (carries the wire identity).
+    fn spec(&self) -> CodecSpec;
+
+    /// Canonical display name.
+    fn name(&self) -> String {
+        self.spec().name()
+    }
+
+    /// Encode one flat f32 tensor into an opaque payload. `rng` drives
+    /// stochastic codecs (unbiased rounding); deterministic codecs ignore
+    /// it and must not draw from it.
+    fn encode_tensor(&self, data: &[f32], rng: &mut Pcg) -> Result<Vec<u8>, CodecError>;
+
+    /// Decode a payload back to exactly `numel` values. Must reject any
+    /// inconsistent payload with a typed error.
+    fn decode_tensor(&self, bytes: &[u8], numel: usize) -> Result<Vec<f32>, CodecError>;
+}
+
+/// Build the codec implementation for a validated spec.
+pub fn build(spec: CodecSpec) -> Result<Box<dyn Compressor>, CodecError> {
+    spec.check()?;
+    Ok(match spec {
+        CodecSpec::Ternary => Box::new(TernaryCodec::default()),
+        CodecSpec::Dense => Box::new(DenseCodec),
+        CodecSpec::Fp16 => Box::new(Fp16Codec),
+        CodecSpec::Quant { bits } => Box::new(QuantCodec::new(bits)),
+        CodecSpec::Stc { k } => Box::new(StcCodec::new(k)),
+    })
+}
+
+/// String-keyed registry entry point: parse a codec name and build it.
+pub fn build_named(name: &str) -> anyhow::Result<Box<dyn Compressor>> {
+    Ok(build(CodecSpec::parse(name)?)?)
+}
+
+/// The registered codec family, one canonical name per entry — what
+/// `--codec` accepts and the conformance suite iterates over.
+pub fn codec_names() -> &'static [&'static str] {
+    &["ternary", "dense", "fp16", "quant1", "quant4", "quant8", "stc:k=0.01"]
+}
+
+// ---------------------------------------------------------------------------
+// ParamSet-level helpers
+// ---------------------------------------------------------------------------
+
+/// A whole model's compressed payload: codec identity + one opaque blob
+/// per tensor, positionally matching the model schema.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressedUpdate {
+    pub codec: CodecSpec,
+    pub tensors: Vec<Vec<u8>>,
+}
+
+impl CompressedUpdate {
+    /// Payload bytes this update contributes to its message (codec header
+    /// included; message/frame framing excluded).
+    pub fn wire_bytes(&self) -> usize {
+        CodecSpec::WIRE_BYTES + self.tensors.iter().map(|t| t.len()).sum::<usize>()
+    }
+}
+
+/// Compress every tensor of a ParamSet.
+pub fn compress(
+    codec: &dyn Compressor,
+    params: &ParamSet,
+    rng: &mut Pcg,
+) -> Result<CompressedUpdate, CodecError> {
+    let tensors = params
+        .tensors
+        .iter()
+        .map(|t| codec.encode_tensor(&t.data, rng))
+        .collect::<Result<_, _>>()?;
+    Ok(CompressedUpdate { codec: codec.spec(), tensors })
+}
+
+/// Rebuild a dense ParamSet from a compressed update against the model's
+/// tensor shapes.
+pub fn decompress(
+    codec: &dyn Compressor,
+    upd: &CompressedUpdate,
+    shapes: &[Vec<usize>],
+) -> Result<ParamSet, CodecError> {
+    if upd.codec != codec.spec() {
+        return Err(CodecError::BadParams(format!(
+            "update was encoded with {}, decoder is {}",
+            upd.codec.name(),
+            codec.name()
+        )));
+    }
+    if upd.tensors.len() != shapes.len() {
+        return Err(CodecError::LengthMismatch {
+            expected: shapes.len(),
+            got: upd.tensors.len(),
+        });
+    }
+    let mut tensors = Vec::with_capacity(shapes.len());
+    for (bytes, shape) in upd.tensors.iter().zip(shapes) {
+        let numel: usize = shape.iter().product();
+        let data = codec.decode_tensor(bytes, numel)?;
+        if data.len() != numel {
+            return Err(CodecError::LengthMismatch { expected: numel, got: data.len() });
+        }
+        tensors.push(Tensor { shape: shape.clone(), data });
+    }
+    Ok(ParamSet { tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_canonical_names() {
+        assert_eq!(CodecSpec::parse("ternary").unwrap(), CodecSpec::Ternary);
+        assert_eq!(CodecSpec::parse("DENSE").unwrap(), CodecSpec::Dense);
+        assert_eq!(CodecSpec::parse("fp16").unwrap(), CodecSpec::Fp16);
+        assert_eq!(CodecSpec::parse("quant8").unwrap(), CodecSpec::Quant { bits: 8 });
+        assert_eq!(
+            CodecSpec::parse("quant:bits=4").unwrap(),
+            CodecSpec::Quant { bits: 4 }
+        );
+        assert_eq!(CodecSpec::parse("stc").unwrap(), CodecSpec::Stc { k: 0.01 });
+        assert_eq!(
+            CodecSpec::parse("stc:k=0.05").unwrap(),
+            CodecSpec::Stc { k: 0.05 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(CodecSpec::parse("gzip").is_err());
+        assert!(CodecSpec::parse("quant0").is_err());
+        assert!(CodecSpec::parse("quant9").is_err());
+        assert!(CodecSpec::parse("quant:bits=4.9").is_err());
+        assert!(CodecSpec::parse("quant:bits=-3").is_err());
+        assert!(CodecSpec::parse("stc:k=0").is_err());
+        assert!(CodecSpec::parse("stc:k=1.5").is_err());
+        assert!(CodecSpec::parse("stc:q=0.1").is_err());
+        assert!(CodecSpec::parse("dense:k=1").is_err());
+        assert!(CodecSpec::parse("stc:k").is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip_every_registered_codec() {
+        for name in codec_names() {
+            let spec = CodecSpec::parse(name).unwrap();
+            assert_eq!(CodecSpec::from_wire(spec.to_wire()).unwrap(), spec);
+            // name is canonical: parses back to itself
+            assert_eq!(CodecSpec::parse(&spec.name()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn wire_rejects_unknown_and_invalid() {
+        let mut b = [0u8; CodecSpec::WIRE_BYTES];
+        b[0] = 99;
+        assert_eq!(CodecSpec::from_wire(b), Err(CodecError::UnknownCodec(99)));
+        // quant with a zero bit width
+        let mut b = [0u8; CodecSpec::WIRE_BYTES];
+        b[0] = 4;
+        assert!(matches!(CodecSpec::from_wire(b), Err(CodecError::BadParams(_))));
+        // stc with k out of range
+        let mut b = [0u8; CodecSpec::WIRE_BYTES];
+        b[0] = 5;
+        b[2..10].copy_from_slice(&2.0f64.to_le_bytes());
+        assert!(matches!(CodecSpec::from_wire(b), Err(CodecError::BadParams(_))));
+    }
+
+    #[test]
+    fn registry_builds_every_name() {
+        for name in codec_names() {
+            let c = build_named(name).unwrap();
+            assert_eq!(CodecSpec::parse(&c.name()).unwrap(), c.spec());
+        }
+    }
+
+    #[test]
+    fn decompress_rejects_codec_mismatch_and_count() {
+        let dense = build(CodecSpec::Dense).unwrap();
+        let upd = CompressedUpdate { codec: CodecSpec::Fp16, tensors: vec![] };
+        assert!(matches!(
+            decompress(dense.as_ref(), &upd, &[]),
+            Err(CodecError::BadParams(_))
+        ));
+        let upd = CompressedUpdate { codec: CodecSpec::Dense, tensors: vec![] };
+        assert!(matches!(
+            decompress(dense.as_ref(), &upd, &[vec![2]]),
+            Err(CodecError::LengthMismatch { .. })
+        ));
+    }
+}

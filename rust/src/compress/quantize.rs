@@ -1,0 +1,241 @@
+//! Stochastic uniform k-bit quantization (the FL-quantization survey's
+//! canonical axis): per tensor, the value range [lo, hi] is split into
+//! 2^k - 1 equal steps and every element is rounded to a neighboring level
+//! *probabilistically*, so the codec is unbiased in expectation:
+//! E[decode(encode(v))] = v.
+//!
+//! The randomness comes from the caller's `Pcg` — in a federated round
+//! that generator is server-seeded per client and travels in the round
+//! assignment, so runs are bit-reproducible at any worker count and over
+//! any transport.
+//!
+//! Payload layout: [lo f32][hi f32][numel k-bit cells, LSB-first packed].
+
+use crate::compress::bitio::{BitReader, BitWriter};
+use crate::compress::{CodecError, CodecSpec, Compressor};
+use crate::util::rng::Pcg;
+
+const HEADER_BYTES: usize = 8;
+
+pub struct QuantCodec {
+    bits: u8,
+}
+
+impl QuantCodec {
+    pub fn new(bits: u8) -> QuantCodec {
+        QuantCodec { bits }
+    }
+
+    fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+}
+
+impl Compressor for QuantCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Quant { bits: self.bits }
+    }
+
+    fn encode_tensor(&self, data: &[f32], rng: &mut Pcg) -> Result<Vec<u8>, CodecError> {
+        if data.iter().any(|v| !v.is_finite()) {
+            return Err(CodecError::Corrupt("non-finite input tensor"));
+        }
+        let payload = (data.len() * self.bits as usize).div_ceil(8);
+        let mut out = Vec::with_capacity(HEADER_BYTES + payload);
+        if data.is_empty() {
+            out.extend_from_slice(&0f32.to_le_bytes());
+            out.extend_from_slice(&0f32.to_le_bytes());
+            return Ok(out);
+        }
+        let lo = data.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        let hi = data.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        if !(hi - lo).is_finite() {
+            // a span wider than f32::MAX cannot be stepped; refuse rather
+            // than emit a payload our own decoder must reject
+            return Err(CodecError::Corrupt("value range overflows f32"));
+        }
+        let levels = self.levels();
+        let step = (hi - lo) / levels as f32;
+        out.extend_from_slice(&lo.to_le_bytes());
+        out.extend_from_slice(&hi.to_le_bytes());
+
+        let mut bw = BitWriter::new();
+        for &v in data {
+            let idx = if step <= 0.0 {
+                0 // constant tensor: every element is lo
+            } else {
+                let t = ((v - lo) / step).clamp(0.0, levels as f32);
+                let base = t.floor();
+                let frac = t - base;
+                let base = base as u32;
+                if base >= levels {
+                    levels
+                } else {
+                    // unbiased rounding: up with probability frac
+                    base + (rng.next_f32() < frac) as u32
+                }
+            };
+            bw.push_bits(idx, self.bits as u32);
+        }
+        out.extend_from_slice(&bw.finish());
+        Ok(out)
+    }
+
+    fn decode_tensor(&self, bytes: &[u8], numel: usize) -> Result<Vec<f32>, CodecError> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(CodecError::Truncated { wanted: HEADER_BYTES, got: bytes.len() });
+        }
+        let expected = HEADER_BYTES + (numel * self.bits as usize).div_ceil(8);
+        if bytes.len() != expected {
+            return Err(CodecError::LengthMismatch { expected, got: bytes.len() });
+        }
+        let lo = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        let hi = f32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        // (hi - lo) must be finite too: lo=-3e38/hi=3e38 passes the
+        // individual checks but overflows the span to +inf, which would
+        // decode to NaN/inf and poison the aggregate
+        if !lo.is_finite() || !hi.is_finite() || hi < lo || !(hi - lo).is_finite() {
+            return Err(CodecError::Corrupt("invalid quantization range"));
+        }
+        let step = (hi - lo) / self.levels() as f32;
+        let mut br = BitReader::new(&bytes[HEADER_BYTES..]);
+        let mut out = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            // a k-bit cell can never exceed levels = 2^k - 1, so every
+            // bit pattern maps to a valid level
+            let idx = br.read_bits(self.bits as u32)?;
+            out.push(lo + idx as f32 * step);
+        }
+        br.expect_zero_padding()?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn error_bounded_by_one_step() {
+        forall(64, |rng| {
+            for bits in [1u8, 4, 8] {
+                let c = QuantCodec::new(bits);
+                let n = 1 + rng.below(1000) as usize;
+                let v: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+                let enc = c.encode_tensor(&v, rng).unwrap();
+                let dec = c.decode_tensor(&enc, n).unwrap();
+                let lo = v.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+                let hi = v.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let step = (hi - lo) / c.levels() as f32;
+                for (d, x) in dec.iter().zip(&v) {
+                    assert!(
+                        (d - x).abs() <= step * 1.0001 + 1e-6,
+                        "bits={bits} |{d} - {x}| > step {step}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // fixed values, many independent stochastic encodes: the mean
+        // decode must converge on the input (the codec's defining
+        // property for convergence proofs)
+        let v = [0.13f32, -0.57, 0.91, 0.02, -0.33, 0.74, -0.99, 0.48];
+        for bits in [1u8, 4] {
+            let c = QuantCodec::new(bits);
+            let trials = 3000;
+            let mut acc = [0f64; 8];
+            for t in 0..trials {
+                let mut rng = Pcg::seeded(1000 + t);
+                let dec = c
+                    .decode_tensor(&c.encode_tensor(&v, &mut rng).unwrap(), v.len())
+                    .unwrap();
+                for (a, d) in acc.iter_mut().zip(&dec) {
+                    *a += *d as f64;
+                }
+            }
+            let lo = -0.99f32;
+            let hi = 0.91f32;
+            let step = ((hi - lo) / c.levels() as f32) as f64;
+            // mean of `trials` draws: tolerance ~ step / sqrt(trials) * 3
+            let tol = (step / (trials as f64).sqrt()) * 4.0 + 1e-4;
+            for (a, x) in acc.iter().zip(&v) {
+                let mean = a / trials as f64;
+                assert!(
+                    (mean - *x as f64).abs() < tol,
+                    "bits={bits}: E[{x}] drifted to {mean} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_same_rng() {
+        let v: Vec<f32> = (0..257).map(|i| (i as f32).sin()).collect();
+        let c = QuantCodec::new(4);
+        let a = c.encode_tensor(&v, &mut Pcg::new(9, 7)).unwrap();
+        let b = c.encode_tensor(&v, &mut Pcg::new(9, 7)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn payload_size_matches_bit_width() {
+        let mut rng = Pcg::seeded(2);
+        let v = vec![0.5f32; 1000];
+        for (bits, payload) in [(1u8, 125), (4, 500), (8, 1000)] {
+            let enc = QuantCodec::new(bits).encode_tensor(&v, &mut rng).unwrap();
+            assert_eq!(enc.len(), HEADER_BYTES + payload);
+        }
+    }
+
+    #[test]
+    fn constant_and_empty_tensors() {
+        let mut rng = Pcg::seeded(3);
+        let c = QuantCodec::new(4);
+        let enc = c.encode_tensor(&[2.5; 9], &mut rng).unwrap();
+        assert_eq!(c.decode_tensor(&enc, 9).unwrap(), vec![2.5; 9]);
+        let enc = c.encode_tensor(&[], &mut rng).unwrap();
+        assert_eq!(c.decode_tensor(&enc, 0).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected() {
+        let mut rng = Pcg::seeded(4);
+        let c = QuantCodec::new(8);
+        let v: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let enc = c.encode_tensor(&v, &mut rng).unwrap();
+        for cut in 0..enc.len() {
+            assert!(c.decode_tensor(&enc[..cut], v.len()).is_err(), "cut={cut}");
+        }
+        // range inverted
+        let mut bad = enc.clone();
+        bad[0..4].copy_from_slice(&10f32.to_le_bytes());
+        bad[4..8].copy_from_slice(&(-10f32).to_le_bytes());
+        assert!(matches!(
+            c.decode_tensor(&bad, v.len()),
+            Err(CodecError::Corrupt(_))
+        ));
+        // non-finite range
+        let mut bad = enc.clone();
+        bad[0..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(matches!(
+            c.decode_tensor(&bad, v.len()),
+            Err(CodecError::Corrupt(_))
+        ));
+        // finite lo/hi whose span overflows to +inf
+        let mut bad = enc;
+        bad[0..4].copy_from_slice(&(-3.0e38f32).to_le_bytes());
+        bad[4..8].copy_from_slice(&3.0e38f32.to_le_bytes());
+        assert!(matches!(
+            c.decode_tensor(&bad, v.len()),
+            Err(CodecError::Corrupt(_))
+        ));
+        // encoding a legal-but-unsteppable span is refused symmetrically
+        assert!(c.encode_tensor(&[-3.0e38, 3.0e38], &mut rng).is_err());
+        // encoding refuses non-finite inputs
+        assert!(c.encode_tensor(&[f32::NAN], &mut rng).is_err());
+    }
+}

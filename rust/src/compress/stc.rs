@@ -1,0 +1,287 @@
+//! Sparse ternary compression (Sattler et al., "Robust and
+//! Communication-Efficient Federated Learning from Non-IID Data", §III).
+//!
+//! Per tensor: keep the top `k` fraction of elements by magnitude, replace
+//! every survivor with ± mu where mu is the mean magnitude over the
+//! selection, and ship (count, mu, positions, signs). Positions are
+//! strictly increasing, so they are stored as index *gaps* under a
+//! Golomb–Rice code whose parameter is fitted to the mean gap (≈ 1/k) and
+//! carried in the header — the decoder never re-derives it.
+//!
+//! Payload layout (little-endian):
+//!
+//! | field   | size | meaning                                   |
+//! |---------|------|-------------------------------------------|
+//! | count   | 4    | selected elements (<= numel)              |
+//! | mu      | 4    | mean magnitude of the selection (>= 0)    |
+//! | rice_b  | 1    | Golomb–Rice remainder width in bits       |
+//! | stream  | n    | count gaps (unary q + b-bit r), then count sign bits |
+//!
+//! The bitstream's final-byte padding must be zero — the decoder rejects
+//! dirty tails just like the ternary codec does.
+
+use crate::compress::bitio::{BitReader, BitWriter};
+use crate::compress::{CodecError, CodecSpec, Compressor};
+use crate::util::rng::Pcg;
+
+const HEADER_BYTES: usize = 9;
+/// Upper bound on the remainder width; gaps fit in u32 so anything larger
+/// is nonsense from the wire.
+const MAX_RICE_B: u8 = 31;
+
+pub struct StcCodec {
+    /// fraction of elements kept, in (0, 1]
+    k: f64,
+}
+
+impl StcCodec {
+    pub fn new(k: f64) -> StcCodec {
+        StcCodec { k }
+    }
+
+    /// Elements kept for a tensor of `n` values (at least one).
+    fn kept(&self, n: usize) -> usize {
+        ((self.k * n as f64).round() as usize).clamp(1, n)
+    }
+}
+
+/// Deterministic magnitude order: larger |value| first, ties by index —
+/// independent of the selection algorithm's internal ordering.
+fn mag_cmp(data: &[f32], a: u32, b: u32) -> std::cmp::Ordering {
+    let (ma, mb) = (data[a as usize].abs(), data[b as usize].abs());
+    mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+}
+
+impl Compressor for StcCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Stc { k: self.k }
+    }
+
+    fn encode_tensor(&self, data: &[f32], _rng: &mut Pcg) -> Result<Vec<u8>, CodecError> {
+        if data.iter().any(|v| !v.is_finite()) {
+            return Err(CodecError::Corrupt("non-finite input tensor"));
+        }
+        let n = data.len();
+        let mut out = Vec::new();
+        if n == 0 {
+            out.extend_from_slice(&0u32.to_le_bytes());
+            out.extend_from_slice(&0f32.to_le_bytes());
+            out.push(0);
+            return Ok(out);
+        }
+        let kept = self.kept(n);
+
+        // top-k by magnitude: O(n) select, then index order for gap coding
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        if kept < n {
+            idx.select_nth_unstable_by(kept - 1, |&a, &b| mag_cmp(data, a, b));
+            idx.truncate(kept);
+        }
+        idx.sort_unstable();
+
+        let mu = (idx.iter().map(|&i| data[i as usize].abs() as f64).sum::<f64>()
+            / kept as f64) as f32;
+
+        // Rice parameter from the mean gap (~ n/kept); mean_gap >= 1
+        let mean_gap = (n / kept).max(1);
+        let b = ((usize::BITS - 1 - mean_gap.leading_zeros()) as u8).min(MAX_RICE_B);
+
+        let mut bw = BitWriter::new();
+        let mut prev: i64 = -1;
+        for &i in &idx {
+            let gap = (i as i64 - prev - 1) as u64;
+            bw.push_unary((gap >> b) as u32);
+            bw.push_bits((gap & ((1u64 << b) - 1)) as u32, b as u32);
+            prev = i as i64;
+        }
+        for &i in &idx {
+            // sign bit: 1 => +mu (zeros only arise in an all-zero tensor,
+            // where mu is 0 and the sign is irrelevant)
+            bw.push_bit(data[i as usize] >= 0.0);
+        }
+
+        out.extend_from_slice(&(kept as u32).to_le_bytes());
+        out.extend_from_slice(&mu.to_le_bytes());
+        out.push(b);
+        out.extend_from_slice(&bw.finish());
+        Ok(out)
+    }
+
+    fn decode_tensor(&self, bytes: &[u8], numel: usize) -> Result<Vec<f32>, CodecError> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(CodecError::Truncated { wanted: HEADER_BYTES, got: bytes.len() });
+        }
+        let count = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let mu = f32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        let b = bytes[8];
+        if count > numel || (numel > 0 && count == 0) {
+            return Err(CodecError::Corrupt("selection count out of range"));
+        }
+        if !mu.is_finite() || mu < 0.0 {
+            return Err(CodecError::Corrupt("non-finite or negative magnitude"));
+        }
+        if b > MAX_RICE_B {
+            return Err(CodecError::Corrupt("rice parameter out of range"));
+        }
+        let mut out = vec![0f32; numel];
+        if numel == 0 {
+            if bytes.len() != HEADER_BYTES {
+                return Err(CodecError::LengthMismatch {
+                    expected: HEADER_BYTES,
+                    got: bytes.len(),
+                });
+            }
+            return Ok(out);
+        }
+
+        let mut br = BitReader::new(&bytes[HEADER_BYTES..]);
+        let mut indices = Vec::with_capacity(count);
+        let mut prev: i64 = -1;
+        for _ in 0..count {
+            // a gap can never exceed the tensor length, so its unary
+            // quotient is bounded by numel >> b
+            let q = br.read_unary((numel >> b) as u32 + 1)? as u64;
+            let r = br.read_bits(b as u32)? as u64;
+            let gap = (q << b) | r;
+            let i = prev + 1 + gap as i64;
+            if i >= numel as i64 {
+                return Err(CodecError::Corrupt("position index out of range"));
+            }
+            indices.push(i as usize);
+            prev = i;
+        }
+        for &i in &indices {
+            out[i] = if br.read_bit()? { mu } else { -mu };
+        }
+        br.expect_zero_padding()?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn codec(k: f64) -> StcCodec {
+        StcCodec::new(k)
+    }
+
+    #[test]
+    fn roundtrip_preserves_topk_support_and_signs() {
+        forall(64, |rng| {
+            let n = 1 + rng.below(4000) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let c = codec(0.05);
+            let kept = c.kept(n);
+            let enc = c.encode_tensor(&v, rng).unwrap();
+            let dec = c.decode_tensor(&enc, n).unwrap();
+
+            let nonzero: Vec<usize> =
+                (0..n).filter(|&i| dec[i] != 0.0).collect();
+            assert!(nonzero.len() <= kept);
+            // every survivor is exactly +-mu with the original sign
+            let mu = f32::from_le_bytes(enc[4..8].try_into().unwrap());
+            for &i in &nonzero {
+                assert_eq!(dec[i].abs(), mu);
+                assert_eq!(dec[i] >= 0.0, v[i] >= 0.0, "sign flipped at {i}");
+            }
+            // top-k property: min selected magnitude >= max dropped
+            if nonzero.len() == kept && kept < n {
+                let min_sel = nonzero
+                    .iter()
+                    .map(|&i| v[i].abs())
+                    .fold(f32::INFINITY, f32::min);
+                let max_drop = (0..n)
+                    .filter(|i| dec[*i] == 0.0)
+                    .map(|i| v[i].abs())
+                    .fold(0.0f32, f32::max);
+                assert!(min_sel >= max_drop, "{min_sel} < {max_drop}");
+            }
+        });
+    }
+
+    #[test]
+    fn compresses_well_below_dense() {
+        let mut rng = Pcg::seeded(3);
+        let n = 20_000;
+        let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let enc = codec(0.01).encode_tensor(&v, &mut rng).unwrap();
+        // 1% density: dense is 80 KB; STC should land far below 1/10th
+        assert!(enc.len() * 10 < n * 4, "stc payload {} bytes", enc.len());
+    }
+
+    #[test]
+    fn k_one_keeps_everything() {
+        let mut rng = Pcg::seeded(4);
+        let v = vec![1.0f32, -2.0, 3.0, -4.0];
+        let c = codec(1.0);
+        let dec = c
+            .decode_tensor(&c.encode_tensor(&v, &mut rng).unwrap(), 4)
+            .unwrap();
+        let mu = 2.5;
+        assert_eq!(dec, vec![mu, -mu, mu, -mu]);
+    }
+
+    #[test]
+    fn empty_and_all_zero_tensors() {
+        let mut rng = Pcg::seeded(5);
+        let c = codec(0.1);
+        let enc = c.encode_tensor(&[], &mut rng).unwrap();
+        assert_eq!(c.decode_tensor(&enc, 0).unwrap(), Vec::<f32>::new());
+        let enc = c.encode_tensor(&[0.0; 7], &mut rng).unwrap();
+        assert_eq!(c.decode_tensor(&enc, 7).unwrap(), vec![0.0; 7]);
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected_with_typed_errors() {
+        let mut rng = Pcg::seeded(6);
+        let v: Vec<f32> = (0..500).map(|_| rng.normal()).collect();
+        let c = codec(0.05);
+        let enc = c.encode_tensor(&v, &mut rng).unwrap();
+
+        // truncations never panic
+        for cut in 0..enc.len() {
+            assert!(c.decode_tensor(&enc[..cut], v.len()).is_err(), "cut={cut}");
+        }
+        // count beyond numel
+        let mut bad = enc.clone();
+        bad[0..4].copy_from_slice(&(v.len() as u32 + 1).to_le_bytes());
+        assert!(matches!(
+            c.decode_tensor(&bad, v.len()),
+            Err(CodecError::Corrupt(_))
+        ));
+        // negative / non-finite mu
+        let mut bad = enc.clone();
+        bad[4..8].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(matches!(
+            c.decode_tensor(&bad, v.len()),
+            Err(CodecError::Corrupt(_))
+        ));
+        // absurd rice parameter
+        let mut bad = enc.clone();
+        bad[8] = 200;
+        assert!(matches!(
+            c.decode_tensor(&bad, v.len()),
+            Err(CodecError::Corrupt(_))
+        ));
+        // encoding a non-finite tensor is refused outright
+        assert!(c.encode_tensor(&[1.0, f32::INFINITY], &mut rng).is_err());
+    }
+
+    #[test]
+    fn bitflips_never_panic() {
+        forall(32, |rng| {
+            let n = 1 + rng.below(600) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let c = codec(0.05);
+            let mut enc = c.encode_tensor(&v, rng).unwrap();
+            let pos = rng.below(enc.len() as u32) as usize;
+            enc[pos] ^= 1 << rng.below(8);
+            // either a typed error or a well-formed tensor — never a panic
+            if let Ok(dec) = c.decode_tensor(&enc, n) {
+                assert_eq!(dec.len(), n);
+            }
+        });
+    }
+}

@@ -1,0 +1,332 @@
+//! 2-bit ternary packing: 4 trits per byte — the paper's codec (§III-B),
+//! ported here from `comms/codec.rs` as the compression subsystem's first
+//! implementation.
+//!
+//! Encoding per 2-bit cell: 00 -> 0, 01 -> +1, 10 -> -1 (11 unused). The
+//! upstream/downstream payload for one layer of n weights is
+//! ceil(n/4) bytes — 1/16 of the 4n bytes FedAvg ships, matching the
+//! paper's §III-B arithmetic.
+//!
+//! Both unpack paths enforce the same strictness: invalid 0b11 cells AND
+//! non-zero padding bits in the final byte are rejected, so a
+//! corrupt-but-CRC-valid frame decodes identically (to an error) no matter
+//! which path the client takes.
+
+use crate::compress::{CodecError, CodecSpec, Compressor};
+use crate::quant;
+use crate::util::rng::Pcg;
+
+/// A packed ternary tensor (one layer's sign pattern).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTernary {
+    pub len: usize,
+    pub bytes: Vec<u8>,
+}
+
+impl PackedTernary {
+    pub fn payload_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[inline]
+fn encode_trit(s: i8) -> u8 {
+    match s {
+        0 => 0b00,
+        1 => 0b01,
+        -1 => 0b10,
+        _ => unreachable!("non-ternary value {s}"),
+    }
+}
+
+#[inline]
+fn decode_trit(b: u8) -> Result<i8, CodecError> {
+    match b {
+        0b00 => Ok(0),
+        0b01 => Ok(1),
+        0b10 => Ok(-1),
+        _ => Err(CodecError::Corrupt("invalid trit encoding 0b11")),
+    }
+}
+
+/// Pack a sign pattern ({-1, 0, +1} as i8) into 2-bit cells.
+pub fn pack_ternary(it: &[i8]) -> PackedTernary {
+    let mut bytes = vec![0u8; it.len().div_ceil(4)];
+    for (i, &s) in it.iter().enumerate() {
+        bytes[i / 4] |= encode_trit(s) << ((i % 4) * 2);
+    }
+    PackedTernary { len: it.len(), bytes }
+}
+
+/// Byte count / element count consistency, shared by both unpack paths.
+#[inline]
+fn check_len(p: &PackedTernary) -> Result<(), CodecError> {
+    if p.bytes.len() != p.len.div_ceil(4) {
+        return Err(CodecError::LengthMismatch {
+            expected: p.len.div_ceil(4),
+            got: p.bytes.len(),
+        });
+    }
+    Ok(())
+}
+
+/// Trailing cells of the last byte must be zero-padded, shared by both
+/// unpack paths (a dirty tail is corruption the CRC happened to miss).
+#[inline]
+fn check_padding(p: &PackedTernary) -> Result<(), CodecError> {
+    if p.len % 4 != 0 {
+        let last = p.bytes[p.bytes.len() - 1];
+        let used = (p.len % 4) * 2;
+        if last >> used != 0 {
+            return Err(CodecError::Corrupt("non-zero padding bits in final byte"));
+        }
+    }
+    Ok(())
+}
+
+/// Unpack back to the sign pattern; validates cell encoding and padding.
+pub fn unpack_ternary(p: &PackedTernary) -> Result<Vec<i8>, CodecError> {
+    check_len(p)?;
+    check_padding(p)?;
+    let mut out = Vec::with_capacity(p.len);
+    for i in 0..p.len {
+        let cell = (p.bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
+        out.push(decode_trit(cell)?);
+    }
+    Ok(out)
+}
+
+/// A 2-bit cell is the invalid encoding 0b11 iff both of its bits are set;
+/// `b & (b >> 1)` lines those up on the low bit of each cell.
+#[inline]
+fn has_invalid_cell(b: u8) -> bool {
+    b & (b >> 1) & 0b0101_0101 != 0
+}
+
+/// Unpack directly to dense f32 weights (wq * it) without the i8 hop —
+/// the hot-path variant used when materializing a downloaded model.
+/// Exactly as strict as [`unpack_ternary`]: invalid cells and dirty
+/// padding are both rejected.
+///
+/// Validity is checked up front with a per-byte bit trick (no post-hoc NaN
+/// scan), then the body is a straight 256-entry x 4-lane table copy: one
+/// LUT row per byte value replaces the per-element shift/mask loop.
+pub fn unpack_dequantize(p: &PackedTernary, wq: f32) -> Result<Vec<f32>, CodecError> {
+    check_len(p)?;
+    check_padding(p)?;
+    // up-front 0b11-cell check; after the padding check the tail byte's
+    // unused cells are known-zero, so whole bytes can be tested
+    let full_bytes = p.len / 4;
+    if p.bytes.iter().any(|&b| has_invalid_cell(b)) {
+        return Err(CodecError::Corrupt("invalid trit encoding 0b11"));
+    }
+    let rem = p.len % 4;
+
+    let cell = [0.0f32, wq, -wq, 0.0];
+    let mut out = Vec::with_capacity(p.len);
+
+    // below this size the 1024-entry LUT fill would cost more than the
+    // unpack itself (e.g. the MLP's bias-sized layers): use the 4-entry
+    // cell table directly
+    if p.len < 4096 {
+        for &b in &p.bytes[..full_bytes] {
+            out.push(cell[(b & 3) as usize]);
+            out.push(cell[((b >> 2) & 3) as usize]);
+            out.push(cell[((b >> 4) & 3) as usize]);
+            out.push(cell[((b >> 6) & 3) as usize]);
+        }
+        if rem != 0 {
+            let b = p.bytes[full_bytes];
+            for lane in 0..rem {
+                out.push(cell[((b >> (2 * lane)) & 3) as usize]);
+            }
+        }
+        return Ok(out);
+    }
+
+    // 256-entry x 4-lane per-byte LUT (the 0b11 lane is unreachable after
+    // the validity check; 0.0 keeps the table total)
+    let mut lut = [[0.0f32; 4]; 256];
+    for (b, row) in lut.iter_mut().enumerate() {
+        for (lane, v) in row.iter_mut().enumerate() {
+            *v = cell[(b >> (2 * lane)) & 3];
+        }
+    }
+    for &b in &p.bytes[..full_bytes] {
+        out.extend_from_slice(&lut[b as usize]);
+    }
+    if rem != 0 {
+        out.extend_from_slice(&lut[p.bytes[full_bytes] as usize][..rem]);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// the generic Compressor wrapper
+// ---------------------------------------------------------------------------
+
+/// Ternary quantization as a registry codec: FTTQ-style ternarization of a
+/// trained tensor (scale -> eq.8 threshold -> sign pattern) with the eq.-20
+/// optimal factor, packed 4 trits/byte behind a single f32 scale.
+///
+/// The T-FedAvg protocol path keeps its dedicated `TernaryUpdate` /
+/// `TernaryGlobal` messages (which also carry per-layer w^q and Delta);
+/// this wrapper is the same wire format applied as a generic post-training
+/// codec, so `ternary` participates in the codec-conformance suite and the
+/// FedAvg-side comparisons on equal footing.
+pub struct TernaryCodec {
+    /// eq. 8 threshold hyperparameter T.
+    t: f32,
+}
+
+impl Default for TernaryCodec {
+    fn default() -> Self {
+        // the manifest's T_k default, shared with NativeBackend
+        TernaryCodec { t: 0.05 }
+    }
+}
+
+impl Compressor for TernaryCodec {
+    fn spec(&self) -> CodecSpec {
+        CodecSpec::Ternary
+    }
+
+    fn encode_tensor(&self, data: &[f32], _rng: &mut Pcg) -> Result<Vec<u8>, CodecError> {
+        let s = quant::scale(data);
+        let delta = quant::threshold_mean(&s, self.t);
+        let it = quant::ternarize(&s, delta);
+        let wq = quant::optimal_wq_symmetric(data, &it);
+        let packed = pack_ternary(&it);
+        let mut out = Vec::with_capacity(4 + packed.bytes.len());
+        out.extend_from_slice(&wq.to_le_bytes());
+        out.extend_from_slice(&packed.bytes);
+        Ok(out)
+    }
+
+    fn decode_tensor(&self, bytes: &[u8], numel: usize) -> Result<Vec<f32>, CodecError> {
+        if bytes.len() < 4 {
+            return Err(CodecError::Truncated { wanted: 4, got: bytes.len() });
+        }
+        let wq = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+        if !wq.is_finite() {
+            return Err(CodecError::Corrupt("non-finite ternary scale"));
+        }
+        let packed = PackedTernary { len: numel, bytes: bytes[4..].to_vec() };
+        unpack_dequantize(&packed, wq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn roundtrip_small() {
+        for pattern in [
+            vec![],
+            vec![0i8],
+            vec![1, -1, 0],
+            vec![1, 1, 1, 1],
+            vec![-1, 0, 1, -1, 0],
+        ] {
+            let p = pack_ternary(&pattern);
+            assert_eq!(unpack_ternary(&p).unwrap(), pattern);
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall(128, |rng| {
+            let n = rng.below(4096) as usize;
+            let it: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+            let p = pack_ternary(&it);
+            assert_eq!(p.payload_bytes(), n.div_ceil(4));
+            assert_eq!(unpack_ternary(&p).unwrap(), it);
+        });
+    }
+
+    #[test]
+    fn sixteen_x_compression() {
+        // paper §III-B: 2-bit vs 32-bit => 16x on the weight payload
+        let n = 24_380; // MLP parameter count
+        let it = vec![1i8; n];
+        let p = pack_ternary(&it);
+        let fp32 = n * 4;
+        let ratio = fp32 as f64 / p.payload_bytes() as f64;
+        assert!((ratio - 16.0).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn dequantize_matches_unpack() {
+        forall(64, |rng| {
+            let n = rng.below(1000) as usize;
+            let it: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+            let wq = rng.next_f32() + 0.01;
+            let p = pack_ternary(&it);
+            let dense = unpack_dequantize(&p, wq).unwrap();
+            let via_i8: Vec<f32> =
+                unpack_ternary(&p).unwrap().iter().map(|&s| wq * s as f32).collect();
+            assert_eq!(dense, via_i8);
+        });
+    }
+
+    #[test]
+    fn rejects_corrupt_encoding() {
+        let mut p = pack_ternary(&[1, 1, 1, 1]);
+        p.bytes[0] = 0xFF; // 0b11 cells
+        assert!(matches!(unpack_ternary(&p), Err(CodecError::Corrupt(_))));
+        assert!(matches!(unpack_dequantize(&p, 1.0), Err(CodecError::Corrupt(_))));
+    }
+
+    #[test]
+    fn rejects_bad_length() {
+        let p = PackedTernary { len: 10, bytes: vec![0; 1] };
+        assert!(matches!(unpack_ternary(&p), Err(CodecError::LengthMismatch { .. })));
+        assert!(matches!(
+            unpack_dequantize(&p, 1.0),
+            Err(CodecError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_dirty_padding_on_both_paths() {
+        // the seed's hot path accepted non-zero padding that the strict
+        // path rejected — both must now agree (ISSUE 2 satellite)
+        let mut p = pack_ternary(&[1, 1, 1]);
+        p.bytes[0] |= 0b01 << 6; // set the unused 4th cell
+        assert!(matches!(unpack_ternary(&p), Err(CodecError::Corrupt(_))));
+        assert!(matches!(unpack_dequantize(&p, 1.0), Err(CodecError::Corrupt(_))));
+        // an invalid 0b11 pattern hidden in the padding is also rejected
+        let mut p = pack_ternary(&[1, 1, 1]);
+        p.bytes[0] |= 0b11 << 6;
+        assert!(unpack_ternary(&p).is_err());
+        assert!(unpack_dequantize(&p, 1.0).is_err());
+    }
+
+    #[test]
+    fn codec_decodes_to_pattern_times_scale() {
+        forall(32, |rng| {
+            let n = 1 + rng.below(3000) as usize;
+            let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let codec = TernaryCodec::default();
+            let enc = codec.encode_tensor(&v, rng).unwrap();
+            assert_eq!(enc.len(), 4 + n.div_ceil(4));
+            let dec = codec.decode_tensor(&enc, n).unwrap();
+            let wq = f32::from_le_bytes(enc[..4].try_into().unwrap());
+            assert!(dec.iter().all(|&x| x == 0.0 || x == wq || x == -wq));
+        });
+    }
+
+    #[test]
+    fn codec_rejects_truncation_and_nonfinite_scale() {
+        let codec = TernaryCodec::default();
+        let mut rng = Pcg::seeded(1);
+        let enc = codec.encode_tensor(&[0.5, -0.4, 0.1, 0.9], &mut rng).unwrap();
+        assert!(codec.decode_tensor(&enc[..2], 4).is_err());
+        assert!(codec.decode_tensor(&enc[..enc.len() - 1], 4).is_err());
+        let mut bad = enc.clone();
+        bad[..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(matches!(codec.decode_tensor(&bad, 4), Err(CodecError::Corrupt(_))));
+    }
+}

@@ -6,6 +6,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::compress::CodecSpec;
+
 /// Which algorithm of Table II to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Protocol {
@@ -48,6 +50,28 @@ impl Protocol {
         match self {
             Protocol::Baseline | Protocol::FedAvg => 32,
             Protocol::Ttq | Protocol::TFedAvg => 2,
+        }
+    }
+
+    /// The payload codec this protocol speaks unless overridden:
+    /// T-FedAvg's wire format *is* the ternary codec; everything else
+    /// ships dense f32.
+    pub fn default_codec(&self) -> CodecSpec {
+        match self {
+            Protocol::TFedAvg => CodecSpec::Ternary,
+            _ => CodecSpec::Dense,
+        }
+    }
+
+    /// Inverse of [`Self::default_codec`]: the protocol a bare codec
+    /// choice implies (`--codec ternary` means the T-FedAvg protocol,
+    /// every other codec rides FedAvg's round path). The single source of
+    /// truth for the CLI, benches, and examples.
+    pub fn for_codec(codec: CodecSpec) -> Protocol {
+        if codec == CodecSpec::Ternary {
+            Protocol::TFedAvg
+        } else {
+            Protocol::FedAvg
         }
     }
 }
@@ -111,6 +135,11 @@ pub struct ExperimentConfig {
     pub test_samples: usize,
     /// run on the pure-Rust backend instead of PJRT (tests/props; MLP only)
     pub native_backend: bool,
+    /// payload codec for model updates (both directions). T-FedAvg
+    /// requires `ternary`; FedAvg accepts any registered codec
+    /// (`--codec stc:k=0.01`, `quant8`, `fp16`, ...), `dense` being its
+    /// uncompressed native format.
+    pub codec: CodecSpec,
 }
 
 impl ExperimentConfig {
@@ -139,6 +168,7 @@ impl ExperimentConfig {
             },
             test_samples: 2_000,
             native_backend: false,
+            codec: protocol.default_codec(),
         };
         if protocol.is_centralized() {
             cfg.centralized()
@@ -165,14 +195,18 @@ impl ExperimentConfig {
         if self.n_clients == 0 {
             bail!("n_clients must be > 0");
         }
-        if !(0.0..=1.0).contains(&self.participation) || self.participation <= 0.0 {
+        // single (0, 1] check — NaN fails both comparisons and is rejected
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
             bail!("participation must be in (0, 1]");
         }
         if self.nc == 0 {
             bail!("nc must be >= 1");
         }
-        if !(0.0..=1.0).contains(&self.beta) || self.beta <= 0.0 {
+        if !(self.beta > 0.0 && self.beta <= 1.0) {
             bail!("beta must be in (0, 1]");
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("lr must be positive and finite (got {})", self.lr);
         }
         if self.batch == 0 || self.local_epochs == 0 || self.rounds == 0 {
             bail!("batch, local_epochs, rounds must be > 0");
@@ -190,6 +224,21 @@ impl ExperimentConfig {
         if self.native_backend && self.task != Task::MnistLike {
             bail!("native backend only implements the MLP task");
         }
+        self.codec.check()?;
+        match (self.protocol, self.codec) {
+            (Protocol::TFedAvg, CodecSpec::Ternary) => {}
+            (Protocol::TFedAvg, c) => bail!(
+                "T-FedAvg's wire format is the ternary codec; --codec {} needs \
+                 --protocol fedavg",
+                c.name()
+            ),
+            (p, c) if p.is_centralized() && c != CodecSpec::Dense => bail!(
+                "centralized protocol {} moves no payloads; --codec {} has no effect",
+                p.name(),
+                c.name()
+            ),
+            _ => {}
+        }
         Ok(())
     }
 
@@ -202,10 +251,18 @@ impl ExperimentConfig {
         self
     }
 
-    /// One-line summary for logs/metrics.
+    /// One-line summary for logs/metrics. The codec is appended only when
+    /// it differs from the protocol's native format, so default runs
+    /// (T-FedAvg/ternary, FedAvg/dense) keep their pre-codec-registry
+    /// summaries byte-for-byte.
     pub fn summary(&self) -> String {
+        let codec = if self.codec != self.protocol.default_codec() {
+            format!(" codec={}", self.codec.name())
+        } else {
+            String::new()
+        };
         format!(
-            "{} on {} | N={} lambda={} Nc={} beta={} B={} E={} rounds={} lr={} seed={}",
+            "{} on {} | N={} lambda={} Nc={} beta={} B={} E={} rounds={} lr={} seed={}{codec}",
             self.protocol.name(),
             self.task.name(),
             self.n_clients,
@@ -255,7 +312,13 @@ mod tests {
             |c| c.n_clients = 0,
             |c| c.participation = 0.0,
             |c| c.participation = 1.5,
+            |c| c.participation = f64::NAN,
             |c| c.beta = 0.0,
+            |c| c.beta = f64::NAN,
+            |c| c.lr = 0.0,
+            |c| c.lr = -0.1,
+            |c| c.lr = f32::NAN,
+            |c| c.lr = f32::INFINITY,
             |c| c.batch = 0,
             |c| c.rounds = 0,
             |c| c.eval_every = 0,
@@ -270,6 +333,48 @@ mod tests {
         let mut c = ok.clone();
         c.protocol = Protocol::Baseline;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn codec_protocol_pairing() {
+        use crate::compress::CodecSpec;
+        // FedAvg accepts any registered codec
+        for codec in [
+            CodecSpec::Dense,
+            CodecSpec::Fp16,
+            CodecSpec::Quant { bits: 8 },
+            CodecSpec::Stc { k: 0.01 },
+            CodecSpec::Ternary,
+        ] {
+            let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+            c.codec = codec;
+            c.validate().unwrap();
+        }
+        // T-FedAvg speaks ternary only
+        let mut c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        assert_eq!(c.codec, CodecSpec::Ternary);
+        c.codec = CodecSpec::Fp16;
+        assert!(c.validate().is_err());
+        // centralized protocols take no codec override
+        let mut c = ExperimentConfig::table2(Protocol::Baseline, Task::MnistLike, 1);
+        c.codec = CodecSpec::Fp16;
+        assert!(c.validate().is_err());
+        // invalid codec parameters are caught here too
+        let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        c.codec = CodecSpec::Quant { bits: 0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn summary_mentions_codec_only_when_non_default() {
+        use crate::compress::CodecSpec;
+        let c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        assert!(!c.summary().contains("codec="));
+        let c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        assert!(!c.summary().contains("codec="));
+        let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        c.codec = CodecSpec::Stc { k: 0.01 };
+        assert!(c.summary().contains("codec=stc:k=0.01"), "{}", c.summary());
     }
 
     #[test]

@@ -10,8 +10,10 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::comms::{
-    dense_update, ternary_update, unpack_dequantize, DenseGlobal, Message, TernaryGlobal,
+    dense_update, ternary_update, unpack_dequantize, CodedGlobal, CodedUpdate, DenseGlobal,
+    Message, TernaryGlobal,
 };
+use crate::compress::{self, CodecSpec};
 use crate::coordinator::backend::{Backend, TrainMode};
 use crate::data::synth::Dataset;
 use crate::model::ParamSet;
@@ -95,6 +97,9 @@ pub struct ClientRuntime<'a> {
     pub shard: ShardData,
     pub local_epochs: usize,
     pub lr: f32,
+    /// negotiated payload codec (from the experiment config); broadcasts
+    /// and round assignments carrying any other codec are rejected
+    pub codec: CodecSpec,
 }
 
 impl ClientRuntime<'_> {
@@ -105,6 +110,7 @@ impl ClientRuntime<'_> {
         match down {
             Message::TernaryGlobal(g) => self.ternary_round(rng, g),
             Message::DenseGlobal(g) => self.dense_round(rng, g),
+            Message::CodedGlobal(g) => self.coded_round(rng, g),
             other => bail!("client received upstream message kind {}", other.kind()),
         }
     }
@@ -159,6 +165,41 @@ impl ClientRuntime<'_> {
             out.mean_loss,
         );
         Ok(Message::TernaryUpdate(upd))
+    }
+
+    /// Registry-codec round (fp16 / quant / stc / generic ternary):
+    /// decompress the broadcast, train full precision, compress the
+    /// trained parameters with the same codec. Stochastic codecs draw
+    /// from the round-assigned `rng` *after* training, so upload encoding
+    /// is as reproducible as the training itself.
+    fn coded_round(&self, rng: &mut Pcg, g: &CodedGlobal) -> Result<Message> {
+        if g.update.codec != self.codec {
+            bail!(
+                "broadcast codec {} does not match negotiated codec {}",
+                g.update.codec.name(),
+                self.codec.name()
+            );
+        }
+        let schema = self.backend.schema();
+        let shapes: Vec<Vec<usize>> = schema.params.iter().map(|p| p.shape.clone()).collect();
+        let codec = compress::build(self.codec)?;
+        let start = compress::decompress(codec.as_ref(), &g.update, &shapes)?;
+        let out = self.backend.train_local(
+            &start,
+            TrainMode::Fp,
+            &[],
+            &self.shard,
+            self.local_epochs,
+            self.lr,
+            rng,
+        )?;
+        let update = compress::compress(codec.as_ref(), &out.params, rng)?;
+        Ok(Message::CodedUpdate(CodedUpdate {
+            client_id: self.client_id,
+            num_samples: self.shard.len() as u64,
+            train_loss: out.mean_loss,
+            update,
+        }))
     }
 
     /// FedAvg: load the dense broadcast, train full precision, upload.

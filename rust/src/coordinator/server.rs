@@ -16,7 +16,10 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comms::{pack_ternary, rebuild_update, DenseGlobal, Message, TernaryGlobal};
+use crate::comms::{
+    pack_ternary, rebuild_update, CodedGlobal, DenseGlobal, Message, TernaryGlobal,
+};
+use crate::compress::{self, CodecSpec};
 use crate::config::{ExperimentConfig, Protocol, Task};
 use crate::coordinator::aggregation::weighted_average;
 use crate::coordinator::backend::{Backend, TrainMode};
@@ -203,6 +206,7 @@ impl<'a> Orchestrator<'a> {
                         shard,
                         local_epochs: cfg.local_epochs,
                         lr: cfg.lr,
+                        codec: cfg.codec,
                     })
                     .collect();
                 Box::new(Loopback::new(runtimes))
@@ -366,12 +370,26 @@ impl<'a> Orchestrator<'a> {
         let shapes: Vec<Vec<usize>> =
             schema.params.iter().map(|p| p.shape.clone()).collect();
 
-        let down_msg = match self.cfg.protocol {
-            Protocol::TFedAvg => Message::TernaryGlobal(self.ternary_broadcast(round, &schema)),
-            Protocol::FedAvg => Message::DenseGlobal(DenseGlobal {
+        let down_msg = match (self.cfg.protocol, self.cfg.codec) {
+            (Protocol::TFedAvg, _) => {
+                Message::TernaryGlobal(self.ternary_broadcast(round, &schema))
+            }
+            (Protocol::FedAvg, CodecSpec::Dense) => Message::DenseGlobal(DenseGlobal {
                 round: round as u32,
                 tensors: self.global.tensors.iter().map(|t| t.data.clone()).collect(),
             }),
+            (Protocol::FedAvg, spec) => {
+                // registry codec: compress the broadcast once, pre-dispatch.
+                // Stochastic codecs draw from a round-forked generator —
+                // one fork per round, before the per-client forks, so the
+                // sequence is identical on every transport / worker count.
+                let codec = compress::build(spec)?;
+                let mut crng = self.rng.fork(0xC0DE0 + round as u64);
+                Message::CodedGlobal(CodedGlobal {
+                    round: round as u32,
+                    update: compress::compress(codec.as_ref(), &self.global, &mut crng)?,
+                })
+            }
             _ => unreachable!("centralized protocols never reach round_federated"),
         };
 
@@ -383,7 +401,13 @@ impl<'a> Orchestrator<'a> {
             .map(|&cid| {
                 let tag = cid as u64 + round as u64 * 7919;
                 let (rng_seed, rng_stream) = self.rng.fork_params(tag);
-                RoundAssign { round: round as u32, client_id: cid as u32, rng_seed, rng_stream }
+                RoundAssign {
+                    round: round as u32,
+                    client_id: cid as u32,
+                    rng_seed,
+                    rng_stream,
+                    codec: self.cfg.codec,
+                }
             })
             .collect();
 
@@ -411,7 +435,9 @@ impl<'a> Orchestrator<'a> {
                     let rebuilt = rebuild_update(&u, &shapes)?;
                     updates.push((u.num_samples, rebuilt));
                 }
-                (Protocol::FedAvg, Message::DenseUpdate(u)) => {
+                (Protocol::FedAvg, Message::DenseUpdate(u))
+                    if self.cfg.codec == CodecSpec::Dense =>
+                {
                     loss_acc += u.train_loss as f64;
                     let mut p = ParamSet::zeros(&schema);
                     if u.tensors.len() != p.tensors.len() {
@@ -430,6 +456,22 @@ impl<'a> Orchestrator<'a> {
                         }
                         t.data = data;
                     }
+                    updates.push((u.num_samples, p));
+                }
+                (Protocol::FedAvg, Message::CodedUpdate(u))
+                    if self.cfg.codec != CodecSpec::Dense =>
+                {
+                    if u.update.codec != self.cfg.codec {
+                        bail!(
+                            "client {} replied with codec {}, negotiated {}",
+                            selected[slot],
+                            u.update.codec.name(),
+                            self.cfg.codec.name()
+                        );
+                    }
+                    loss_acc += u.train_loss as f64;
+                    let codec = compress::build(self.cfg.codec)?;
+                    let p = compress::decompress(codec.as_ref(), &u.update, &shapes)?;
                     updates.push((u.num_samples, p));
                 }
                 (_, other) => bail!(

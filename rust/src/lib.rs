@@ -12,12 +12,15 @@
 //!   artifact per (model × mode × batch size).
 //! * **Layer 3** — this crate: the federated coordinator (client selection,
 //!   concurrent round orchestration, aggregation, ternary re-quantization),
+//!   the `compress` codec registry (ternary, STC, stochastic k-bit
+//!   quantization, fp16/dense baselines) behind one `Compressor` trait,
 //!   the wire codec with byte accounting, the `transport` subsystem
 //!   (framed wire protocol over in-process loopback or TCP), the data
 //!   pipeline, and the PJRT runtime that executes the artifacts. Python
 //!   never runs at request time.
 
 pub mod comms;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -10,6 +10,8 @@
 //! Examples:
 //!   tfed run --protocol tfedavg --task mnist --rounds 30
 //!   tfed run --protocol fedavg --task mnist --nc 2 --clients 10
+//!   tfed run --codec stc:k=0.01 --rounds 30          # FedAvg + STC payloads
+//!   tfed run --codec quant8 --rounds 30              # 8-bit stochastic quant
 //!   tfed serve --listen 127.0.0.1:7878 --clients 4 --native
 //!   tfed client --connect 127.0.0.1:7878 --client-id 0
 //!   tfed inspect
@@ -20,6 +22,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::{materialize_shard, FaultSpec, Orchestrator};
@@ -41,6 +44,7 @@ fn main() {
 fn real_main() -> Result<()> {
     let args = Cli::new("tfed — Ternary Compression for Communication-Efficient Federated Learning (TNNLS 2020 reproduction)")
         .opt("protocol", "tfedavg", "baseline | ttq | fedavg | tfedavg")
+        .opt("codec", "auto", "ternary | dense | fp16 | quant<bits> | stc:k=<frac> | auto")
         .opt("task", "mnist", "mnist | cifar")
         .opt("clients", "10", "total clients N")
         .opt("participation", "1.0", "participation ratio lambda")
@@ -77,9 +81,26 @@ fn real_main() -> Result<()> {
 
 /// Assemble the experiment config from CLI knobs (shared by run + serve).
 fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
-    let protocol = Protocol::parse(&args.get("protocol")?)?;
+    let mut protocol = Protocol::parse(&args.get("protocol")?)?;
+    let codec_arg = args.get("codec")?;
+    let codec = if codec_arg == "auto" {
+        None
+    } else {
+        Some(CodecSpec::parse(&codec_arg)?)
+    };
+    // `--codec quant8` alone means "FedAvg with quant8 payloads"; an
+    // explicit --protocol always wins (and validate() rejects impossible
+    // pairings like tfedavg+fp16)
+    if let Some(spec) = codec {
+        if !args.is_set("protocol") {
+            protocol = Protocol::for_codec(spec);
+        }
+    }
     let task = Task::parse(&args.get("task")?)?;
     let mut cfg = ExperimentConfig::table2(protocol, task, args.get_u64("seed")?);
+    if let Some(spec) = codec {
+        cfg.codec = spec;
+    }
     if !protocol.is_centralized() {
         cfg.n_clients = args.get_usize("clients")?;
         cfg.participation = args.get_f64("participation")?;
@@ -100,6 +121,7 @@ fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
         cfg.train_samples = ts;
     }
     cfg.native_backend = args.flag("native");
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -227,6 +249,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         shard,
         local_epochs: cfg.local_epochs,
         lr: cfg.lr,
+        codec: cfg.codec,
     };
     let rounds = client.serve(&runtime)?;
     println!(

@@ -63,6 +63,13 @@ impl Transport for Loopback<'_> {
             Ctrl::Assign(a) => a,
             other => bail!("expected assign frame, got {other:?}"),
         };
+        if assign.codec != link.runtime.codec {
+            bail!(
+                "round assigned codec {} but client {cid} is configured for {}",
+                assign.codec.name(),
+                link.runtime.codec.name()
+            );
+        }
 
         // downstream payload arrives as prebuilt frame bytes, decoded at
         // the "client" exactly as the TCP path would
@@ -98,6 +105,7 @@ impl Transport for Loopback<'_> {
 mod tests {
     use super::*;
     use crate::comms::DenseGlobal;
+    use crate::compress::CodecSpec;
     use crate::coordinator::backend::NativeBackend;
     use crate::coordinator::client::ShardData;
     use crate::model::{init_params, mlp_schema};
@@ -125,7 +133,13 @@ mod tests {
     }
 
     fn assign(cid: u32) -> RoundAssign {
-        RoundAssign { round: 1, client_id: cid, rng_seed: 99, rng_stream: cid as u64 }
+        RoundAssign {
+            round: 1,
+            client_id: cid,
+            rng_seed: 99,
+            rng_stream: cid as u64,
+            codec: CodecSpec::Dense,
+        }
     }
 
     #[test]
@@ -137,6 +151,7 @@ mod tests {
             shard: tiny_shard(1, 16),
             local_epochs: 1,
             lr: 0.05,
+            codec: CodecSpec::Dense,
         }]);
         let down = dense_broadcast(2);
         let wire = encode_data_frame(&down).unwrap();
@@ -167,6 +182,7 @@ mod tests {
                 shard: tiny_shard(3, 12),
                 local_epochs: 1,
                 lr: 0.05,
+                codec: CodecSpec::Dense,
             }])
         };
         let wire = encode_data_frame(&dense_broadcast(4)).unwrap();

@@ -21,7 +21,7 @@
 //!   | -- Hello{client_id} --------> |       (registration)
 //!   | <------- Config{cfg} -------- |       (experiment parameters)
 //!   |                               |  per round, per selected client:
-//!   | <--- Assign{round,seed} ----- |       (control)
+//!   | <- Assign{round,seed,codec} - |       (control)
 //!   | <--- Data{TernaryGlobal} ---- |       (downstream payload)
 //!   | ---- Data{TernaryUpdate} ---> |       (upstream payload)
 //!   | <-------- Shutdown ---------- |       (experiment over)
@@ -29,7 +29,10 @@
 //!
 //! The round assignment carries the server-derived RNG seed, so results are
 //! bit-identical regardless of transport, worker-thread interleaving, or
-//! process placement.
+//! process placement. It also names the round's payload codec
+//! (`compress::CodecSpec`) — both ends verify it against their configured
+//! codec before decoding a payload, so a codec mismatch is a clean
+//! negotiation error, never silent garbage.
 
 pub mod frame;
 pub mod loopback;
@@ -40,6 +43,7 @@ use anyhow::{bail, Result};
 
 use crate::comms::messages::{Reader, Writer};
 use crate::comms::Message;
+use crate::compress::CodecSpec;
 use crate::config::{ExperimentConfig, Protocol, Task};
 
 pub use frame::{crc32, Frame, FrameError, FrameKind, HEADER_BYTES, MAX_FRAME};
@@ -50,12 +54,16 @@ pub use tcp::{TcpBinding, TcpClient, TcpTransport};
 /// Per-round, per-client work order. `rng_seed`/`rng_stream` reproduce the
 /// exact `Pcg` the sequential seed orchestrator would have forked, so a
 /// remote client trains with the same randomness as an in-process one.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `codec` is the negotiated payload codec for this round's data frames —
+/// both ends verify it against their configured codec before touching a
+/// payload.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundAssign {
     pub round: u32,
     pub client_id: u32,
     pub rng_seed: u64,
     pub rng_stream: u64,
+    pub codec: CodecSpec,
 }
 
 /// Control-plane messages (everything that is not a model payload).
@@ -84,6 +92,7 @@ impl Ctrl {
                 w.u32(a.client_id);
                 w.u64(a.rng_seed);
                 w.u64(a.rng_stream);
+                w.bytes(&a.codec.to_wire());
                 FrameKind::Assign
             }
             Ctrl::Shutdown => FrameKind::Shutdown,
@@ -101,6 +110,9 @@ impl Ctrl {
                 client_id: r.u32()?,
                 rng_seed: r.u64()?,
                 rng_stream: r.u64()?,
+                codec: CodecSpec::from_wire(
+                    r.raw(CodecSpec::WIRE_BYTES)?.try_into().unwrap(),
+                )?,
             }),
             FrameKind::Shutdown => Ctrl::Shutdown,
             FrameKind::Data => bail!("data frame is not a control message"),
@@ -136,6 +148,7 @@ fn encode_config(w: &mut Writer, cfg: &ExperimentConfig) {
     w.u64(cfg.train_samples as u64);
     w.u64(cfg.test_samples as u64);
     w.u8(cfg.native_backend as u8);
+    w.bytes(&cfg.codec.to_wire());
 }
 
 fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
@@ -167,6 +180,7 @@ fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
         train_samples: r.u64()? as usize,
         test_samples: r.u64()? as usize,
         native_backend: r.u8()? != 0,
+        codec: CodecSpec::from_wire(r.raw(CodecSpec::WIRE_BYTES)?.try_into().unwrap())?,
     })
 }
 
@@ -226,6 +240,14 @@ mod tests {
                 client_id: 9,
                 rng_seed: 0xDEAD_BEEF_0BAD_CAFE,
                 rng_stream: 12345,
+                codec: CodecSpec::Ternary,
+            }),
+            Ctrl::Assign(RoundAssign {
+                round: 8,
+                client_id: 0,
+                rng_seed: 1,
+                rng_stream: 2,
+                codec: CodecSpec::Stc { k: 0.05 },
             }),
             Ctrl::Shutdown,
         ];
@@ -246,6 +268,7 @@ mod tests {
         cfg.nc = 3;
         cfg.beta = 0.45;
         cfg.native_backend = true;
+        cfg.codec = CodecSpec::Quant { bits: 4 };
         let f = Ctrl::Config(cfg.clone()).to_frame();
         match Ctrl::from_frame(&f).unwrap() {
             Ctrl::Config(got) => assert_eq!(got, cfg),

@@ -228,6 +228,13 @@ impl TcpClient {
                     let a = pending
                         .take()
                         .ok_or_else(|| anyhow!("data frame with no round assignment"))?;
+                    if a.codec != runtime.codec {
+                        bail!(
+                            "round assigned codec {} but this client is configured for {}",
+                            a.codec.name(),
+                            runtime.codec.name()
+                        );
+                    }
                     let down = Message::decode(&f.payload)?;
                     let mut rng = Pcg::new(a.rng_seed, a.rng_stream);
                     let up = runtime.handle_round(&mut rng, &down)?;
@@ -280,6 +287,7 @@ mod tests {
                     },
                     local_epochs: 1,
                     lr: 0.05,
+                    codec: got_cfg.codec,
                 };
                 let rounds = client.serve(&runtime).unwrap();
                 (got_cfg, rounds, client.stats)
@@ -294,8 +302,13 @@ mod tests {
                 tensors: params.tensors.iter().map(|t| t.data.clone()).collect(),
             });
             let down_wire = crate::transport::encode_data_frame(&down).unwrap();
-            let assign =
-                RoundAssign { round: 1, client_id: 0, rng_seed: 5, rng_stream: 0 };
+            let assign = RoundAssign {
+                round: 1,
+                client_id: 0,
+                rng_seed: 5,
+                rng_stream: 0,
+                codec: cfg.codec,
+            };
             let up = transport.round_trip(0, &assign, &down_wire).unwrap();
             assert!(matches!(up, Message::DenseUpdate(_)));
             transport.shutdown().unwrap();

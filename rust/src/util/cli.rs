@@ -163,6 +163,12 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Was this option explicitly given on the command line (as opposed to
+    /// falling back to its declared default)?
+    pub fn is_set(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -219,6 +225,14 @@ mod tests {
         assert_eq!(a.get_f64("lr").unwrap(), 0.05); // default
         assert!(a.flag("quiet"));
         assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn is_set_distinguishes_defaults() {
+        let a = cli().parse(&argv("--model mlp --rounds 7")).unwrap();
+        assert!(a.is_set("rounds"));
+        assert!(!a.is_set("lr")); // defaulted
+        assert!(!a.is_set("nonexistent"));
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::io::{BufRead, BufReader, Read};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
+use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::{materialize_data, FaultSpec, Orchestrator};
@@ -49,6 +50,7 @@ fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::metrics::RunMetrics, tfed::mod
                     shard,
                     local_epochs: got_cfg.local_epochs,
                     lr: got_cfg.lr,
+                    codec: got_cfg.codec,
                 };
                 let rounds = client.serve(&runtime).unwrap();
                 assert_eq!(rounds as usize, got_cfg.rounds);
@@ -73,8 +75,20 @@ fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::metrics::RunMetrics, tfed::mod
 
 #[test]
 fn tcp_matches_loopback_bit_for_bit() {
-    for protocol in [Protocol::TFedAvg, Protocol::FedAvg] {
-        let cfg = small_cfg(protocol);
+    // protocol x codec grid: the paper's two protocols plus every coded
+    // FedAvg variant (stochastic quant included — its rounding randomness
+    // is server-seeded, so transports must still agree bit-for-bit)
+    let mut cfgs = vec![
+        small_cfg(Protocol::TFedAvg),
+        small_cfg(Protocol::FedAvg),
+    ];
+    for codec in ["fp16", "quant8", "quant1", "stc:k=0.05", "ternary"] {
+        let mut cfg = small_cfg(Protocol::FedAvg);
+        cfg.codec = CodecSpec::parse(codec).unwrap();
+        cfgs.push(cfg);
+    }
+    for cfg in cfgs {
+        let label = format!("{:?}/{}", cfg.protocol, cfg.codec.name());
         // loopback reference
         let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
         let mut lb = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
@@ -85,12 +99,12 @@ fn tcp_matches_loopback_bit_for_bit() {
         assert_eq!(
             lb.global().l2_distance(&tcp_global),
             0.0,
-            "{protocol:?}: global parameters diverged between transports"
+            "{label}: global parameters diverged between transports"
         );
         assert_eq!(lb.metrics.records.len(), tcp_metrics.records.len());
         for (l, t) in lb.metrics.records.iter().zip(&tcp_metrics.records) {
-            assert_eq!(l.up_bytes, t.up_bytes, "{protocol:?} round {}", l.round);
-            assert_eq!(l.down_bytes, t.down_bytes, "{protocol:?} round {}", l.round);
+            assert_eq!(l.up_bytes, t.up_bytes, "{label} round {}", l.round);
+            assert_eq!(l.down_bytes, t.down_bytes, "{label} round {}", l.round);
             assert_eq!(l.up_frames, t.up_frames);
             assert_eq!(l.down_frames, t.down_frames);
             assert_eq!(l.selected, t.selected);
