@@ -11,8 +11,9 @@
 //! Table-IV communication numbers are transport-independent.
 
 use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
-use tfed::coordinator::server::{materialize_data, FaultSpec, Orchestrator};
+use tfed::coordinator::server::{materialize_data, Orchestrator};
 use tfed::coordinator::ClientRuntime;
 use tfed::metrics::RunMetrics;
 use tfed::model::ParamSet;
@@ -68,7 +69,7 @@ fn main() -> anyhow::Result<()> {
             let mut orch = Orchestrator::with_transport(
                 cfg.clone(),
                 backend.as_ref(),
-                FaultSpec::default(),
+                AvailabilityModel::always_on(),
                 Box::new(transport),
             )?;
             // always release the waiting clients, even when the run fails —

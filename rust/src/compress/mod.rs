@@ -246,6 +246,19 @@ fn take_f64(
 
 /// One payload codec. Implementations are stateless per call (`&self`) and
 /// shared across round-driver worker threads.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::compress::{self, CodecSpec};
+/// use tfed::util::rng::Pcg;
+///
+/// let codec = compress::build(CodecSpec::parse("fp16").unwrap()).unwrap();
+/// let data = vec![0.5f32, -1.25, 3.0];
+/// let mut rng = Pcg::seeded(1); // ignored by deterministic codecs
+/// let wire = codec.encode_tensor(&data, &mut rng).unwrap();
+/// let back = codec.decode_tensor(&wire, data.len()).unwrap();
+/// assert_eq!(back, data); // these values are exact in half precision
+/// ```
 pub trait Compressor: Send + Sync {
     /// The spec this instance was built from (carries the wire identity).
     fn spec(&self) -> CodecSpec;

@@ -122,6 +122,10 @@ pub struct ExperimentConfig {
     pub nc: usize,
     /// unbalancedness beta (eq. 29); 1.0 = balanced
     pub beta: f64,
+    /// Dirichlet(alpha) label-skew partition (Hsu et al. 2019); 0.0 =
+    /// disabled (nc/beta drive the split). When > 0, nc and beta must be
+    /// left at their IID/balanced defaults.
+    pub dirichlet_alpha: f64,
     /// local batch size B (must have a matching train artifact)
     pub batch: usize,
     /// local epochs E per round
@@ -153,6 +157,7 @@ impl ExperimentConfig {
             participation: 1.0,
             nc: 10,
             beta: 1.0,
+            dirichlet_alpha: 0.0,
             batch: 64,
             local_epochs: 5,
             rounds: 30,
@@ -205,6 +210,17 @@ impl ExperimentConfig {
         if !(self.beta > 0.0 && self.beta <= 1.0) {
             bail!("beta must be in (0, 1]");
         }
+        if self.dirichlet_alpha != 0.0 {
+            if !(self.dirichlet_alpha > 0.0 && self.dirichlet_alpha.is_finite()) {
+                bail!(
+                    "dirichlet alpha must be positive and finite (got {})",
+                    self.dirichlet_alpha
+                );
+            }
+            if self.nc < 10 || self.beta != 1.0 {
+                bail!("dirichlet partition replaces nc/beta; leave nc >= 10 and beta = 1");
+            }
+        }
         if !(self.lr > 0.0 && self.lr.is_finite()) {
             bail!("lr must be positive and finite (got {})", self.lr);
         }
@@ -248,18 +264,27 @@ impl ExperimentConfig {
         self.participation = 1.0;
         self.nc = usize::MAX;
         self.beta = 1.0;
+        self.dirichlet_alpha = 0.0;
         self
     }
 
     /// One-line summary for logs/metrics. The codec is appended only when
-    /// it differs from the protocol's native format, so default runs
-    /// (T-FedAvg/ternary, FedAvg/dense) keep their pre-codec-registry
-    /// summaries byte-for-byte.
+    /// it differs from the protocol's native format, and the Nc field
+    /// shows `Dir(alpha)` only under a Dirichlet partition, so default
+    /// runs (T-FedAvg/ternary, FedAvg/dense, nc/beta splits) keep their
+    /// pre-scenario-engine summaries byte-for-byte.
     pub fn summary(&self) -> String {
         let codec = if self.codec != self.protocol.default_codec() {
             format!(" codec={}", self.codec.name())
         } else {
             String::new()
+        };
+        let nc = if self.dirichlet_alpha != 0.0 {
+            format!("Dir({})", self.dirichlet_alpha)
+        } else if self.nc >= 10 {
+            "IID".to_string()
+        } else {
+            self.nc.to_string()
         };
         format!(
             "{} on {} | N={} lambda={} Nc={} beta={} B={} E={} rounds={} lr={} seed={}{codec}",
@@ -267,7 +292,7 @@ impl ExperimentConfig {
             self.task.name(),
             self.n_clients,
             self.participation,
-            if self.nc >= 10 { "IID".to_string() } else { self.nc.to_string() },
+            nc,
             self.beta,
             self.batch,
             self.local_epochs,
@@ -333,6 +358,39 @@ mod tests {
         let mut c = ok.clone();
         c.protocol = Protocol::Baseline;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dirichlet_alpha_validation() {
+        let ok = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        let mut c = ok.clone();
+        c.dirichlet_alpha = 0.5;
+        c.validate().unwrap();
+        // bad alpha values
+        for alpha in [-0.5, f64::NAN, f64::INFINITY] {
+            let mut c = ok.clone();
+            c.dirichlet_alpha = alpha;
+            assert!(c.validate().is_err(), "alpha={alpha}");
+        }
+        // dirichlet + nc/beta partitions are mutually exclusive
+        let mut c = ok.clone();
+        c.dirichlet_alpha = 0.5;
+        c.nc = 2;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.dirichlet_alpha = 0.5;
+        c.beta = 0.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn summary_mentions_dirichlet_only_when_set() {
+        let c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        assert!(c.summary().contains("Nc=IID"));
+        assert!(!c.summary().contains("Dir("));
+        let mut c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        c.dirichlet_alpha = 0.5;
+        assert!(c.summary().contains("Nc=Dir(0.5)"), "{}", c.summary());
     }
 
     #[test]

@@ -1,11 +1,136 @@
 //! Server aggregation: the FedAvg data-size-weighted average (eq. 2 /
-//! Algorithm 2 server step), applied to rebuilt client models.
+//! Algorithm 2 server step), as a *streaming* fold.
+//!
+//! The seed buffered every rebuilt client model and averaged at the end —
+//! `O(clients × model)` floats, which caps fleet size long before the
+//! ROADMAP's thousands-of-clients target. [`Aggregator`] instead folds
+//! each arriving update into a single model-sized accumulator and lets
+//! the caller drop the update immediately, so peak memory is `O(model)`
+//! regardless of how many clients report.
+//!
+//! **Equivalence argument** (DESIGN.md §8): the batch path computed
+//! `acc += (n_k / total) · θ_k` in selection order with `total` summed
+//! up front. The round driver knows every selected client's sample count
+//! *before* dispatch (server-side shard sizes), so the streaming fold
+//! applies the identical weight `n_k / total` in the identical order —
+//! the same float-op sequence, hence bit-identical results. The batch
+//! [`weighted_average`] is now a thin wrapper over the fold and the
+//! regression tests compare both against an independent reference.
 
 use anyhow::{bail, Result};
 
-use crate::model::ParamSet;
+use crate::model::{ModelSchema, ParamSet};
 
-/// theta_{r+1} = sum_k (|D_k| / sum |D_k|) * theta_k.
+/// Streaming eq.-2 accumulator: `θ_{r+1} = Σ_k (n_k / total) · θ_k`.
+///
+/// `total = Σ_k n_k` must be known at construction (the round driver
+/// derives it from its own shard sizes over the surviving selection);
+/// each [`fold`](Aggregator::fold) then applies the final weight
+/// immediately. [`finish`](Aggregator::finish) verifies that exactly the
+/// expected samples arrived and that the result is finite.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::coordinator::aggregation::Aggregator;
+/// use tfed::model::{init_params, mlp_schema};
+/// use tfed::util::rng::Pcg;
+///
+/// let schema = mlp_schema();
+/// let mut rng = Pcg::seeded(1);
+/// let mut agg = Aggregator::for_schema(&schema, 300).unwrap();
+/// for _ in 0..3 {
+///     let update = init_params(&schema, &mut rng);
+///     agg.fold(100, &update).unwrap(); // update can be dropped right here
+/// }
+/// let global = agg.finish().unwrap();
+/// assert_eq!(global.numel(), schema.param_count());
+/// ```
+pub struct Aggregator {
+    acc: ParamSet,
+    total: u64,
+    folded_samples: u64,
+    folded_updates: usize,
+}
+
+impl Aggregator {
+    /// Start from a zeroed accumulator shaped by `schema`, expecting
+    /// `total` samples (> 0) across all folds.
+    pub fn for_schema(schema: &ModelSchema, total: u64) -> Result<Self> {
+        Self::start(ParamSet::zeros(schema), total)
+    }
+
+    /// Start from an explicit (zeroed) accumulator — for callers that
+    /// shape the model without a schema at hand.
+    pub fn start(acc: ParamSet, total: u64) -> Result<Self> {
+        if total == 0 {
+            bail!("aggregation expects > 0 total samples");
+        }
+        Ok(Aggregator { acc, total, folded_samples: 0, folded_updates: 0 })
+    }
+
+    /// Fold one client update, weighted by its sample count. The update
+    /// is only borrowed; the caller frees it right after, keeping peak
+    /// memory at one model.
+    pub fn fold(&mut self, num_samples: u64, update: &ParamSet) -> Result<()> {
+        if update.tensors.len() != self.acc.tensors.len() {
+            bail!(
+                "update has {} tensors, accumulator has {}",
+                update.tensors.len(),
+                self.acc.tensors.len()
+            );
+        }
+        for (a, u) in self.acc.tensors.iter().zip(&update.tensors) {
+            if a.data.len() != u.data.len() {
+                bail!(
+                    "update tensor size mismatch: {} values for accumulator shape {:?}",
+                    u.data.len(),
+                    a.shape
+                );
+            }
+        }
+        let w = (num_samples as f64 / self.total as f64) as f32;
+        self.acc.axpy(w, update);
+        self.folded_samples = self.folded_samples.saturating_add(num_samples);
+        self.folded_updates += 1;
+        Ok(())
+    }
+
+    /// Updates folded so far.
+    pub fn folded(&self) -> usize {
+        self.folded_updates
+    }
+
+    /// Accumulator footprint in f32 elements — exactly one model,
+    /// constant across the whole fold (asserted by the 512-client scale
+    /// test, the O(model) memory guarantee).
+    pub fn accumulator_elems(&self) -> usize {
+        self.acc.numel()
+    }
+
+    /// Complete the fold: at least one update, exactly the expected
+    /// sample total, and a finite result.
+    pub fn finish(self) -> Result<ParamSet> {
+        if self.folded_updates == 0 {
+            bail!("no updates to aggregate");
+        }
+        if self.folded_samples != self.total {
+            bail!(
+                "aggregated {} of {} expected samples",
+                self.folded_samples,
+                self.total
+            );
+        }
+        if !self.acc.is_finite() {
+            bail!("aggregated model contains non-finite values");
+        }
+        Ok(self.acc)
+    }
+}
+
+/// `θ_{r+1} = Σ_k (|D_k| / Σ|D_k|) · θ_k` — the batch convenience wrapper
+/// over [`Aggregator`] for callers that already hold every update
+/// (benches, tests, offline tools). Bit-identical to the streaming fold
+/// by construction.
 pub fn weighted_average(updates: &[(u64, ParamSet)]) -> Result<ParamSet> {
     if updates.is_empty() {
         bail!("no updates to aggregate");
@@ -16,16 +141,11 @@ pub fn weighted_average(updates: &[(u64, ParamSet)]) -> Result<ParamSet> {
     }
     let mut acc = updates[0].1.clone();
     acc.scale(0.0);
+    let mut agg = Aggregator::start(acc, total)?;
     for (n, p) in updates {
-        if p.tensors.len() != acc.tensors.len() {
-            bail!("update tensor count mismatch");
-        }
-        acc.axpy((*n as f64 / total as f64) as f32, p);
+        agg.fold(*n, p)?;
     }
-    if !acc.is_finite() {
-        bail!("aggregated model contains non-finite values");
-    }
-    Ok(acc)
+    agg.finish()
 }
 
 #[cfg(test)]
@@ -35,6 +155,27 @@ mod tests {
     use crate::model::init_params;
     use crate::util::proptest::forall;
     use crate::util::rng::Pcg;
+
+    /// The pre-refactor batch implementation, kept verbatim as the
+    /// bit-identity reference for both the wrapper and the streaming fold.
+    fn batch_reference(updates: &[(u64, ParamSet)]) -> ParamSet {
+        let total: u64 = updates.iter().map(|(n, _)| *n).sum();
+        let mut acc = updates[0].1.clone();
+        acc.scale(0.0);
+        for (n, p) in updates {
+            acc.axpy((*n as f64 / total as f64) as f32, p);
+        }
+        acc
+    }
+
+    fn assert_bitwise_eq(a: &ParamSet, b: &ParamSet) {
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        for (x, y) in a.tensors.iter().zip(&b.tensors) {
+            for (u, v) in x.data.iter().zip(&y.data) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{u} != {v}");
+            }
+        }
+    }
 
     #[test]
     fn equal_weights_is_mean() {
@@ -111,5 +252,107 @@ mod tests {
         let mut rng = Pcg::seeded(3);
         let a = init_params(&schema, &mut rng);
         assert!(weighted_average(&[(0, a)]).is_err());
+        assert!(Aggregator::for_schema(&schema, 0).is_err());
+    }
+
+    #[test]
+    fn streaming_matches_batch_bitwise_over_random_fleets() {
+        forall(64, |rng| {
+            let schema = toy_schema();
+            let mut prng = Pcg::seeded(rng.next_u64());
+            let k = 1 + rng.below(12) as usize;
+            let fleet: Vec<(u64, ParamSet)> = (0..k)
+                .map(|_| (1 + rng.below(5_000) as u64, init_params(&schema, &mut prng)))
+                .collect();
+            let total: u64 = fleet.iter().map(|(n, _)| *n).sum();
+
+            let mut agg = Aggregator::for_schema(&schema, total).unwrap();
+            for (n, p) in &fleet {
+                agg.fold(*n, p).unwrap();
+            }
+            let streamed = agg.finish().unwrap();
+
+            let reference = batch_reference(&fleet);
+            assert_bitwise_eq(&streamed, &reference);
+            let wrapped = weighted_average(&fleet).unwrap();
+            assert_bitwise_eq(&wrapped, &reference);
+        });
+    }
+
+    #[test]
+    fn streaming_memory_is_one_model_at_512_clients() {
+        // O(model) acceptance check: fold 512 clients one at a time, each
+        // update generated and dropped inside the loop; the accumulator
+        // footprint never grows past a single model.
+        let schema = toy_schema();
+        let n_clients = 512usize;
+        let per_client = 37u64;
+        let total = per_client * n_clients as u64;
+        let model_elems = schema.param_count();
+
+        let mut agg = Aggregator::for_schema(&schema, total).unwrap();
+        for cid in 0..n_clients {
+            let mut prng = Pcg::new(0xA66, cid as u64);
+            let update = init_params(&schema, &mut prng);
+            agg.fold(per_client, &update).unwrap();
+            assert_eq!(agg.accumulator_elems(), model_elems, "after client {cid}");
+        }
+        assert_eq!(agg.folded(), n_clients);
+        let streamed = agg.finish().unwrap();
+
+        // regenerate the same fleet and compare bitwise against the
+        // pre-refactor batch implementation
+        let fleet: Vec<(u64, ParamSet)> = (0..n_clients)
+            .map(|cid| {
+                let mut prng = Pcg::new(0xA66, cid as u64);
+                (per_client, init_params(&schema, &mut prng))
+            })
+            .collect();
+        assert_bitwise_eq(&streamed, &batch_reference(&fleet));
+    }
+
+    #[test]
+    fn finish_requires_exact_sample_total() {
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(4);
+        let a = init_params(&schema, &mut rng);
+        // short: folded < total
+        let mut agg = Aggregator::for_schema(&schema, 100).unwrap();
+        agg.fold(60, &a).unwrap();
+        assert!(agg.finish().is_err());
+        // over: folded > total
+        let mut agg = Aggregator::for_schema(&schema, 50).unwrap();
+        agg.fold(60, &a).unwrap();
+        assert!(agg.finish().is_err());
+        // empty fold
+        let agg = Aggregator::for_schema(&schema, 10).unwrap();
+        assert!(agg.finish().is_err());
+    }
+
+    #[test]
+    fn fold_rejects_shape_mismatch() {
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(5);
+        let good = init_params(&schema, &mut rng);
+        let mut agg = Aggregator::for_schema(&schema, 10).unwrap();
+        let mut missing = good.clone();
+        missing.tensors.pop();
+        assert!(agg.fold(5, &missing).is_err());
+        let mut resized = good.clone();
+        resized.tensors[0].data.push(0.0);
+        assert!(agg.fold(5, &resized).is_err());
+        agg.fold(10, &good).unwrap();
+        agg.finish().unwrap();
+    }
+
+    #[test]
+    fn finish_rejects_non_finite() {
+        let schema = toy_schema();
+        let mut rng = Pcg::seeded(6);
+        let mut a = init_params(&schema, &mut rng);
+        a.tensors[0].data[0] = f32::NAN;
+        let mut agg = Aggregator::for_schema(&schema, 10).unwrap();
+        agg.fold(10, &a).unwrap();
+        assert!(agg.finish().is_err());
     }
 }

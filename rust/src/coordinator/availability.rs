@@ -1,0 +1,290 @@
+//! Client availability: per-round dropout schedules and straggler delay
+//! traces — the scenario engine's generalization of the seed's single
+//! [`FaultSpec`](crate::coordinator::server::FaultSpec) dropout knob.
+//!
+//! An [`AvailabilityModel`] answers two questions per round: with what
+//! probability does a selected client drop out of *this* round, and which
+//! survivors reply late (and by how much)? Dropout can change over the
+//! experiment through [`Phase`]s (e.g. a fleet that degrades after round
+//! 20, mirroring diurnal client churn); stragglers inject a fixed reply
+//! delay with some probability, so wall-clock metrics show the tail a
+//! real federation would see.
+//!
+//! All probabilities are validated at construction — outside `[0, 1]` or
+//! NaN is a typed [`AvailabilityError`], never silent nonsense — which is
+//! also where the historically unvalidated `FaultSpec::client_dropout`
+//! gets checked (`TryFrom<FaultSpec>`).
+//!
+//! The default model ([`AvailabilityModel::always_on`]) draws no random
+//! numbers and injects no delays, so default runs stay bit-identical to
+//! the pre-scenario-engine orchestrator.
+
+use std::fmt;
+
+use crate::coordinator::server::FaultSpec;
+
+/// Longest allowed straggler delay: guards against a manifest typo (ms vs
+/// s) freezing a round for hours.
+pub const MAX_STRAGGLER_DELAY_MS: u64 = 60_000;
+
+/// Typed validation error for availability parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AvailabilityError {
+    /// A probability was NaN or outside [0, 1].
+    BadProbability { what: &'static str, value: f64 },
+    /// Phase `from_round`s must be ≥ 1 and strictly increasing.
+    BadPhaseRound { round: usize },
+    /// Straggler delay exceeds [`MAX_STRAGGLER_DELAY_MS`].
+    BadDelay { delay_ms: u64 },
+}
+
+impl fmt::Display for AvailabilityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AvailabilityError::BadProbability { what, value } => {
+                write!(f, "{what} must be in [0, 1], got {value}")
+            }
+            AvailabilityError::BadPhaseRound { round } => {
+                write!(
+                    f,
+                    "phase rounds must be >= 1 and strictly increasing (offending round {round})"
+                )
+            }
+            AvailabilityError::BadDelay { delay_ms } => {
+                write!(
+                    f,
+                    "straggler delay {delay_ms} ms exceeds the {MAX_STRAGGLER_DELAY_MS} ms cap"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for AvailabilityError {}
+
+/// One dropout-schedule step: from round `from_round` (1-based, inclusive)
+/// onward, selected clients drop with probability `dropout` — until a
+/// later phase takes over.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Phase {
+    pub from_round: usize,
+    pub dropout: f64,
+}
+
+/// Validated per-round availability: phased dropout plus straggler delays.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AvailabilityModel {
+    base_dropout: f64,
+    phases: Vec<Phase>,
+    straggler_prob: f64,
+    straggler_delay_ms: u64,
+}
+
+impl Default for AvailabilityModel {
+    fn default() -> Self {
+        Self::always_on()
+    }
+}
+
+impl AvailabilityModel {
+    /// Every client always participates and replies promptly — the
+    /// zero-randomness default; runs under it are bit-identical to the
+    /// pre-availability orchestrator.
+    pub fn always_on() -> Self {
+        AvailabilityModel {
+            base_dropout: 0.0,
+            phases: Vec::new(),
+            straggler_prob: 0.0,
+            straggler_delay_ms: 0,
+        }
+    }
+
+    /// Uniform dropout, no phases, no stragglers (the seed `FaultSpec`
+    /// behavior — but validated).
+    pub fn uniform(dropout: f64) -> Result<Self, AvailabilityError> {
+        Self::new(dropout, Vec::new(), 0.0, 0)
+    }
+
+    /// Full model. Rejects NaN / out-of-range probabilities, unsorted
+    /// phase rounds, and absurd delays with a typed error.
+    pub fn new(
+        base_dropout: f64,
+        phases: Vec<Phase>,
+        straggler_prob: f64,
+        straggler_delay_ms: u64,
+    ) -> Result<Self, AvailabilityError> {
+        check_prob("client dropout probability", base_dropout)?;
+        check_prob("straggler probability", straggler_prob)?;
+        if straggler_delay_ms > MAX_STRAGGLER_DELAY_MS {
+            return Err(AvailabilityError::BadDelay { delay_ms: straggler_delay_ms });
+        }
+        let mut last = 0usize;
+        for p in &phases {
+            check_prob("phase dropout probability", p.dropout)?;
+            if p.from_round == 0 || p.from_round <= last {
+                return Err(AvailabilityError::BadPhaseRound { round: p.from_round });
+            }
+            last = p.from_round;
+        }
+        Ok(AvailabilityModel { base_dropout, phases, straggler_prob, straggler_delay_ms })
+    }
+
+    /// Dropout probability in effect for `round` (1-based): the latest
+    /// phase whose `from_round` has been reached, else the base rate.
+    pub fn dropout_for_round(&self, round: usize) -> f64 {
+        let mut p = self.base_dropout;
+        for phase in &self.phases {
+            if phase.from_round <= round {
+                p = phase.dropout;
+            } else {
+                break;
+            }
+        }
+        p
+    }
+
+    /// Probability that a surviving client replies `straggler_delay_ms`
+    /// late.
+    pub fn straggler_prob(&self) -> f64 {
+        self.straggler_prob
+    }
+
+    /// Reply delay injected for stragglers, in milliseconds.
+    pub fn straggler_delay_ms(&self) -> u64 {
+        self.straggler_delay_ms
+    }
+
+    /// True when stragglers are enabled (the round driver skips the
+    /// per-client RNG draws entirely otherwise, preserving the default
+    /// path's bit-exact RNG stream).
+    pub fn has_stragglers(&self) -> bool {
+        self.straggler_prob > 0.0 && self.straggler_delay_ms > 0
+    }
+}
+
+fn check_prob(what: &'static str, value: f64) -> Result<(), AvailabilityError> {
+    // NaN fails the range check and is rejected (Config validation style)
+    if (0.0..=1.0).contains(&value) {
+        Ok(())
+    } else {
+        Err(AvailabilityError::BadProbability { what, value })
+    }
+}
+
+impl TryFrom<FaultSpec> for AvailabilityModel {
+    type Error = AvailabilityError;
+
+    /// The bugfix path: `FaultSpec`'s public `client_dropout` field was
+    /// historically unvalidated; every conversion into the orchestrator
+    /// now rejects NaN / out-of-range values.
+    fn try_from(faults: FaultSpec) -> Result<Self, AvailabilityError> {
+        Self::uniform(faults.client_dropout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_trivial() {
+        let m = AvailabilityModel::default();
+        assert_eq!(m.dropout_for_round(1), 0.0);
+        assert_eq!(m.dropout_for_round(1000), 0.0);
+        assert!(!m.has_stragglers());
+    }
+
+    #[test]
+    fn rejects_bad_probabilities() {
+        for p in [-0.1, 1.1, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = AvailabilityModel::uniform(p).unwrap_err();
+            assert!(
+                matches!(err, AvailabilityError::BadProbability { .. }),
+                "p={p} err={err}"
+            );
+            let err = AvailabilityModel::new(0.0, Vec::new(), p, 0).unwrap_err();
+            assert!(matches!(err, AvailabilityError::BadProbability { .. }), "p={p}");
+            let phases = vec![Phase { from_round: 5, dropout: p }];
+            assert!(AvailabilityModel::new(0.0, phases, 0.0, 0).is_err(), "p={p}");
+        }
+        // boundaries are fine
+        AvailabilityModel::uniform(0.0).unwrap();
+        AvailabilityModel::uniform(1.0).unwrap();
+    }
+
+    #[test]
+    fn faultspec_conversion_is_validated() {
+        let ok = AvailabilityModel::try_from(FaultSpec { client_dropout: 0.3 }).unwrap();
+        assert_eq!(ok.dropout_for_round(1), 0.3);
+        for p in [-0.5, 1.5, f64::NAN] {
+            let err = AvailabilityModel::try_from(FaultSpec { client_dropout: p });
+            assert!(err.is_err(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn phases_schedule_dropout() {
+        let m = AvailabilityModel::new(
+            0.0,
+            vec![
+                Phase { from_round: 10, dropout: 0.2 },
+                Phase { from_round: 20, dropout: 0.5 },
+            ],
+            0.0,
+            0,
+        )
+        .unwrap();
+        assert_eq!(m.dropout_for_round(1), 0.0);
+        assert_eq!(m.dropout_for_round(9), 0.0);
+        assert_eq!(m.dropout_for_round(10), 0.2);
+        assert_eq!(m.dropout_for_round(19), 0.2);
+        assert_eq!(m.dropout_for_round(20), 0.5);
+        assert_eq!(m.dropout_for_round(10_000), 0.5);
+    }
+
+    #[test]
+    fn rejects_unsorted_or_zero_phases() {
+        let unsorted = vec![
+            Phase { from_round: 20, dropout: 0.1 },
+            Phase { from_round: 10, dropout: 0.2 },
+        ];
+        let err = AvailabilityModel::new(0.0, unsorted, 0.0, 0).unwrap_err();
+        assert!(matches!(err, AvailabilityError::BadPhaseRound { round: 10 }));
+        let zero = vec![Phase { from_round: 0, dropout: 0.1 }];
+        assert!(AvailabilityModel::new(0.0, zero, 0.0, 0).is_err());
+        let dup = vec![
+            Phase { from_round: 5, dropout: 0.1 },
+            Phase { from_round: 5, dropout: 0.2 },
+        ];
+        assert!(AvailabilityModel::new(0.0, dup, 0.0, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_delay() {
+        let err = AvailabilityModel::new(0.0, Vec::new(), 0.5, MAX_STRAGGLER_DELAY_MS + 1);
+        assert!(matches!(err.unwrap_err(), AvailabilityError::BadDelay { .. }));
+        AvailabilityModel::new(0.0, Vec::new(), 0.5, MAX_STRAGGLER_DELAY_MS).unwrap();
+    }
+
+    #[test]
+    fn straggler_flag() {
+        let m = AvailabilityModel::new(0.0, Vec::new(), 0.5, 10).unwrap();
+        assert!(m.has_stragglers());
+        // prob without delay (or delay without prob) is inert
+        let m = AvailabilityModel::new(0.0, Vec::new(), 0.5, 0).unwrap();
+        assert!(!m.has_stragglers());
+        let m = AvailabilityModel::new(0.0, Vec::new(), 0.0, 10).unwrap();
+        assert!(!m.has_stragglers());
+    }
+
+    #[test]
+    fn errors_display() {
+        let e = AvailabilityError::BadProbability {
+            what: "client dropout probability",
+            value: 2.0,
+        };
+        assert!(format!("{e}").contains("[0, 1]"));
+        let e = AvailabilityError::BadDelay { delay_ms: 999_999 };
+        assert!(format!("{e}").contains("cap"));
+    }
+}

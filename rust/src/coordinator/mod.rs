@@ -1,7 +1,11 @@
 //! The federated coordinator — Layer 3, the paper's protocol machinery.
 //!
 //! * `selection` — seeded client sampling (participation ratio lambda)
-//! * `aggregation` — data-size-weighted FedAvg averaging (eq. 2)
+//! * `aggregation` — streaming data-size-weighted FedAvg fold (eq. 2):
+//!   O(model) peak memory at any fleet size, bit-identical to the batch
+//!   average
+//! * `availability` — per-round dropout schedules and straggler delay
+//!   traces (validated probabilities, typed errors)
 //! * `client` — local shard materialization + epoch-chunk batching + the
 //!   `ClientRuntime` round handler shared by loopback and remote clients
 //! * `backend` — compute abstraction: PJRT artifacts or the native mirror
@@ -10,11 +14,14 @@
 //!   via a worker pool, and every cross-network byte is framed and counted
 
 pub mod aggregation;
+pub mod availability;
 pub mod backend;
 pub mod client;
 pub mod selection;
 pub mod server;
 
+pub use aggregation::{weighted_average, Aggregator};
+pub use availability::{AvailabilityError, AvailabilityModel, Phase};
 pub use backend::{Backend, LocalOutcome, NativeBackend, PjrtBackend, TrainMode};
 pub use client::{ClientRuntime, ShardData};
 pub use server::{materialize_data, materialize_shard, run_experiment, Orchestrator};

@@ -21,7 +21,8 @@ use crate::comms::{
 };
 use crate::compress::{self, CodecSpec};
 use crate::config::{ExperimentConfig, Protocol, Task};
-use crate::coordinator::aggregation::weighted_average;
+use crate::coordinator::aggregation::Aggregator;
+use crate::coordinator::availability::AvailabilityModel;
 use crate::coordinator::backend::{Backend, TrainMode};
 use crate::coordinator::client::{ClientRuntime, ShardData};
 use crate::coordinator::selection::{apply_dropout, select_clients};
@@ -37,9 +38,28 @@ use crate::{debug, info};
 
 /// Failure-injection knob (robustness tests): probability that a selected
 /// client drops out of the round after selection.
+///
+/// The seed's single-knob predecessor of
+/// [`AvailabilityModel`](crate::coordinator::availability::AvailabilityModel);
+/// kept as the simple entry point. The probability is validated (in
+/// `[0, 1]`, not NaN) when the spec is converted into an availability
+/// model — i.e. by every orchestrator constructor — with a typed
+/// [`AvailabilityError`](crate::coordinator::availability::AvailabilityError).
 #[derive(Clone, Debug, Default)]
 pub struct FaultSpec {
     pub client_dropout: f64,
+}
+
+impl FaultSpec {
+    /// Validating constructor: rejects NaN and out-of-range probabilities
+    /// up front instead of at orchestrator construction.
+    pub fn new(
+        client_dropout: f64,
+    ) -> Result<Self, crate::coordinator::availability::AvailabilityError> {
+        let spec = FaultSpec { client_dropout };
+        AvailabilityModel::try_from(spec.clone())?;
+        Ok(spec)
+    }
 }
 
 /// Synthesize the datasets and compute the client partition (indices only,
@@ -61,6 +81,7 @@ fn synth_partition(
         n_clients: cfg.n_clients,
         nc: cfg.nc,
         beta: cfg.beta,
+        alpha: cfg.dirichlet_alpha,
         seed: cfg.seed ^ 0x51AB,
     };
     let part = partition(&train, &pspec)?;
@@ -109,6 +130,24 @@ fn default_workers() -> usize {
 }
 
 /// A fully-initialized experiment ready to run round-by-round.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::config::{ExperimentConfig, Protocol, Task};
+/// use tfed::coordinator::backend::make_backend;
+/// use tfed::coordinator::server::Orchestrator;
+///
+/// let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 42);
+/// cfg.n_clients = 4;
+/// cfg.rounds = 2;
+/// cfg.train_samples = 400;
+/// cfg.test_samples = 100;
+/// cfg.native_backend = true; // pure-Rust backend, no artifacts needed
+/// let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+/// let mut orch = Orchestrator::new(cfg, backend.as_ref()).unwrap();
+/// orch.run().unwrap();
+/// assert!(orch.metrics.final_acc() > 0.0);
+/// ```
 pub struct Orchestrator<'a> {
     pub cfg: ExperimentConfig,
     backend: &'a dyn Backend,
@@ -128,7 +167,7 @@ pub struct Orchestrator<'a> {
     /// next w^q init (Algorithm 2's "initialize w^q", our reading)
     last_wq_mean: Vec<f32>,
     rng: Pcg,
-    faults: FaultSpec,
+    availability: AvailabilityModel,
     /// cumulative transport stats at the last round boundary
     stats_mark: LinkStats,
     pub metrics: RunMetrics,
@@ -146,7 +185,18 @@ impl<'a> Orchestrator<'a> {
         backend: &'a dyn Backend,
         faults: FaultSpec,
     ) -> Result<Self> {
-        Self::build(cfg, backend, faults, None)
+        let availability = AvailabilityModel::try_from(faults)?;
+        Self::build(cfg, backend, availability, None)
+    }
+
+    /// Full availability control: phased dropout schedules and straggler
+    /// delay traces (the scenario engine's entry point).
+    pub fn with_availability(
+        cfg: ExperimentConfig,
+        backend: &'a dyn Backend,
+        availability: AvailabilityModel,
+    ) -> Result<Self> {
+        Self::build(cfg, backend, availability, None)
     }
 
     /// Attach an external transport (e.g. `TcpTransport` with remote
@@ -155,7 +205,7 @@ impl<'a> Orchestrator<'a> {
     pub fn with_transport(
         cfg: ExperimentConfig,
         backend: &'a dyn Backend,
-        faults: FaultSpec,
+        availability: AvailabilityModel,
         transport: Box<dyn Transport + 'a>,
     ) -> Result<Self> {
         if cfg.protocol.is_centralized() {
@@ -168,13 +218,13 @@ impl<'a> Orchestrator<'a> {
                 cfg.n_clients
             );
         }
-        Self::build(cfg, backend, faults, Some(transport))
+        Self::build(cfg, backend, availability, Some(transport))
     }
 
     fn build(
         cfg: ExperimentConfig,
         backend: &'a dyn Backend,
-        faults: FaultSpec,
+        availability: AvailabilityModel,
         transport: Option<Box<dyn Transport + 'a>>,
     ) -> Result<Self> {
         cfg.validate()?;
@@ -229,7 +279,7 @@ impl<'a> Orchestrator<'a> {
             ttq_factors: vec![backend.wq_init(); 2 * nq],
             last_wq_mean: vec![backend.wq_init(); nq],
             rng,
-            faults,
+            availability,
             stats_mark: LinkStats::default(),
             metrics,
         })
@@ -300,10 +350,14 @@ impl<'a> Orchestrator<'a> {
         let sw = Stopwatch::start();
         let k = self.cfg.selected_per_round();
         let selected = select_clients(self.cfg.n_clients, k, &mut self.rng);
-        let selected = apply_dropout(&selected, self.faults.client_dropout, &mut self.rng);
+        let dropout = self.availability.dropout_for_round(round);
+        let selected = apply_dropout(&selected, dropout, &mut self.rng);
+        let delays = self.straggler_delays(&selected);
 
         let (train_loss, factors) = match self.cfg.protocol {
-            Protocol::TFedAvg | Protocol::FedAvg => self.round_federated(round, &selected)?,
+            Protocol::TFedAvg | Protocol::FedAvg => {
+                self.round_federated(round, &selected, &delays)?
+            }
             Protocol::Baseline => self.round_centralized(round, TrainMode::Fp)?,
             Protocol::Ttq => self.round_centralized(round, TrainMode::Ttq)?,
         };
@@ -360,10 +414,26 @@ impl<'a> Orchestrator<'a> {
 
     // -- federated rounds (FedAvg + T-FedAvg, Algorithm 2) -------------------
 
+    /// Per-slot reply delays for this round's survivors (milliseconds;
+    /// 0 = prompt). Draws from the round RNG *only* when stragglers are
+    /// configured, so the default path's RNG stream is untouched.
+    fn straggler_delays(&mut self, selected: &[usize]) -> Vec<u64> {
+        if !self.availability.has_stragglers() {
+            return vec![0; selected.len()];
+        }
+        let p = self.availability.straggler_prob();
+        let d = self.availability.straggler_delay_ms();
+        selected
+            .iter()
+            .map(|_| if self.rng.next_f64() < p { d } else { 0 })
+            .collect()
+    }
+
     fn round_federated(
         &mut self,
         round: usize,
         selected: &[usize],
+        delays: &[u64],
     ) -> Result<(f32, Vec<f32>)> {
         let schema = self.backend.schema().clone();
         let qidx = schema.quantized_indices();
@@ -411,14 +481,22 @@ impl<'a> Orchestrator<'a> {
             })
             .collect();
 
-        let replies = self.dispatch(selected, &assigns, &down_msg)?;
+        let replies = self.dispatch(selected, &assigns, &down_msg, delays)?;
 
-        // server side: decode + rebuild + aggregate, in selection order
-        let mut updates: Vec<(u64, ParamSet)> = Vec::with_capacity(selected.len());
+        // server side: decode + rebuild + fold, in selection order. The
+        // streaming Aggregator applies the final eq.-2 weight as each
+        // update arrives — the sample total is known up front from the
+        // server's own shard sizes — so peak memory is one model, not
+        // `clients × model`, and the result is bit-identical to the old
+        // batch average (same float-op sequence; see DESIGN.md §8).
+        let expected_total: u64 =
+            selected.iter().map(|&cid| self.shard_sizes[cid] as u64).sum();
+        let mut agg = Aggregator::for_schema(&schema, expected_total)?;
         let mut loss_acc = 0f64;
         let mut wq_mean = vec![0f32; qidx.len()];
         for (slot, reply) in replies.into_iter().enumerate() {
-            match (self.cfg.protocol, reply) {
+            let expect_n = self.shard_sizes[selected[slot]] as u64;
+            let (num_samples, rebuilt) = match (self.cfg.protocol, reply) {
                 (Protocol::TFedAvg, Message::TernaryUpdate(u)) => {
                     if u.layers.len() != qidx.len() {
                         bail!(
@@ -432,8 +510,7 @@ impl<'a> Orchestrator<'a> {
                         wq_mean[k] += l.wq / selected.len() as f32;
                     }
                     loss_acc += u.train_loss as f64;
-                    let rebuilt = rebuild_update(&u, &shapes)?;
-                    updates.push((u.num_samples, rebuilt));
+                    (u.num_samples, rebuild_update(&u, &shapes)?)
                 }
                 (Protocol::FedAvg, Message::DenseUpdate(u))
                     if self.cfg.codec == CodecSpec::Dense =>
@@ -456,7 +533,7 @@ impl<'a> Orchestrator<'a> {
                         }
                         t.data = data;
                     }
-                    updates.push((u.num_samples, p));
+                    (u.num_samples, p)
                 }
                 (Protocol::FedAvg, Message::CodedUpdate(u))
                     if self.cfg.codec != CodecSpec::Dense =>
@@ -471,20 +548,29 @@ impl<'a> Orchestrator<'a> {
                     }
                     loss_acc += u.train_loss as f64;
                     let codec = compress::build(self.cfg.codec)?;
-                    let p = compress::decompress(codec.as_ref(), &u.update, &shapes)?;
-                    updates.push((u.num_samples, p));
+                    (u.num_samples, compress::decompress(codec.as_ref(), &u.update, &shapes)?)
                 }
                 (_, other) => bail!(
                     "client {} returned unexpected message kind {}",
                     selected[slot],
                     other.kind()
                 ),
+            };
+            if num_samples != expect_n {
+                bail!(
+                    "client {} reported {} samples, server expected {}",
+                    selected[slot],
+                    num_samples,
+                    expect_n
+                );
             }
+            agg.fold(num_samples, &rebuilt)?;
         }
 
         // server aggregation (eq. 2)
-        self.global = weighted_average(&updates)?;
-        debug!("aggregated {} updates from {} clients", updates.len(), selected.len());
+        let folded = agg.folded();
+        self.global = agg.finish()?;
+        debug!("aggregated {} updates from {} clients", folded, selected.len());
         let factors = if self.cfg.protocol == Protocol::TFedAvg {
             self.last_wq_mean = wq_mean.clone();
             wq_mean
@@ -521,11 +607,14 @@ impl<'a> Orchestrator<'a> {
     /// Fan the round out over the transport with a worker pool. Results
     /// come back indexed by selection slot, so downstream aggregation
     /// order (and therefore float summation) is schedule-independent.
+    /// `delays` (per slot, ms) injects straggler latency before a
+    /// client's exchange — it shifts wall time only, never results.
     fn dispatch(
         &self,
         selected: &[usize],
         assigns: &[RoundAssign],
         down: &Message,
+        delays: &[u64],
     ) -> Result<Vec<Message>> {
         let n = selected.len();
         if n == 0 {
@@ -540,7 +629,11 @@ impl<'a> Orchestrator<'a> {
             return selected
                 .iter()
                 .zip(assigns)
-                .map(|(&cid, a)| transport.round_trip(cid, a, &down_wire))
+                .enumerate()
+                .map(|(i, (&cid, a))| {
+                    straggle(delays[i]);
+                    transport.round_trip(cid, a, &down_wire)
+                })
                 .collect();
         }
         let next = AtomicUsize::new(0);
@@ -553,6 +646,7 @@ impl<'a> Orchestrator<'a> {
                     if i >= n {
                         break;
                     }
+                    straggle(delays[i]);
                     let r = transport.round_trip(selected[i], &assigns[i], &down_wire);
                     *slots[i].lock().unwrap() = Some(r);
                 });
@@ -626,6 +720,14 @@ impl<'a> Orchestrator<'a> {
             }
         }
         out
+    }
+}
+
+/// Injected straggler latency: block this slot's worker for `delay_ms`
+/// before its exchange (a slow client, as the server experiences it).
+fn straggle(delay_ms: u64) {
+    if delay_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
     }
 }
 

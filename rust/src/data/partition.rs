@@ -1,13 +1,28 @@
 //! Federated sharding: IID, Nc-class non-IID (Fig. 8/9), unbalanced beta
-//! splits (Fig. 11, eq. 29).
+//! splits (Fig. 11, eq. 29), and Dirichlet(α) label skew (Hsu et al.
+//! 2019, the standard federated non-IID benchmark the scenario engine
+//! sweeps over).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::config::ExperimentConfig;
 use crate::data::synth::Dataset;
 use crate::util::rng::Pcg;
 use crate::util::stats;
 
 /// How to split a dataset across clients.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::data::partition::{partition, PartitionSpec};
+/// use tfed::data::synth::SynthSpec;
+///
+/// let (train, _test) = SynthSpec::mnist_like(1_000, 100, 7).generate();
+/// // Dirichlet(0.5) label skew over 10 clients
+/// let part = partition(&train, &PartitionSpec::dirichlet(10, 0.5, 7)).unwrap();
+/// assert!(part.is_exact_cover(train.len()));
+/// assert!(part.shards.iter().all(|s| !s.is_empty()));
+/// ```
 #[derive(Clone, Debug)]
 pub struct PartitionSpec {
     pub n_clients: usize,
@@ -16,20 +31,103 @@ pub struct PartitionSpec {
     /// unbalancedness ratio beta = median/max of client sizes (eq. 29);
     /// 1.0 = balanced
     pub beta: f64,
+    /// Dirichlet label-skew concentration; 0.0 = disabled (use nc/beta).
+    /// When > 0, each class's client quotas are drawn from
+    /// Dirichlet(alpha · 1_N) and nc/beta are ignored.
+    pub alpha: f64,
     pub seed: u64,
 }
 
 impl PartitionSpec {
     pub fn iid(n_clients: usize, seed: u64) -> Self {
-        PartitionSpec { n_clients, nc: usize::MAX, beta: 1.0, seed }
+        PartitionSpec { n_clients, nc: usize::MAX, beta: 1.0, alpha: 0.0, seed }
     }
 
     pub fn non_iid(n_clients: usize, nc: usize, seed: u64) -> Self {
-        PartitionSpec { n_clients, nc, beta: 1.0, seed }
+        PartitionSpec { n_clients, nc, beta: 1.0, alpha: 0.0, seed }
     }
 
     pub fn unbalanced(n_clients: usize, beta: f64, seed: u64) -> Self {
-        PartitionSpec { n_clients, nc: usize::MAX, beta, seed }
+        PartitionSpec { n_clients, nc: usize::MAX, beta, alpha: 0.0, seed }
+    }
+
+    pub fn dirichlet(n_clients: usize, alpha: f64, seed: u64) -> Self {
+        PartitionSpec { n_clients, nc: usize::MAX, beta: 1.0, alpha, seed }
+    }
+}
+
+/// A named partition regime — the scenario-manifest (and sweep-axis)
+/// surface over [`PartitionSpec`]. Parsed from strings like `iid`,
+/// `nc:2`, `beta:0.5`, `dirichlet:alpha=0.5`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionStrategy {
+    /// Shuffle-and-deal: every client sees every class.
+    Iid,
+    /// Each client holds `nc` classes (paper Fig. 8/9).
+    NonIid { nc: usize },
+    /// Geometric size profile with median/max = beta (paper Fig. 11).
+    Unbalanced { beta: f64 },
+    /// Dirichlet(alpha) label skew (Hsu et al. 2019).
+    Dirichlet { alpha: f64 },
+}
+
+impl PartitionStrategy {
+    /// Parse `iid` | `nc:<k>` | `beta:<b>` | `dirichlet:alpha=<a>`
+    /// (also accepts `dirichlet:<a>`), validating parameters.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let lower = s.to_ascii_lowercase();
+        if lower == "iid" {
+            return Ok(PartitionStrategy::Iid);
+        }
+        if let Some(v) = lower.strip_prefix("nc:") {
+            let nc: usize = v.parse().map_err(|e| anyhow!("nc:{v}: {e}"))?;
+            if nc == 0 {
+                bail!("partition nc must be >= 1");
+            }
+            return Ok(PartitionStrategy::NonIid { nc });
+        }
+        if let Some(v) = lower.strip_prefix("beta:") {
+            let beta: f64 = v.parse().map_err(|e| anyhow!("beta:{v}: {e}"))?;
+            if !(beta > 0.0 && beta <= 1.0) {
+                bail!("partition beta must be in (0, 1], got {beta}");
+            }
+            return Ok(PartitionStrategy::Unbalanced { beta });
+        }
+        if let Some(v) = lower.strip_prefix("dirichlet:") {
+            let v = v.strip_prefix("alpha=").unwrap_or(v);
+            let alpha: f64 = v.parse().map_err(|e| anyhow!("dirichlet:{v}: {e}"))?;
+            if !(alpha > 0.0 && alpha.is_finite()) {
+                bail!("dirichlet alpha must be positive and finite, got {alpha}");
+            }
+            return Ok(PartitionStrategy::Dirichlet { alpha });
+        }
+        bail!("unknown partition strategy {s:?} (iid | nc:<k> | beta:<b> | dirichlet:alpha=<a>)")
+    }
+
+    /// Canonical name, parseable by [`Self::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            PartitionStrategy::Iid => "iid".into(),
+            PartitionStrategy::NonIid { nc } => format!("nc:{nc}"),
+            PartitionStrategy::Unbalanced { beta } => format!("beta:{beta}"),
+            PartitionStrategy::Dirichlet { alpha } => format!("dirichlet:alpha={alpha}"),
+        }
+    }
+
+    /// Write this regime into an experiment config (the same fields the
+    /// `--nc` / `--beta` / `--alpha` CLI flags set, so a manifest cell and
+    /// the equivalent flag-driven invocation are byte-identical).
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        let (nc, beta, alpha) = match *self {
+            PartitionStrategy::Iid => (10, 1.0, 0.0),
+            PartitionStrategy::NonIid { nc } => (nc, 1.0, 0.0),
+            PartitionStrategy::Unbalanced { beta } => (10, beta, 0.0),
+            PartitionStrategy::Dirichlet { alpha } => (10, 1.0, alpha),
+        };
+        cfg.nc = nc;
+        cfg.beta = beta;
+        cfg.dirichlet_alpha = alpha;
     }
 }
 
@@ -142,6 +240,12 @@ pub fn partition(data: &Dataset, spec: &PartitionSpec) -> Result<Partition> {
     if data.len() < spec.n_clients {
         bail!("{} samples cannot cover {} clients", data.len(), spec.n_clients);
     }
+    if spec.alpha != 0.0 {
+        if !(spec.alpha > 0.0 && spec.alpha.is_finite()) {
+            bail!("dirichlet alpha must be positive and finite, got {}", spec.alpha);
+        }
+        return dirichlet_partition(data, spec);
+    }
     let mut rng = Pcg::new(spec.seed, 0x5A4D);
     let sizes = unbalanced_sizes(data.len(), spec.n_clients, spec.beta);
     let c = data.num_classes;
@@ -199,6 +303,84 @@ pub fn partition(data: &Dataset, spec: &PartitionSpec) -> Result<Partition> {
     };
 
     Ok(Partition { shards })
+}
+
+/// Dirichlet(α) label-skew split: per class, client quotas are drawn from
+/// Dirichlet(α · 1_N) and the shuffled class pool is dealt accordingly
+/// (largest-remainder rounding keeps the deal exact). α → 0 concentrates
+/// each class on few clients; α → ∞ approaches the IID class mix. Every
+/// sample is assigned exactly once and every client ends up with at least
+/// one sample (rebalanced deterministically from the largest shard, so a
+/// selected client can always train).
+fn dirichlet_partition(data: &Dataset, spec: &PartitionSpec) -> Result<Partition> {
+    let n = spec.n_clients;
+    let mut rng = Pcg::new(spec.seed, 0xD141);
+    let mut pools: Vec<Vec<u32>> = vec![Vec::new(); data.num_classes];
+    for (i, &y) in data.labels.iter().enumerate() {
+        pools[y as usize].push(i as u32);
+    }
+    let mut shards: Vec<ClientShard> = (0..n)
+        .map(|cid| ClientShard { client_id: cid, indices: Vec::new() })
+        .collect();
+    for pool in pools.iter_mut() {
+        if pool.is_empty() {
+            continue;
+        }
+        rng.shuffle(pool);
+        let w = rng.dirichlet(spec.alpha, n);
+        let quotas = largest_remainder_quotas(&w, pool.len());
+        let mut off = 0;
+        for (cid, &q) in quotas.iter().enumerate() {
+            shards[cid].indices.extend_from_slice(&pool[off..off + q]);
+            off += q;
+        }
+        debug_assert_eq!(off, pool.len());
+    }
+    // a selected-but-empty client cannot train: move one sample at a time
+    // from the currently largest shard (deterministic donor choice)
+    for cid in 0..n {
+        if !shards[cid].indices.is_empty() {
+            continue;
+        }
+        let donor = (0..n)
+            .filter(|&j| j != cid && shards[j].indices.len() > 1)
+            .max_by_key(|&j| shards[j].indices.len())
+            .ok_or_else(|| anyhow!("cannot give every client at least one sample"))?;
+        let moved = shards[donor].indices.pop().unwrap();
+        shards[cid].indices.push(moved);
+    }
+    Ok(Partition { shards })
+}
+
+/// Split `total` items into integer quotas proportional to `w` (which
+/// sums to 1): floor each share, then hand the remainder to the largest
+/// fractional parts (ties broken by lower index — fully deterministic).
+fn largest_remainder_quotas(w: &[f64], total: usize) -> Vec<usize> {
+    let n = w.len();
+    let mut quotas = Vec::with_capacity(n);
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &p) in w.iter().enumerate() {
+        let ideal = p * total as f64;
+        let q = (ideal.floor() as usize).min(total);
+        quotas.push(q);
+        assigned += q;
+        fracs.push((i, ideal - ideal.floor()));
+    }
+    fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut k = 0;
+    while assigned < total {
+        quotas[fracs[k % n].0] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    while assigned > total {
+        // float-edge safety: shave the largest quota
+        let j = (0..n).max_by_key(|&j| quotas[j]).unwrap();
+        quotas[j] -= 1;
+        assigned -= 1;
+    }
+    quotas
 }
 
 #[cfg(test)]
@@ -283,7 +465,13 @@ mod tests {
             let clients = 2 + rng.below(20) as usize;
             let nc = 1 + rng.below(10) as usize;
             let data = toy_data(n);
-            let spec = PartitionSpec { n_clients: clients, nc, beta: 1.0, seed: rng.next_u64() };
+            let spec = PartitionSpec {
+                n_clients: clients,
+                nc,
+                beta: 1.0,
+                alpha: 0.0,
+                seed: rng.next_u64(),
+            };
             let p = partition(&data, &spec).unwrap();
             assert!(p.is_exact_cover(n));
             assert_eq!(p.shards.len(), clients);
@@ -312,5 +500,136 @@ mod tests {
         for (x, y) in a.shards.iter().zip(&b.shards) {
             assert_eq!(x.indices, y.indices);
         }
+    }
+
+    // -- Dirichlet(alpha) label skew ----------------------------------------
+
+    #[test]
+    fn prop_dirichlet_exact_disjoint_cover() {
+        forall(32, |rng| {
+            let n = 300 + rng.below(3000) as usize;
+            let clients = 2 + rng.below(30) as usize;
+            let alpha = [0.05, 0.5, 1.0, 10.0][rng.below(4) as usize];
+            let data = toy_data(n);
+            let spec = PartitionSpec::dirichlet(clients, alpha, rng.next_u64());
+            let p = partition(&data, &spec).unwrap();
+            assert!(p.is_exact_cover(n), "alpha={alpha} clients={clients}");
+            assert_eq!(p.shards.len(), clients);
+            assert!(p.shards.iter().all(|s| !s.is_empty()), "alpha={alpha}");
+        });
+    }
+
+    #[test]
+    fn prop_dirichlet_deterministic_across_rebuilds() {
+        forall(16, |rng| {
+            let data = toy_data(500 + rng.below(1000) as usize);
+            let spec = PartitionSpec::dirichlet(
+                2 + rng.below(12) as usize,
+                0.1 + rng.next_f64(),
+                rng.next_u64(),
+            );
+            let a = partition(&data, &spec).unwrap();
+            let b = partition(&data, &spec).unwrap();
+            for (x, y) in a.shards.iter().zip(&b.shards) {
+                assert_eq!(x.indices, y.indices);
+            }
+        });
+    }
+
+    #[test]
+    fn dirichlet_large_alpha_approaches_iid_mix() {
+        // alpha -> inf: every client holds ~1/N of every class
+        let data = toy_data(5000); // 500 per class, 10 classes
+        let p = partition(&data, &PartitionSpec::dirichlet(10, 1e6, 13)).unwrap();
+        assert!(p.is_exact_cover(5000));
+        for s in &p.shards {
+            let h = s.class_histogram(&data);
+            for (c, &count) in h.iter().enumerate() {
+                // ideal 50 per class per client; largest-remainder gives ±1,
+                // near-uniform Dirichlet weights add a little slack
+                assert!(
+                    (count as i64 - 50).abs() <= 5,
+                    "client {} class {c}: {count} (want ~50) {h:?}",
+                    s.client_id
+                );
+            }
+        }
+        // sizes are near-balanced, too
+        assert!(p.beta() > 0.9, "beta={}", p.beta());
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_skews_labels() {
+        // small alpha concentrates each client on few labels relative to
+        // the IID mix: compare max class share per client
+        let data = toy_data(5000);
+        let max_share = |p: &Partition| -> f64 {
+            let mut acc = 0.0;
+            for s in &p.shards {
+                let h = s.class_histogram(&data);
+                let total: usize = h.iter().sum();
+                let mx = *h.iter().max().unwrap();
+                acc += mx as f64 / total.max(1) as f64;
+            }
+            acc / p.shards.len() as f64
+        };
+        let skewed = partition(&data, &PartitionSpec::dirichlet(10, 0.05, 17)).unwrap();
+        let mixed = partition(&data, &PartitionSpec::dirichlet(10, 1000.0, 17)).unwrap();
+        assert!(skewed.is_exact_cover(5000));
+        let (s, m) = (max_share(&skewed), max_share(&mixed));
+        assert!(s > m + 0.2, "skewed={s} mixed={m}");
+    }
+
+    #[test]
+    fn dirichlet_rejects_bad_alpha() {
+        let data = toy_data(100);
+        for alpha in [-1.0, f64::NAN, f64::INFINITY] {
+            let spec = PartitionSpec::dirichlet(4, alpha, 1);
+            assert!(partition(&data, &spec).is_err(), "alpha={alpha}");
+        }
+    }
+
+    // -- PartitionStrategy ---------------------------------------------------
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in ["iid", "nc:2", "nc:5", "beta:0.5", "dirichlet:alpha=0.5"] {
+            let strat = PartitionStrategy::parse(s).unwrap();
+            assert_eq!(strat.name(), s);
+            // canonical names re-parse to the same strategy
+            assert_eq!(PartitionStrategy::parse(&strat.name()).unwrap(), strat);
+        }
+        // sugar form
+        assert_eq!(
+            PartitionStrategy::parse("dirichlet:0.3").unwrap(),
+            PartitionStrategy::Dirichlet { alpha: 0.3 }
+        );
+        assert_eq!(PartitionStrategy::parse(" IID ").unwrap(), PartitionStrategy::Iid);
+    }
+
+    #[test]
+    fn strategy_parse_rejects_garbage() {
+        for s in [
+            "", "unknown", "nc:", "nc:0", "nc:x", "beta:0", "beta:2", "beta:NaN-ish",
+            "dirichlet:", "dirichlet:alpha=", "dirichlet:alpha=-1", "dirichlet:alpha=inf",
+        ] {
+            assert!(PartitionStrategy::parse(s).is_err(), "accepted {s:?}");
+        }
+    }
+
+    #[test]
+    fn strategy_apply_sets_config_fields() {
+        use crate::config::{ExperimentConfig, Protocol, Task};
+        let base = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        let mut c = base.clone();
+        PartitionStrategy::NonIid { nc: 2 }.apply(&mut c);
+        assert_eq!((c.nc, c.beta, c.dirichlet_alpha), (2, 1.0, 0.0));
+        PartitionStrategy::Unbalanced { beta: 0.3 }.apply(&mut c);
+        assert_eq!((c.nc, c.beta, c.dirichlet_alpha), (10, 0.3, 0.0));
+        PartitionStrategy::Dirichlet { alpha: 0.5 }.apply(&mut c);
+        assert_eq!((c.nc, c.beta, c.dirichlet_alpha), (10, 1.0, 0.5));
+        PartitionStrategy::Iid.apply(&mut c);
+        assert_eq!(c, base); // back to the IID defaults, byte-for-byte
+        c.validate().unwrap();
     }
 }

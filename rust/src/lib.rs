@@ -11,13 +11,16 @@
 //! * **Layer 2** — JAX training/eval graphs (`python/compile/`), one HLO
 //!   artifact per (model × mode × batch size).
 //! * **Layer 3** — this crate: the federated coordinator (client selection,
-//!   concurrent round orchestration, aggregation, ternary re-quantization),
+//!   concurrent round orchestration, streaming O(model) aggregation,
+//!   ternary re-quantization, availability/straggler fault models),
 //!   the `compress` codec registry (ternary, STC, stochastic k-bit
 //!   quantization, fp16/dense baselines) behind one `Compressor` trait,
 //!   the wire codec with byte accounting, the `transport` subsystem
-//!   (framed wire protocol over in-process loopback or TCP), the data
-//!   pipeline, and the PJRT runtime that executes the artifacts. Python
-//!   never runs at request time.
+//!   (framed wire protocol over in-process loopback or TCP), the
+//!   `scenario` engine (declarative TOML experiment manifests expanded
+//!   into seed/partition/codec sweeps), the data pipeline with
+//!   IID/Nc/beta/Dirichlet(α) partitioners, and the PJRT runtime that
+//!   executes the artifacts. Python never runs at request time.
 
 pub mod comms;
 pub mod compress;
@@ -29,5 +32,6 @@ pub mod model;
 pub mod native;
 pub mod quant;
 pub mod runtime;
+pub mod scenario;
 pub mod transport;
 pub mod util;

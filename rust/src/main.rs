@@ -1,7 +1,8 @@
 //! `tfed` — launcher for the T-FedAvg federated learning system.
 //!
 //! Subcommands:
-//!   run       run one experiment in-process (loopback transport)
+//!   run       run one experiment in-process (loopback transport), or a
+//!             whole declarative scenario grid: `tfed run <manifest.toml>`
 //!   serve     run the coordinator over TCP; waits for N `client` processes
 //!   client    join a coordinator as one federated client
 //!   inspect   print the artifact manifest the runtime will use
@@ -12,6 +13,8 @@
 //!   tfed run --protocol fedavg --task mnist --nc 2 --clients 10
 //!   tfed run --codec stc:k=0.01 --rounds 30          # FedAvg + STC payloads
 //!   tfed run --codec quant8 --rounds 30              # 8-bit stochastic quant
+//!   tfed run --alpha 0.5 --rounds 30                 # Dirichlet label skew
+//!   tfed run ../examples/scenarios/paper_noniid.toml # declarative grid
 //!   tfed serve --listen 127.0.0.1:7878 --clients 4 --native
 //!   tfed client --connect 127.0.0.1:7878 --client-id 0
 //!   tfed inspect
@@ -24,8 +27,9 @@ use anyhow::{bail, Result};
 
 use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
-use tfed::coordinator::server::{materialize_shard, FaultSpec, Orchestrator};
+use tfed::coordinator::server::{materialize_shard, Orchestrator};
 use tfed::coordinator::ClientRuntime;
 use tfed::metrics::{mb, RunMetrics};
 use tfed::runtime::manifest::default_artifacts_dir;
@@ -50,6 +54,7 @@ fn real_main() -> Result<()> {
         .opt("participation", "1.0", "participation ratio lambda")
         .opt("nc", "10", "classes per client (10 = IID)")
         .opt("beta", "1.0", "unbalancedness ratio (eq. 29)")
+        .opt("alpha", "0", "Dirichlet label-skew concentration (0 = use nc/beta)")
         .opt("batch", "64", "local batch size B")
         .opt("epochs", "5", "local epochs E")
         .opt("rounds", "30", "communication rounds")
@@ -59,7 +64,9 @@ fn real_main() -> Result<()> {
         .opt("test-samples", "2000", "test set size")
         .opt("eval-every", "1", "evaluate every k rounds")
         .opt("dropout", "0.0", "client dropout probability (fault injection)")
-        .opt("out", "", "write metrics JSON/CSV to this path prefix")
+        .opt("straggler-prob", "0.0", "per-client straggler probability")
+        .opt("straggler-delay-ms", "0", "straggler reply delay in ms")
+        .opt("out", "", "write metrics JSON/CSV (scenario: results bundle) here")
         .opt("listen", "127.0.0.1:7878", "serve: TCP listen address (port 0 = ephemeral)")
         .opt("connect", "", "client: coordinator address to dial")
         .opt("client-id", "0", "client: this process's client id")
@@ -106,6 +113,7 @@ fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
         cfg.participation = args.get_f64("participation")?;
         cfg.nc = args.get_usize("nc")?;
         cfg.beta = args.get_f64("beta")?;
+        cfg.dirichlet_alpha = args.get_f64("alpha")?;
     }
     cfg.batch = args.get_usize("batch")?;
     cfg.local_epochs = args.get_usize("epochs")?;
@@ -163,8 +171,23 @@ fn report(m: &RunMetrics, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The CLI's fault-injection knobs as a validated availability model.
+fn availability_from(args: &Args) -> Result<AvailabilityModel> {
+    Ok(AvailabilityModel::new(
+        args.get_f64("dropout")?,
+        Vec::new(),
+        args.get_f64("straggler-prob")?,
+        args.get_u64("straggler-delay-ms")?,
+    )?)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     apply_quiet(args);
+    // `tfed run <manifest.toml>` switches to the declarative scenario
+    // engine; bare `tfed run` keeps the flag-driven single experiment
+    if let Some(path) = args.positional().get(1) {
+        return cmd_run_scenario(path, args);
+    }
     let cfg = build_cfg(args)?;
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
@@ -173,14 +196,72 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.batch,
         cfg.native_backend,
     )?;
-    let faults = FaultSpec { client_dropout: args.get_f64("dropout")? };
-    let mut orch = Orchestrator::with_faults(cfg, backend.as_ref(), faults)?;
+    let mut orch =
+        Orchestrator::with_availability(cfg, backend.as_ref(), availability_from(args)?)?;
     let workers = args.get_usize("workers")?;
     if workers > 0 {
         orch.set_workers(workers);
     }
     orch.run()?;
     report(&orch.metrics, args)
+}
+
+/// Execute a whole manifest grid and print the per-cell summary table.
+fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
+    // the manifest is the single source of truth for a grid: silently
+    // ignoring `--rounds 2` next to a 30-round manifest would be a trap,
+    // so every config-affecting flag is rejected (only --out/--quiet
+    // compose with a manifest)
+    let config_opts = [
+        "protocol", "codec", "task", "clients", "participation", "nc", "beta", "alpha",
+        "batch", "epochs", "rounds", "lr", "seed", "train-samples", "test-samples",
+        "eval-every", "dropout", "straggler-prob", "straggler-delay-ms", "workers",
+        "listen", "connect", "client-id",
+    ];
+    let offending: Vec<&str> = config_opts
+        .iter()
+        .copied()
+        .filter(|name| args.is_set(name))
+        .chain(args.flag("native").then_some("native"))
+        .collect();
+    if !offending.is_empty() {
+        bail!(
+            "scenario manifests carry the whole experiment config; move {} into \
+             {path:?} (its [experiment]/[fleet]/[availability] tables) — only \
+             --out and --quiet combine with a manifest run",
+            offending
+                .iter()
+                .map(|n| format!("--{n}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    let out = args.get("out")?;
+    let out = if out.is_empty() { None } else { Some(out.as_str()) };
+    let (results, written) = tfed::scenario::run_manifest_file(path, out)?;
+    println!("== scenario {} ({} cells) ==", results.name, results.cells.len());
+    for c in &results.cells {
+        println!(
+            "{:<55} final={:.4} best={:.4} up={:.3}MB down={:.3}MB",
+            c.label,
+            c.metrics.final_acc(),
+            c.metrics.best_acc(),
+            mb(c.metrics.total_up_bytes()),
+            mb(c.metrics.total_down_bytes()),
+        );
+    }
+    let accs = results.final_accs();
+    println!(
+        "final acc  : mean={:.4} std={:.4} min={:.4} max={:.4}",
+        tfed::util::stats::mean(&accs),
+        tfed::util::stats::std_dev(&accs),
+        tfed::util::stats::min(&accs),
+        tfed::util::stats::max(&accs),
+    );
+    if let Some(p) = written {
+        println!("bundle     : {p}");
+    }
+    Ok(())
 }
 
 /// Run the coordinator over TCP: bind, wait for the fleet, drive rounds.
@@ -203,9 +284,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("listening on {addr} — waiting for {} clients", cfg.n_clients);
     std::io::stdout().flush().ok();
     let transport = binding.accept_clients(cfg.n_clients, &cfg)?;
-    let faults = FaultSpec { client_dropout: args.get_f64("dropout")? };
-    let mut orch =
-        Orchestrator::with_transport(cfg, backend.as_ref(), faults, Box::new(transport))?;
+    let mut orch = Orchestrator::with_transport(
+        cfg,
+        backend.as_ref(),
+        availability_from(args)?,
+        Box::new(transport),
+    )?;
     let workers = args.get_usize("workers")?;
     if workers > 0 {
         orch.set_workers(workers);

@@ -1,0 +1,572 @@
+//! Declarative experiment manifests: one TOML file names a fleet —
+//! partition regime, availability/straggler model, codec, transport —
+//! and the sweep axes that expand it into a grid of validated
+//! `ExperimentConfig`s.
+//!
+//! Manifest schema (all keys optional unless noted; defaults match the
+//! `tfed run` CLI flags exactly, so a single-cell manifest and the
+//! equivalent flag-driven invocation produce byte-identical metrics):
+//!
+//! ```text
+//! [scenario]                  # required
+//! name = "paper_noniid"       # required: bundle + log label
+//!
+//! [experiment]
+//! protocol = "tfedavg"        # baseline | ttq | fedavg | tfedavg
+//! codec = "ternary"           # ternary | dense | fp16 | quant<b> | stc:k=<f>
+//! task = "mnist"              # mnist | cifar
+//! clients = 10                # total clients N
+//! participation = 1.0         # lambda
+//! rounds = 30
+//! local_epochs = 5
+//! batch = 64
+//! lr = 0.05                   # 0 = task default
+//! seed = 42
+//! train_samples = 8000        # 0 = task default
+//! test_samples = 2000
+//! eval_every = 1
+//! native = true               # pure-Rust backend (no artifacts needed)
+//!
+//! [fleet]
+//! partition = "nc:2"          # iid | nc:<k> | beta:<b> | dirichlet:alpha=<a>
+//! transport = "loopback"      # loopback | tcp (tcp: single-cell grids only)
+//! listen = "127.0.0.1:7878"   # tcp only
+//!
+//! [availability]
+//! dropout = 0.1               # per-round client dropout probability
+//! straggler_prob = 0.05       # P(surviving client replies late)
+//! straggler_delay_ms = 50
+//! phase_rounds = [10, 20]     # dropout becomes phase_dropout[i]
+//! phase_dropout = [0.2, 0.5]  #   from round phase_rounds[i] onward
+//!
+//! [sweep]                     # grid = partitions × codecs × seeds
+//! seeds = [1, 2, 3]           # default: [experiment seed]
+//! partitions = ["iid", "nc:2"]  # default: [fleet partition]
+//! codecs = ["ternary", "stc:k=0.01"]  # default: [experiment codec]
+//!
+//! [output]
+//! path = "results.json"       # bundle sink; `--out` overrides
+//! ```
+//!
+//! Unknown tables and keys are rejected (typo safety), and every grid
+//! cell passes `ExperimentConfig::validate` before anything runs.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compress::CodecSpec;
+use crate::config::{ExperimentConfig, Protocol, Task};
+use crate::coordinator::availability::{AvailabilityModel, Phase};
+use crate::data::partition::PartitionStrategy;
+use crate::scenario::toml::TomlDoc;
+
+/// Which transport the runner drives the fleet over.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetTransport {
+    /// In-process loopback (full frame codec, same accounting as TCP).
+    Loopback,
+    /// Real sockets: bind `listen`, wait for `clients` remote `tfed
+    /// client` processes. Restricted to single-cell grids (the config
+    /// handshake happens once per connection).
+    Tcp { listen: String },
+}
+
+/// A parsed, validated scenario manifest.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::scenario::ScenarioManifest;
+///
+/// let m = ScenarioManifest::parse(
+///     r#"
+/// [scenario]
+/// name = "demo"
+/// [experiment]
+/// rounds = 2
+/// native = true
+/// [fleet]
+/// partition = "dirichlet:alpha=0.5"
+/// [sweep]
+/// seeds = [1, 2]
+/// "#,
+/// )
+/// .unwrap();
+/// assert_eq!(m.name, "demo");
+/// assert_eq!(m.grid().unwrap().len(), 2);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ScenarioManifest {
+    pub name: String,
+    /// Per-cell template; sweep axes overwrite seed / partition / codec.
+    pub base: ExperimentConfig,
+    /// Was `[experiment] protocol` given explicitly? If not, each cell's
+    /// protocol follows its codec (`Protocol::for_codec`), mirroring the
+    /// CLI's `--codec`-implies-protocol rule.
+    pub protocol_pinned: bool,
+    pub availability: AvailabilityModel,
+    pub transport: FleetTransport,
+    pub sweep: SweepSpec,
+    /// Results-bundle path from `[output] path` (CLI `--out` overrides).
+    pub output: Option<String>,
+}
+
+/// The sweep axes; the grid is their cartesian product.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub seeds: Vec<u64>,
+    pub partitions: Vec<PartitionStrategy>,
+    pub codecs: Vec<CodecSpec>,
+}
+
+/// One fully-resolved grid cell.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub cfg: ExperimentConfig,
+    /// Canonical partition-strategy name (results-bundle label).
+    pub partition: String,
+}
+
+impl GridCell {
+    /// Stable display label: `seed=7 partition=nc:2 codec=ternary`.
+    pub fn label(&self) -> String {
+        format!(
+            "seed={} partition={} codec={}",
+            self.cfg.seed,
+            self.partition,
+            self.cfg.codec.name()
+        )
+    }
+}
+
+const TABLES: &[&str] = &["scenario", "experiment", "fleet", "availability", "sweep", "output"];
+const SCENARIO_KEYS: &[&str] = &["name"];
+const EXPERIMENT_KEYS: &[&str] = &[
+    "protocol",
+    "codec",
+    "task",
+    "clients",
+    "participation",
+    "rounds",
+    "local_epochs",
+    "batch",
+    "lr",
+    "seed",
+    "train_samples",
+    "test_samples",
+    "eval_every",
+    "native",
+];
+const FLEET_KEYS: &[&str] = &["partition", "transport", "listen"];
+const AVAILABILITY_KEYS: &[&str] =
+    &["dropout", "straggler_prob", "straggler_delay_ms", "phase_rounds", "phase_dropout"];
+const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs"];
+const OUTPUT_KEYS: &[&str] = &["path"];
+
+impl ScenarioManifest {
+    /// Read and parse a manifest file.
+    pub fn load(path: &str) -> Result<ScenarioManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("manifest {path:?}"))
+    }
+
+    /// Parse and validate manifest text.
+    pub fn parse(text: &str) -> Result<ScenarioManifest> {
+        let doc = TomlDoc::parse(text)?;
+        check_surface(&doc)?;
+
+        let name = doc
+            .get("scenario", "name")
+            .ok_or_else(|| anyhow!("manifest needs `[scenario] name = \"...\"`"))?
+            .as_str()
+            .context("[scenario] name")?
+            .to_string();
+        if name.is_empty() {
+            bail!("[scenario] name must not be empty");
+        }
+
+        // -- [experiment]: identical resolution order to the CLI ---------
+        let protocol_given = doc.get("experiment", "protocol").is_some();
+        let mut protocol = match doc.get("experiment", "protocol") {
+            Some(v) => Protocol::parse(v.as_str().context("[experiment] protocol")?)?,
+            None => Protocol::TFedAvg, // the CLI default
+        };
+        let codec = match doc.get("experiment", "codec") {
+            Some(v) => Some(CodecSpec::parse(v.as_str().context("[experiment] codec")?)?),
+            None => None,
+        };
+        if let Some(spec) = codec {
+            if !protocol_given {
+                protocol = Protocol::for_codec(spec);
+            }
+        }
+        let task = match doc.get("experiment", "task") {
+            Some(v) => Task::parse(v.as_str().context("[experiment] task")?)?,
+            None => Task::MnistLike,
+        };
+        let seed = get_unsigned(&doc, "experiment", "seed")?.unwrap_or(42);
+        let mut base = ExperimentConfig::table2(protocol, task, seed);
+        if let Some(spec) = codec {
+            base.codec = spec;
+        }
+        if !protocol.is_centralized() {
+            if let Some(n) = get_unsigned(&doc, "experiment", "clients")? {
+                base.n_clients = n as usize;
+            }
+            if let Some(p) = get_float(&doc, "experiment", "participation")? {
+                base.participation = p;
+            }
+        }
+        if let Some(n) = get_unsigned(&doc, "experiment", "batch")? {
+            base.batch = n as usize;
+        }
+        if let Some(n) = get_unsigned(&doc, "experiment", "local_epochs")? {
+            base.local_epochs = n as usize;
+        }
+        if let Some(n) = get_unsigned(&doc, "experiment", "rounds")? {
+            base.rounds = n as usize;
+        }
+        if let Some(n) = get_unsigned(&doc, "experiment", "eval_every")? {
+            base.eval_every = n as usize;
+        }
+        if let Some(n) = get_unsigned(&doc, "experiment", "test_samples")? {
+            base.test_samples = n as usize;
+        }
+        if let Some(lr) = get_float(&doc, "experiment", "lr")? {
+            if lr > 0.0 {
+                base.lr = lr as f32;
+            }
+        }
+        if let Some(n) = get_unsigned(&doc, "experiment", "train_samples")? {
+            if n > 0 {
+                base.train_samples = n as usize;
+            }
+        }
+        if let Some(v) = doc.get("experiment", "native") {
+            base.native_backend = v.as_bool().context("[experiment] native")?;
+        }
+
+        // -- [fleet] ------------------------------------------------------
+        let partition = match doc.get("fleet", "partition") {
+            Some(v) => PartitionStrategy::parse(v.as_str().context("[fleet] partition")?)?,
+            None => PartitionStrategy::Iid,
+        };
+        let transport = match doc.get("fleet", "transport") {
+            None => FleetTransport::Loopback,
+            Some(v) => match v.as_str().context("[fleet] transport")? {
+                "loopback" => FleetTransport::Loopback,
+                "tcp" => {
+                    let listen = match doc.get("fleet", "listen") {
+                        Some(l) => l.as_str().context("[fleet] listen")?.to_string(),
+                        None => "127.0.0.1:7878".to_string(),
+                    };
+                    FleetTransport::Tcp { listen }
+                }
+                other => bail!("[fleet] transport must be loopback | tcp, got {other:?}"),
+            },
+        };
+        if transport == FleetTransport::Loopback && doc.get("fleet", "listen").is_some() {
+            bail!("[fleet] listen only applies to transport = \"tcp\"");
+        }
+
+        // -- [availability] -----------------------------------------------
+        let availability = parse_availability(&doc)?;
+
+        // -- [sweep] ------------------------------------------------------
+        let seeds = match doc.get("sweep", "seeds") {
+            None => vec![seed],
+            Some(v) => {
+                let arr = v.as_arr().context("[sweep] seeds")?;
+                if arr.is_empty() {
+                    bail!("[sweep] seeds must not be empty");
+                }
+                arr.iter()
+                    .map(|s| s.as_unsigned())
+                    .collect::<Result<Vec<u64>>>()
+                    .context("[sweep] seeds")?
+            }
+        };
+        let partitions = match doc.get("sweep", "partitions") {
+            None => vec![partition],
+            Some(v) => {
+                let arr = v.as_arr().context("[sweep] partitions")?;
+                if arr.is_empty() {
+                    bail!("[sweep] partitions must not be empty");
+                }
+                arr.iter()
+                    .map(|s| PartitionStrategy::parse(s.as_str()?))
+                    .collect::<Result<Vec<_>>>()
+                    .context("[sweep] partitions")?
+            }
+        };
+        let codecs = match doc.get("sweep", "codecs") {
+            None => vec![base.codec],
+            Some(v) => {
+                let arr = v.as_arr().context("[sweep] codecs")?;
+                if arr.is_empty() {
+                    bail!("[sweep] codecs must not be empty");
+                }
+                arr.iter()
+                    .map(|s| CodecSpec::parse(s.as_str()?))
+                    .collect::<Result<Vec<_>>>()
+                    .context("[sweep] codecs")?
+            }
+        };
+
+        // -- [output] -----------------------------------------------------
+        let output = match doc.get("output", "path") {
+            Some(v) => Some(v.as_str().context("[output] path")?.to_string()),
+            None => None,
+        };
+
+        let manifest = ScenarioManifest {
+            name,
+            base,
+            protocol_pinned: protocol_given,
+            availability,
+            transport,
+            sweep: SweepSpec { seeds, partitions, codecs },
+            output,
+        };
+        // expanding validates every cell — a bad manifest fails at parse
+        // time, not mid-sweep
+        let grid = manifest.grid()?;
+        if matches!(manifest.transport, FleetTransport::Tcp { .. }) && grid.len() != 1 {
+            bail!(
+                "transport = \"tcp\" supports single-cell grids only (this one has {} cells); \
+                 remote clients receive their config once at the handshake",
+                grid.len()
+            );
+        }
+        Ok(manifest)
+    }
+
+    /// Expand the sweep into validated grid cells:
+    /// partitions (outer) × codecs × seeds (inner).
+    pub fn grid(&self) -> Result<Vec<GridCell>> {
+        let mut cells = Vec::new();
+        for part in &self.sweep.partitions {
+            for &codec in &self.sweep.codecs {
+                for &seed in &self.sweep.seeds {
+                    let mut cfg = self.base.clone();
+                    cfg.seed = seed;
+                    part.apply(&mut cfg);
+                    cfg.codec = codec;
+                    if !self.protocol_pinned {
+                        cfg.protocol = Protocol::for_codec(codec);
+                    }
+                    cfg.validate().with_context(|| {
+                        format!(
+                            "grid cell seed={seed} partition={} codec={}",
+                            part.name(),
+                            codec.name()
+                        )
+                    })?;
+                    cells.push(GridCell { cfg, partition: part.name() });
+                }
+            }
+        }
+        Ok(cells)
+    }
+}
+
+/// Reject unknown tables / keys — a typo must fail, not silently no-op.
+fn check_surface(doc: &TomlDoc) -> Result<()> {
+    for table in doc.table_names() {
+        if table.is_empty() {
+            bail!("top-level keys are not allowed; use [scenario] / [experiment] / ...");
+        }
+        let allowed: &[&str] = match table {
+            "scenario" => SCENARIO_KEYS,
+            "experiment" => EXPERIMENT_KEYS,
+            "fleet" => FLEET_KEYS,
+            "availability" => AVAILABILITY_KEYS,
+            "sweep" => SWEEP_KEYS,
+            "output" => OUTPUT_KEYS,
+            other => bail!("unknown table [{other}] (expected one of {TABLES:?})"),
+        };
+        for key in doc.table(table).map(|t| t.keys()).into_iter().flatten() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("unknown key {key:?} in [{table}] (allowed: {allowed:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_availability(doc: &TomlDoc) -> Result<AvailabilityModel> {
+    let dropout = get_float(doc, "availability", "dropout")?.unwrap_or(0.0);
+    let straggler_prob = get_float(doc, "availability", "straggler_prob")?.unwrap_or(0.0);
+    let straggler_delay_ms =
+        get_unsigned(doc, "availability", "straggler_delay_ms")?.unwrap_or(0);
+    let rounds = match doc.get("availability", "phase_rounds") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .context("[availability] phase_rounds")?
+            .iter()
+            .map(|x| x.as_unsigned().map(|r| r as usize))
+            .collect::<Result<Vec<_>>>()
+            .context("[availability] phase_rounds")?,
+    };
+    let drops = match doc.get("availability", "phase_dropout") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .context("[availability] phase_dropout")?
+            .iter()
+            .map(|x| x.as_float())
+            .collect::<Result<Vec<_>>>()
+            .context("[availability] phase_dropout")?,
+    };
+    if rounds.len() != drops.len() {
+        bail!(
+            "[availability] phase_rounds ({}) and phase_dropout ({}) must have equal length",
+            rounds.len(),
+            drops.len()
+        );
+    }
+    let phases: Vec<Phase> = rounds
+        .into_iter()
+        .zip(drops)
+        .map(|(from_round, dropout)| Phase { from_round, dropout })
+        .collect();
+    AvailabilityModel::new(dropout, phases, straggler_prob, straggler_delay_ms)
+        .map_err(|e| anyhow!("[availability]: {e}"))
+}
+
+fn get_unsigned(doc: &TomlDoc, table: &str, key: &str) -> Result<Option<u64>> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_unsigned().with_context(|| format!("[{table}] {key}"))?)),
+    }
+}
+
+fn get_float(doc: &TomlDoc, table: &str, key: &str) -> Result<Option<f64>> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_float().with_context(|| format!("[{table}] {key}"))?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = "[scenario]\nname = \"t\"\n";
+
+    fn parse(extra: &str) -> Result<ScenarioManifest> {
+        ScenarioManifest::parse(&format!("{MINIMAL}{extra}"))
+    }
+
+    #[test]
+    fn minimal_manifest_matches_cli_defaults() {
+        let m = parse("").unwrap();
+        let cli_default = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 42);
+        assert_eq!(m.base, cli_default);
+        assert_eq!(m.transport, FleetTransport::Loopback);
+        assert_eq!(m.availability, AvailabilityModel::always_on());
+        let grid = m.grid().unwrap();
+        assert_eq!(grid.len(), 1);
+        assert_eq!(grid[0].cfg, cli_default);
+        assert_eq!(grid[0].partition, "iid");
+    }
+
+    #[test]
+    fn codec_implies_protocol_like_the_cli() {
+        let m = parse("[experiment]\ncodec = \"stc:k=0.05\"\n").unwrap();
+        assert_eq!(m.base.protocol, Protocol::FedAvg);
+        assert_eq!(m.base.codec, CodecSpec::Stc { k: 0.05 });
+        // explicit protocol wins (and impossible pairings are rejected)
+        let m = parse("[experiment]\nprotocol = \"fedavg\"\ncodec = \"fp16\"\n").unwrap();
+        assert_eq!(m.base.protocol, Protocol::FedAvg);
+        let err = parse("[experiment]\nprotocol = \"tfedavg\"\ncodec = \"fp16\"\n");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn sweep_grid_is_cartesian_product() {
+        let m = parse(
+            "[sweep]\nseeds = [1, 2, 3]\npartitions = [\"iid\", \"nc:2\"]\n\
+             codecs = [\"ternary\", \"stc:k=0.01\"]\n",
+        )
+        .unwrap();
+        let grid = m.grid().unwrap();
+        assert_eq!(grid.len(), 12);
+        // codec drives the protocol when unpinned
+        for cell in &grid {
+            let want = Protocol::for_codec(cell.cfg.codec);
+            assert_eq!(cell.cfg.protocol, want, "{}", cell.label());
+        }
+        // labels are unique
+        let mut labels: Vec<String> = grid.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 12);
+    }
+
+    #[test]
+    fn dirichlet_partition_reaches_config() {
+        let m = parse("[fleet]\npartition = \"dirichlet:alpha=0.5\"\n").unwrap();
+        let grid = m.grid().unwrap();
+        assert_eq!(grid[0].cfg.dirichlet_alpha, 0.5);
+        assert_eq!(grid[0].partition, "dirichlet:alpha=0.5");
+    }
+
+    #[test]
+    fn availability_parses_phases() {
+        let m = parse(
+            "[availability]\ndropout = 0.1\nstraggler_prob = 0.2\n\
+             straggler_delay_ms = 5\nphase_rounds = [10, 20]\nphase_dropout = [0.3, 0.6]\n",
+        )
+        .unwrap();
+        assert_eq!(m.availability.dropout_for_round(1), 0.1);
+        assert_eq!(m.availability.dropout_for_round(10), 0.3);
+        assert_eq!(m.availability.dropout_for_round(25), 0.6);
+        assert!(m.availability.has_stragglers());
+    }
+
+    #[test]
+    fn tcp_transport_single_cell_only() {
+        let m = parse("[fleet]\ntransport = \"tcp\"\n").unwrap();
+        assert_eq!(m.transport, FleetTransport::Tcp { listen: "127.0.0.1:7878".into() });
+        let err = parse("[fleet]\ntransport = \"tcp\"\n[sweep]\nseeds = [1, 2]\n");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn reject_paths() {
+        // not TOML at all
+        assert!(ScenarioManifest::parse("{json?}").is_err());
+        // missing scenario name
+        assert!(ScenarioManifest::parse("[experiment]\nrounds = 1\n").is_err());
+        // unknown table / key (typo safety)
+        assert!(parse("[experimnet]\nrounds = 1\n").is_err());
+        assert!(parse("[experiment]\nruonds = 1\n").is_err());
+        assert!(ScenarioManifest::parse("top = 1\n[scenario]\nname = \"t\"\n").is_err());
+        // wrong types
+        assert!(parse("[experiment]\nrounds = \"thirty\"\n").is_err());
+        assert!(parse("[experiment]\nrounds = -1\n").is_err());
+        assert!(parse("[experiment]\nnative = 1\n").is_err());
+        // bad probability (typed availability validation)
+        assert!(parse("[availability]\ndropout = 1.5\n").is_err());
+        // mismatched phase arrays
+        assert!(parse("[availability]\nphase_rounds = [5]\n").is_err());
+        // empty sweep axes
+        assert!(parse("[sweep]\nseeds = []\n").is_err());
+        assert!(parse("[sweep]\npartitions = []\n").is_err());
+        // invalid partition / codec strings
+        assert!(parse("[fleet]\npartition = \"zipf:2\"\n").is_err());
+        assert!(parse("[sweep]\ncodecs = [\"lz4\"]\n").is_err());
+        // invalid grid cell (validate() runs at parse time)
+        assert!(parse("[experiment]\nparticipation = 2.0\n").is_err());
+        // listen without tcp
+        assert!(parse("[fleet]\nlisten = \"127.0.0.1:1\"\n").is_err());
+    }
+
+    #[test]
+    fn output_path_flows_through() {
+        let m = parse("[output]\npath = \"bundle.json\"\n").unwrap();
+        assert_eq!(m.output.as_deref(), Some("bundle.json"));
+        assert_eq!(parse("").unwrap().output, None);
+    }
+}

@@ -1,0 +1,397 @@
+//! Minimal TOML parser (offline stand-in for the `toml` crate), in the
+//! spirit of `util::json`.
+//!
+//! Covers exactly what scenario manifests need: `[table]` / `[a.b]`
+//! headers, `key = value` pairs, `#` comments (string-aware), basic
+//! strings with escapes, integers (with `_` separators), floats,
+//! booleans, and single-line arrays. Unsupported TOML — multi-line
+//! strings, datetimes, inline tables, array-of-tables — is rejected with
+//! a line-numbered error rather than silently misparsed.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A TOML value. Ints and floats stay distinct so manifests can't
+/// accidentally feed `2.5` into a round count.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            TomlValue::Str(_) => "string",
+            TomlValue::Int(_) => "integer",
+            TomlValue::Float(_) => "float",
+            TomlValue::Bool(_) => "boolean",
+            TomlValue::Arr(_) => "array",
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {}", other.type_name()),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {}", other.type_name()),
+        }
+    }
+
+    /// Non-negative integer (sizes, counts, rounds).
+    pub fn as_unsigned(&self) -> Result<u64> {
+        let i = self.as_int()?;
+        u64::try_from(i).map_err(|_| anyhow!("expected non-negative integer, got {i}"))
+    }
+
+    /// Floats; integers promote (TOML `1` is a valid probability).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {}", other.type_name()),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected boolean, got {}", other.type_name()),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Ok(a),
+            other => bail!("expected array, got {}", other.type_name()),
+        }
+    }
+}
+
+/// A parsed document: dotted table path → key → value. Keys above the
+/// first table header live under the root table `""`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut tables: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+        let mut current = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with("[[") {
+                bail!("line {lineno}: array-of-tables is not supported");
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {lineno}: unterminated table header {line:?}");
+                };
+                let name = name.trim();
+                if name.is_empty() || !name.split('.').all(is_bare_key) {
+                    bail!("line {lineno}: bad table name {name:?}");
+                }
+                if tables.contains_key(name) {
+                    bail!("line {lineno}: duplicate table [{name}]");
+                }
+                tables.insert(name.to_string(), BTreeMap::new());
+                current = name.to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {lineno}: expected `key = value` or `[table]`, got {line:?}");
+            };
+            let key = k.trim();
+            if !is_bare_key(key) {
+                bail!("line {lineno}: bad key {key:?} (bare keys only)");
+            }
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {lineno}, key {key:?}: {e}"))?;
+            let table = tables.entry(current.clone()).or_default();
+            if table.insert(key.to_string(), value).is_some() {
+                bail!("line {lineno}: duplicate key {key:?}");
+            }
+        }
+        Ok(TomlDoc { tables })
+    }
+
+    /// The keys of one table (None if the table never appeared).
+    pub fn table(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.tables.get(name)
+    }
+
+    /// All table names that appeared (the root table only if it has keys).
+    pub fn table_names(&self) -> Vec<&str> {
+        self.tables.keys().map(String::as_str).collect()
+    }
+
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Cut a `#` comment, ignoring `#` inside basic strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    let chars: Vec<char> = s.chars().collect();
+    let mut p = ValueParser { chars, i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.chars.len() {
+        bail!("trailing characters after value");
+    }
+    Ok(v)
+}
+
+struct ValueParser {
+    chars: Vec<char>,
+    i: usize,
+}
+
+impl ValueParser {
+    fn skip_ws(&mut self) {
+        while matches!(self.chars.get(self.i).copied(), Some(' ' | '\t')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<char> {
+        self.chars.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of value"))
+    }
+
+    fn value(&mut self) -> Result<TomlValue> {
+        self.skip_ws();
+        match self.peek()? {
+            '"' => self.string(),
+            '[' => self.array(),
+            '\'' => bail!("literal (single-quoted) strings are not supported"),
+            _ => self.scalar(),
+        }
+    }
+
+    fn string(&mut self) -> Result<TomlValue> {
+        self.i += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                '"' => return Ok(TomlValue::Str(out)),
+                '\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        '"' => out.push('"'),
+                        '\\' => out.push('\\'),
+                        'n' => out.push('\n'),
+                        'r' => out.push('\r'),
+                        't' => out.push('\t'),
+                        'u' => {
+                            if self.i + 4 > self.chars.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex: String = self.chars[self.i..self.i + 4].iter().collect();
+                            self.i += 4;
+                            let cp = u32::from_str_radix(&hex, 16)
+                                .map_err(|e| anyhow!("bad \\u escape {hex:?}: {e}"))?;
+                            out.push(
+                                char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint"))?,
+                            );
+                        }
+                        other => bail!("unsupported escape \\{other}"),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<TomlValue> {
+        self.i += 1; // opening bracket
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.peek()? == ']' {
+                self.i += 1;
+                return Ok(TomlValue::Arr(items));
+            }
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                ',' => self.i += 1, // trailing comma before ']' is fine
+                ']' => {
+                    self.i += 1;
+                    return Ok(TomlValue::Arr(items));
+                }
+                c => bail!("expected ',' or ']' in array, got {c:?}"),
+            }
+        }
+    }
+
+    fn scalar(&mut self) -> Result<TomlValue> {
+        let start = self.i;
+        while let Some(&c) = self.chars.get(self.i) {
+            if c == ',' || c == ']' {
+                break;
+            }
+            self.i += 1;
+        }
+        let word: String = self.chars[start..self.i].iter().collect();
+        let word = word.trim();
+        match word {
+            "" => bail!("empty value"),
+            "true" => return Ok(TomlValue::Bool(true)),
+            "false" => return Ok(TomlValue::Bool(false)),
+            _ => {}
+        }
+        let num = word.replace('_', "");
+        if !num.contains(['.', 'e', 'E']) {
+            if let Ok(i) = num.parse::<i64>() {
+                return Ok(TomlValue::Int(i));
+            }
+        }
+        // floats: reject TOML-invalid forms the f64 parser would accept
+        // ("inf", "nan" are valid TOML but useless in a manifest)
+        if num.parse::<f64>().is_ok()
+            && num.chars().all(|c| c.is_ascii_digit() || matches!(c, '.' | 'e' | 'E' | '+' | '-'))
+        {
+            return Ok(TomlValue::Float(num.parse::<f64>().unwrap()));
+        }
+        bail!("cannot parse value {word:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_manifest_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+[scenario]
+name = "paper_noniid"   # trailing comment
+
+[experiment]
+clients = 10
+participation = 1.0
+lr = 0.05
+native = true
+rounds = 1_000
+
+[sweep]
+seeds = [1, 2, 3]
+partitions = ["iid", "nc:2"]
+mixed = [1, 2.5, "x", true]
+empty = []
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("scenario", "name").unwrap().as_str().unwrap(), "paper_noniid");
+        assert_eq!(doc.get("experiment", "clients").unwrap().as_int().unwrap(), 10);
+        assert_eq!(doc.get("experiment", "rounds").unwrap().as_int().unwrap(), 1000);
+        assert_eq!(doc.get("experiment", "participation").unwrap().as_float().unwrap(), 1.0);
+        assert_eq!(doc.get("experiment", "lr").unwrap().as_float().unwrap(), 0.05);
+        assert!(doc.get("experiment", "native").unwrap().as_bool().unwrap());
+        let seeds = doc.get("sweep", "seeds").unwrap().as_arr().unwrap();
+        assert_eq!(seeds.len(), 3);
+        assert_eq!(seeds[2].as_int().unwrap(), 3);
+        let parts = doc.get("sweep", "partitions").unwrap().as_arr().unwrap();
+        assert_eq!(parts[1].as_str().unwrap(), "nc:2");
+        assert_eq!(doc.get("sweep", "mixed").unwrap().as_arr().unwrap().len(), 4);
+        assert!(doc.get("sweep", "empty").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(doc.table_names(), vec!["experiment", "scenario", "sweep"]);
+    }
+
+    #[test]
+    fn root_keys_and_dotted_tables() {
+        let doc = TomlDoc::parse("top = 1\n[a.b]\nx = 2\n").unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("a.b", "x").unwrap().as_int().unwrap(), 2);
+        assert!(doc.table("a").is_none());
+    }
+
+    #[test]
+    fn strings_with_escapes_and_hashes() {
+        let doc = TomlDoc::parse(r##"s = "a # not a comment \"q\" \n" # real"##).unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str().unwrap(), "a # not a comment \"q\" \n");
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let doc = TomlDoc::parse("i = 3\nf = 3.0\nneg = -2\nexp = 1e3\n").unwrap();
+        assert_eq!(doc.get("", "i").unwrap().as_int().unwrap(), 3);
+        assert!(doc.get("", "f").unwrap().as_int().is_err());
+        assert_eq!(doc.get("", "f").unwrap().as_float().unwrap(), 3.0);
+        assert_eq!(doc.get("", "i").unwrap().as_float().unwrap(), 3.0); // promotes
+        assert_eq!(doc.get("", "neg").unwrap().as_int().unwrap(), -2);
+        assert!(doc.get("", "neg").unwrap().as_unsigned().is_err());
+        assert_eq!(doc.get("", "exp").unwrap().as_float().unwrap(), 1000.0);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for (src, why) in [
+            ("not a kv", "bare text"),
+            ("[unclosed", "unterminated header"),
+            ("[]", "empty table name"),
+            ("[a]\n[a]", "duplicate table"),
+            ("x = 1\nx = 2", "duplicate key"),
+            ("[[fleet]]", "array-of-tables"),
+            ("x = ", "empty value"),
+            ("x = [1, 2", "unterminated array"),
+            ("x = \"unterminated", "unterminated string"),
+            ("x = 'literal'", "literal strings"),
+            ("x = nan", "nan scalar"),
+            ("x = 1 2", "trailing characters"),
+            ("a key = 1", "key with space"),
+        ] {
+            let r = TomlDoc::parse(src);
+            assert!(r.is_err(), "accepted {why}: {src:?}");
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert!(format!("{err}").contains("line 2"), "{err}");
+    }
+}

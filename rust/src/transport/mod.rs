@@ -139,6 +139,7 @@ fn encode_config(w: &mut Writer, cfg: &ExperimentConfig) {
     w.f64(cfg.participation);
     w.u64(cfg.nc as u64);
     w.f64(cfg.beta);
+    w.f64(cfg.dirichlet_alpha);
     w.u64(cfg.batch as u64);
     w.u64(cfg.local_epochs as u64);
     w.u64(cfg.rounds as u64);
@@ -171,6 +172,7 @@ fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
         participation: r.f64()?,
         nc: r.u64()? as usize,
         beta: r.f64()?,
+        dirichlet_alpha: r.f64()?,
         batch: r.u64()? as usize,
         local_epochs: r.u64()? as usize,
         rounds: r.u64()? as usize,
@@ -197,6 +199,16 @@ pub fn encode_data_frame(msg: &Message) -> Result<Vec<u8>, FrameError> {
 /// Implementations must be callable from multiple round-driver worker
 /// threads concurrently for *distinct* client ids (per-link interior
 /// locking); per-client exchanges are strictly request/response.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::transport::{Loopback, Transport};
+///
+/// // attach `ClientRuntime`s for a live fleet; empty is a valid transport
+/// let fleet = Loopback::new(Vec::new());
+/// assert_eq!(fleet.n_clients(), 0);
+/// assert_eq!(fleet.stats().up_bytes, 0);
+/// ```
 pub trait Transport: Sync {
     /// Number of reachable clients (ids `0..n_clients`).
     fn n_clients(&self) -> usize;
@@ -267,6 +279,7 @@ mod tests {
         cfg.participation = 0.31;
         cfg.nc = 3;
         cfg.beta = 0.45;
+        cfg.dirichlet_alpha = 0.5;
         cfg.native_backend = true;
         cfg.codec = CodecSpec::Quant { bits: 4 };
         let f = Ctrl::Config(cfg.clone()).to_frame();

@@ -107,6 +107,68 @@ impl Pcg {
         mu + sigma * self.normal()
     }
 
+    /// Standard normal with f64 resolution (Box-Muller). The f32
+    /// [`Self::normal`] is enough for weight init; the Gamma sampler's
+    /// acceptance test wants the extra mantissa.
+    fn normal_f64(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= 0.0 {
+                continue;
+            }
+            let u2 = self.next_f64();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (2000); `shape` > 0, finite.
+    /// Shapes < 1 use the boost `Gamma(a) = Gamma(a+1) · U^(1/a)`.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0 && shape.is_finite(), "gamma shape must be positive, got {shape}");
+        if shape < 1.0 {
+            let u = self.next_f64();
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal_f64();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha · 1_n) proportions: length `n`, sums
+    /// to 1. Drives the label-skew partitioner (Hsu et al. 2019 style).
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        assert!(n > 0, "dirichlet needs n > 0");
+        let mut w: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = w.iter().sum();
+        if !(s.is_finite() && s > 0.0) {
+            // every gamma draw underflowed to zero (extreme alpha → 0).
+            // The Dirichlet(alpha → 0) limit is a one-hot on a uniformly
+            // random coordinate — NOT a uniform split, which would invert
+            // the requested concentration.
+            let mut w = vec![0.0; n];
+            w[self.below(n as u32) as usize] = 1.0;
+            return w;
+        }
+        for x in w.iter_mut() {
+            *x /= s;
+        }
+        w
+    }
+
     /// Fisher-Yates in-place shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -223,6 +285,68 @@ mod tests {
         let mut picked = r.choose(5, 5);
         picked.sort_unstable();
         assert_eq!(picked, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn gamma_moments_match() {
+        // Gamma(a, 1): mean = a, var = a
+        let mut r = Pcg::seeded(10);
+        for a in [0.3, 1.0, 2.5, 10.0] {
+            let n = 50_000;
+            let (mut s, mut s2) = (0f64, 0f64);
+            for _ in 0..n {
+                let x = r.gamma(a);
+                assert!(x >= 0.0 && x.is_finite(), "a={a} x={x}");
+                s += x;
+                s2 += x * x;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - a).abs() < 0.1 * a.max(0.5), "a={a} mean={mean}");
+            assert!((var - a).abs() < 0.2 * a.max(0.5), "a={a} var={var}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentrates() {
+        let mut r = Pcg::seeded(11);
+        for alpha in [0.1, 1.0, 100.0] {
+            let w = r.dirichlet(alpha, 16);
+            assert_eq!(w.len(), 16);
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "alpha={alpha} sum={s}");
+            assert!(w.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+        // large alpha -> near-uniform proportions
+        let w = r.dirichlet(1e5, 10);
+        for &x in &w {
+            assert!((x - 0.1).abs() < 0.01, "w={w:?}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_deterministic_given_seed() {
+        let a = Pcg::seeded(12).dirichlet(0.5, 8);
+        let b = Pcg::seeded(12).dirichlet(0.5, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dirichlet_tiny_alpha_stays_concentrated() {
+        // alpha -> 0 must approach a one-hot, never flatten to uniform —
+        // even when every gamma draw underflows to exactly zero
+        let mut r = Pcg::seeded(13);
+        for alpha in [1e-4, 1e-6] {
+            for _ in 0..20 {
+                let w = r.dirichlet(alpha, 10);
+                let s: f64 = w.iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "alpha={alpha} sum={s}");
+                // the mass must stay concentrated (dominant coordinate),
+                // never flatten toward the 0.1-per-client uniform split
+                let mx = w.iter().cloned().fold(0.0, f64::max);
+                assert!(mx > 0.5, "alpha={alpha} not concentrated: {w:?}");
+            }
+        }
     }
 
     #[test]

@@ -36,10 +36,13 @@ fn prop_partition_is_exact_cover_under_all_specs() {
             features: vec![0.0; n],
             labels: (0..n as u32).map(|i| i % 10).collect(),
         };
+        // half the cases exercise the nc/beta splitters, half Dirichlet
+        let dirichlet = rng.next_f64() < 0.5;
         let spec = PartitionSpec {
             n_clients: 1 + rng.below(30) as usize,
             nc: 1 + rng.below(12) as usize,
-            beta: 0.1 + 0.9 * rng.next_f64(),
+            beta: if dirichlet { 1.0 } else { 0.1 + 0.9 * rng.next_f64() },
+            alpha: if dirichlet { 0.05 + 2.0 * rng.next_f64() } else { 0.0 },
             seed: rng.next_u64(),
         };
         let p = partition(&data, &spec).unwrap();

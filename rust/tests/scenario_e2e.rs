@@ -1,0 +1,289 @@
+//! End-to-end scenario-engine runs (native backend — no artifacts needed):
+//! manifest parse → grid run → JSON bundle, CLI equivalence, Dirichlet
+//! fleets, availability schedules, and the checked-in example manifests.
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::availability::{AvailabilityModel, Phase};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::run_experiment;
+use tfed::coordinator::server::{FaultSpec, Orchestrator};
+use tfed::metrics::RunMetrics;
+use tfed::scenario::{run_scenario, ScenarioManifest};
+use tfed::util::json::Json;
+
+/// Deterministic metrics fingerprint: the full JSON with wall-clock
+/// timing zeroed (everything else — losses, accuracies, byte counts,
+/// selections — must match byte-for-byte).
+fn fingerprint(m: &RunMetrics) -> String {
+    let mut m = m.clone();
+    for r in &mut m.records {
+        r.wall_secs = 0.0;
+    }
+    m.to_json().to_string()
+}
+
+#[test]
+fn manifest_run_is_byte_identical_to_flag_driven_run() {
+    // the manifest — a paper non-IID configuration (Nc = 2 label skew)
+    // at test scale
+    let manifest = ScenarioManifest::parse(
+        r#"
+[scenario]
+name = "noniid_equivalence"
+[experiment]
+protocol = "tfedavg"
+task = "mnist"
+clients = 4
+rounds = 3
+local_epochs = 1
+batch = 16
+train_samples = 400
+test_samples = 100
+seed = 42
+native = true
+[fleet]
+partition = "nc:2"
+"#,
+    )
+    .unwrap();
+    let scenario = run_scenario(&manifest).unwrap();
+    assert_eq!(scenario.cells.len(), 1);
+
+    // the equivalent flag-driven invocation:
+    //   tfed run --protocol tfedavg --task mnist --clients 4 --nc 2
+    //            --rounds 3 --epochs 1 --batch 16 --train-samples 400
+    //            --test-samples 100 --seed 42 --native
+    // (build_cfg starts from table2 and applies exactly these overrides)
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 42);
+    cfg.n_clients = 4;
+    cfg.nc = 2;
+    cfg.rounds = 3;
+    cfg.local_epochs = 1;
+    cfg.batch = 16;
+    cfg.train_samples = 400;
+    cfg.test_samples = 100;
+    cfg.native_backend = true;
+    cfg.validate().unwrap();
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let flags = run_experiment(cfg, backend.as_ref()).unwrap();
+
+    assert_eq!(fingerprint(&scenario.cells[0].metrics), fingerprint(&flags));
+}
+
+#[test]
+fn manifest_parse_run_json_roundtrip() {
+    let manifest = ScenarioManifest::parse(
+        r#"
+[scenario]
+name = "roundtrip"
+[experiment]
+clients = 3
+rounds = 2
+local_epochs = 1
+batch = 16
+train_samples = 300
+test_samples = 60
+seed = 9
+native = true
+[fleet]
+partition = "dirichlet:alpha=0.5"
+[availability]
+dropout = 0.2
+[sweep]
+seeds = [9, 10]
+codecs = ["ternary", "stc:k=0.05"]
+"#,
+    )
+    .unwrap();
+    let results = run_scenario(&manifest).unwrap();
+    assert_eq!(results.cells.len(), 4);
+
+    // bundle → JSON text → parsed: identity on the deterministic fields
+    let text = results.to_json().to_string_pretty();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("scenario").unwrap().as_str().unwrap(), "roundtrip");
+    assert_eq!(parsed.get("grid_size").unwrap().as_usize().unwrap(), 4);
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 4);
+    for (cell, run) in cells.iter().zip(&results.cells) {
+        assert_eq!(cell.get("label").unwrap().as_str().unwrap(), run.label);
+        assert_eq!(
+            cell.get("seed").unwrap().as_usize().unwrap() as u64,
+            run.seed
+        );
+        let best = cell
+            .get("metrics")
+            .unwrap()
+            .get("best_acc")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((best - run.metrics.best_acc() as f64).abs() < 1e-6);
+    }
+    // stc cells ride FedAvg (codec implies protocol), ternary cells T-FedAvg
+    for run in &results.cells {
+        let want = if run.codec == "ternary" { "T-FedAvg" } else { "FedAvg" };
+        assert_eq!(run.protocol, want, "{}", run.label);
+    }
+}
+
+#[test]
+fn malformed_manifests_are_rejected() {
+    for (src, why) in [
+        ("", "empty"),
+        ("just text", "not toml"),
+        ("[scenario]\n", "missing name"),
+        ("[scenario]\nname = \"x\"\n[fleeet]\npartition = \"iid\"\n", "table typo"),
+        ("[scenario]\nname = \"x\"\n[fleet]\npartion = \"iid\"\n", "key typo"),
+        (
+            "[scenario]\nname = \"x\"\n[availability]\ndropout = 7.5\n",
+            "probability out of range",
+        ),
+        (
+            "[scenario]\nname = \"x\"\n[fleet]\npartition = \"dirichlet:alpha=-3\"\n",
+            "negative alpha",
+        ),
+        (
+            "[scenario]\nname = \"x\"\n[experiment]\nprotocol = \"tfedavg\"\n\
+             [sweep]\ncodecs = [\"fp16\"]\n",
+            "pinned protocol vs incompatible codec",
+        ),
+    ] {
+        assert!(ScenarioManifest::parse(src).is_err(), "accepted {why}: {src:?}");
+    }
+}
+
+#[test]
+fn dirichlet_fleet_runs_end_to_end() {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 21);
+    cfg.n_clients = 4;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 400;
+    cfg.test_samples = 100;
+    cfg.batch = 16;
+    cfg.dirichlet_alpha = 0.3;
+    cfg.native_backend = true;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m = run_experiment(cfg, backend.as_ref()).unwrap();
+    assert_eq!(m.records.len(), 2);
+    assert!(m.records.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn orchestrator_rejects_invalid_fault_probabilities() {
+    // regression for the unvalidated-FaultSpec bug: NaN / out-of-range
+    // dropout used to flow silently into apply_dropout
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+    cfg.n_clients = 2;
+    cfg.rounds = 1;
+    cfg.train_samples = 200;
+    cfg.test_samples = 50;
+    cfg.batch = 16;
+    cfg.native_backend = true;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    for p in [-0.1, 1.5, f64::NAN] {
+        let r = Orchestrator::with_faults(
+            cfg.clone(),
+            backend.as_ref(),
+            FaultSpec { client_dropout: p },
+        );
+        assert!(r.is_err(), "dropout={p} was accepted");
+        assert!(FaultSpec::new(p).is_err(), "FaultSpec::new({p}) was accepted");
+    }
+    // valid boundary still works
+    Orchestrator::with_faults(cfg, backend.as_ref(), FaultSpec { client_dropout: 0.0 })
+        .unwrap();
+}
+
+#[test]
+fn phased_dropout_and_stragglers_drive_rounds() {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 33);
+    cfg.n_clients = 4;
+    cfg.rounds = 4;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 400;
+    cfg.test_samples = 100;
+    cfg.batch = 16;
+    cfg.native_backend = true;
+    let availability = AvailabilityModel::new(
+        0.0,
+        vec![Phase { from_round: 3, dropout: 0.9 }],
+        0.5,
+        1, // 1 ms straggler delay: exercises the path without slowing CI
+    )
+    .unwrap();
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut orch =
+        Orchestrator::with_availability(cfg, backend.as_ref(), availability).unwrap();
+    orch.run().unwrap();
+    let recs = &orch.metrics.records;
+    assert_eq!(recs.len(), 4);
+    // phase off: full participation in rounds 1-2
+    assert_eq!(recs[0].selected.len(), 4);
+    assert_eq!(recs[1].selected.len(), 4);
+    // phase on: heavy dropout must have bitten at least once in rounds 3-4
+    assert!(
+        recs[2].selected.len() < 4 || recs[3].selected.len() < 4,
+        "dropout phase never engaged: {:?}",
+        recs.iter().map(|r| r.selected.len()).collect::<Vec<_>>()
+    );
+    assert!(orch.global().is_finite());
+}
+
+#[test]
+fn default_availability_is_bit_identical_to_seed_path() {
+    // an explicitly-trivial availability model must not perturb the RNG
+    // stream: identical selections and results to the default constructor
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 55);
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.rounds = 3;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 400;
+    cfg.test_samples = 100;
+    cfg.batch = 16;
+    cfg.native_backend = true;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let baseline = run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let mut orch = Orchestrator::with_availability(
+        cfg,
+        backend.as_ref(),
+        AvailabilityModel::always_on(),
+    )
+    .unwrap();
+    orch.run().unwrap();
+    assert_eq!(fingerprint(&baseline), fingerprint(&orch.metrics));
+}
+
+#[test]
+fn checked_in_example_manifests_are_valid() {
+    // cargo test runs from rust/; the manifests live beside the examples
+    let smoke = ScenarioManifest::load("../examples/scenarios/smoke.toml").unwrap();
+    assert!(smoke.base.native_backend, "CI smoke must not need artifacts");
+    let grid = smoke.grid().unwrap();
+    assert!(!grid.is_empty());
+    for cell in &grid {
+        assert!(cell.cfg.rounds <= 2, "smoke manifest must stay <= 2 rounds");
+    }
+
+    let paper = ScenarioManifest::load("../examples/scenarios/paper_noniid.toml").unwrap();
+    let grid = paper.grid().unwrap();
+    // the Fig. 8/9 axis: IID vs label-skew partitions, multiple seeds
+    assert!(grid.len() >= 6, "paper grid has {} cells", grid.len());
+    assert!(grid.iter().any(|c| c.partition.starts_with("nc:")));
+    assert!(grid.iter().any(|c| c.partition.starts_with("dirichlet:")));
+}
+
+#[test]
+fn smoke_manifest_runs_end_to_end() {
+    // the exact artifact CI smoke-runs via `tfed run`; keep it fast here
+    // too (≤ 2 rounds by construction, asserted above)
+    let manifest = ScenarioManifest::load("../examples/scenarios/smoke.toml").unwrap();
+    let results = run_scenario(&manifest).unwrap();
+    assert!(!results.cells.is_empty());
+    for c in &results.cells {
+        assert!(c.metrics.records.iter().all(|r| r.train_loss.is_finite()));
+    }
+    Json::parse(&results.to_json().to_string_pretty()).unwrap();
+}

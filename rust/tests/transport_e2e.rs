@@ -10,8 +10,9 @@ use std::time::{Duration, Instant};
 
 use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
-use tfed::coordinator::server::{materialize_data, FaultSpec, Orchestrator};
+use tfed::coordinator::server::{materialize_data, Orchestrator};
 use tfed::coordinator::ClientRuntime;
 use tfed::transport::{TcpBinding, TcpClient};
 
@@ -60,7 +61,7 @@ fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::metrics::RunMetrics, tfed::mod
         let mut orch = Orchestrator::with_transport(
             cfg.clone(),
             backend.as_ref(),
-            FaultSpec::default(),
+            AvailabilityModel::always_on(),
             Box::new(transport),
         )
         .unwrap();
