@@ -7,11 +7,14 @@
 //!     cargo bench --bench paper_tables            # all tables
 //!     cargo bench --bench paper_tables -- --table4
 //!     cargo bench --bench paper_tables -- --compression
+//!     cargo bench --bench paper_tables -- --sim
 //!     TFED_BENCH_SCALE=full cargo bench --bench paper_tables
 //!
 //! CSV output lands in bench_out/; the compression section additionally
 //! emits machine-readable BENCH_compression.json at the repo root so the
-//! per-codec bytes/round trajectory is tracked PR over PR.
+//! per-codec bytes/round trajectory is tracked PR over PR, and the sim
+//! section emits BENCH_sim.json (per-codec rounds-per-virtual-hour and
+//! simulated time-to-accuracy over a 100k-registered-client fleet).
 
 #[path = "common.rs"]
 mod common;
@@ -40,6 +43,9 @@ fn main() {
     }
     if section_enabled(&sections, "compression") {
         compression(&engine);
+    }
+    if section_enabled(&sections, "sim") {
+        sim();
     }
 }
 
@@ -308,4 +314,70 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
     println!("  -> wrote {path}");
     println!("shape: ternary/quant1 ~16x, stc(1%) deepest, fp16 2x, quant8 ~4x;");
     println!("accuracy within a few points of dense for every codec at this scale.");
+}
+
+/// Virtual-time fleet comparison: runs the checked-in
+/// `examples/scenarios/sim_fleet.toml` (100k registered clients,
+/// heterogeneous device/bandwidth tiers, five codecs, virtual straggler
+/// tail) and reports each codec's rounds-per-virtual-hour and simulated
+/// time-to-accuracy — the paper's communication claim restated as fleet
+/// time. The bench and `tfed run sim_fleet.toml` share one code path and
+/// one BENCH_sim.json schema (the scenario bundle with per-cell `sim`
+/// blocks), so the artifact never flips shape depending on which tool
+/// wrote it last. Also emits bench_out/sim.csv.
+fn sim() {
+    use tfed::scenario::{run_scenario, ScenarioManifest};
+
+    // cwd is rust/ under `cargo bench`; fall back for repo-root runs
+    let (manifest_path, out_path) = if std::path::Path::new("../ROADMAP.md").exists() {
+        ("../examples/scenarios/sim_fleet.toml", "../BENCH_sim.json")
+    } else {
+        ("examples/scenarios/sim_fleet.toml", "BENCH_sim.json")
+    };
+    let manifest = ScenarioManifest::load(manifest_path).expect("sim_fleet manifest");
+    let sim_spec = manifest.sim.as_ref().expect("sim_fleet declares [sim]");
+    println!(
+        "\n=== Sim: virtual-time fleet, {} registered clients, cohort {} ===",
+        sim_spec.registered, sim_spec.cohort
+    );
+    let results = run_scenario(&manifest).expect("sim_fleet run");
+
+    println!(
+        "{:<12} {:<10} {:>9} {:>12} {:>12} {:>14}",
+        "codec", "protocol", "best_acc", "vsecs/round", "rounds/vhour", "tta (vsecs)"
+    );
+    let mut rows = Vec::new();
+    for cell in &results.cells {
+        let m = &cell.metrics;
+        let sim = cell.sim.as_ref().expect("sim cells carry a sim summary");
+        let vsecs_per_round = sim.total_sim_secs / m.records.len() as f64;
+        let tta = sim.sim_secs_to_target;
+        println!(
+            "{:<12} {:<10} {:>8.2}% {:>12.1} {:>12.1} {:>14}",
+            cell.codec,
+            cell.protocol,
+            m.best_acc() * 100.0,
+            vsecs_per_round,
+            sim.rounds_per_virtual_hour,
+            tta.map_or("never".to_string(), |t| format!("{t:.1}")),
+        );
+        rows.push(format!(
+            "{},{},{:.4},{:.2},{:.2},{}",
+            cell.codec,
+            cell.protocol,
+            m.best_acc(),
+            vsecs_per_round,
+            sim.rounds_per_virtual_hour,
+            tta.map_or(String::new(), |t| format!("{t:.2}")),
+        ));
+    }
+    write_csv(
+        "sim.csv",
+        "codec,protocol,best_acc,virtual_secs_per_round,rounds_per_virtual_hour,sim_secs_to_target",
+        &rows,
+    );
+    results.write_json(out_path).expect("write BENCH_sim.json");
+    println!("  -> wrote {out_path}");
+    println!("shape: compact codecs win transfer time on slow links, so ternary/stc");
+    println!("reach the accuracy target in less virtual time than dense/fp16.");
 }

@@ -27,6 +27,16 @@ use crate::coordinator::server::FaultSpec;
 /// s) freezing a round for hours.
 pub const MAX_STRAGGLER_DELAY_MS: u64 = 60_000;
 
+/// Longest *wall-clock* sleep a straggler may inject on a real transport
+/// (loopback / TCP). Straggler delays are a modeling knob, not a load
+/// test: the full configured delay is always *accounted* (per round in
+/// `RoundRecord::straggler_delay_ms`, and in full as virtual time under
+/// the `sim` transport), but the thread actually sleeping is capped here
+/// so availability grids and tests run at CPU speed. Historically the
+/// round driver slept the whole delay for real, which made straggler
+/// grid cells wall-clock-bound.
+pub const REAL_STRAGGLE_CAP_MS: u64 = 25;
+
 /// Typed validation error for availability parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub enum AvailabilityError {

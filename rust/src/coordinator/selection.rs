@@ -11,6 +11,32 @@ pub fn select_clients(n: usize, k: usize, rng: &mut Pcg) -> Vec<usize> {
     picked
 }
 
+/// Select `k` distinct registered clients out of a *virtual* population
+/// of `n` (the sim subsystem's cohort sampler). Unlike [`select_clients`]
+/// this never allocates O(n): for the sparse case (`k ≪ n`, the
+/// million-client regime) it rejection-samples distinct ids in O(k)
+/// expected time and memory; dense cohorts fall back to the partial
+/// Fisher-Yates. Both paths draw deterministically from `rng` and return
+/// sorted ids, so the cohort is reproducible at any worker count.
+pub fn select_cohort(n: usize, k: usize, rng: &mut Pcg) -> Vec<usize> {
+    assert!(n > 0 && n <= u32::MAX as usize, "population {n} outside [1, u32::MAX]");
+    let k = k.min(n).max(1);
+    if k * 8 >= n {
+        // dense cohort: rejection would thrash; O(n) is small here anyway
+        return select_clients(n, k, rng);
+    }
+    let mut picked = Vec::with_capacity(k);
+    let mut seen = std::collections::HashSet::with_capacity(k * 2);
+    while picked.len() < k {
+        let c = rng.below(n as u32) as usize;
+        if seen.insert(c) {
+            picked.push(c);
+        }
+    }
+    picked.sort_unstable();
+    picked
+}
+
 /// Apply failure injection: each selected client independently drops out
 /// with probability `p`; at least one survivor is kept (the round would
 /// otherwise stall, matching a server that re-samples).
@@ -50,6 +76,31 @@ mod tests {
         let a = select_clients(100, 10, &mut rng);
         let b = select_clients(100, 10, &mut rng);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cohort_is_distinct_sorted_and_o_of_k() {
+        forall(32, |rng| {
+            let n = 1_000 + rng.below(1_000_000) as usize;
+            let k = 1 + rng.below(64) as usize;
+            let s = select_cohort(n, k, rng);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&c| c < n));
+        });
+        // dense edge: cohort == population
+        let mut rng = Pcg::seeded(9);
+        let all = select_cohort(5, 5, &mut rng);
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cohort_is_deterministic_per_seed() {
+        let a = select_cohort(1_000_000, 32, &mut Pcg::seeded(4));
+        let b = select_cohort(1_000_000, 32, &mut Pcg::seeded(4));
+        assert_eq!(a, b);
+        let c = select_cohort(1_000_000, 32, &mut Pcg::seeded(5));
+        assert_ne!(a, c);
     }
 
     #[test]

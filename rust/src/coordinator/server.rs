@@ -9,10 +9,9 @@
 //! are dispatched concurrently by a worker-thread pool; results are
 //! aggregated in selection order and client RNGs are server-derived, so
 //! runs are bit-for-bit reproducible at any worker count, on any
-//! transport.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+//! transport. `Orchestrator::with_sim` swaps in the virtual-time
+//! `sim::SimTransport` and a lazily-profiled registered population, so
+//! million-client fleets run in seconds of wall time (DESIGN.md §9).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -22,16 +21,18 @@ use crate::comms::{
 use crate::compress::{self, CodecSpec};
 use crate::config::{ExperimentConfig, Protocol, Task};
 use crate::coordinator::aggregation::Aggregator;
-use crate::coordinator::availability::AvailabilityModel;
+use crate::coordinator::availability::{AvailabilityModel, REAL_STRAGGLE_CAP_MS};
 use crate::coordinator::backend::{Backend, TrainMode};
 use crate::coordinator::client::{ClientRuntime, ShardData};
-use crate::coordinator::selection::{apply_dropout, select_clients};
+use crate::coordinator::selection::{apply_dropout, select_clients, select_cohort};
+use crate::sim::{FleetModel, SimSpec, SimTransport};
 use crate::data::partition::{partition, PartitionSpec};
 use crate::data::synth::SynthSpec;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::model::{init_params, ModelSchema, ParamSet};
 use crate::quant;
 use crate::transport::{encode_data_frame, LinkStats, Loopback, RoundAssign, Transport};
+use crate::util::parallel::parallel_map_indexed;
 use crate::util::rng::Pcg;
 use crate::util::timer::Stopwatch;
 use crate::{debug, info};
@@ -129,6 +130,15 @@ fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
 }
 
+/// A virtual registered population (sim runs only): each round samples a
+/// `cohort` of registered ids from `0..registered`; registered client `r`
+/// trains on data shard `r % n_clients`.
+#[derive(Clone, Copy, Debug)]
+struct Population {
+    registered: usize,
+    cohort: usize,
+}
+
 /// A fully-initialized experiment ready to run round-by-round.
 ///
 /// ```no_run
@@ -168,6 +178,9 @@ pub struct Orchestrator<'a> {
     last_wq_mean: Vec<f32>,
     rng: Pcg,
     availability: AvailabilityModel,
+    /// virtual registered population (None = every client is real and
+    /// selection runs over `0..n_clients`, the historical behavior)
+    population: Option<Population>,
     /// cumulative transport stats at the last round boundary
     stats_mark: LinkStats,
     pub metrics: RunMetrics,
@@ -186,7 +199,7 @@ impl<'a> Orchestrator<'a> {
         faults: FaultSpec,
     ) -> Result<Self> {
         let availability = AvailabilityModel::try_from(faults)?;
-        Self::build(cfg, backend, availability, None)
+        Self::build(cfg, backend, availability, None, None)
     }
 
     /// Full availability control: phased dropout schedules and straggler
@@ -196,7 +209,28 @@ impl<'a> Orchestrator<'a> {
         backend: &'a dyn Backend,
         availability: AvailabilityModel,
     ) -> Result<Self> {
-        Self::build(cfg, backend, availability, None)
+        Self::build(cfg, backend, availability, None, None)
+    }
+
+    /// Virtual-time fleet simulation: the in-process fleet is wrapped in
+    /// a [`SimTransport`], each round samples `sim.cohort` clients from a
+    /// registered population of `sim.registered` (mapped onto the
+    /// `n_clients` data shards), and availability stragglers become
+    /// virtual delays. `RoundRecord::sim_secs` carries the simulated
+    /// round completion time; everything else — payload bytes, training,
+    /// `LinkStats` — is byte-identical to a loopback run of the same
+    /// cohort. See DESIGN.md §9.
+    pub fn with_sim(
+        cfg: ExperimentConfig,
+        backend: &'a dyn Backend,
+        availability: AvailabilityModel,
+        sim: SimSpec,
+    ) -> Result<Self> {
+        if cfg.protocol.is_centralized() {
+            bail!("the fleet simulator requires a federated protocol");
+        }
+        sim.validate_for(cfg.n_clients)?;
+        Self::build(cfg, backend, availability, None, Some(sim))
     }
 
     /// Attach an external transport (e.g. `TcpTransport` with remote
@@ -218,7 +252,7 @@ impl<'a> Orchestrator<'a> {
                 cfg.n_clients
             );
         }
-        Self::build(cfg, backend, availability, Some(transport))
+        Self::build(cfg, backend, availability, Some(transport), None)
     }
 
     fn build(
@@ -226,6 +260,7 @@ impl<'a> Orchestrator<'a> {
         backend: &'a dyn Backend,
         availability: AvailabilityModel,
         transport: Option<Box<dyn Transport + 'a>>,
+        sim: Option<SimSpec>,
     ) -> Result<Self> {
         cfg.validate()?;
         let mut rng = Pcg::new(cfg.seed, 0xC0 + cfg.protocol.weight_bits() as u64);
@@ -259,9 +294,22 @@ impl<'a> Orchestrator<'a> {
                         codec: cfg.codec,
                     })
                     .collect();
-                Box::new(Loopback::new(runtimes))
+                let fleet = Loopback::new(runtimes);
+                match &sim {
+                    Some(spec) => Box::new(SimTransport::new(
+                        fleet,
+                        FleetModel::from_spec(spec),
+                        cfg.local_epochs,
+                        availability.straggler_prob(),
+                        availability.straggler_delay_ms(),
+                    )),
+                    None => Box::new(fleet),
+                }
             }
         };
+        let population = sim
+            .as_ref()
+            .map(|s| Population { registered: s.registered, cohort: s.cohort });
 
         let global = init_params(backend.schema(), &mut rng);
         let nq = backend.schema().num_quantized();
@@ -280,9 +328,22 @@ impl<'a> Orchestrator<'a> {
             last_wq_mean: vec![backend.wq_init(); nq],
             rng,
             availability,
+            population,
             stats_mark: LinkStats::default(),
             metrics,
         })
+    }
+
+    /// The data shard (and transport link) behind a selection id: the id
+    /// itself for real fleets; `id % n_clients` for a simulated
+    /// registered population (registered clients share the data
+    /// substrate but carry their own RNG, timing, and device profile).
+    fn shard_of(&self, id: usize) -> usize {
+        if self.population.is_some() {
+            id % self.cfg.n_clients
+        } else {
+            id
+        }
     }
 
     /// Override the round-driver worker-thread count (default: one per
@@ -348,11 +409,23 @@ impl<'a> Orchestrator<'a> {
     /// Run one communication round. Returns the round record.
     pub fn round(&mut self, round: usize) -> Result<RoundRecord> {
         let sw = Stopwatch::start();
-        let k = self.cfg.selected_per_round();
-        let selected = select_clients(self.cfg.n_clients, k, &mut self.rng);
+        let selected = match self.population {
+            None => {
+                let k = self.cfg.selected_per_round();
+                select_clients(self.cfg.n_clients, k, &mut self.rng)
+            }
+            Some(p) => select_cohort(p.registered, p.cohort, &mut self.rng),
+        };
         let dropout = self.availability.dropout_for_round(round);
         let selected = apply_dropout(&selected, dropout, &mut self.rng);
-        let delays = self.straggler_delays(&selected);
+        // under the simulator, straggler delays are drawn virtually by
+        // the transport (per registered client, per round) — the main
+        // RNG stream is untouched and nothing ever sleeps
+        let delays = if self.population.is_some() {
+            vec![0; selected.len()]
+        } else {
+            self.straggler_delays(&selected)
+        };
 
         let (train_loss, factors) = match self.cfg.protocol {
             Protocol::TFedAvg | Protocol::FedAvg => {
@@ -366,6 +439,10 @@ impl<'a> Orchestrator<'a> {
         let stats = self.transport.stats();
         let delta = stats.since(&self.stats_mark);
         self.stats_mark = stats;
+
+        // round boundary: a virtual-time transport drains its event
+        // queue here and advances the simulated clock
+        let virtual_time = self.transport.end_round(round as u32);
 
         let evaluated = round % self.cfg.eval_every == 0 || round == self.cfg.rounds;
         let (test_loss, test_acc) = if evaluated {
@@ -390,6 +467,9 @@ impl<'a> Orchestrator<'a> {
             up_frames: delta.up_frames,
             down_frames: delta.down_frames,
             wall_secs: sw.secs(),
+            sim_secs: virtual_time.map_or(0.0, |t| t.round_secs),
+            straggler_delay_ms: virtual_time
+                .map_or_else(|| delays.iter().sum(), |t| t.straggler_ms),
             selected,
             factors,
             evaluated,
@@ -490,12 +570,12 @@ impl<'a> Orchestrator<'a> {
         // `clients × model`, and the result is bit-identical to the old
         // batch average (same float-op sequence; see DESIGN.md §8).
         let expected_total: u64 =
-            selected.iter().map(|&cid| self.shard_sizes[cid] as u64).sum();
+            selected.iter().map(|&cid| self.shard_sizes[self.shard_of(cid)] as u64).sum();
         let mut agg = Aggregator::for_schema(&schema, expected_total)?;
         let mut loss_acc = 0f64;
         let mut wq_mean = vec![0f32; qidx.len()];
         for (slot, reply) in replies.into_iter().enumerate() {
-            let expect_n = self.shard_sizes[selected[slot]] as u64;
+            let expect_n = self.shard_sizes[self.shard_of(selected[slot])] as u64;
             let (num_samples, rebuilt) = match (self.cfg.protocol, reply) {
                 (Protocol::TFedAvg, Message::TernaryUpdate(u)) => {
                     if u.layers.len() != qidx.len() {
@@ -608,7 +688,9 @@ impl<'a> Orchestrator<'a> {
     /// come back indexed by selection slot, so downstream aggregation
     /// order (and therefore float summation) is schedule-independent.
     /// `delays` (per slot, ms) injects straggler latency before a
-    /// client's exchange — it shifts wall time only, never results.
+    /// client's exchange — it shifts wall time only (capped, see
+    /// `straggle`), never results; under the sim transport delays are
+    /// virtual and `delays` is all zeros.
     fn dispatch(
         &self,
         selected: &[usize],
@@ -620,47 +702,23 @@ impl<'a> Orchestrator<'a> {
         if n == 0 {
             return Ok(Vec::new());
         }
+        // selection ids resolve to transport links up front (identity for
+        // real fleets; shard mapping for a simulated population)
+        let links: Vec<usize> = selected.iter().map(|&cid| self.shard_of(cid)).collect();
         // the broadcast is identical for every client: frame it once and
         // fan the same buffer out
         let down_wire = encode_data_frame(down)?;
         let transport = self.transport.as_ref();
-        let workers = self.workers.min(n);
-        if workers <= 1 {
-            return selected
-                .iter()
-                .zip(assigns)
-                .enumerate()
-                .map(|(i, (&cid, a))| {
-                    straggle(delays[i]);
-                    transport.round_trip(cid, a, &down_wire)
-                })
-                .collect();
+        let exchange = |i: usize| {
+            straggle(delays[i]);
+            transport.round_trip(links[i], &assigns[i], &down_wire)
+        };
+        if self.workers <= 1 {
+            // fail-fast: collect() short-circuits at the first error, so
+            // one bad exchange never burns the rest of the cohort's compute
+            return (0..n).map(exchange).collect();
         }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<Message>>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    straggle(delays[i]);
-                    let r = transport.round_trip(selected[i], &assigns[i], &down_wire);
-                    *slots[i].lock().unwrap() = Some(r);
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, slot)| {
-                slot.into_inner()
-                    .unwrap()
-                    .unwrap_or_else(|| Err(anyhow!("client {} produced no reply", selected[i])))
-            })
-            .collect()
+        parallel_map_indexed(n, self.workers, exchange).into_iter().collect()
     }
 
     // -- centralized (Baseline / TTQ) ----------------------------------------
@@ -723,11 +781,16 @@ impl<'a> Orchestrator<'a> {
     }
 }
 
-/// Injected straggler latency: block this slot's worker for `delay_ms`
-/// before its exchange (a slow client, as the server experiences it).
+/// Injected straggler latency: block this slot's worker briefly before
+/// its exchange (a slow client, as the server experiences it). The real
+/// sleep is capped at [`REAL_STRAGGLE_CAP_MS`] — the configured delay is
+/// an accounting/modeling quantity (`RoundRecord::straggler_delay_ms`,
+/// and full virtual time under the sim transport), not a request to
+/// stall the test suite for real.
 fn straggle(delay_ms: u64) {
-    if delay_ms > 0 {
-        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+    let capped = delay_ms.min(REAL_STRAGGLE_CAP_MS);
+    if capped > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(capped));
     }
 }
 

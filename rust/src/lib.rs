@@ -18,7 +18,11 @@
 //!   the wire codec with byte accounting, the `transport` subsystem
 //!   (framed wire protocol over in-process loopback or TCP), the
 //!   `scenario` engine (declarative TOML experiment manifests expanded
-//!   into seed/partition/codec sweeps), the data pipeline with
+//!   into seed/partition/codec sweeps, with `--jobs` parallel grid
+//!   execution), the `sim` subsystem (deterministic discrete-event
+//!   virtual-time fleet simulator: lazily-profiled registered
+//!   populations, per-client bandwidth/device models, simulated
+//!   time-to-accuracy; DESIGN.md §9), the data pipeline with
 //!   IID/Nc/beta/Dirichlet(α) partitioners, and the PJRT runtime that
 //!   executes the artifacts. Python never runs at request time.
 
@@ -33,5 +37,6 @@ pub mod native;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;
+pub mod sim;
 pub mod transport;
 pub mod util;

@@ -15,6 +15,8 @@
 //!   tfed run --codec quant8 --rounds 30              # 8-bit stochastic quant
 //!   tfed run --alpha 0.5 --rounds 30                 # Dirichlet label skew
 //!   tfed run ../examples/scenarios/paper_noniid.toml # declarative grid
+//!   tfed run ../examples/scenarios/paper_noniid.toml --jobs 4   # parallel cells
+//!   tfed run ../examples/scenarios/sim_fleet.toml    # 100k-client virtual-time sim
 //!   tfed serve --listen 127.0.0.1:7878 --clients 4 --native
 //!   tfed client --connect 127.0.0.1:7878 --client-id 0
 //!   tfed inspect
@@ -71,6 +73,7 @@ fn real_main() -> Result<()> {
         .opt("connect", "", "client: coordinator address to dial")
         .opt("client-id", "0", "client: this process's client id")
         .opt("workers", "0", "round-driver worker threads (0 = auto)")
+        .opt("jobs", "1", "scenario runs: grid cells in flight (manifest only)")
         .flag("native", "use the pure-Rust backend (MLP only)")
         .flag("quiet", "suppress per-round logs")
         .parse_env()?;
@@ -188,6 +191,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = args.positional().get(1) {
         return cmd_run_scenario(path, args);
     }
+    if args.is_set("jobs") {
+        bail!("--jobs parallelizes scenario grid cells; it needs a manifest run");
+    }
     let cfg = build_cfg(args)?;
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
@@ -210,8 +216,8 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     // the manifest is the single source of truth for a grid: silently
     // ignoring `--rounds 2` next to a 30-round manifest would be a trap,
-    // so every config-affecting flag is rejected (only --out/--quiet
-    // compose with a manifest)
+    // so every config-affecting flag is rejected (only --out, --jobs and
+    // --quiet compose with a manifest)
     let config_opts = [
         "protocol", "codec", "task", "clients", "participation", "nc", "beta", "alpha",
         "batch", "epochs", "rounds", "lr", "seed", "train-samples", "test-samples",
@@ -227,8 +233,8 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     if !offending.is_empty() {
         bail!(
             "scenario manifests carry the whole experiment config; move {} into \
-             {path:?} (its [experiment]/[fleet]/[availability] tables) — only \
-             --out and --quiet combine with a manifest run",
+             {path:?} (its [experiment]/[fleet]/[availability]/[sim] tables) — only \
+             --out, --jobs and --quiet combine with a manifest run",
             offending
                 .iter()
                 .map(|n| format!("--{n}"))
@@ -238,11 +244,22 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     }
     let out = args.get("out")?;
     let out = if out.is_empty() { None } else { Some(out.as_str()) };
-    let (results, written) = tfed::scenario::run_manifest_file(path, out)?;
+    let jobs = args.get_usize("jobs")?.max(1);
+    let (results, written) = tfed::scenario::run_manifest_file(path, out, jobs)?;
     println!("== scenario {} ({} cells) ==", results.name, results.cells.len());
     for c in &results.cells {
+        let sim = match &c.sim {
+            Some(s) => {
+                let tta = match s.sim_secs_to_target {
+                    Some(t) => format!(" tta={t:.0}s"),
+                    None => String::new(),
+                };
+                format!(" vtime={:.0}s{tta}", s.total_sim_secs)
+            }
+            None => String::new(),
+        };
         println!(
-            "{:<55} final={:.4} best={:.4} up={:.3}MB down={:.3}MB",
+            "{:<55} final={:.4} best={:.4} up={:.3}MB down={:.3}MB{sim}",
             c.label,
             c.metrics.final_acc(),
             c.metrics.best_acc(),

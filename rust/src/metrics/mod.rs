@@ -28,6 +28,14 @@ pub struct RoundRecord {
     /// downstream data frames this round (one per client broadcast)
     pub down_frames: u64,
     pub wall_secs: f64,
+    /// simulated round completion time in virtual seconds (last cohort
+    /// arrival − round start, from `sim::SimTransport`); 0 when the run
+    /// is not simulated
+    pub sim_secs: f64,
+    /// total straggler delay injected this round, in milliseconds —
+    /// virtual under the simulator, configured-but-wall-capped on real
+    /// transports (availability delay accounting)
+    pub straggler_delay_ms: u64,
     pub selected: Vec<usize>,
     /// per-layer quantization factors, if the protocol has them:
     /// T-FedAvg: mean w^q per layer; TTQ: [wp..., wn...]
@@ -89,9 +97,43 @@ impl RunMetrics {
         self.records.iter().map(|r| r.wall_secs).sum()
     }
 
+    /// Total simulated time across all rounds (virtual seconds; 0 for
+    /// non-simulated runs).
+    pub fn total_sim_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.sim_secs).sum()
+    }
+
+    /// Round throughput on the virtual clock (None for non-simulated
+    /// runs) — the bench's cross-codec "rounds per virtual hour" axis.
+    pub fn rounds_per_virtual_hour(&self) -> Option<f64> {
+        let secs = self.total_sim_secs();
+        if secs > 0.0 {
+            Some(self.records.len() as f64 * 3_600.0 / secs)
+        } else {
+            None
+        }
+    }
+
     /// Rounds needed to first reach `acc` (None if never).
     pub fn rounds_to_acc(&self, acc: f32) -> Option<usize> {
         self.records.iter().find(|r| r.evaluated && r.test_acc >= acc).map(|r| r.round)
+    }
+
+    /// Simulated time to first reach test accuracy `acc`: the virtual
+    /// clock at the end of the first evaluated round whose accuracy
+    /// meets the target (None if never reached, or not simulated).
+    pub fn sim_secs_to_acc(&self, acc: f32) -> Option<f64> {
+        if self.total_sim_secs() <= 0.0 {
+            return None;
+        }
+        let mut clock = 0.0;
+        for r in &self.records {
+            clock += r.sim_secs;
+            if r.evaluated && r.test_acc >= acc {
+                return Some(clock);
+            }
+        }
+        None
     }
 
     /// Accuracy series (round, acc) at evaluated rounds — Fig. 6/10 data.
@@ -111,6 +153,7 @@ impl RunMetrics {
             ("total_up_bytes", num(self.total_up_bytes() as f64)),
             ("total_down_bytes", num(self.total_down_bytes() as f64)),
             ("total_wall_secs", num(self.total_wall_secs())),
+            ("total_sim_secs", num(self.total_sim_secs())),
             (
                 "rounds",
                 arr(self
@@ -127,6 +170,8 @@ impl RunMetrics {
                             ("up_frames", num(r.up_frames as f64)),
                             ("down_frames", num(r.down_frames as f64)),
                             ("wall_secs", num(r.wall_secs)),
+                            ("sim_secs", num(r.sim_secs)),
+                            ("straggler_delay_ms", num(r.straggler_delay_ms as f64)),
                             ("evaluated", Json::Bool(r.evaluated)),
                             (
                                 "factors",
@@ -141,11 +186,11 @@ impl RunMetrics {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_acc,test_loss,up_bytes,down_bytes,up_frames,down_frames,wall_secs,evaluated\n",
+            "round,train_loss,test_acc,test_loss,up_bytes,down_bytes,up_frames,down_frames,wall_secs,sim_secs,straggler_delay_ms,evaluated\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.4},{}\n",
+                "{},{},{},{},{},{},{},{},{:.4},{:.6},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_acc,
@@ -155,6 +200,8 @@ impl RunMetrics {
                 r.up_frames,
                 r.down_frames,
                 r.wall_secs,
+                r.sim_secs,
+                r.straggler_delay_ms,
                 r.evaluated as u8
             ));
         }
@@ -191,6 +238,8 @@ mod tests {
             up_frames: 2,
             down_frames: 2,
             wall_secs: 0.1,
+            sim_secs: 0.0,
+            straggler_delay_ms: 0,
             selected: vec![0, 1],
             factors: vec![0.1, 0.2],
             evaluated: true,
@@ -230,5 +279,36 @@ mod tests {
     #[test]
     fn mb_conversion() {
         assert!((mb(1024 * 1024) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_time_aggregates() {
+        // non-simulated runs: no virtual clock, no time-to-accuracy
+        let mut plain = RunMetrics::new("plain".into());
+        plain.push(rec(1, 0.9, 1));
+        assert_eq!(plain.total_sim_secs(), 0.0);
+        assert_eq!(plain.rounds_per_virtual_hour(), None);
+        assert_eq!(plain.sim_secs_to_acc(0.5), None);
+
+        let mut m = RunMetrics::new("sim".into());
+        for (round, acc, secs) in [(1, 0.3, 40.0), (2, 0.6, 50.0), (3, 0.8, 30.0)] {
+            let mut r = rec(round, acc, 10);
+            r.sim_secs = secs;
+            r.straggler_delay_ms = 500;
+            m.push(r);
+        }
+        assert_eq!(m.total_sim_secs(), 120.0);
+        // 3 rounds in 120 virtual seconds = 90 rounds/hour
+        assert!((m.rounds_per_virtual_hour().unwrap() - 90.0).abs() < 1e-9);
+        // 0.6 is first reached at the end of round 2 (40 + 50 virtual s)
+        assert_eq!(m.sim_secs_to_acc(0.5), Some(90.0));
+        assert_eq!(m.sim_secs_to_acc(0.99), None);
+        // the new columns reach both sinks
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"total_sim_secs\":120"));
+        assert!(j.contains("\"sim_secs\":40"));
+        assert!(j.contains("\"straggler_delay_ms\":500"));
+        let csv = m.to_csv();
+        assert!(csv.lines().next().unwrap().contains("sim_secs,straggler_delay_ms"));
     }
 }

@@ -39,6 +39,17 @@
 //! phase_rounds = [10, 20]     # dropout becomes phase_dropout[i]
 //! phase_dropout = [0.2, 0.5]  #   from round phase_rounds[i] onward
 //!
+//! [sim]                       # virtual-time fleet simulation (DESIGN.md §9)
+//! registered_clients = 100000 # required: virtual fleet size (≥ clients)
+//! cohort = 16                 # sampled per round; default: selected_per_round
+//! seed = 99                   # fleet seed; default: experiment seed
+//! device_us_per_sample = [400.0, 120.0, 30.0]   # device-speed tiers
+//! device_weights = [0.3, 0.5, 0.2]              # default: uniform
+//! bandwidth_mbps = [2.0, 20.0, 150.0]           # link tiers
+//! bandwidth_weights = [0.5, 0.3, 0.2]
+//! latency_ms = [10.0, 200.0]  # one-way latency, uniform in [lo, hi]
+//! target_acc = 0.5            # time-to-accuracy target (optional)
+//!
 //! [sweep]                     # grid = partitions × codecs × seeds
 //! seeds = [1, 2, 3]           # default: [experiment seed]
 //! partitions = ["iid", "nc:2"]  # default: [fleet partition]
@@ -47,6 +58,12 @@
 //! [output]
 //! path = "results.json"       # bundle sink; `--out` overrides
 //! ```
+//!
+//! A `[sim]` table switches every cell onto the virtual-time simulator:
+//! straggler delays become virtual, `wall_secs` is zeroed in the bundle
+//! (wall time is not a property of a simulated system, and zeroing it
+//! makes bundles byte-reproducible), and per-round `sim_secs` carries the
+//! simulated timing. `[sim]` composes with loopback fleets only.
 //!
 //! Unknown tables and keys are rejected (typo safety), and every grid
 //! cell passes `ExperimentConfig::validate` before anything runs.
@@ -58,6 +75,7 @@ use crate::config::{ExperimentConfig, Protocol, Task};
 use crate::coordinator::availability::{AvailabilityModel, Phase};
 use crate::data::partition::PartitionStrategy;
 use crate::scenario::toml::TomlDoc;
+use crate::sim::{SimSpec, TierSet};
 
 /// Which transport the runner drives the fleet over.
 #[derive(Clone, Debug, PartialEq)]
@@ -104,6 +122,8 @@ pub struct ScenarioManifest {
     pub protocol_pinned: bool,
     pub availability: AvailabilityModel,
     pub transport: FleetTransport,
+    /// Virtual-time fleet simulation (`[sim]` table); None = real time.
+    pub sim: Option<SimSpec>,
     pub sweep: SweepSpec,
     /// Results-bundle path from `[output] path` (CLI `--out` overrides).
     pub output: Option<String>,
@@ -137,7 +157,8 @@ impl GridCell {
     }
 }
 
-const TABLES: &[&str] = &["scenario", "experiment", "fleet", "availability", "sweep", "output"];
+const TABLES: &[&str] =
+    &["scenario", "experiment", "fleet", "availability", "sim", "sweep", "output"];
 const SCENARIO_KEYS: &[&str] = &["name"];
 const EXPERIMENT_KEYS: &[&str] = &[
     "protocol",
@@ -158,6 +179,17 @@ const EXPERIMENT_KEYS: &[&str] = &[
 const FLEET_KEYS: &[&str] = &["partition", "transport", "listen"];
 const AVAILABILITY_KEYS: &[&str] =
     &["dropout", "straggler_prob", "straggler_delay_ms", "phase_rounds", "phase_dropout"];
+const SIM_KEYS: &[&str] = &[
+    "registered_clients",
+    "cohort",
+    "seed",
+    "device_us_per_sample",
+    "device_weights",
+    "bandwidth_mbps",
+    "bandwidth_weights",
+    "latency_ms",
+    "target_acc",
+];
 const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs"];
 const OUTPUT_KEYS: &[&str] = &["path"];
 
@@ -271,6 +303,20 @@ impl ScenarioManifest {
         // -- [availability] -----------------------------------------------
         let availability = parse_availability(&doc)?;
 
+        // -- [sim] --------------------------------------------------------
+        let sim = parse_sim(&doc, &base)?;
+        if sim.is_some() {
+            if !matches!(transport, FleetTransport::Loopback) {
+                bail!(
+                    "[sim] replaces the transport with the virtual-time simulator; \
+                     it cannot combine with [fleet] transport = \"tcp\""
+                );
+            }
+            if protocol_given && protocol.is_centralized() {
+                bail!("[sim] requires a federated protocol (fedavg | tfedavg)");
+            }
+        }
+
         // -- [sweep] ------------------------------------------------------
         let seeds = match doc.get("sweep", "seeds") {
             None => vec![seed],
@@ -324,6 +370,7 @@ impl ScenarioManifest {
             protocol_pinned: protocol_given,
             availability,
             transport,
+            sim,
             sweep: SweepSpec { seeds, partitions, codecs },
             output,
         };
@@ -380,6 +427,7 @@ fn check_surface(doc: &TomlDoc) -> Result<()> {
             "experiment" => EXPERIMENT_KEYS,
             "fleet" => FLEET_KEYS,
             "availability" => AVAILABILITY_KEYS,
+            "sim" => SIM_KEYS,
             "sweep" => SWEEP_KEYS,
             "output" => OUTPUT_KEYS,
             other => bail!("unknown table [{other}] (expected one of {TABLES:?})"),
@@ -434,6 +482,61 @@ fn parse_availability(doc: &TomlDoc) -> Result<AvailabilityModel> {
         .map_err(|e| anyhow!("[availability]: {e}"))
 }
 
+/// Parse the `[sim]` table into a validated [`SimSpec`] (None when the
+/// table is absent). Defaults: cohort = the experiment's
+/// `selected_per_round`, fleet seed = the experiment seed, tiers = the
+/// [`SimSpec::new`] heterogeneity model, uniform weights when only
+/// values are given.
+fn parse_sim(doc: &TomlDoc, base: &ExperimentConfig) -> Result<Option<SimSpec>> {
+    if doc.table("sim").is_none() {
+        return Ok(None);
+    }
+    let registered = get_unsigned(doc, "sim", "registered_clients")?
+        .ok_or_else(|| anyhow!("[sim] needs `registered_clients = <n>`"))?
+        as usize;
+    let cohort = get_unsigned(doc, "sim", "cohort")?
+        .map(|c| c as usize)
+        .unwrap_or_else(|| base.selected_per_round());
+    let seed = get_unsigned(doc, "sim", "seed")?.unwrap_or(base.seed);
+    let mut spec = SimSpec::new(registered, cohort, seed);
+    if let Some(values) = get_float_arr(doc, "sim", "device_us_per_sample")? {
+        spec.device_us_per_sample = tier_set(
+            values,
+            get_float_arr(doc, "sim", "device_weights")?,
+        )
+        .context("[sim] device_us_per_sample")?;
+    } else if doc.get("sim", "device_weights").is_some() {
+        bail!("[sim] device_weights needs device_us_per_sample");
+    }
+    if let Some(values) = get_float_arr(doc, "sim", "bandwidth_mbps")? {
+        spec.bandwidth_mbps = tier_set(
+            values,
+            get_float_arr(doc, "sim", "bandwidth_weights")?,
+        )
+        .context("[sim] bandwidth_mbps")?;
+    } else if doc.get("sim", "bandwidth_weights").is_some() {
+        bail!("[sim] bandwidth_weights needs bandwidth_mbps");
+    }
+    if let Some(lat) = get_float_arr(doc, "sim", "latency_ms")? {
+        let [lo, hi] = lat.as_slice() else {
+            bail!("[sim] latency_ms must be a [lo, hi] pair, got {} values", lat.len());
+        };
+        spec.latency_ms = (*lo, *hi);
+    }
+    if let Some(t) = get_float(doc, "sim", "target_acc")? {
+        spec.target_acc = Some(t);
+    }
+    spec.validate_for(base.n_clients).map_err(|e| anyhow!("[sim]: {e}"))?;
+    Ok(Some(spec))
+}
+
+fn tier_set(values: Vec<f64>, weights: Option<Vec<f64>>) -> Result<TierSet> {
+    Ok(match weights {
+        Some(w) => TierSet::new(values, w)?,
+        None => TierSet::uniform(values)?,
+    })
+}
+
 fn get_unsigned(doc: &TomlDoc, table: &str, key: &str) -> Result<Option<u64>> {
     match doc.get(table, key) {
         None => Ok(None),
@@ -445,6 +548,19 @@ fn get_float(doc: &TomlDoc, table: &str, key: &str) -> Result<Option<f64>> {
     match doc.get(table, key) {
         None => Ok(None),
         Some(v) => Ok(Some(v.as_float().with_context(|| format!("[{table}] {key}"))?)),
+    }
+}
+
+fn get_float_arr(doc: &TomlDoc, table: &str, key: &str) -> Result<Option<Vec<f64>>> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .and_then(|a| a.iter().map(|x| x.as_float()).collect::<Result<Vec<f64>>>())
+                .with_context(|| format!("[{table}] {key}"))?;
+            Ok(Some(arr))
+        }
     }
 }
 
@@ -561,6 +677,75 @@ mod tests {
         assert!(parse("[experiment]\nparticipation = 2.0\n").is_err());
         // listen without tcp
         assert!(parse("[fleet]\nlisten = \"127.0.0.1:1\"\n").is_err());
+    }
+
+    #[test]
+    fn sim_table_parses_with_defaults() {
+        let m = parse("[sim]\nregistered_clients = 100_000\n").unwrap();
+        let sim = m.sim.unwrap();
+        assert_eq!(sim.registered, 100_000);
+        // defaults follow the experiment: cohort = selected_per_round,
+        // fleet seed = experiment seed
+        assert_eq!(sim.cohort, m.base.selected_per_round());
+        assert_eq!(sim.seed, m.base.seed);
+        assert!(sim.target_acc.is_none());
+        assert!(parse("").unwrap().sim.is_none());
+    }
+
+    #[test]
+    fn sim_table_full_surface() {
+        let m = parse(
+            "[sim]\nregistered_clients = 1_000_000\ncohort = 64\nseed = 9\n\
+             device_us_per_sample = [500.0, 50.0]\ndevice_weights = [0.9, 0.1]\n\
+             bandwidth_mbps = [1.0, 100.0]\n\
+             latency_ms = [5.0, 50.0]\ntarget_acc = 0.5\n",
+        )
+        .unwrap();
+        let sim = m.sim.unwrap();
+        assert_eq!(sim.registered, 1_000_000);
+        assert_eq!(sim.cohort, 64);
+        assert_eq!(sim.seed, 9);
+        assert_eq!(sim.device_us_per_sample.values(), &[500.0, 50.0]);
+        // bandwidth got uniform weights (values without weights)
+        assert_eq!(sim.bandwidth_mbps.values(), &[1.0, 100.0]);
+        assert_eq!(sim.latency_ms, (5.0, 50.0));
+        assert_eq!(sim.target_acc, Some(0.5));
+    }
+
+    #[test]
+    fn sim_reject_paths() {
+        // missing population
+        assert!(parse("[sim]\ncohort = 4\n").is_err());
+        // unknown key (typo safety, like every other table)
+        assert!(parse("[sim]\nregistered_clients = 100\nchoort = 4\n").is_err());
+        // population smaller than the shard count (10 clients default)
+        assert!(parse("[sim]\nregistered_clients = 5\n").is_err());
+        // geometry / scalar validation flows through SimSpec
+        assert!(parse("[sim]\nregistered_clients = 100\ncohort = 0\n").is_err());
+        assert!(parse("[sim]\nregistered_clients = 100\ncohort = 101\n").is_err());
+        assert!(parse("[sim]\nregistered_clients = 100\ntarget_acc = 1.5\n").is_err());
+        assert!(
+            parse("[sim]\nregistered_clients = 100\nlatency_ms = [9.0, 1.0]\n").is_err()
+        );
+        assert!(parse("[sim]\nregistered_clients = 100\nlatency_ms = [1.0]\n").is_err());
+        // weights without values, mismatched lengths, bad tier values
+        assert!(parse("[sim]\nregistered_clients = 100\ndevice_weights = [1.0]\n").is_err());
+        assert!(parse(
+            "[sim]\nregistered_clients = 100\n\
+             bandwidth_mbps = [1.0, 2.0]\nbandwidth_weights = [1.0]\n"
+        )
+        .is_err());
+        assert!(parse(
+            "[sim]\nregistered_clients = 100\ndevice_us_per_sample = [0.0]\n"
+        )
+        .is_err());
+        // sim × tcp and sim × centralized protocols are contradictions
+        assert!(parse("[fleet]\ntransport = \"tcp\"\n[sim]\nregistered_clients = 100\n")
+            .is_err());
+        assert!(parse(
+            "[experiment]\nprotocol = \"baseline\"\n[sim]\nregistered_clients = 100\n"
+        )
+        .is_err());
     }
 
     #[test]

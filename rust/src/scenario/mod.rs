@@ -12,9 +12,13 @@
 //! * `toml` — hand-rolled single-file TOML subset parser (`util::json`
 //!   style; the build is offline, so no `toml`/`serde` crates)
 //! * `manifest` — [`ScenarioManifest`]: schema, validation (unknown
-//!   keys rejected), CLI-equivalent defaults, grid expansion
-//! * `runner` — [`run_scenario`]: drive every grid cell through the
-//!   `Orchestrator` and bundle [`ScenarioResults`]
+//!   keys rejected), CLI-equivalent defaults, grid expansion, and the
+//!   `[sim]` table that switches a grid onto the virtual-time fleet
+//!   simulator ([`crate::sim`])
+//! * `runner` — [`run_scenario`] / [`run_scenario_jobs`]: drive every
+//!   grid cell through the `Orchestrator` (sequentially or `--jobs N`
+//!   cells in flight, same bundle either way) and bundle
+//!   [`ScenarioResults`]
 //!
 //! A single-cell manifest produces metrics byte-identical to the
 //! equivalent flag-driven `tfed run` invocation (asserted in
@@ -28,19 +32,22 @@ pub mod toml;
 use anyhow::Result;
 
 pub use manifest::{FleetTransport, GridCell, ScenarioManifest, SweepSpec};
-pub use runner::{run_scenario, CellResult, ScenarioResults};
+pub use runner::{run_scenario, run_scenario_jobs, CellResult, CellSim, ScenarioResults};
 pub use toml::{TomlDoc, TomlValue};
 
 /// Load, run, and persist one manifest end-to-end — the
 /// `tfed run <manifest.toml>` entry point. `out_override` replaces the
-/// manifest's `[output] path`; returns the results and the bundle path
+/// manifest's `[output] path`; `jobs` caps the number of grid cells in
+/// flight (1 = sequential; order and deterministic bundle bytes are
+/// identical at any value). Returns the results and the bundle path
 /// written (if any).
 pub fn run_manifest_file(
     path: &str,
     out_override: Option<&str>,
+    jobs: usize,
 ) -> Result<(ScenarioResults, Option<String>)> {
     let manifest = ScenarioManifest::load(path)?;
-    let results = run_scenario(&manifest)?;
+    let results = run_scenario_jobs(&manifest, jobs)?;
     let out = out_override.map(str::to_string).or_else(|| manifest.output.clone());
     if let Some(p) = &out {
         results.write_json(p)?;

@@ -4,23 +4,46 @@
 //! Each cell is an independent, fully-seeded experiment — a cell run from
 //! a manifest is byte-identical to the same configuration run through CLI
 //! flags (`tests/scenario_e2e.rs` asserts this). Cells execute
-//! sequentially; inside a cell the round driver's worker pool already
-//! parallelizes the fleet.
+//! sequentially by default; `run_scenario_jobs` (the CLI's `--jobs N`)
+//! fans independent cells over a worker pool while keeping the bundle's
+//! cell order — and, for deterministic fields, its bytes — identical to
+//! the sequential run. Inside a cell the round driver's worker pool
+//! already parallelizes the fleet.
+//!
+//! Cells under a `[sim]` manifest run on the virtual clock
+//! (`Orchestrator::with_sim`): their `wall_secs` are zeroed in the stored
+//! metrics (wall time is not a property of a simulated system, and
+//! zeroing it makes sim bundles byte-reproducible run-over-run at any
+//! `--jobs`/worker count) and the bundle carries a per-cell `sim` block
+//! with total virtual time, rounds per virtual hour, and — when the
+//! manifest names a `target_acc` — simulated time-to-accuracy.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::make_backend;
 use crate::coordinator::server::Orchestrator;
+use crate::info;
 use crate::metrics::RunMetrics;
 use crate::runtime::manifest::default_artifacts_dir;
 use crate::runtime::Engine;
 use crate::scenario::manifest::{FleetTransport, GridCell, ScenarioManifest};
 use crate::transport::TcpBinding;
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::parallel::parallel_map_indexed;
 use crate::util::stats;
-use crate::info;
+
+/// Per-cell virtual-time summary (sim cells only).
+#[derive(Clone, Debug)]
+pub struct CellSim {
+    pub total_sim_secs: f64,
+    pub rounds_per_virtual_hour: f64,
+    /// simulated seconds to the manifest's `target_acc` (None: no target
+    /// configured, or never reached)
+    pub sim_secs_to_target: Option<f64>,
+    pub target_acc: Option<f64>,
+}
 
 /// One executed grid cell.
 #[derive(Clone, Debug)]
@@ -31,6 +54,8 @@ pub struct CellResult {
     pub codec: String,
     pub protocol: String,
     pub metrics: RunMetrics,
+    /// virtual-time summary; None for real-time cells
+    pub sim: Option<CellSim>,
 }
 
 /// The whole scenario's results — one bundle per `tfed run <manifest>`.
@@ -68,14 +93,35 @@ impl ScenarioResults {
                     .cells
                     .iter()
                     .map(|c| {
-                        obj(vec![
+                        let mut fields = vec![
                             ("label", s(&c.label)),
                             ("seed", num(c.seed as f64)),
                             ("partition", s(&c.partition)),
                             ("codec", s(&c.codec)),
                             ("protocol", s(&c.protocol)),
-                            ("metrics", c.metrics.to_json()),
-                        ])
+                        ];
+                        if let Some(sim) = &c.sim {
+                            fields.push((
+                                "sim",
+                                obj(vec![
+                                    ("total_sim_secs", num(sim.total_sim_secs)),
+                                    (
+                                        "rounds_per_virtual_hour",
+                                        num(sim.rounds_per_virtual_hour),
+                                    ),
+                                    (
+                                        "sim_secs_to_target",
+                                        sim.sim_secs_to_target.map_or(Json::Null, num),
+                                    ),
+                                    (
+                                        "target_acc",
+                                        sim.target_acc.map_or(Json::Null, num),
+                                    ),
+                                ]),
+                            ));
+                        }
+                        fields.push(("metrics", c.metrics.to_json()));
+                        obj(fields)
                     })
                     .collect()),
             ),
@@ -88,52 +134,95 @@ impl ScenarioResults {
     }
 }
 
-/// Run every grid cell of a parsed manifest.
+/// The PJRT engine, shared across cells and loaded at most once (native
+/// cells never touch it; `--jobs` workers share the same instance).
+type EngineCache = Mutex<Option<Arc<Engine>>>;
+
+/// Run every grid cell of a parsed manifest, sequentially.
 pub fn run_scenario(manifest: &ScenarioManifest) -> Result<ScenarioResults> {
+    run_scenario_jobs(manifest, 1)
+}
+
+/// Run the grid with up to `jobs` cells in flight. Cells are independent
+/// and fully seeded, so results — bundle order included — are identical
+/// to the sequential run at any `jobs` value; only wall time changes.
+pub fn run_scenario_jobs(manifest: &ScenarioManifest, jobs: usize) -> Result<ScenarioResults> {
     let cells = manifest.grid()?;
-    info!("scenario {:?}: {} grid cells", manifest.name, cells.len());
-    let mut engine: Option<Arc<Engine>> = None;
-    let mut results = Vec::with_capacity(cells.len());
-    for (i, cell) in cells.iter().enumerate() {
-        info!("cell {}/{}: {}", i + 1, cells.len(), cell.label());
-        let metrics = run_cell(manifest, cell, &mut engine)
-            .with_context(|| format!("grid cell {}", cell.label()))?;
-        results.push(CellResult {
-            label: cell.label(),
-            seed: cell.cfg.seed,
-            partition: cell.partition.clone(),
-            codec: cell.cfg.codec.name(),
-            protocol: cell.cfg.protocol.name().to_string(),
-            metrics,
-        });
+    let jobs = jobs.max(1).min(cells.len().max(1));
+    info!("scenario {:?}: {} grid cells, {jobs} job(s)", manifest.name, cells.len());
+    if matches!(manifest.transport, FleetTransport::Tcp { .. }) && jobs > 1 {
+        // unreachable through the manifest (tcp grids are single-cell,
+        // so jobs clamps to 1), but keep the API honest
+        bail!("tcp fleets are interactive and run one cell at a time");
     }
+    let engine: EngineCache = Mutex::new(None);
+    let results: Vec<CellResult> = parallel_map_indexed(cells.len(), jobs, |i| {
+        info!("cell {}/{}: {}", i + 1, cells.len(), cells[i].label());
+        run_cell(manifest, &cells[i], &engine)
+    })
+    .into_iter()
+    .collect::<Result<Vec<_>>>()?;
     Ok(ScenarioResults { name: manifest.name.clone(), cells: results })
 }
 
-/// Run one cell; `engine` caches the PJRT runtime across non-native cells.
+/// Run one cell end-to-end and summarize it.
 fn run_cell(
     manifest: &ScenarioManifest,
     cell: &GridCell,
-    engine: &mut Option<Arc<Engine>>,
+    engine: &EngineCache,
+) -> Result<CellResult> {
+    let metrics = run_cell_metrics(manifest, cell, engine)
+        .with_context(|| format!("grid cell {}", cell.label()))?;
+    let sim = manifest.sim.as_ref().map(|spec| CellSim {
+        total_sim_secs: metrics.total_sim_secs(),
+        rounds_per_virtual_hour: metrics.rounds_per_virtual_hour().unwrap_or(0.0),
+        sim_secs_to_target: spec
+            .target_acc
+            .and_then(|t| metrics.sim_secs_to_acc(t as f32)),
+        target_acc: spec.target_acc,
+    });
+    Ok(CellResult {
+        label: cell.label(),
+        seed: cell.cfg.seed,
+        partition: cell.partition.clone(),
+        codec: cell.cfg.codec.name(),
+        protocol: cell.cfg.protocol.name().to_string(),
+        metrics,
+        sim,
+    })
+}
+
+/// Drive one cell through the orchestrator on the manifest's transport.
+fn run_cell_metrics(
+    manifest: &ScenarioManifest,
+    cell: &GridCell,
+    engine: &EngineCache,
 ) -> Result<RunMetrics> {
     let cfg = cell.cfg.clone();
     let engine_ref = if cfg.native_backend {
         None
     } else {
-        if engine.is_none() {
-            *engine = Some(Arc::new(Engine::load(default_artifacts_dir())?));
+        let mut cache = engine.lock().unwrap();
+        if cache.is_none() {
+            *cache = Some(Arc::new(Engine::load(default_artifacts_dir())?));
         }
-        engine.clone()
+        cache.clone()
     };
     let backend =
         make_backend(engine_ref, cfg.task.model_name(), cfg.batch, cfg.native_backend)?;
-    let mut orch = match &manifest.transport {
-        FleetTransport::Loopback => Orchestrator::with_availability(
+    let mut orch = match (&manifest.sim, &manifest.transport) {
+        (Some(sim), _) => Orchestrator::with_sim(
+            cfg,
+            backend.as_ref(),
+            manifest.availability.clone(),
+            sim.clone(),
+        )?,
+        (None, FleetTransport::Loopback) => Orchestrator::with_availability(
             cfg,
             backend.as_ref(),
             manifest.availability.clone(),
         )?,
-        FleetTransport::Tcp { listen } => {
+        (None, FleetTransport::Tcp { listen }) => {
             if cfg.protocol.is_centralized() {
                 bail!("tcp transport requires a federated protocol");
             }
@@ -157,7 +246,15 @@ fn run_cell(
         }
     }
     run_result?;
-    Ok(orch.metrics.clone())
+    let mut metrics = orch.metrics.clone();
+    if manifest.sim.is_some() {
+        // simulated cells report virtual time only: zeroing the wall
+        // clock makes bundles byte-identical run-over-run
+        for r in &mut metrics.records {
+            r.wall_secs = 0.0;
+        }
+    }
+    Ok(metrics)
 }
 
 #[cfg(test)]
@@ -194,6 +291,7 @@ seeds = [5, 6]
         for c in &r.cells {
             assert_eq!(c.metrics.records.len(), 2);
             assert!(c.metrics.final_acc().is_finite());
+            assert!(c.sim.is_none());
         }
         // the bundle is valid JSON and round-trips through the parser
         let text = r.to_json().to_string_pretty();
@@ -211,6 +309,8 @@ seeds = [5, 6]
             .unwrap();
         assert_eq!(rounds.len(), 2);
         assert!(parsed.get("aggregate").unwrap().get("mean_final_acc").is_some());
+        // real-time cells carry no sim block
+        assert!(cells[0].get("sim").is_none());
     }
 
     #[test]
@@ -233,5 +333,30 @@ seeds = [5, 6]
             c5.metrics.records[0].train_loss.to_bits(),
             c6.metrics.records[0].train_loss.to_bits()
         );
+    }
+
+    #[test]
+    fn parallel_jobs_match_sequential_in_order_and_bytes() {
+        let m = tiny_manifest();
+        let seq = run_scenario(&m).unwrap();
+        let par = run_scenario_jobs(&m, 2).unwrap();
+        assert_eq!(
+            seq.cells.iter().map(|c| c.label.clone()).collect::<Vec<_>>(),
+            par.cells.iter().map(|c| c.label.clone()).collect::<Vec<_>>()
+        );
+        // byte-identical bundles once the (only nondeterministic) wall
+        // clock is zeroed on both sides
+        let zero_wall = |mut r: ScenarioResults| {
+            for c in &mut r.cells {
+                for rec in &mut c.metrics.records {
+                    rec.wall_secs = 0.0;
+                }
+            }
+            r.to_json().to_string_pretty()
+        };
+        assert_eq!(zero_wall(seq), zero_wall(par));
+        // oversubscribed pools are clamped, not a hang or an error
+        let over = run_scenario_jobs(&m, 64).unwrap();
+        assert_eq!(over.cells.len(), 2);
     }
 }

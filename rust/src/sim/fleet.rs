@@ -1,0 +1,274 @@
+//! The virtual fleet: lazily-materialized per-client device and network
+//! profiles for a registered population far larger than any round's
+//! cohort.
+//!
+//! No per-client state is ever stored. A client's profile — device speed
+//! tier, link bandwidth tier, last-mile latency — is a pure function of
+//! `(fleet seed, registered client id)`: looking it up builds a fresh
+//! server-seeded [`Pcg`](crate::util::rng::Pcg) and makes a fixed number
+//! of draws. That gives O(cohort) memory at one million registered
+//! clients *and* bit-reproducible profiles regardless of which worker
+//! thread asks first (the repo's RNG discipline, applied to the fleet).
+//!
+//! Timing model (all integer microseconds at the event boundary):
+//!
+//! ```text
+//! exchange(c) = 2·latency(c)                       round trip
+//!             + down_bytes · 8 / bandwidth(c)      broadcast transfer
+//!             + samples · epochs · us_per_sample(c) local training
+//!             + up_bytes · 8 / bandwidth(c)        upload transfer
+//!             + straggle(c, round)                 availability delay
+//! ```
+//!
+//! Clients are independent (no shared server pipe is modeled), so a
+//! round's completion time is the max arrival — exactly what the
+//! `(time, seq)` event queue drains last.
+
+use crate::sim::SimError;
+use crate::util::rng::Pcg;
+
+/// Stream selectors for the per-client derivations (distinct from every
+/// stream the coordinator uses).
+const PROFILE_STREAM: u64 = 0x51F0;
+const STRAGGLE_STREAM: u64 = 0x57A6;
+/// SplitMix64 golden-ratio constant, the repo's standard id-mixing salt.
+const MIX: u64 = 0x9E3779B97F4A7C15;
+
+/// A discrete distribution over tier values (device speeds, bandwidths):
+/// `values[i]` is drawn with probability `weights[i] / sum(weights)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierSet {
+    values: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl TierSet {
+    /// Weighted tiers. Rejects empty sets, non-positive / non-finite
+    /// values or weights, and length mismatches.
+    pub fn new(values: Vec<f64>, weights: Vec<f64>) -> Result<TierSet, SimError> {
+        if values.is_empty() {
+            return Err(SimError::BadTier { what: "tier values", why: "must not be empty" });
+        }
+        if values.len() != weights.len() {
+            return Err(SimError::BadTier {
+                what: "tier weights",
+                why: "must have one weight per value",
+            });
+        }
+        if !values.iter().all(|v| v.is_finite() && *v > 0.0) {
+            return Err(SimError::BadTier {
+                what: "tier values",
+                why: "must be positive and finite",
+            });
+        }
+        if !weights.iter().all(|w| w.is_finite() && *w > 0.0) {
+            return Err(SimError::BadTier {
+                what: "tier weights",
+                why: "must be positive and finite",
+            });
+        }
+        Ok(TierSet { values, weights })
+    }
+
+    /// Equal-probability tiers.
+    pub fn uniform(values: Vec<f64>) -> Result<TierSet, SimError> {
+        let w = vec![1.0; values.len()];
+        TierSet::new(values, w)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// One weighted draw (consumes exactly one `next_f64`).
+    fn sample(&self, rng: &mut Pcg) -> f64 {
+        let total: f64 = self.weights.iter().sum();
+        let mut x = rng.next_f64() * total;
+        for (v, w) in self.values.iter().zip(&self.weights) {
+            if x < *w {
+                return *v;
+            }
+            x -= w;
+        }
+        *self.values.last().unwrap() // x == total (fp edge): last tier
+    }
+}
+
+/// One registered client's materialized characteristics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientProfile {
+    /// local training cost, microseconds per (sample × epoch)
+    pub us_per_sample: f64,
+    /// link bandwidth, megabits per second (both directions)
+    pub bandwidth_mbps: f64,
+    /// one-way last-mile latency, microseconds
+    pub latency_us: f64,
+}
+
+/// The lazily-profiled registered population.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::sim::{FleetModel, SimSpec};
+///
+/// let fleet = FleetModel::from_spec(&SimSpec::new(1_000_000, 100, 7));
+/// let p = fleet.profile(123_456);
+/// assert_eq!(p, fleet.profile(123_456)); // pure function of the id
+/// assert!(p.bandwidth_mbps > 0.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct FleetModel {
+    seed: u64,
+    device_us_per_sample: TierSet,
+    bandwidth_mbps: TierSet,
+    latency_ms: (f64, f64),
+}
+
+impl FleetModel {
+    /// Build from a validated [`SimSpec`](crate::sim::SimSpec).
+    pub fn from_spec(spec: &crate::sim::SimSpec) -> FleetModel {
+        FleetModel {
+            seed: spec.seed,
+            device_us_per_sample: spec.device_us_per_sample.clone(),
+            bandwidth_mbps: spec.bandwidth_mbps.clone(),
+            latency_ms: spec.latency_ms,
+        }
+    }
+
+    /// Materialize registered client `rid`'s profile — a pure function of
+    /// `(fleet seed, rid)`, O(1) time, no stored state.
+    pub fn profile(&self, rid: u32) -> ClientProfile {
+        let mut rng =
+            Pcg::new(self.seed ^ (rid as u64).wrapping_mul(MIX), PROFILE_STREAM);
+        let us_per_sample = self.device_us_per_sample.sample(&mut rng);
+        let bandwidth_mbps = self.bandwidth_mbps.sample(&mut rng);
+        let (lo, hi) = self.latency_ms;
+        let latency_us = (lo + (hi - lo) * rng.next_f64()) * 1_000.0;
+        ClientProfile { us_per_sample, bandwidth_mbps, latency_us }
+    }
+
+    /// Virtual duration of one full exchange with client `rid`, in
+    /// microseconds (excluding any straggler delay).
+    pub fn exchange_us(
+        &self,
+        profile: &ClientProfile,
+        down_bytes: usize,
+        up_bytes: usize,
+        samples: u64,
+        epochs: usize,
+    ) -> u64 {
+        let transfer =
+            |bytes: usize| bytes as f64 * 8.0 / profile.bandwidth_mbps; // µs at mbps
+        let compute = samples as f64 * epochs as f64 * profile.us_per_sample;
+        let total =
+            2.0 * profile.latency_us + transfer(down_bytes) + compute + transfer(up_bytes);
+        total.round() as u64
+    }
+
+    /// The availability model's straggler knob, made virtual: with
+    /// probability `prob`, client `rid` replies `delay_ms` late in
+    /// `round`. The draw is keyed by `(fleet seed, rid, round)` — never
+    /// by wall time or worker schedule — so straggler hits are part of
+    /// the reproducible trace.
+    pub fn straggle_us(&self, rid: u32, round: u32, prob: f64, delay_ms: u64) -> u64 {
+        if prob <= 0.0 || delay_ms == 0 {
+            return 0;
+        }
+        let mut rng = Pcg::new(
+            self.seed ^ (rid as u64).wrapping_mul(MIX) ^ (round as u64).rotate_left(32),
+            STRAGGLE_STREAM,
+        );
+        if rng.next_f64() < prob {
+            delay_ms * 1_000
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimSpec;
+
+    fn fleet() -> FleetModel {
+        FleetModel::from_spec(&SimSpec::new(1_000_000, 100, 42))
+    }
+
+    #[test]
+    fn tierset_validates() {
+        assert!(TierSet::new(vec![], vec![]).is_err());
+        assert!(TierSet::new(vec![1.0], vec![1.0, 2.0]).is_err());
+        assert!(TierSet::new(vec![0.0], vec![1.0]).is_err());
+        assert!(TierSet::new(vec![-1.0], vec![1.0]).is_err());
+        assert!(TierSet::new(vec![f64::NAN], vec![1.0]).is_err());
+        assert!(TierSet::new(vec![1.0], vec![0.0]).is_err());
+        assert!(TierSet::new(vec![1.0], vec![f64::INFINITY]).is_err());
+        TierSet::new(vec![5.0, 50.0], vec![0.3, 0.7]).unwrap();
+        TierSet::uniform(vec![1.0, 2.0, 3.0]).unwrap();
+    }
+
+    #[test]
+    fn tier_sampling_tracks_weights() {
+        let tiers = TierSet::new(vec![1.0, 10.0], vec![0.9, 0.1]).unwrap();
+        let mut rng = Pcg::seeded(3);
+        let n = 20_000;
+        let slow = (0..n).filter(|_| tiers.sample(&mut rng) == 1.0).count();
+        let frac = slow as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn profiles_are_pure_functions_of_id() {
+        let f = fleet();
+        for rid in [0u32, 1, 999_999, 123_456] {
+            assert_eq!(f.profile(rid), f.profile(rid));
+        }
+        // distinct ids overwhelmingly get distinct profiles
+        let distinct = (0..256)
+            .map(|rid| f.profile(rid).latency_us.to_bits())
+            .collect::<std::collections::HashSet<_>>();
+        assert!(distinct.len() > 200);
+        // and profiles stay inside the declared distributions
+        let spec = SimSpec::new(10, 1, 42);
+        for rid in 0..64 {
+            let p = f.profile(rid);
+            assert!(spec.device_us_per_sample.values().contains(&p.us_per_sample));
+            assert!(spec.bandwidth_mbps.values().contains(&p.bandwidth_mbps));
+            let (lo, hi) = spec.latency_ms;
+            assert!(p.latency_us >= lo * 1000.0 && p.latency_us <= hi * 1000.0);
+        }
+    }
+
+    #[test]
+    fn exchange_time_is_monotone() {
+        let f = fleet();
+        let p = f.profile(7);
+        let base = f.exchange_us(&p, 1000, 1000, 100, 1);
+        assert!(base > 0);
+        assert!(f.exchange_us(&p, 2000, 1000, 100, 1) > base);
+        assert!(f.exchange_us(&p, 1000, 2000, 100, 1) > base);
+        assert!(f.exchange_us(&p, 1000, 1000, 200, 1) > base);
+        assert!(f.exchange_us(&p, 1000, 1000, 100, 2) > base);
+    }
+
+    #[test]
+    fn straggler_draws_are_keyed_by_id_and_round() {
+        let f = fleet();
+        // deterministic per (rid, round)
+        assert_eq!(f.straggle_us(5, 1, 0.5, 100), f.straggle_us(5, 1, 0.5, 100));
+        // inert without a delay or probability
+        assert_eq!(f.straggle_us(5, 1, 0.0, 100), 0);
+        assert_eq!(f.straggle_us(5, 1, 0.5, 0), 0);
+        // hit rate tracks the probability across the population
+        let hits = (0..4_000u32).filter(|&rid| f.straggle_us(rid, 3, 0.25, 10) > 0).count();
+        let frac = hits as f64 / 4_000.0;
+        assert!((frac - 0.25).abs() < 0.03, "frac={frac}");
+        // a hit is the full delay in microseconds
+        let hit = (0..1_000u32)
+            .map(|rid| f.straggle_us(rid, 3, 0.25, 10))
+            .find(|&d| d > 0)
+            .unwrap();
+        assert_eq!(hit, 10_000);
+    }
+}

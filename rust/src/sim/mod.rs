@@ -1,0 +1,241 @@
+//! Virtual-time fleet simulator: deterministic discrete-event execution
+//! of million-client federations.
+//!
+//! The paper's headline claims are about communication cost *at fleet
+//! scale* — but real transports execute fleets in real time, so fleet
+//! size is bounded by the worker pool and "time to accuracy" is bounded
+//! by the wall clock. This subsystem replaces wall time with a virtual
+//! clock so a 1M-registered-client T-FedAvg run finishes in seconds and
+//! codec comparisons can be made on *modeled* client bandwidth and
+//! device heterogeneity (the condition Sattler et al. and the
+//! communication-perspective FL surveys put on meaningful codec
+//! comparisons; see PAPERS.md).
+//!
+//! It plugs into the existing stack at exactly two seams:
+//!
+//! * [`SimTransport`] implements the [`Transport`](crate::transport::Transport)
+//!   trait by *wrapping* the in-process `Loopback` — every payload byte,
+//!   frame header, and `LinkStats` counter is byte-identical to a
+//!   loopback run of the same cohort. On top, each exchange's wire bytes
+//!   are converted into a virtual transfer time by the per-client
+//!   bandwidth/latency model, local training becomes
+//!   `samples × epochs × us_per_sample`, and availability stragglers
+//!   become virtual delays (no `thread::sleep` anywhere).
+//! * a virtual clock plus a `(time, seq)`-ordered event queue
+//!   ([`EventQueue`]): worker threads push completion events in whatever
+//!   order the OS schedules them; the drained trace and the round
+//!   completion time depend only on the event keys, so results are
+//!   bit-reproducible at any worker count.
+//!
+//! The registered population ([`FleetModel`]) is never materialized:
+//! client profiles are pure functions of `(fleet seed, client id)`, so
+//! memory stays O(cohort) + O(data shards) at any population size.
+//! Registered client `r` trains on data shard `r % n_clients` — the
+//! statistical substrate is shared; the *timing* identity is per client.
+//!
+//! Declared in a scenario manifest as a `[sim]` table (see
+//! `examples/scenarios/sim_fleet.toml`), or driven directly through
+//! [`Orchestrator::with_sim`](crate::coordinator::server::Orchestrator::with_sim).
+//! DESIGN.md §9 derives the event model and the clock invariants.
+
+pub mod event;
+pub mod fleet;
+pub mod transport;
+
+use std::fmt;
+
+pub use event::{EventQueue, SimEvent};
+pub use fleet::{ClientProfile, FleetModel, TierSet};
+pub use transport::SimTransport;
+
+/// Typed validation error for simulator parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimError {
+    /// Registered population is zero or exceeds the u32 client-id space.
+    BadPopulation { registered: usize },
+    /// Fewer registered clients than data shards (`n_clients`).
+    PopulationSmallerThanShards { registered: usize, shards: usize },
+    /// Cohort is zero or larger than the registered population.
+    BadCohort { cohort: usize, registered: usize },
+    /// A tier distribution is malformed.
+    BadTier { what: &'static str, why: &'static str },
+    /// Latency bounds are not `0 <= lo <= hi < inf`.
+    BadLatency { lo: f64, hi: f64 },
+    /// Target accuracy outside `(0, 1]`.
+    BadTarget { target: f64 },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::BadPopulation { registered } => write!(
+                f,
+                "registered population must be in [1, {}], got {registered}",
+                u32::MAX
+            ),
+            SimError::PopulationSmallerThanShards { registered, shards } => write!(
+                f,
+                "registered population {registered} is smaller than the {shards} data \
+                 shards (clients); the sim maps registered ids onto shards, not the reverse"
+            ),
+            SimError::BadCohort { cohort, registered } => write!(
+                f,
+                "cohort must be in [1, registered={registered}], got {cohort}"
+            ),
+            SimError::BadTier { what, why } => write!(f, "{what} {why}"),
+            SimError::BadLatency { lo, hi } => {
+                write!(f, "latency bounds must satisfy 0 <= lo <= hi (finite), got [{lo}, {hi}]")
+            }
+            SimError::BadTarget { target } => {
+                write!(f, "target accuracy must be in (0, 1], got {target}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// A validated simulator configuration — the `[sim]` manifest table.
+///
+/// `registered` is the virtual fleet size; each round the coordinator
+/// samples a `cohort` of registered ids (server RNG, O(cohort) memory)
+/// and maps each onto one of the experiment's data shards. Device and
+/// bandwidth heterogeneity are discrete tier distributions; last-mile
+/// latency is uniform in `latency_ms`.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::sim::SimSpec;
+///
+/// let spec = SimSpec::new(100_000, 32, 7);
+/// spec.validate_for(10).unwrap(); // 10 data shards
+/// assert_eq!(spec.registered, 100_000);
+/// ```
+#[derive(Clone, Debug)]
+pub struct SimSpec {
+    /// virtual fleet size (ids `0..registered`)
+    pub registered: usize,
+    /// registered clients sampled per round
+    pub cohort: usize,
+    /// fleet seed: all per-client profile/straggler draws derive from it
+    pub seed: u64,
+    /// device-speed tiers, µs per (sample × epoch)
+    pub device_us_per_sample: TierSet,
+    /// link-bandwidth tiers, Mbit/s (both directions)
+    pub bandwidth_mbps: TierSet,
+    /// one-way latency drawn uniformly from `[lo, hi]` milliseconds
+    pub latency_ms: (f64, f64),
+    /// test-accuracy target for time-to-accuracy reporting (optional)
+    pub target_acc: Option<f64>,
+}
+
+impl SimSpec {
+    /// A spec with the default heterogeneity model: three device tiers
+    /// (phone / laptop / workstation-ish), three bandwidth tiers
+    /// (cellular / home / fiber-ish), 10–200 ms latency.
+    pub fn new(registered: usize, cohort: usize, seed: u64) -> SimSpec {
+        SimSpec {
+            registered,
+            cohort,
+            seed,
+            device_us_per_sample: TierSet::new(
+                vec![400.0, 120.0, 30.0],
+                vec![0.3, 0.5, 0.2],
+            )
+            .expect("default device tiers"),
+            bandwidth_mbps: TierSet::new(vec![2.0, 20.0, 150.0], vec![0.5, 0.3, 0.2])
+                .expect("default bandwidth tiers"),
+            latency_ms: (10.0, 200.0),
+            target_acc: None,
+        }
+    }
+
+    /// Validate against the experiment's shard count (`n_clients`).
+    /// Tier sets are validated at construction ([`TierSet::new`]); this
+    /// checks the population/cohort geometry and the scalar bounds.
+    pub fn validate_for(&self, shards: usize) -> Result<(), SimError> {
+        if self.registered == 0 || self.registered > u32::MAX as usize {
+            return Err(SimError::BadPopulation { registered: self.registered });
+        }
+        if self.registered < shards {
+            return Err(SimError::PopulationSmallerThanShards {
+                registered: self.registered,
+                shards,
+            });
+        }
+        if self.cohort == 0 || self.cohort > self.registered {
+            return Err(SimError::BadCohort {
+                cohort: self.cohort,
+                registered: self.registered,
+            });
+        }
+        let (lo, hi) = self.latency_ms;
+        if !(lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi) {
+            return Err(SimError::BadLatency { lo, hi });
+        }
+        if let Some(t) = self.target_acc {
+            if !(t > 0.0 && t <= 1.0) {
+                return Err(SimError::BadTarget { target: t });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_validates() {
+        SimSpec::new(1_000_000, 100, 1).validate_for(10).unwrap();
+        SimSpec::new(10, 10, 1).validate_for(10).unwrap();
+    }
+
+    #[test]
+    fn geometry_is_checked() {
+        let err = SimSpec::new(0, 1, 1).validate_for(1).unwrap_err();
+        assert!(matches!(err, SimError::BadPopulation { .. }));
+        let err = SimSpec::new(5, 1, 1).validate_for(10).unwrap_err();
+        assert!(matches!(err, SimError::PopulationSmallerThanShards { .. }));
+        let err = SimSpec::new(100, 0, 1).validate_for(10).unwrap_err();
+        assert!(matches!(err, SimError::BadCohort { .. }));
+        let err = SimSpec::new(100, 101, 1).validate_for(10).unwrap_err();
+        assert!(matches!(err, SimError::BadCohort { .. }));
+        let mut huge = SimSpec::new(100, 1, 1);
+        huge.registered = u32::MAX as usize + 1;
+        assert!(matches!(
+            huge.validate_for(1).unwrap_err(),
+            SimError::BadPopulation { .. }
+        ));
+    }
+
+    #[test]
+    fn scalar_bounds_are_checked() {
+        let mut s = SimSpec::new(100, 10, 1);
+        s.latency_ms = (5.0, 1.0);
+        assert!(matches!(s.validate_for(10).unwrap_err(), SimError::BadLatency { .. }));
+        let mut s = SimSpec::new(100, 10, 1);
+        s.latency_ms = (-1.0, 1.0);
+        assert!(s.validate_for(10).is_err());
+        let mut s = SimSpec::new(100, 10, 1);
+        s.latency_ms = (0.0, f64::INFINITY);
+        assert!(s.validate_for(10).is_err());
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            let mut s = SimSpec::new(100, 10, 1);
+            s.target_acc = Some(bad);
+            assert!(s.validate_for(10).is_err(), "target={bad}");
+        }
+        let mut s = SimSpec::new(100, 10, 1);
+        s.target_acc = Some(1.0);
+        s.validate_for(10).unwrap();
+    }
+
+    #[test]
+    fn errors_display() {
+        let e = SimError::BadCohort { cohort: 0, registered: 5 };
+        assert!(format!("{e}").contains("cohort"));
+        let e = SimError::BadTier { what: "tier values", why: "must not be empty" };
+        assert!(format!("{e}").contains("tier values"));
+    }
+}

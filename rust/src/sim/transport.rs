@@ -1,0 +1,321 @@
+//! `SimTransport`: the `Transport` impl that swaps wall time for the
+//! virtual clock.
+//!
+//! Payload handling is *delegated to the real `Loopback`* — the frame
+//! codec runs, CRCs are checked, `LinkStats` count the same wire bytes —
+//! so everything the coordinator and the benches measure about traffic is
+//! byte-identical to a non-simulated run of the same cohort. The sim
+//! layer only adds timing: after each exchange it computes the client's
+//! virtual duration from the wire byte counts, the client's lazily-drawn
+//! profile, and the (virtualized) availability straggler draw, then
+//! schedules an arrival event. [`Transport::end_round`] drains the
+//! events in `(time, seq)` order, advances the clock to the last
+//! arrival, and hands the round's virtual duration to the round driver
+//! for `RoundRecord::sim_secs`.
+//!
+//! Invariants (asserted by `tests/sim_e2e.rs`):
+//! * the event trace and the clock are identical at any worker count —
+//!   durations are pure functions of `(fleet seed, client id, round,
+//!   payload bytes)`, and the queue orders by `(time, seq)`;
+//! * `clock` is non-decreasing: round N+1 starts at round N's last
+//!   arrival (server-side aggregation is modeled as instantaneous).
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::comms::Message;
+use crate::sim::event::{EventQueue, SimEvent};
+use crate::sim::fleet::FleetModel;
+use crate::transport::{Loopback, RoundAssign, Transport, VirtualRoundTime};
+
+struct SimState {
+    /// virtual now, microseconds; round N+1 starts where round N ended
+    clock_us: u64,
+    /// arrivals scheduled for the round in flight
+    pending: EventQueue,
+    /// straggler delay injected this round (accounting), milliseconds
+    round_straggle_ms: u64,
+    /// drained arrival trace, every round (determinism fixture)
+    log: Vec<SimEvent>,
+}
+
+/// Virtual-time transport over an inner in-process fleet.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::sim::{FleetModel, SimSpec, SimTransport};
+/// use tfed::transport::{Loopback, Transport};
+///
+/// let spec = SimSpec::new(100_000, 16, 7);
+/// let sim = SimTransport::new(
+///     Loopback::new(Vec::new()), // attach ClientRuntimes for a live fleet
+///     FleetModel::from_spec(&spec),
+///     1,    // local epochs (compute-time model)
+///     0.0,  // straggler probability
+///     0,    // straggler delay, ms
+/// );
+/// assert_eq!(sim.n_clients(), 0);
+/// assert_eq!(sim.clock_us(), 0);
+/// ```
+pub struct SimTransport<'a> {
+    inner: Loopback<'a>,
+    fleet: FleetModel,
+    local_epochs: usize,
+    straggler_prob: f64,
+    straggler_delay_ms: u64,
+    state: Mutex<SimState>,
+}
+
+impl<'a> SimTransport<'a> {
+    /// Wrap an in-process fleet. `local_epochs` feeds the compute-time
+    /// model (`samples × epochs × us_per_sample`); the straggler pair is
+    /// the availability model's knob, made virtual.
+    pub fn new(
+        inner: Loopback<'a>,
+        fleet: FleetModel,
+        local_epochs: usize,
+        straggler_prob: f64,
+        straggler_delay_ms: u64,
+    ) -> SimTransport<'a> {
+        SimTransport {
+            inner,
+            fleet,
+            local_epochs,
+            straggler_prob,
+            straggler_delay_ms,
+            state: Mutex::new(SimState {
+                clock_us: 0,
+                pending: EventQueue::new(),
+                round_straggle_ms: 0,
+                log: Vec::new(),
+            }),
+        }
+    }
+
+    /// The virtual clock, microseconds since the start of the run.
+    pub fn clock_us(&self) -> u64 {
+        self.state.lock().unwrap().clock_us
+    }
+
+    /// The drained arrival trace so far (one entry per completed
+    /// exchange, in `(time, seq)` order within each round).
+    pub fn event_log(&self) -> Vec<SimEvent> {
+        self.state.lock().unwrap().log.clone()
+    }
+
+    /// The fleet's heterogeneity model (profile lookups for reporting).
+    pub fn fleet(&self) -> &FleetModel {
+        &self.fleet
+    }
+}
+
+/// Samples carried by an upstream update (drives the compute-time model).
+fn update_samples(msg: &Message) -> Result<u64> {
+    Ok(match msg {
+        Message::TernaryUpdate(u) => u.num_samples,
+        Message::DenseUpdate(u) => u.num_samples,
+        Message::CodedUpdate(u) => u.num_samples,
+        other => bail!("upstream message kind {} carries no sample count", other.kind()),
+    })
+}
+
+impl Transport for SimTransport<'_> {
+    fn n_clients(&self) -> usize {
+        self.inner.n_clients()
+    }
+
+    fn round_trip(&self, cid: usize, assign: &RoundAssign, down_wire: &[u8]) -> Result<Message> {
+        // the payload path IS the loopback path — byte-identical framing,
+        // decoding, training, and LinkStats accounting; the measured
+        // variant also hands back the upstream frame's wire length so the
+        // reply is never re-serialized just to be weighed
+        let (up, up_bytes) = self.inner.round_trip_measured(cid, assign, down_wire)?;
+
+        // timing: pure function of (fleet seed, registered id, round,
+        // wire bytes, samples) — independent of worker scheduling
+        let rid = assign.client_id;
+        let samples = update_samples(&up)?;
+        let profile = self.fleet.profile(rid);
+        let exchange_us = self.fleet.exchange_us(
+            &profile,
+            down_wire.len(),
+            up_bytes,
+            samples,
+            self.local_epochs,
+        );
+        let straggle_us = self.fleet.straggle_us(
+            rid,
+            assign.round,
+            self.straggler_prob,
+            self.straggler_delay_ms,
+        );
+
+        let mut st = self.state.lock().unwrap();
+        st.round_straggle_ms += straggle_us / 1_000;
+        let arrival = st.clock_us + exchange_us + straggle_us;
+        st.pending.push(arrival, rid);
+        Ok(up)
+    }
+
+    fn link_stats(&self) -> Vec<crate::transport::LinkStats> {
+        self.inner.link_stats()
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        self.inner.shutdown()
+    }
+
+    fn end_round(&self, round: u32) -> Option<VirtualRoundTime> {
+        let mut st = self.state.lock().unwrap();
+        let start = st.clock_us;
+        let mut completion = start;
+        while let Some((time_us, client)) = st.pending.pop() {
+            completion = completion.max(time_us);
+            st.log.push(SimEvent { round, time_us, client });
+        }
+        st.clock_us = completion;
+        let straggler_ms = std::mem::take(&mut st.round_straggle_ms);
+        Some(VirtualRoundTime {
+            round_secs: (completion - start) as f64 / 1e6,
+            clock_secs: completion as f64 / 1e6,
+            straggler_ms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::DenseGlobal;
+    use crate::compress::CodecSpec;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::client::{ClientRuntime, ShardData};
+    use crate::model::{init_params, mlp_schema};
+    use crate::sim::SimSpec;
+    use crate::transport::encode_data_frame;
+    use crate::util::rng::Pcg;
+
+    fn tiny_shard(seed: u64, n: usize) -> ShardData {
+        let mut rng = Pcg::seeded(seed);
+        ShardData {
+            dim: 784,
+            num_classes: 10,
+            x: (0..n * 784).map(|_| rng.normal() * 0.3).collect(),
+            y: (0..n as u32).map(|i| i % 10).collect(),
+        }
+    }
+
+    fn dense_broadcast(seed: u64) -> Message {
+        let schema = mlp_schema();
+        let mut rng = Pcg::seeded(seed);
+        let params = init_params(&schema, &mut rng);
+        Message::DenseGlobal(DenseGlobal {
+            round: 1,
+            tensors: params.tensors.iter().map(|t| t.data.clone()).collect(),
+        })
+    }
+
+    fn assign(rid: u32, round: u32) -> RoundAssign {
+        RoundAssign {
+            round,
+            client_id: rid,
+            rng_seed: 99,
+            rng_stream: rid as u64,
+            codec: CodecSpec::Dense,
+        }
+    }
+
+    fn sim<'a>(backend: &'a NativeBackend, stragglers: (f64, u64)) -> SimTransport<'a> {
+        let runtimes = (0..2u32)
+            .map(|cid| ClientRuntime {
+                client_id: cid,
+                backend,
+                shard: tiny_shard(cid as u64 + 1, 12),
+                local_epochs: 1,
+                lr: 0.05,
+                codec: CodecSpec::Dense,
+            })
+            .collect();
+        SimTransport::new(
+            Loopback::new(runtimes),
+            FleetModel::from_spec(&SimSpec::new(100_000, 4, 7)),
+            1,
+            stragglers.0,
+            stragglers.1,
+        )
+    }
+
+    #[test]
+    fn rounds_advance_the_virtual_clock() {
+        let backend = NativeBackend::new(mlp_schema(), 8);
+        let t = sim(&backend, (0.0, 0));
+        let wire = encode_data_frame(&dense_broadcast(2)).unwrap();
+        // registered ids 1001/2002 map to shards 1001%2=1 and 2002%2=0
+        t.round_trip(1001 % 2, &assign(1001, 1), &wire).unwrap();
+        t.round_trip(2002 % 2, &assign(2002, 1), &wire).unwrap();
+        let vt = t.end_round(1).unwrap();
+        assert!(vt.round_secs > 0.0);
+        assert_eq!(vt.clock_secs, vt.round_secs);
+        assert_eq!(vt.straggler_ms, 0);
+        let log = t.event_log();
+        assert_eq!(log.len(), 2);
+        assert!(log[0].time_us <= log[1].time_us);
+        assert_eq!(t.clock_us(), (vt.clock_secs * 1e6).round() as u64);
+
+        // a second round starts at the first round's completion
+        t.round_trip(0, &assign(7, 2), &wire).unwrap();
+        let vt2 = t.end_round(2).unwrap();
+        assert!(vt2.clock_secs > vt.clock_secs);
+        assert_eq!(t.event_log().len(), 3);
+    }
+
+    #[test]
+    fn payloads_and_stats_match_plain_loopback() {
+        let backend = NativeBackend::new(mlp_schema(), 8);
+        let t = sim(&backend, (0.0, 0));
+        let runtimes = (0..2u32)
+            .map(|cid| ClientRuntime {
+                client_id: cid,
+                backend: &backend,
+                shard: tiny_shard(cid as u64 + 1, 12),
+                local_epochs: 1,
+                lr: 0.05,
+                codec: CodecSpec::Dense,
+            })
+            .collect();
+        let lb = Loopback::new(runtimes);
+        let wire = encode_data_frame(&dense_broadcast(2)).unwrap();
+        for cid in 0..2 {
+            let a = assign(cid as u32, 1);
+            let from_sim = t.round_trip(cid, &a, &wire).unwrap();
+            let from_lb = lb.round_trip(cid, &a, &wire).unwrap();
+            assert_eq!(from_sim.encode(), from_lb.encode());
+        }
+        assert_eq!(t.stats(), lb.stats());
+    }
+
+    #[test]
+    fn virtual_stragglers_delay_without_sleeping() {
+        let backend = NativeBackend::new(mlp_schema(), 8);
+        // probability 1: every exchange pays the full virtual delay
+        let t = sim(&backend, (1.0, 30_000));
+        let wire = encode_data_frame(&dense_broadcast(2)).unwrap();
+        let started = std::time::Instant::now();
+        t.round_trip(0, &assign(0, 1), &wire).unwrap();
+        let vt = t.end_round(1).unwrap();
+        assert!(vt.round_secs >= 30.0, "virtual delay missing: {}", vt.round_secs);
+        assert_eq!(vt.straggler_ms, 30_000);
+        // ... while wall time stayed at CPU speed (no 30 s sleep)
+        assert!(started.elapsed() < std::time::Duration::from_secs(10));
+    }
+
+    #[test]
+    fn empty_round_is_zero_time() {
+        let backend = NativeBackend::new(mlp_schema(), 8);
+        let t = sim(&backend, (0.0, 0));
+        let vt = t.end_round(1).unwrap();
+        assert_eq!(vt.round_secs, 0.0);
+        assert!(t.event_log().is_empty());
+    }
+}

@@ -42,14 +42,17 @@ impl<'a> Loopback<'a> {
                 .collect(),
         }
     }
-}
 
-impl Transport for Loopback<'_> {
-    fn n_clients(&self) -> usize {
-        self.links.len()
-    }
-
-    fn round_trip(&self, cid: usize, assign: &RoundAssign, down_wire: &[u8]) -> Result<Message> {
+    /// One full exchange, additionally reporting the upstream data
+    /// frame's wire length (header included — the same number the link's
+    /// `LinkStats` records). The sim transport feeds it to the bandwidth
+    /// model without re-serializing the reply.
+    pub fn round_trip_measured(
+        &self,
+        cid: usize,
+        assign: &RoundAssign,
+        down_wire: &[u8],
+    ) -> Result<(Message, usize)> {
         let link = self
             .links
             .get(cid)
@@ -89,7 +92,17 @@ impl Transport for Loopback<'_> {
         link.stats.record_up(ubytes.len());
         let up = Message::decode(&Frame::decode(&ubytes)?.payload)?;
         link.stats.record_round_trip();
-        Ok(up)
+        Ok((up, ubytes.len()))
+    }
+}
+
+impl Transport for Loopback<'_> {
+    fn n_clients(&self) -> usize {
+        self.links.len()
+    }
+
+    fn round_trip(&self, cid: usize, assign: &RoundAssign, down_wire: &[u8]) -> Result<Message> {
+        self.round_trip_measured(cid, assign, down_wire).map(|(up, _)| up)
     }
 
     fn link_stats(&self) -> Vec<LinkStats> {

@@ -14,6 +14,12 @@
 //! * `tcp` — `std::net` transport, one threaded connection per client;
 //!   powers the `tfed serve` / `tfed client` subcommands
 //!
+//! A third implementation lives in [`crate::sim`]: `SimTransport` wraps
+//! `Loopback` (byte-identical payloads and `LinkStats`) and converts wire
+//! bytes into virtual transfer times; it reports per-round simulated time
+//! through [`Transport::end_round`], which real transports leave at the
+//! default `None`.
+//!
 //! ## Protocol
 //!
 //! ```text
@@ -194,6 +200,19 @@ pub fn encode_data_frame(msg: &Message) -> Result<Vec<u8>, FrameError> {
     Frame::data(msg.encode()).encode()
 }
 
+/// One round's simulated timing, reported by a virtual-time transport
+/// (`sim::SimTransport`) at the round boundary. Real transports have no
+/// virtual clock and report nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VirtualRoundTime {
+    /// virtual duration of the round (last cohort arrival − round start)
+    pub round_secs: f64,
+    /// virtual clock after the round, seconds since the start of the run
+    pub clock_secs: f64,
+    /// total straggler delay injected this round (delay accounting), ms
+    pub straggler_ms: u64,
+}
+
 /// Server-side view of the links to a fleet of clients.
 ///
 /// Implementations must be callable from multiple round-driver worker
@@ -233,6 +252,15 @@ pub trait Transport: Sync {
 
     /// Tell every client the experiment is over (no-op for loopback).
     fn shutdown(&self) -> Result<()>;
+
+    /// Round boundary: a virtual-time transport drains its event queue,
+    /// advances the clock, and returns the round's simulated timing.
+    /// Real transports (loopback, TCP) run on the wall clock and return
+    /// `None` — the default.
+    fn end_round(&self, round: u32) -> Option<VirtualRoundTime> {
+        let _ = round;
+        None
+    }
 }
 
 #[cfg(test)]

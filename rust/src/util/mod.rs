@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

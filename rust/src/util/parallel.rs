@@ -1,0 +1,100 @@
+//! Ordered parallel map over an index range — the shared worker-pool
+//! idiom behind the round driver's client fan-out and the scenario
+//! runner's `--jobs` grid execution.
+//!
+//! Work items are claimed from an atomic counter and results land in a
+//! slot per index, so the output order is always `0..n` regardless of
+//! which worker ran what — the property that keeps float-summation and
+//! results-bundle ordering schedule-independent. A single worker runs
+//! inline with no threads or locks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(0)`, `f(1)`, …, `f(n-1)` over up to `workers` threads and
+/// return the results indexed by input position. Every index runs (no
+/// short-circuiting — wrap errors in the result type); a panicking `f`
+/// propagates out of the enclosing thread scope.
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath)
+/// use tfed::util::parallel::parallel_map_indexed;
+///
+/// let squares = parallel_map_indexed(4, 2, |i| i * i);
+/// assert_eq!(squares, vec![0, 1, 4, 9]);
+/// ```
+pub fn parallel_map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every claimed slot is written"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_index_order_at_any_worker_count() {
+        for workers in [1, 2, 7, 64] {
+            let out = parallel_map_indexed(23, workers, |i| i * 10);
+            assert_eq!(out, (0..23).map(|i| i * 10).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let out = parallel_map_indexed(100, 8, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_edges() {
+        let out: Vec<usize> = parallel_map_indexed(0, 4, |i| i);
+        assert!(out.is_empty());
+        // more workers than items is clamped, not a spawn storm
+        let out = parallel_map_indexed(2, 1000, |i| i);
+        assert_eq!(out, vec![0, 1]);
+        // workers = 0 behaves as sequential
+        let out = parallel_map_indexed(3, 0, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn results_can_carry_errors_per_item() {
+        let out: Vec<Result<usize, String>> =
+            parallel_map_indexed(4, 2, |i| if i == 2 { Err(format!("item {i}")) } else { Ok(i) });
+        assert!(out[0].is_ok() && out[1].is_ok() && out[3].is_ok());
+        assert_eq!(out[2].as_ref().unwrap_err(), "item 2");
+    }
+}

@@ -1,0 +1,199 @@
+//! Transport conformance suite: one set of behavioral assertions run
+//! against every `Transport` implementation — `Loopback`, `Tcp`, and the
+//! virtual-time `SimTransport`.
+//!
+//! Contract checked for each:
+//! * delivered payloads are byte-identical across transports for the
+//!   same round assignment (server-derived client RNGs make the reply a
+//!   pure function of the assignment);
+//! * `LinkStats` data-plane accounting (bytes/frames/round-trips) agrees
+//!   across transports (control-plane bytes legitimately differ: TCP has
+//!   a handshake, loopback does not);
+//! * a codec mismatch between the round assignment and the client's
+//!   configuration is a clean error, never silent garbage;
+//! * an unknown client id is a clean error;
+//! * `end_round` reports virtual time from the simulator only.
+
+use tfed::comms::{DenseGlobal, Message};
+use tfed::compress::CodecSpec;
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::NativeBackend;
+use tfed::coordinator::client::{ClientRuntime, ShardData};
+use tfed::model::{init_params, mlp_schema};
+use tfed::sim::{FleetModel, SimSpec, SimTransport};
+use tfed::transport::{
+    encode_data_frame, Loopback, RoundAssign, TcpBinding, TcpClient, Transport,
+};
+use tfed::util::rng::Pcg;
+
+const N_CLIENTS: usize = 2;
+
+fn shard(seed: u64, n: usize) -> ShardData {
+    let mut rng = Pcg::seeded(seed);
+    ShardData {
+        dim: 784,
+        num_classes: 10,
+        x: (0..n * 784).map(|_| rng.normal() * 0.3).collect(),
+        y: (0..n as u32).map(|i| i % 10).collect(),
+    }
+}
+
+fn runtimes(backend: &NativeBackend) -> Vec<ClientRuntime<'_>> {
+    (0..N_CLIENTS as u32)
+        .map(|cid| ClientRuntime {
+            client_id: cid,
+            backend,
+            shard: shard(cid as u64 + 1, 10 + cid as usize),
+            local_epochs: 1,
+            lr: 0.05,
+            codec: CodecSpec::Dense,
+        })
+        .collect()
+}
+
+fn broadcast() -> Message {
+    let schema = mlp_schema();
+    let mut rng = Pcg::seeded(3);
+    let params = init_params(&schema, &mut rng);
+    Message::DenseGlobal(DenseGlobal {
+        round: 1,
+        tensors: params.tensors.iter().map(|t| t.data.clone()).collect(),
+    })
+}
+
+fn assign(cid: u32, codec: CodecSpec) -> RoundAssign {
+    RoundAssign { round: 1, client_id: cid, rng_seed: 55, rng_stream: cid as u64, codec }
+}
+
+/// Drive one exchange per client; return the encoded replies and the
+/// per-link stats snapshot.
+fn exchange_all(
+    t: &dyn Transport,
+) -> (Vec<Vec<u8>>, Vec<tfed::transport::LinkStats>) {
+    let wire = encode_data_frame(&broadcast()).unwrap();
+    let ups: Vec<Vec<u8>> = (0..N_CLIENTS)
+        .map(|cid| {
+            t.round_trip(cid, &assign(cid as u32, CodecSpec::Dense), &wire)
+                .unwrap()
+                .encode()
+        })
+        .collect();
+    (ups, t.link_stats())
+}
+
+fn sim_over<'a>(backend: &'a NativeBackend) -> SimTransport<'a> {
+    SimTransport::new(
+        Loopback::new(runtimes(backend)),
+        FleetModel::from_spec(&SimSpec::new(1_000, 4, 9)),
+        1,
+        0.0,
+        0,
+    )
+}
+
+#[test]
+fn payloads_and_data_stats_agree_across_all_transports() {
+    let backend = NativeBackend::new(mlp_schema(), 8);
+
+    // reference: loopback
+    let lb = Loopback::new(runtimes(&backend));
+    let (lb_ups, lb_stats) = exchange_all(&lb);
+    assert!(lb.end_round(1).is_none(), "loopback has no virtual clock");
+
+    // sim: byte-identical payloads + stats, plus a virtual clock
+    let sim = sim_over(&backend);
+    let (sim_ups, sim_stats) = exchange_all(&sim);
+    assert_eq!(lb_ups, sim_ups);
+    assert_eq!(lb_stats, sim_stats, "sim LinkStats must mirror loopback exactly");
+    let vt = sim.end_round(1).expect("sim reports virtual time");
+    assert!(vt.round_secs > 0.0);
+
+    // tcp: same payload bytes, same data-plane counters
+    let cfg = {
+        let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        c.n_clients = N_CLIENTS;
+        c
+    };
+    let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap().to_string();
+    std::thread::scope(|s| {
+        for cid in 0..N_CLIENTS as u32 {
+            let addr = addr.clone();
+            let backend = &backend;
+            s.spawn(move || {
+                let (mut client, _cfg) = TcpClient::connect(&addr, cid).unwrap();
+                let runtime = ClientRuntime {
+                    client_id: cid,
+                    backend,
+                    shard: shard(cid as u64 + 1, 10 + cid as usize),
+                    local_epochs: 1,
+                    lr: 0.05,
+                    codec: CodecSpec::Dense,
+                };
+                client.serve(&runtime).unwrap();
+            });
+        }
+        let tcp = binding.accept_clients(N_CLIENTS, &cfg).unwrap();
+        let (tcp_ups, tcp_stats) = exchange_all(&tcp);
+        assert_eq!(lb_ups, tcp_ups);
+        for (l, t) in lb_stats.iter().zip(&tcp_stats) {
+            assert_eq!(l.up_bytes, t.up_bytes);
+            assert_eq!(l.down_bytes, t.down_bytes);
+            assert_eq!(l.up_frames, t.up_frames);
+            assert_eq!(l.down_frames, t.down_frames);
+            assert_eq!(l.round_trips, t.round_trips);
+            // ctrl differs by design: TCP counts the handshake
+        }
+        assert!(tcp.end_round(1).is_none(), "tcp has no virtual clock");
+        tcp.shutdown().unwrap();
+    });
+}
+
+#[test]
+fn codec_mismatch_is_rejected_by_every_transport() {
+    let backend = NativeBackend::new(mlp_schema(), 8);
+    let wire = encode_data_frame(&broadcast()).unwrap();
+    let bad = assign(0, CodecSpec::Fp16); // clients are configured Dense
+
+    let lb = Loopback::new(runtimes(&backend));
+    assert!(lb.round_trip(0, &bad, &wire).is_err());
+
+    let sim = sim_over(&backend);
+    assert!(sim.round_trip(0, &bad, &wire).is_err());
+
+    let cfg = {
+        let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        c.n_clients = 1;
+        c
+    };
+    let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap().to_string();
+    std::thread::scope(|s| {
+        let backend = &backend;
+        let handle = s.spawn(move || {
+            let (mut client, _cfg) = TcpClient::connect(&addr, 0).unwrap();
+            let runtime = ClientRuntime {
+                client_id: 0,
+                backend,
+                shard: shard(1, 10),
+                local_epochs: 1,
+                lr: 0.05,
+                codec: CodecSpec::Dense,
+            };
+            client.serve(&runtime)
+        });
+        let tcp = binding.accept_clients(1, &cfg).unwrap();
+        assert!(tcp.round_trip(0, &bad, &wire).is_err());
+        // the client rejected the round on its side too
+        assert!(handle.join().unwrap().is_err());
+    });
+}
+
+#[test]
+fn unknown_client_is_a_clean_error() {
+    let backend = NativeBackend::new(mlp_schema(), 8);
+    let wire = encode_data_frame(&broadcast()).unwrap();
+    let a = assign(99, CodecSpec::Dense);
+    assert!(Loopback::new(runtimes(&backend)).round_trip(99, &a, &wire).is_err());
+    assert!(sim_over(&backend).round_trip(99, &a, &wire).is_err());
+}
