@@ -89,19 +89,21 @@ pub fn bench_cfg(protocol: Protocol, task: Task, seed: u64) -> ExperimentConfig 
     cfg
 }
 
-/// Build the backend for a config, preferring PJRT when available.
+/// Build the backend for a config, preferring PJRT when available. With
+/// no artifacts, every task runs on the native layer-graph backend —
+/// the cifar-like task on the registry `cnn` (the HLO `resnetlite`'s
+/// native stand-in), so the paper's second model family no longer drops
+/// out of the tables offline.
 pub fn backend_for(
     engine: &Option<Arc<Engine>>,
     cfg: &mut ExperimentConfig,
 ) -> Box<dyn Backend> {
-    // CNN exists only as HLO artifacts; MLP can fall back to native
-    let use_native = engine.is_none() && cfg.task == Task::MnistLike;
+    let use_native = engine.is_none();
     cfg.native_backend = use_native;
-    if engine.is_none() && cfg.task == Task::CifarLike {
-        panic!("CIFAR-like benches need artifacts (run `make artifacts`)");
+    if use_native && cfg.task == Task::CifarLike && cfg.model.is_empty() {
+        cfg.model = "cnn".to_string();
     }
-    make_backend(engine.clone(), cfg.task.model_name(), cfg.batch, use_native)
-        .expect("backend")
+    make_backend(engine.clone(), cfg.model_name(), cfg.batch, use_native).expect("backend")
 }
 
 pub fn run(cfg: ExperimentConfig, backend: &dyn Backend) -> RunMetrics {

@@ -8,13 +8,17 @@
 //!     cargo bench --bench paper_tables -- --table4
 //!     cargo bench --bench paper_tables -- --compression
 //!     cargo bench --bench paper_tables -- --sim
+//!     cargo bench --bench paper_tables -- --train
 //!     TFED_BENCH_SCALE=full cargo bench --bench paper_tables
 //!
 //! CSV output lands in bench_out/; the compression section additionally
 //! emits machine-readable BENCH_compression.json at the repo root so the
-//! per-codec bytes/round trajectory is tracked PR over PR, and the sim
+//! per-codec bytes/round trajectory is tracked PR over PR, the sim
 //! section emits BENCH_sim.json (per-codec rounds-per-virtual-hour and
-//! simulated time-to-accuracy over a 100k-registered-client fleet).
+//! simulated time-to-accuracy over a 100k-registered-client fleet), and
+//! the train section emits BENCH_train.json (native layer-graph training
+//! throughput per model x mode x kernel/thread config, naive baseline
+//! included, bit-identity asserted).
 
 #[path = "common.rs"]
 mod common;
@@ -47,6 +51,9 @@ fn main() {
     if section_enabled(&sections, "sim") {
         sim();
     }
+    if section_enabled(&sections, "train") {
+        train();
+    }
 }
 
 /// Table I: models and hyperparameters (ours vs paper).
@@ -73,10 +80,7 @@ fn table2(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
     for protocol in protocols {
         let mut cells = Vec::new();
         for task in [Task::MnistLike, Task::CifarLike] {
-            if task == Task::CifarLike && engine.is_none() {
-                cells.push(f32::NAN);
-                continue;
-            }
+            // offline, the cifar column runs the native registry `cnn`
             let mut cfg = bench_cfg(protocol, task, 42);
             let backend = backend_for(engine, &mut cfg);
             let m = run(cfg, backend.as_ref());
@@ -115,10 +119,6 @@ fn table3(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
         let mut cells = Vec::new();
         for task in [Task::MnistLike, Task::CifarLike] {
             for nc in [2usize, 5] {
-                if task == Task::CifarLike && engine.is_none() {
-                    cells.push(f32::NAN);
-                    continue;
-                }
                 let mut cfg = bench_cfg(protocol, task, 7);
                 cfg.nc = nc;
                 let backend = backend_for(engine, &mut cfg);
@@ -164,11 +164,6 @@ fn table4(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
     for protocol in [Protocol::FedAvg, Protocol::TFedAvg] {
         let mut cells = Vec::new();
         for task in [Task::MnistLike, Task::CifarLike] {
-            if task == Task::CifarLike && engine.is_none() {
-                cells.push(f64::NAN);
-                cells.push(f64::NAN);
-                continue;
-            }
             let mut cfg = ExperimentConfig::large_federation(protocol, task, 3);
             cfg.rounds = 2;
             cfg.local_epochs = 5;
@@ -314,6 +309,148 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
     println!("  -> wrote {path}");
     println!("shape: ternary/quant1 ~16x, stc(1%) deepest, fp16 2x, quant8 ~4x;");
     println!("accuracy within a few points of dense for every codec at this scale.");
+}
+
+/// Native training throughput: the layer-graph trainer over every
+/// registry model x mode x kernel config, measured as samples/sec and
+/// µs per local round (one epoch over the workload in batches of 64).
+/// The naive seed kernels are the baseline row; the blocked/threaded
+/// kernels must produce bit-identical parameters (asserted here — the
+/// speedup is free, not a different computation). Emits
+/// bench_out/train.csv and BENCH_train.json (repo root), giving the perf
+/// trajectory its training-throughput series.
+fn train() {
+    use std::time::Instant;
+    use tfed::model::{init_params, registry};
+    use tfed::native::{KernelPolicy, LayerGraph, Mode};
+    use tfed::util::json::{num, obj, s, Json};
+    use tfed::util::rng::Pcg;
+
+    println!("\n=== Train: native layer-graph throughput ===");
+    let (rounds, samples) = match scale() {
+        Scale::Quick => (1usize, 256usize),
+        Scale::Default => (3, 1024),
+        Scale::Full => (8, 2048),
+    };
+    let batch = 64usize;
+    let lr = 0.05f32;
+    let configs: &[(&str, KernelPolicy)] = &[
+        ("naive", KernelPolicy::reference()),
+        ("blocked-1t", KernelPolicy::threaded(1)),
+        ("blocked-2t", KernelPolicy::threaded(2)),
+        ("blocked-4t", KernelPolicy::threaded(4)),
+    ];
+    println!(
+        "{:<10} {:<5} {:<11} {:>13} {:>13} {:>9}",
+        "model", "mode", "kernels", "samples/sec", "us/round", "speedup"
+    );
+    let mut rows = Vec::new();
+    let mut model_entries = Vec::new();
+    for model in ["mlp", "mlp-large", "cnn"] {
+        let def = registry::model_def(model).expect("registry model");
+        let dim = def.schema.input_dim;
+        let classes = def.schema.num_classes;
+        let mut rng = Pcg::new(42, 0xBE_7C);
+        let x: Vec<f32> = (0..samples * dim).map(|_| rng.normal()).collect();
+        let y: Vec<u32> = (0..samples).map(|i| (i % classes) as u32).collect();
+        let mut mode_entries = Vec::new();
+        for (mode, mode_name) in [(Mode::Fp, "fp"), (Mode::Fttq, "fttq"), (Mode::Ttq, "ttq")] {
+            let mut naive_sps = f64::NAN;
+            let mut reference_bits: Option<Vec<u32>> = None;
+            let mut kernel_entries = Vec::new();
+            for (label, policy) in configs {
+                let graph = LayerGraph::from_def(&def, mode, 0.05, *policy).expect("graph");
+                let mut prng = Pcg::seeded(7);
+                let mut params = init_params(&def.schema, &mut prng);
+                let mut factors = vec![0.05f32; graph.factors_len()];
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    let mut i = 0;
+                    while i < samples {
+                        let n = batch.min(samples - i);
+                        graph
+                            .train_batch(
+                                &mut params,
+                                &mut factors,
+                                &x[i * dim..(i + n) * dim],
+                                &y[i..i + n],
+                                n,
+                                lr,
+                            )
+                            .expect("train_batch");
+                        i += n;
+                    }
+                }
+                let secs = t0.elapsed().as_secs_f64().max(1e-9);
+                let sps = (rounds * samples) as f64 / secs;
+                let us_round = secs * 1e6 / rounds as f64;
+                if *label == "naive" {
+                    naive_sps = sps;
+                }
+                let speedup = sps / naive_sps;
+                // the whole point of the kernel contract: every config is
+                // the same computation, down to the last bit
+                let bits: Vec<u32> = params
+                    .tensors
+                    .iter()
+                    .flat_map(|t| t.data.iter().map(|v| v.to_bits()))
+                    .chain(factors.iter().map(|v| v.to_bits()))
+                    .collect();
+                match &reference_bits {
+                    None => reference_bits = Some(bits),
+                    Some(want) => assert_eq!(
+                        want, &bits,
+                        "{model}/{mode_name}/{label}: kernels diverged from naive"
+                    ),
+                }
+                println!(
+                    "{:<10} {:<5} {:<11} {:>13.0} {:>13.0} {:>8.2}x",
+                    model, mode_name, label, sps, us_round, speedup
+                );
+                rows.push(format!(
+                    "{model},{mode_name},{label},{sps:.1},{us_round:.1},{speedup:.3}"
+                ));
+                kernel_entries.push((
+                    *label,
+                    obj(vec![
+                        ("samples_per_sec", num(sps)),
+                        ("us_per_round", num(us_round)),
+                        ("speedup_vs_naive", num(speedup)),
+                    ]),
+                ));
+            }
+            mode_entries.push((
+                mode_name,
+                obj(vec![
+                    ("kernels", obj(kernel_entries)),
+                    ("bit_identical", Json::Bool(true)),
+                ]),
+            ));
+        }
+        model_entries.push((model, obj(mode_entries)));
+    }
+    write_csv(
+        "train.csv",
+        "model,mode,kernels,samples_per_sec,us_per_round,speedup_vs_naive",
+        &rows,
+    );
+    let doc = obj(vec![
+        ("bench", s("paper_tables --train")),
+        ("scale", s(scale_name())),
+        ("batch", num(batch as f64)),
+        ("rounds", num(rounds as f64)),
+        ("samples_per_round", num(samples as f64)),
+        ("models", obj(model_entries)),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_train.json"
+    } else {
+        "BENCH_train.json"
+    };
+    std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_train.json");
+    println!("  -> wrote {path}");
+    println!("shape: blocked-4t >= 4x naive on mlp-large (row-parallel + transposed");
+    println!("gradient GEMM), identical bits everywhere; mlp is too small to gain much.");
 }
 
 /// Virtual-time fleet comparison: runs the checked-in

@@ -107,6 +107,22 @@ impl Task {
             Task::CifarLike => "cifar-like",
         }
     }
+
+    /// Per-sample feature count of the task's synthetic dataset.
+    pub fn dim(&self) -> usize {
+        let (h, w, c) = self.image_shape();
+        h * w * c
+    }
+
+    /// (side, side, channels) of the task's image-shaped samples
+    /// (delegates to the dataset generator's constants — one source of
+    /// truth for task geometry).
+    pub fn image_shape(&self) -> (usize, usize, usize) {
+        match self {
+            Task::MnistLike => crate::data::synth::MNIST_LIKE_SHAPE,
+            Task::CifarLike => crate::data::synth::CIFAR_LIKE_SHAPE,
+        }
+    }
 }
 
 /// Full experiment description.
@@ -137,8 +153,12 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     pub train_samples: usize,
     pub test_samples: usize,
-    /// run on the pure-Rust backend instead of PJRT (tests/props; MLP only)
+    /// run on the pure-Rust layer-graph backend instead of PJRT
     pub native_backend: bool,
+    /// model override from the registry (`--model` / `[experiment] model`);
+    /// empty = the task's default family (`mlp` / `resnetlite`). Native
+    /// runs resolve this against [`crate::model::registry`].
+    pub model: String,
     /// payload codec for model updates (both directions). T-FedAvg
     /// requires `ternary`; FedAvg accepts any registered codec
     /// (`--codec stc:k=0.01`, `quant8`, `fp16`, ...), `dense` being its
@@ -173,6 +193,7 @@ impl ExperimentConfig {
             },
             test_samples: 2_000,
             native_backend: false,
+            model: String::new(),
             codec: protocol.default_codec(),
         };
         if protocol.is_centralized() {
@@ -188,6 +209,16 @@ impl ExperimentConfig {
         c.n_clients = 100;
         c.participation = 0.1;
         c
+    }
+
+    /// The model this experiment trains: the explicit override, or the
+    /// task's default family when `model` is empty.
+    pub fn model_name(&self) -> &str {
+        if self.model.is_empty() {
+            self.task.model_name()
+        } else {
+            &self.model
+        }
     }
 
     pub fn selected_per_round(&self) -> usize {
@@ -237,8 +268,21 @@ impl ExperimentConfig {
             // centralized runs are modeled as a single client holding all data
             bail!("centralized protocols require n_clients == 1 (got {})", self.n_clients);
         }
-        if self.native_backend && self.task != Task::MnistLike {
-            bail!("native backend only implements the MLP task");
+        if self.native_backend {
+            // the model must exist in the native registry and its input
+            // geometry must match the task's dataset
+            let def = crate::model::registry::model_def(self.model_name()).map_err(|e| {
+                anyhow::anyhow!("native backend: {e}; pick one with --model / [experiment] model")
+            })?;
+            if def.schema.input_dim != self.task.dim() {
+                bail!(
+                    "model {:?} wants input dim {}, task {} provides {}",
+                    self.model_name(),
+                    def.schema.input_dim,
+                    self.task.name(),
+                    self.task.dim()
+                );
+            }
         }
         self.codec.check()?;
         match (self.protocol, self.codec) {
@@ -269,16 +313,20 @@ impl ExperimentConfig {
     }
 
     /// One-line summary for logs/metrics. The codec is appended only when
-    /// it differs from the protocol's native format, and the Nc field
-    /// shows `Dir(alpha)` only under a Dirichlet partition, so default
-    /// runs (T-FedAvg/ternary, FedAvg/dense, nc/beta splits) keep their
+    /// it differs from the protocol's native format, the model only when
+    /// explicitly overridden, and the Nc field shows `Dir(alpha)` only
+    /// under a Dirichlet partition, so default runs (T-FedAvg/ternary,
+    /// FedAvg/dense, nc/beta splits, task-default models) keep their
     /// pre-scenario-engine summaries byte-for-byte.
     pub fn summary(&self) -> String {
-        let codec = if self.codec != self.protocol.default_codec() {
+        let mut codec = if self.codec != self.protocol.default_codec() {
             format!(" codec={}", self.codec.name())
         } else {
             String::new()
         };
+        if !self.model.is_empty() {
+            codec.push_str(&format!(" model={}", self.model));
+        }
         let nc = if self.dirichlet_alpha != 0.0 {
             format!("Dir({})", self.dirichlet_alpha)
         } else if self.nc >= 10 {
@@ -433,6 +481,43 @@ mod tests {
         let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
         c.codec = CodecSpec::Stc { k: 0.01 };
         assert!(c.summary().contains("codec=stc:k=0.01"), "{}", c.summary());
+    }
+
+    #[test]
+    fn model_resolution_and_validation() {
+        // default: the task family, no summary noise
+        let mut c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        assert_eq!(c.model_name(), "mlp");
+        assert!(!c.summary().contains("model="));
+        // explicit override shows up in the summary and resolves
+        c.model = "mlp-large".into();
+        c.native_backend = true;
+        assert_eq!(c.model_name(), "mlp-large");
+        assert!(c.summary().contains("model=mlp-large"), "{}", c.summary());
+        c.validate().unwrap();
+        // unknown native model rejected with the registry in the message
+        c.model = "vgg".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("vgg") && err.contains("--model"), "{err}");
+        // native + cifar without an explicit model: resnetlite is not native
+        let mut c = ExperimentConfig::table2(Protocol::TFedAvg, Task::CifarLike, 1);
+        c.native_backend = true;
+        assert!(c.validate().is_err());
+        // native cnn on the cifar task validates; on mnist the dims clash
+        c.model = "cnn".into();
+        c.validate().unwrap();
+        let mut c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        c.native_backend = true;
+        c.model = "cnn".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("input dim"), "{err}");
+    }
+
+    #[test]
+    fn task_dims_match_synth_shapes() {
+        assert_eq!(Task::MnistLike.dim(), 784);
+        assert_eq!(Task::CifarLike.dim(), 768);
+        assert_eq!(Task::CifarLike.image_shape(), (16, 16, 3));
     }
 
     #[test]

@@ -9,8 +9,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::client::{epoch_order, make_chunks, ShardData};
+use crate::model::registry::{self, ModelDef};
 use crate::model::{ModelSchema, ParamSet, Tensor};
-use crate::native::mlp::{Mode as NativeMode, NativeMlp};
+use crate::native::{KernelPolicy, LayerGraph, Mode as NativeMode};
 use crate::quant;
 use crate::runtime::manifest::{Dtype, IoSpec};
 use crate::runtime::{Engine, Value};
@@ -325,33 +326,63 @@ impl Backend for PjrtBackend {
 // Native backend
 // ---------------------------------------------------------------------------
 
-/// Pure-Rust backend over `native::NativeMlp` (fp + fttq modes, MLP only).
+/// Pure-Rust backend over the [`LayerGraph`] native core (fp, fttq, and
+/// ttq modes; any registry model — `mlp`, `mlp-large`, `cnn` — or an
+/// inferred dense graph from a (w, b)-paired schema).
 pub struct NativeBackend {
-    schema: ModelSchema,
+    def: ModelDef,
     batch: usize,
     t_k: f32,
     wq_init: f32,
     server_delta: f32,
+    policy: KernelPolicy,
 }
 
 impl NativeBackend {
-    pub fn new(schema: ModelSchema, batch: usize) -> NativeBackend {
-        NativeBackend { schema, batch, t_k: 0.05, wq_init: 0.05, server_delta: 0.05 }
+    /// Infer a dense (+ReLU) graph from a (w, b)-paired schema. Rejects
+    /// schemas whose bias shapes disagree with their weights (the seed
+    /// trainer silently accepted them).
+    pub fn new(schema: ModelSchema, batch: usize) -> Result<NativeBackend> {
+        Ok(Self::from_def(registry::dense_from_schema(&schema)?, batch))
     }
 
-    fn net(&self, mode: TrainMode) -> Result<NativeMlp> {
+    /// Look the model up in the native registry
+    /// ([`crate::model::registry::MODEL_NAMES`]).
+    pub fn for_model(model: &str, batch: usize) -> Result<NativeBackend> {
+        Ok(Self::from_def(registry::model_def(model)?, batch))
+    }
+
+    /// Wrap an already-validated model definition.
+    pub fn from_def(def: ModelDef, batch: usize) -> NativeBackend {
+        NativeBackend {
+            def,
+            batch,
+            t_k: 0.05,
+            wq_init: 0.05,
+            server_delta: 0.05,
+            policy: default_policy(),
+        }
+    }
+
+    /// Kernel execution policy (thread count / naive reference loops).
+    /// Results are bit-identical at every setting — only wall time moves.
+    pub fn set_policy(&mut self, policy: KernelPolicy) {
+        self.policy = policy;
+    }
+
+    fn net(&self, mode: TrainMode) -> Result<LayerGraph> {
         let m = match mode {
             TrainMode::Fp => NativeMode::Fp,
             TrainMode::Fttq => NativeMode::Fttq,
-            TrainMode::Ttq => bail!("native backend does not implement TTQ"),
+            TrainMode::Ttq => NativeMode::Ttq,
         };
-        NativeMlp::from_schema(&self.schema, m, self.t_k)
+        Ok(LayerGraph::from_def(&self.def, m, self.t_k, self.policy)?)
     }
 }
 
 impl Backend for NativeBackend {
     fn schema(&self) -> &ModelSchema {
-        &self.schema
+        &self.def.schema
     }
 
     fn t_k(&self) -> f32 {
@@ -380,18 +411,17 @@ impl Backend for NativeBackend {
             bail!("client shard is empty");
         }
         let net = self.net(mode)?;
-        let nq = self.schema.num_quantized();
+        let nq = net.num_quantized();
+        let want = net.factors_len();
         let mut params = start.clone();
-        let mut wq = match mode {
-            TrainMode::Fp => vec![],
-            _ => {
-                if factors0.is_empty() {
-                    vec![self.wq_init; nq]
-                } else {
-                    factors0.to_vec()
-                }
-            }
+        let mut factors = if factors0.is_empty() {
+            vec![self.wq_init; want]
+        } else {
+            factors0.to_vec()
         };
+        if factors.len() != want {
+            bail!("{} wants {want} factors, got {}", mode.as_str(), factors.len());
+        }
         let dim = data.dim;
         let mut loss_acc = 0f64;
         let mut loss_n = 0f64;
@@ -406,22 +436,27 @@ impl Backend for NativeBackend {
                     x.extend_from_slice(&data.x[i * dim..(i + 1) * dim]);
                     y.push(data.y[i]);
                 }
-                let loss = net.train_batch(&mut params, &mut wq, &x, &y, n, lr)?;
+                let loss = net.train_batch(&mut params, &mut factors, &x, &y, n, lr)?;
                 loss_acc += loss as f64 * n as f64;
                 loss_n += n as f64;
             }
         }
+        let (wq, wp, wn) = match mode {
+            TrainMode::Fp => (vec![], vec![], vec![]),
+            TrainMode::Fttq => (factors, vec![], vec![]),
+            TrainMode::Ttq => (vec![], factors[..nq].to_vec(), factors[nq..].to_vec()),
+        };
         Ok(LocalOutcome {
             params,
             wq,
-            wp: vec![],
-            wn: vec![],
+            wp,
+            wn,
             mean_loss: (loss_acc / loss_n.max(1.0)) as f32,
         })
     }
 
     fn quantize(&self, params: &ParamSet) -> Result<(Vec<Vec<i8>>, Vec<f32>)> {
-        let qidx = self.schema.quantized_indices();
+        let qidx = self.def.schema.quantized_indices();
         let mut patterns = Vec::new();
         let mut deltas = Vec::new();
         for &i in &qidx {
@@ -433,14 +468,54 @@ impl Backend for NativeBackend {
     }
 
     fn evaluate(&self, params: &ParamSet, data: &ShardData) -> Result<(f32, f32)> {
-        // evaluation is always full-precision math over the given values
+        // evaluation is always full-precision math over the given values,
+        // streamed in training-batch-size chunks: per-sample math and the
+        // f64 loss accumulation order are identical to one whole-set pass
+        // (rows are independent in every kernel), but transient memory
+        // stays O(batch) — a conv model over a 2k-sample test set would
+        // otherwise materialize a ~50 MB whole-set im2col matrix
         let net = self.net(TrainMode::Fp)?;
-        Ok(net.evaluate(params, &[], &data.x, &data.y, data.len()))
+        let n = data.len();
+        let dim = data.dim;
+        let mut loss = 0f64;
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < n {
+            let m = self.batch.min(n - i);
+            net.evaluate_accumulate(
+                params,
+                &[],
+                &data.x[i * dim..(i + m) * dim],
+                &data.y[i..i + m],
+                m,
+                &mut loss,
+                &mut correct,
+            );
+            i += m;
+        }
+        Ok(((loss / n as f64) as f32, correct as f32 / n as f32))
     }
 }
 
+/// Default native kernel policy: single-thread blocked kernels (the
+/// round driver already fans worker threads out over clients, so nested
+/// parallelism would oversubscribe). `TFED_KERNEL_THREADS=N` opts into
+/// row-parallel kernels — useful for single-client processes like `tfed
+/// client` — and, like every [`KernelPolicy`], changes wall time only:
+/// results stay bit-identical (DESIGN.md §10).
+fn default_policy() -> KernelPolicy {
+    if let Ok(v) = std::env::var("TFED_KERNEL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return KernelPolicy::threaded(n.max(1));
+        }
+    }
+    KernelPolicy::default()
+}
+
 /// Build the backend named by the config. The native backend needs no
-/// engine/artifacts (it carries the paper's MLP schema internally).
+/// engine/artifacts — `model` is a native-registry name (`mlp`,
+/// `mlp-large`, `cnn`); the PJRT path resolves it against the artifact
+/// manifest instead.
 pub fn make_backend(
     engine: Option<Arc<Engine>>,
     model: &str,
@@ -448,10 +523,7 @@ pub fn make_backend(
     native: bool,
 ) -> Result<Box<dyn Backend>> {
     if native {
-        if model != "mlp" {
-            bail!("native backend only implements the mlp model");
-        }
-        Ok(Box::new(NativeBackend::new(crate::model::mlp_schema(), batch)))
+        Ok(Box::new(NativeBackend::for_model(model, batch)?))
     } else {
         let engine = engine.ok_or_else(|| anyhow!("PJRT backend requires an engine"))?;
         Ok(Box::new(PjrtBackend::new(engine, model, batch)?))

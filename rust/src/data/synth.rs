@@ -8,6 +8,13 @@
 
 use crate::util::rng::Pcg;
 
+/// (side, side, channels) of the mnist-like task — the single source of
+/// truth for its geometry (`config::Task::image_shape` and the native
+/// model registry validate against it).
+pub const MNIST_LIKE_SHAPE: (usize, usize, usize) = (28, 28, 1);
+/// (side, side, channels) of the cifar-like task (the `cnn` substrate).
+pub const CIFAR_LIKE_SHAPE: (usize, usize, usize) = (16, 16, 3);
+
 /// Dataset: row-major features [n, dim] + integer labels, values ~ [-1, 1].
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -62,9 +69,10 @@ impl SynthSpec {
     /// mid-90s rather than saturating instantly — keeps the Table-II
     /// comparisons informative (DESIGN.md §3).
     pub fn mnist_like(train: usize, test: usize, seed: u64) -> Self {
+        let (side, _, channels) = MNIST_LIKE_SHAPE;
         SynthSpec {
-            side: 28,
-            channels: 1,
+            side,
+            channels,
             num_classes: 10,
             train,
             test,
@@ -76,9 +84,10 @@ impl SynthSpec {
 
     /// CIFAR-like: 16x16x3, harder features (mid-range CNN accuracy).
     pub fn cifar_like(train: usize, test: usize, seed: u64) -> Self {
+        let (side, _, channels) = CIFAR_LIKE_SHAPE;
         SynthSpec {
-            side: 16,
-            channels: 3,
+            side,
+            channels,
             num_classes: 10,
             train,
             test,
@@ -90,6 +99,14 @@ impl SynthSpec {
 
     pub fn dim(&self) -> usize {
         self.side * self.side * self.channels
+    }
+
+    /// (side, side, channels) — the NHWC image geometry conv models
+    /// consume. Pixels are laid out `(y * side + x) * channels + c`, which
+    /// is exactly the layout `native::layers::Conv2d` expects, so the
+    /// cifar-like task feeds the `cnn` registry model with no reshaping.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.side, self.side, self.channels)
     }
 
     /// Generate (train, test) datasets.
@@ -213,8 +230,20 @@ mod tests {
     #[test]
     fn cifar_like_dims() {
         let spec = SynthSpec::cifar_like(50, 10, 2);
+        assert_eq!(spec.shape(), (16, 16, 3));
         let (train, _) = spec.generate();
         assert_eq!(train.dim, 16 * 16 * 3);
+    }
+
+    #[test]
+    fn shapes_match_the_native_cnn_registry() {
+        // the cifar-like task is the cnn model's substrate: geometry must
+        // agree end-to-end (conv layers consume NHWC of exactly this dim)
+        let def = crate::model::registry::model_def("cnn").unwrap();
+        let spec = SynthSpec::cifar_like(10, 5, 1);
+        assert_eq!(def.schema.input_dim, spec.dim());
+        let (h, w, c) = spec.shape();
+        assert_eq!((h, w, c), (16, 16, 3));
     }
 
     #[test]

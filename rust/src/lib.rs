@@ -10,7 +10,11 @@
 //!   `python/compile/kernels/`, AOT-lowered to HLO at build time.
 //! * **Layer 2** — JAX training/eval graphs (`python/compile/`), one HLO
 //!   artifact per (model × mode × batch size).
-//! * **Layer 3** — this crate: the federated coordinator (client selection,
+//! * **Layer 3** — this crate: the `native` layer-graph training core
+//!   (composable Dense/ReLU/Conv2d/pool layers over deterministic
+//!   cache-blocked row-parallel kernels, per-layer FTTQ/TTQ `QuantSlot`s,
+//!   and the string-keyed `model::registry` — `mlp`, `mlp-large`, `cnn`;
+//!   DESIGN.md §10), the federated coordinator (client selection,
 //!   concurrent round orchestration, streaming O(model) aggregation,
 //!   ternary re-quantization, availability/straggler fault models),
 //!   the `compress` codec registry (ternary, STC, stochastic k-bit

@@ -14,6 +14,7 @@
 //!   tfed run --codec stc:k=0.01 --rounds 30          # FedAvg + STC payloads
 //!   tfed run --codec quant8 --rounds 30              # 8-bit stochastic quant
 //!   tfed run --alpha 0.5 --rounds 30                 # Dirichlet label skew
+//!   tfed run --task cifar --model cnn --native       # CNN on the cifar-like task
 //!   tfed run ../examples/scenarios/paper_noniid.toml # declarative grid
 //!   tfed run ../examples/scenarios/paper_noniid.toml --jobs 4   # parallel cells
 //!   tfed run ../examples/scenarios/sim_fleet.toml    # 100k-client virtual-time sim
@@ -52,6 +53,7 @@ fn real_main() -> Result<()> {
         .opt("protocol", "tfedavg", "baseline | ttq | fedavg | tfedavg")
         .opt("codec", "auto", "ternary | dense | fp16 | quant<bits> | stc:k=<frac> | auto")
         .opt("task", "mnist", "mnist | cifar")
+        .opt("model", "auto", "mlp | mlp-large | cnn | auto (task default; native registry)")
         .opt("clients", "10", "total clients N")
         .opt("participation", "1.0", "participation ratio lambda")
         .opt("nc", "10", "classes per client (10 = IID)")
@@ -74,7 +76,7 @@ fn real_main() -> Result<()> {
         .opt("client-id", "0", "client: this process's client id")
         .opt("workers", "0", "round-driver worker threads (0 = auto)")
         .opt("jobs", "1", "scenario runs: grid cells in flight (manifest only)")
-        .flag("native", "use the pure-Rust backend (MLP only)")
+        .flag("native", "use the pure-Rust layer-graph backend (registry models)")
         .flag("quiet", "suppress per-round logs")
         .parse_env()?;
 
@@ -110,6 +112,10 @@ fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = ExperimentConfig::table2(protocol, task, args.get_u64("seed")?);
     if let Some(spec) = codec {
         cfg.codec = spec;
+    }
+    let model = args.get("model")?;
+    if model != "auto" {
+        cfg.model = model;
     }
     if !protocol.is_centralized() {
         cfg.n_clients = args.get_usize("clients")?;
@@ -198,7 +204,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
         engine,
-        cfg.task.model_name(),
+        cfg.model_name(),
         cfg.batch,
         cfg.native_backend,
     )?;
@@ -219,10 +225,10 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     // so every config-affecting flag is rejected (only --out, --jobs and
     // --quiet compose with a manifest)
     let config_opts = [
-        "protocol", "codec", "task", "clients", "participation", "nc", "beta", "alpha",
-        "batch", "epochs", "rounds", "lr", "seed", "train-samples", "test-samples",
-        "eval-every", "dropout", "straggler-prob", "straggler-delay-ms", "workers",
-        "listen", "connect", "client-id",
+        "protocol", "codec", "task", "model", "clients", "participation", "nc", "beta",
+        "alpha", "batch", "epochs", "rounds", "lr", "seed", "train-samples",
+        "test-samples", "eval-every", "dropout", "straggler-prob", "straggler-delay-ms",
+        "workers", "listen", "connect", "client-id",
     ];
     let offending: Vec<&str> = config_opts
         .iter()
@@ -291,7 +297,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
         engine,
-        cfg.task.model_name(),
+        cfg.model_name(),
         cfg.batch,
         cfg.native_backend,
     )?;
@@ -339,7 +345,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
         engine,
-        cfg.task.model_name(),
+        cfg.model_name(),
         cfg.batch,
         cfg.native_backend,
     )?;

@@ -6,6 +6,7 @@
 //! marshals them into PJRT literals by position.
 
 pub mod init;
+pub mod registry;
 
 use anyhow::{bail, Result};
 
@@ -26,7 +27,7 @@ impl ParamSpec {
 }
 
 /// Static description of a whole model (mirrors manifest["models"][name]).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelSchema {
     pub name: String,
     pub input_dim: usize,

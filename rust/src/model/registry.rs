@@ -1,0 +1,424 @@
+//! String-keyed native model registry: each entry pairs a [`ModelSchema`]
+//! (the positional parameter list every subsystem already speaks) with a
+//! [`LayerSpec`] graph description (what the native backend needs to build
+//! forward/backward layers — conv geometry, pooling, activation placement
+//! — none of which fits in a `ParamSpec`).
+//!
+//! Registered models:
+//!
+//! | name        | task substrate      | architecture                              |
+//! |-------------|---------------------|-------------------------------------------|
+//! | `mlp`       | mnist-like (784)    | 784-30-20-10 dense, the paper's Table I   |
+//! | `mlp-large` | mnist-like (784)    | 784-256-128-10 dense (perf/bench scale)   |
+//! | `cnn`       | cifar-like (16x16x3)| conv3x3x8 - pool - conv3x3x16 - pool - fc |
+//!
+//! `mlp` is byte-identical to the seed [`mlp_schema`](crate::model::mlp_schema)
+//! — same names, shapes, flags, and therefore the same `init_params` RNG
+//! draw sequence — so default runs reproduce pre-registry results exactly.
+//!
+//! Validation is the registry's second job: [`ModelDef::validate`] checks
+//! every (weight, bias) pair against the layer geometry and the layer
+//! chain against the schema's input/output dims, with a typed
+//! [`ModelError`]. (The seed `NativeMlp::from_schema` checked only the
+//! weight ranks — a mismatched bias silently trained garbage.)
+
+use std::fmt;
+
+use crate::model::{ModelSchema, ParamSpec};
+
+/// One layer of a native model's compute graph. Dense/Conv2d entries own
+/// the next (weight, bias) pair of the schema's positional parameter
+/// list; pool/flatten entries are parameter-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Fully connected `[inp, out]` (+ bias `[out]`), optional ReLU after.
+    Dense { inp: usize, out: usize, relu: bool },
+    /// 2-D convolution over NHWC input `[h, w, cin]`, weights
+    /// `[kh, kw, cin, cout]` (+ bias `[cout]`), stride 1, zero-padded
+    /// "same" output `[h, w, cout]`, optional ReLU after. Kernel dims
+    /// must be odd.
+    Conv2d { h: usize, w: usize, cin: usize, cout: usize, kh: usize, kw: usize, relu: bool },
+    /// 2x2 average pooling, stride 2, over `[h, w, c]` (h, w even).
+    AvgPool2 { h: usize, w: usize, c: usize },
+    /// Shape bookkeeping between conv and dense stages (NHWC is already
+    /// flat per sample, so this is a marker, not a data transform).
+    Flatten { len: usize },
+}
+
+impl LayerSpec {
+    /// Per-sample (input, output) float counts.
+    pub fn io(&self) -> (usize, usize) {
+        match *self {
+            LayerSpec::Dense { inp, out, .. } => (inp, out),
+            LayerSpec::Conv2d { h, w, cin, cout, .. } => (h * w * cin, h * w * cout),
+            LayerSpec::AvgPool2 { h, w, c } => (h * w * c, (h / 2) * (w / 2) * c),
+            LayerSpec::Flatten { len } => (len, len),
+        }
+    }
+
+    /// Expected (weight, bias) shapes, for layers that own parameters.
+    pub fn param_shapes(&self) -> Option<(Vec<usize>, Vec<usize>)> {
+        match *self {
+            LayerSpec::Dense { inp, out, .. } => Some((vec![inp, out], vec![out])),
+            LayerSpec::Conv2d { cin, cout, kh, kw, .. } => {
+                Some((vec![kh, kw, cin, cout], vec![cout]))
+            }
+            LayerSpec::AvgPool2 { .. } | LayerSpec::Flatten { .. } => None,
+        }
+    }
+
+    fn check_geometry(&self, layer: usize) -> Result<(), ModelError> {
+        match *self {
+            LayerSpec::Conv2d { kh, kw, .. } => {
+                if kh % 2 == 0 || kw % 2 == 0 || kh == 0 || kw == 0 {
+                    return Err(ModelError::Unsupported {
+                        layer,
+                        why: format!("conv kernels must be odd, got {kh}x{kw}"),
+                    });
+                }
+            }
+            LayerSpec::AvgPool2 { h, w, .. } => {
+                if h % 2 != 0 || w % 2 != 0 || h == 0 || w == 0 {
+                    return Err(ModelError::Unsupported {
+                        layer,
+                        why: format!("2x2 pooling needs even spatial dims, got {h}x{w}"),
+                    });
+                }
+            }
+            LayerSpec::Dense { inp, out, .. } => {
+                if inp == 0 || out == 0 {
+                    return Err(ModelError::Unsupported {
+                        layer,
+                        why: "dense dims must be positive".into(),
+                    });
+                }
+            }
+            LayerSpec::Flatten { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+/// Typed schema/graph validation error (the registry's rejection surface).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelError {
+    /// Not in the native registry.
+    UnknownModel { name: String },
+    /// Schema parameter count disagrees with the layer graph.
+    ParamCount { got: usize, want: usize },
+    /// A parameter tensor's shape disagrees with its layer's geometry
+    /// (e.g. a bias that doesn't match its weight's output dim).
+    ShapeMismatch { param: String, got: Vec<usize>, want: Vec<usize> },
+    /// Consecutive layers disagree on activation size.
+    BrokenChain { layer: usize, got: usize, want: usize },
+    /// First/last layer disagrees with the schema's input_dim/num_classes.
+    BadBoundary { what: &'static str, got: usize, want: usize },
+    /// Geometry the native kernels don't implement.
+    Unsupported { layer: usize, why: String },
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelError::UnknownModel { name } => write!(
+                f,
+                "unknown native model {name:?} (registry: {})",
+                MODEL_NAMES.join(" | ")
+            ),
+            ModelError::ParamCount { got, want } => {
+                write!(f, "schema has {got} parameter tensors, layer graph wants {want}")
+            }
+            ModelError::ShapeMismatch { param, got, want } => {
+                write!(f, "parameter {param:?}: shape {got:?} does not match layer geometry {want:?}")
+            }
+            ModelError::BrokenChain { layer, got, want } => write!(
+                f,
+                "layer {layer} consumes {got} values but the previous layer produces {want}"
+            ),
+            ModelError::BadBoundary { what, got, want } => {
+                write!(f, "model {what} is {got}, schema declares {want}")
+            }
+            ModelError::Unsupported { layer, why } => write!(f, "layer {layer}: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// A native model: schema + layer graph, validated as a pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDef {
+    pub schema: ModelSchema,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelDef {
+    /// Check the schema against the layer graph: (w, b) shape agreement
+    /// per parameterized layer, activation-size chaining, input/output
+    /// boundary dims, and kernel geometry the native backend supports.
+    pub fn validate(&self) -> Result<(), ModelError> {
+        let mut pi = 0usize;
+        let mut cur = self.schema.input_dim;
+        for (li, spec) in self.layers.iter().enumerate() {
+            spec.check_geometry(li)?;
+            let (in_len, out_len) = spec.io();
+            if cur != in_len {
+                return Err(ModelError::BrokenChain { layer: li, got: in_len, want: cur });
+            }
+            if let Some((w_shape, b_shape)) = spec.param_shapes() {
+                if pi + 1 >= self.schema.params.len() {
+                    return Err(ModelError::ParamCount {
+                        got: self.schema.params.len(),
+                        want: pi + 2,
+                    });
+                }
+                let w = &self.schema.params[pi];
+                let b = &self.schema.params[pi + 1];
+                if w.shape != w_shape {
+                    return Err(ModelError::ShapeMismatch {
+                        param: w.name.clone(),
+                        got: w.shape.clone(),
+                        want: w_shape,
+                    });
+                }
+                if b.shape != b_shape {
+                    return Err(ModelError::ShapeMismatch {
+                        param: b.name.clone(),
+                        got: b.shape.clone(),
+                        want: b_shape,
+                    });
+                }
+                pi += 2;
+            }
+            cur = out_len;
+        }
+        if pi != self.schema.params.len() {
+            return Err(ModelError::ParamCount { got: self.schema.params.len(), want: pi });
+        }
+        if cur != self.schema.num_classes {
+            return Err(ModelError::BadBoundary {
+                what: "output",
+                got: cur,
+                want: self.schema.num_classes,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Names the native registry answers to, in canonical order.
+pub const MODEL_NAMES: &[&str] = &["mlp", "mlp-large", "cnn"];
+
+/// Look a model up by name. `mlp` reproduces the seed schema (and its
+/// `init_params` draw sequence) byte for byte.
+pub fn model_def(name: &str) -> Result<ModelDef, ModelError> {
+    let def = match name {
+        "mlp" => dense_stack("mlp", &[784, 30, 20, 10], 0.05),
+        "mlp-large" => dense_stack("mlp-large", &[784, 256, 128, 10], 0.05),
+        "cnn" => cnn_def(),
+        _ => return Err(ModelError::UnknownModel { name: name.to_string() }),
+    };
+    debug_assert!(def.validate().is_ok(), "registry model {name} must validate");
+    Ok(def)
+}
+
+/// Infer a dense (+ReLU) layer graph from any (w, b)-paired schema — the
+/// seed `NativeMlp::from_schema` contract, now with full shape validation
+/// (a bias that disagrees with its weight is rejected, not trained).
+pub fn dense_from_schema(schema: &ModelSchema) -> Result<ModelDef, ModelError> {
+    if schema.params.is_empty() || schema.params.len() % 2 != 0 {
+        return Err(ModelError::ParamCount {
+            got: schema.params.len(),
+            want: (schema.params.len() / 2) * 2 + 2,
+        });
+    }
+    let n_layers = schema.params.len() / 2;
+    let mut layers = Vec::with_capacity(2 * n_layers - 1);
+    for (i, pair) in schema.params.chunks(2).enumerate() {
+        let w = &pair[0];
+        if w.shape.len() != 2 {
+            return Err(ModelError::Unsupported {
+                layer: i,
+                why: format!("dense schemas want 2-D weights, {} has shape {:?}", w.name, w.shape),
+            });
+        }
+        layers.push(LayerSpec::Dense {
+            inp: w.shape[0],
+            out: w.shape[1],
+            relu: i + 1 < n_layers,
+        });
+    }
+    let def = ModelDef { schema: schema.clone(), layers };
+    def.validate()?;
+    Ok(def)
+}
+
+/// An MLP over `dims = [input, hidden.., classes]`: quantized weights,
+/// fp biases, ReLU between layers — the seed `mlp_schema` shape.
+fn dense_stack(name: &str, dims: &[usize], default_lr: f32) -> ModelDef {
+    let mut params = Vec::new();
+    let mut layers = Vec::new();
+    for li in 0..dims.len() - 1 {
+        params.push(ParamSpec {
+            name: format!("w{}", li + 1),
+            shape: vec![dims[li], dims[li + 1]],
+            quantized: true,
+        });
+        params.push(ParamSpec {
+            name: format!("b{}", li + 1),
+            shape: vec![dims[li + 1]],
+            quantized: false,
+        });
+        layers.push(LayerSpec::Dense {
+            inp: dims[li],
+            out: dims[li + 1],
+            relu: li + 2 < dims.len(),
+        });
+    }
+    ModelDef {
+        schema: ModelSchema {
+            name: name.into(),
+            input_dim: dims[0],
+            num_classes: *dims.last().unwrap(),
+            optimizer: "sgd".into(),
+            default_lr,
+            params,
+        },
+        layers,
+    }
+}
+
+/// The CIFAR-shaped small CNN: 16x16x3 NHWC input (the synthetic
+/// cifar-like task), two quantized same-padding 3x3 conv+ReLU+avgpool
+/// stages, one quantized dense head. ~4k parameters — sized for the CI
+/// smoke matrix, structured like the paper's second model family.
+fn cnn_def() -> ModelDef {
+    let params = vec![
+        ParamSpec { name: "conv1_w".into(), shape: vec![3, 3, 3, 8], quantized: true },
+        ParamSpec { name: "conv1_b".into(), shape: vec![8], quantized: false },
+        ParamSpec { name: "conv2_w".into(), shape: vec![3, 3, 8, 16], quantized: true },
+        ParamSpec { name: "conv2_b".into(), shape: vec![16], quantized: false },
+        ParamSpec { name: "fc_w".into(), shape: vec![256, 10], quantized: true },
+        ParamSpec { name: "fc_b".into(), shape: vec![10], quantized: false },
+    ];
+    let layers = vec![
+        LayerSpec::Conv2d { h: 16, w: 16, cin: 3, cout: 8, kh: 3, kw: 3, relu: true },
+        LayerSpec::AvgPool2 { h: 16, w: 16, c: 8 },
+        LayerSpec::Conv2d { h: 8, w: 8, cin: 8, cout: 16, kh: 3, kw: 3, relu: true },
+        LayerSpec::AvgPool2 { h: 8, w: 8, c: 16 },
+        LayerSpec::Flatten { len: 256 },
+        LayerSpec::Dense { inp: 256, out: 10, relu: false },
+    ];
+    ModelDef {
+        schema: ModelSchema {
+            name: "cnn".into(),
+            input_dim: 16 * 16 * 3,
+            num_classes: 10,
+            optimizer: "sgd".into(),
+            default_lr: 0.01,
+            params,
+        },
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp_schema;
+
+    #[test]
+    fn registry_mlp_is_byte_identical_to_seed_schema() {
+        let def = model_def("mlp").unwrap();
+        assert_eq!(def.schema, mlp_schema());
+    }
+
+    #[test]
+    fn every_registered_model_validates() {
+        for &name in MODEL_NAMES {
+            let def = model_def(name).unwrap();
+            def.validate().unwrap();
+            assert_eq!(def.schema.name, name);
+            assert!(def.schema.num_quantized() > 0, "{name}");
+        }
+        assert!(matches!(
+            model_def("resnetlite").unwrap_err(),
+            ModelError::UnknownModel { .. }
+        ));
+    }
+
+    #[test]
+    fn cnn_geometry_chains() {
+        let def = model_def("cnn").unwrap();
+        assert_eq!(def.schema.input_dim, 768);
+        assert_eq!(def.schema.param_count(), 216 + 8 + 1152 + 16 + 2560 + 10);
+        let (first_in, _) = def.layers[0].io();
+        assert_eq!(first_in, 768);
+        let (_, last_out) = def.layers.last().unwrap().io();
+        assert_eq!(last_out, 10);
+    }
+
+    #[test]
+    fn mismatched_bias_is_rejected_not_silently_accepted() {
+        // regression: the seed NativeMlp::from_schema accepted this schema
+        let mut schema = mlp_schema();
+        schema.params[1].shape = vec![7]; // b1 disagrees with w1 = [784, 30]
+        let err = dense_from_schema(&schema).unwrap_err();
+        assert!(
+            matches!(err, ModelError::ShapeMismatch { ref param, .. } if param == "b1"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn broken_dense_chain_is_rejected() {
+        let mut schema = mlp_schema();
+        // w2 consumes 30 activations; claim it consumes 29
+        schema.params[2].shape = vec![29, 20];
+        let err = dense_from_schema(&schema).unwrap_err();
+        assert!(matches!(err, ModelError::BrokenChain { layer: 1, .. }), "{err}");
+    }
+
+    #[test]
+    fn odd_param_counts_and_bad_ranks_are_rejected() {
+        let mut schema = mlp_schema();
+        schema.params.pop();
+        assert!(matches!(
+            dense_from_schema(&schema).unwrap_err(),
+            ModelError::ParamCount { .. }
+        ));
+        let mut schema = mlp_schema();
+        schema.params[0].shape = vec![784, 30, 1];
+        assert!(matches!(
+            dense_from_schema(&schema).unwrap_err(),
+            ModelError::Unsupported { .. }
+        ));
+    }
+
+    #[test]
+    fn validate_catches_bad_geometry() {
+        let mut def = model_def("cnn").unwrap();
+        if let LayerSpec::Conv2d { ref mut kh, .. } = def.layers[0] {
+            *kh = 4; // even kernel
+        }
+        assert!(matches!(def.validate().unwrap_err(), ModelError::Unsupported { .. }));
+        let mut def = model_def("cnn").unwrap();
+        if let LayerSpec::AvgPool2 { ref mut h, .. } = def.layers[1] {
+            *h = 15;
+        }
+        assert!(def.validate().is_err());
+    }
+
+    #[test]
+    fn errors_display_readably() {
+        let e = ModelError::UnknownModel { name: "vgg".into() };
+        let s = format!("{e}");
+        assert!(s.contains("vgg") && s.contains("mlp-large"), "{s}");
+        let e = ModelError::ShapeMismatch {
+            param: "b1".into(),
+            got: vec![7],
+            want: vec![30],
+        };
+        assert!(format!("{e}").contains("b1"));
+    }
+}

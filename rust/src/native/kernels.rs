@@ -1,0 +1,425 @@
+//! Deterministic cache-blocked, row-parallel training kernels.
+//!
+//! Every kernel here obeys one contract: **per output element, the
+//! reduction runs in the exact float-op order of the naive seed loops**
+//! (`k` ascending for the forward GEMM, batch index `i` ascending for the
+//! weight gradients, output index `o` ascending for the input gradients,
+//! with the same zero-skip rules). Parallelism and blocking only ever
+//! partition the *output* — rows for the forward/input-grad GEMMs, weight
+//! rows for the gradient GEMM — never the reduction dimension, so results
+//! are bit-identical to the naive kernels at any thread count. The
+//! `native_equiv` integration tests and the `--train` bench both assert
+//! this.
+//!
+//! The naive kernels are kept as the reference implementations (they *are*
+//! the determinism contract, verbatim from the seed `NativeMlp`) and as
+//! the baseline for the `BENCH_train.json` throughput series.
+
+#![allow(clippy::too_many_arguments)]
+
+use crate::util::parallel::parallel_map_indexed;
+
+/// Forward-GEMM column-block width: a 64-float output chunk stays hot in
+/// registers/L1 while the weight panel streams past.
+const COL_BLOCK: usize = 64;
+
+/// Below roughly this many multiply-accumulates a call runs inline: the
+/// thread-scope setup would cost more than it saves.
+const PAR_MIN_MACS: usize = 1 << 17;
+
+/// How a layer executes its kernels: worker-thread count plus an escape
+/// hatch to the naive reference loops (bench baseline). Results are
+/// bit-identical at every setting — only wall time changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelPolicy {
+    /// worker threads for row-parallel kernels (1 = inline, the default:
+    /// the round driver already fans out over clients)
+    pub threads: usize,
+    /// run the naive reference loops instead of the blocked kernels
+    pub naive: bool,
+}
+
+impl KernelPolicy {
+    /// Blocked kernels on `threads` workers.
+    pub fn threaded(threads: usize) -> KernelPolicy {
+        KernelPolicy { threads: threads.max(1), naive: false }
+    }
+
+    /// The naive seed loops — the determinism reference and bench baseline.
+    pub fn reference() -> KernelPolicy {
+        KernelPolicy { threads: 1, naive: true }
+    }
+}
+
+impl Default for KernelPolicy {
+    fn default() -> KernelPolicy {
+        KernelPolicy { threads: 1, naive: false }
+    }
+}
+
+/// Clamp the requested thread count to useful work: one thread unless the
+/// call has enough rows and enough MACs to amortize a thread scope.
+fn effective_threads(threads: usize, rows: usize, macs: usize) -> usize {
+    if threads <= 1 || rows < 2 || macs < PAR_MIN_MACS {
+        1
+    } else {
+        threads.min(rows)
+    }
+}
+
+/// Split `0..n` into `parts` contiguous, near-equal `(lo, hi)` ranges.
+fn split_rows(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let hi = lo + base + usize::from(p < rem);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// `m[rows, cols]` -> `[cols, rows]`. Pure data movement (no float ops),
+/// so it never perturbs the bit-identity contract.
+fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0f32; m.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = m[r * cols + c];
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// forward: out[n, o] = x[n, k] @ w[k, o] + b[o]
+// ---------------------------------------------------------------------------
+
+/// Naive reference (verbatim the seed `matmul_bias`): per row, `k`
+/// ascends and zero activations are skipped — the forward contract.
+pub fn gemm_bias_naive(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    o: usize,
+) {
+    for r in 0..n {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * o..(r + 1) * o];
+        orow.copy_from_slice(b);
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * o..(kk + 1) * o];
+            for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+}
+
+/// One contiguous row block of the forward GEMM, column-blocked: each
+/// `COL_BLOCK`-wide output chunk accumulates while the full `k` loop
+/// streams past it, `k` ascending per element exactly like the naive
+/// kernel.
+fn gemm_bias_block(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, o: usize) {
+    for r in 0..n {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * o..(r + 1) * o];
+        let mut ob = 0;
+        while ob < o {
+            let oe = (ob + COL_BLOCK).min(o);
+            let ochunk = &mut orow[ob..oe];
+            ochunk.copy_from_slice(&b[ob..oe]);
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * o + ob..kk * o + oe];
+                for (ov, &wv) in ochunk.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+            ob = oe;
+        }
+    }
+}
+
+/// Blocked, row-parallel forward GEMM. Bit-identical to
+/// [`gemm_bias_naive`] at any `policy`.
+pub fn gemm_bias(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    o: usize,
+    policy: &KernelPolicy,
+) {
+    if policy.naive {
+        return gemm_bias_naive(x, w, b, out, n, k, o);
+    }
+    let threads = effective_threads(policy.threads, n, n * k * o);
+    if threads <= 1 {
+        return gemm_bias_block(x, w, b, out, n, k, o);
+    }
+    let bounds = split_rows(n, threads);
+    let chunks: Vec<Vec<f32>> = parallel_map_indexed(bounds.len(), threads, |bi| {
+        let (lo, hi) = bounds[bi];
+        let mut chunk = vec![0f32; (hi - lo) * o];
+        gemm_bias_block(&x[lo * k..hi * k], w, b, &mut chunk, hi - lo, k, o);
+        chunk
+    });
+    for ((lo, hi), chunk) in bounds.into_iter().zip(chunks) {
+        out[lo * o..hi * o].copy_from_slice(&chunk);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// weight gradients: dw[k, o] = sum_i a[i, k] * g[i, o]; db[o] = sum_i g[i, o]
+// ---------------------------------------------------------------------------
+
+/// Naive reference (verbatim the seed backward loops): the batch index
+/// `i` ascends per element and rows with `g == 0` are skipped — the
+/// gradient contract. `dw`/`db` must arrive zero-filled.
+pub fn grad_weights_naive(
+    a: &[f32],
+    g: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    k: usize,
+    o: usize,
+) {
+    for i in 0..n {
+        for oo in 0..o {
+            let gv = g[i * o + oo];
+            if gv == 0.0 {
+                continue;
+            }
+            db[oo] += gv;
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                dw[kk * o + oo] += av * gv;
+            }
+        }
+    }
+}
+
+/// Blocked, weight-row-parallel gradient kernel: `g` is transposed once
+/// (data movement only) so every `dw[k, o]` reduces two contiguous
+/// length-`n` vectors; the reduction order (`i` ascending, zeros
+/// skipped) matches [`grad_weights_naive`] bit for bit. `dw`/`db` must
+/// arrive zero-filled.
+pub fn grad_weights(
+    a: &[f32],
+    g: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    k: usize,
+    o: usize,
+    policy: &KernelPolicy,
+) {
+    if policy.naive {
+        return grad_weights_naive(a, g, dw, db, n, k, o);
+    }
+    let gt = transpose(g, n, o);
+    for (oo, dv) in db.iter_mut().enumerate() {
+        let grow = &gt[oo * n..(oo + 1) * n];
+        let mut s = *dv;
+        for &gv in grow {
+            if gv == 0.0 {
+                continue;
+            }
+            s += gv;
+        }
+        *dv = s;
+    }
+    let threads = effective_threads(policy.threads, k, n * k * o);
+    let bounds = split_rows(k, threads);
+    let chunks: Vec<Vec<f32>> = parallel_map_indexed(bounds.len(), threads, |bi| {
+        let (lo, hi) = bounds[bi];
+        let mut chunk = vec![0f32; (hi - lo) * o];
+        let mut acol = vec![0f32; n];
+        for kk in lo..hi {
+            for (i, av) in acol.iter_mut().enumerate() {
+                *av = a[i * k + kk];
+            }
+            let crow = &mut chunk[(kk - lo) * o..(kk - lo + 1) * o];
+            for (oo, cv) in crow.iter_mut().enumerate() {
+                let grow = &gt[oo * n..(oo + 1) * n];
+                let mut s = *cv;
+                for (&av, &gv) in acol.iter().zip(grow) {
+                    if gv == 0.0 {
+                        continue;
+                    }
+                    s += av * gv;
+                }
+                *cv = s;
+            }
+        }
+        chunk
+    });
+    for ((lo, hi), chunk) in bounds.into_iter().zip(chunks) {
+        // dw arrives zero-filled, so add-into-zero == the chunk values
+        dw[lo * o..hi * o].copy_from_slice(&chunk);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// input gradients: dx[i, k] = sum_o g[i, o] * w[k, o]
+// ---------------------------------------------------------------------------
+
+/// Naive reference (verbatim the seed `dprev` loop, minus the ReLU mask
+/// that now lives in the `Relu` layer): `o` ascends per element.
+pub fn grad_input_naive(g: &[f32], w: &[f32], dx: &mut [f32], n: usize, k: usize, o: usize) {
+    for i in 0..n {
+        let grow = &g[i * o..(i + 1) * o];
+        let drow = &mut dx[i * k..(i + 1) * k];
+        for (kk, dv) in drow.iter_mut().enumerate() {
+            let wrow = &w[kk * o..(kk + 1) * o];
+            let mut s = 0f32;
+            for (&wv, &gv) in wrow.iter().zip(grow) {
+                s += wv * gv;
+            }
+            *dv = s;
+        }
+    }
+}
+
+/// Row-parallel input-gradient GEMM (the inner reduction is already
+/// contiguous in both operands). Bit-identical to [`grad_input_naive`].
+pub fn grad_input(
+    g: &[f32],
+    w: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    k: usize,
+    o: usize,
+    policy: &KernelPolicy,
+) {
+    if policy.naive {
+        return grad_input_naive(g, w, dx, n, k, o);
+    }
+    let threads = effective_threads(policy.threads, n, n * k * o);
+    if threads <= 1 {
+        return grad_input_naive(g, w, dx, n, k, o);
+    }
+    let bounds = split_rows(n, threads);
+    let chunks: Vec<Vec<f32>> = parallel_map_indexed(bounds.len(), threads, |bi| {
+        let (lo, hi) = bounds[bi];
+        let mut chunk = vec![0f32; (hi - lo) * k];
+        grad_input_naive(&g[lo * o..hi * o], w, &mut chunk, hi - lo, k, o);
+        chunk
+    });
+    for ((lo, hi), chunk) in bounds.into_iter().zip(chunks) {
+        dx[lo * k..hi * k].copy_from_slice(&chunk);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randn(rng: &mut Pcg, n: usize, sparse: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let v = rng.normal();
+                // exercise the zero-skip paths like ReLU activations do
+                if sparse && v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn gemm_bias_matches_naive_at_any_thread_count() {
+        let mut rng = Pcg::seeded(1);
+        for &(n, k, o) in &[(1usize, 5usize, 3usize), (7, 33, 65), (64, 130, 64), (13, 784, 30)] {
+            let x = randn(&mut rng, n * k, true);
+            let w = randn(&mut rng, k * o, false);
+            let b = randn(&mut rng, o, false);
+            let mut want = vec![0f32; n * o];
+            gemm_bias_naive(&x, &w, &b, &mut want, n, k, o);
+            for threads in [1, 2, 3, 8] {
+                let mut got = vec![0f32; n * o];
+                gemm_bias(&x, &w, &b, &mut got, n, k, o, &KernelPolicy::threaded(threads));
+                assert_eq!(bits(&want), bits(&got), "n={n} k={k} o={o} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_weights_matches_naive_at_any_thread_count() {
+        let mut rng = Pcg::seeded(2);
+        for &(n, k, o) in &[(1usize, 4usize, 2usize), (9, 65, 31), (64, 129, 66)] {
+            let a = randn(&mut rng, n * k, true);
+            let g = randn(&mut rng, n * o, true);
+            let mut dw_want = vec![0f32; k * o];
+            let mut db_want = vec![0f32; o];
+            grad_weights_naive(&a, &g, &mut dw_want, &mut db_want, n, k, o);
+            for threads in [1, 2, 5] {
+                let mut dw = vec![0f32; k * o];
+                let mut db = vec![0f32; o];
+                grad_weights(&a, &g, &mut dw, &mut db, n, k, o, &KernelPolicy::threaded(threads));
+                assert_eq!(bits(&dw_want), bits(&dw), "dw n={n} k={k} o={o} t={threads}");
+                assert_eq!(bits(&db_want), bits(&db), "db n={n} k={k} o={o} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_input_matches_naive_at_any_thread_count() {
+        let mut rng = Pcg::seeded(3);
+        for &(n, k, o) in &[(2usize, 3usize, 4usize), (11, 70, 29), (64, 256, 64)] {
+            let g = randn(&mut rng, n * o, true);
+            let w = randn(&mut rng, k * o, false);
+            let mut want = vec![0f32; n * k];
+            grad_input_naive(&g, &w, &mut want, n, k, o);
+            for threads in [1, 2, 7] {
+                let mut got = vec![0f32; n * k];
+                grad_input(&g, &w, &mut got, n, k, o, &KernelPolicy::threaded(threads));
+                assert_eq!(bits(&want), bits(&got), "n={n} k={k} o={o} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_rows_partitions_exactly() {
+        for (n, parts) in [(10usize, 3usize), (3, 8), (1, 1), (0, 4), (64, 4)] {
+            let b = split_rows(n, parts);
+            assert_eq!(b.first().map(|r| r.0).unwrap_or(0), 0);
+            assert_eq!(b.last().map(|r| r.1).unwrap_or(0), n);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].0 < w[0].1);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let t = transpose(&m, 3, 4);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // t[c=0, r=1] = m[r=1, c=0]
+        assert_eq!(transpose(&t, 4, 3), m);
+    }
+}

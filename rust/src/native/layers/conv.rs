@@ -1,0 +1,430 @@
+//! Convolution, pooling, and flatten layers (NHWC, the synth dataset's
+//! native pixel layout).
+//!
+//! Conv2d lowers to the shared GEMM kernels through im2col: the batch's
+//! patch matrix `[n*h*w, kh*kw*cin]` turns forward into `col @ W`, the
+//! weight gradient into `col^T @ dy`, and the input gradient into a
+//! `dy @ W^T` followed by a col2im scatter-add — so the determinism
+//! contract (reductions never partitioned) is inherited from
+//! [`crate::native::kernels`], and the scatter-add itself runs in one
+//! fixed patch order.
+
+use crate::model::ParamSet;
+use crate::native::kernels::{self, KernelPolicy};
+use crate::native::layers::{apply_sgd, quantize_weights, Layer, QuantSlot, QuantSpec, TrainCache};
+
+/// Stride-1, zero-padded "same" 2-D convolution over `[h, w, cin]` NHWC
+/// input; weights `[kh, kw, cin, cout]` row-major (so the flattened
+/// matrix is `[kh*kw*cin, cout]`), bias `[cout]`. Kernel dims odd.
+pub struct Conv2d {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub weight: usize,
+    pub bias: usize,
+    pub quant: Option<QuantSlot>,
+}
+
+impl Conv2d {
+    fn kdim(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+}
+
+impl Layer for Conv2d {
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn in_len(&self) -> usize {
+        self.h * self.w * self.cin
+    }
+
+    fn out_len(&self) -> usize {
+        self.h * self.w * self.cout
+    }
+
+    fn param_indices(&self) -> Vec<usize> {
+        vec![self.weight, self.bias]
+    }
+
+    fn quant_slot(&self) -> Option<QuantSlot> {
+        self.quant
+    }
+
+    fn forward(
+        &self,
+        params: &ParamSet,
+        q: QuantSpec,
+        factors: &[f32],
+        x: &[f32],
+        n: usize,
+        kp: &KernelPolicy,
+    ) -> (Vec<f32>, TrainCache) {
+        let w = &params.tensors[self.weight].data;
+        let b = &params.tensors[self.bias].data;
+        let quant_cache = quantize_weights(w, self.quant, q, factors);
+        let w_eff: &[f32] = if quant_cache.w_eff.is_empty() { w } else { &quant_cache.w_eff };
+        let col = im2col(x, n, self.h, self.w, self.cin, self.kh, self.kw);
+        let rows = n * self.h * self.w;
+        let mut out = vec![0f32; rows * self.cout];
+        kernels::gemm_bias(&col, w_eff, b, &mut out, rows, self.kdim(), self.cout, kp);
+        (out, TrainCache { col, ..quant_cache })
+    }
+
+    fn backward(
+        &self,
+        params: &mut ParamSet,
+        q: QuantSpec,
+        factors: &mut [f32],
+        cache: &TrainCache,
+        _x: &[f32],
+        dy: &[f32],
+        n: usize,
+        lr: f32,
+        need_dx: bool,
+        kp: &KernelPolicy,
+    ) -> Vec<f32> {
+        let rows = n * self.h * self.w;
+        let kdim = self.kdim();
+        let mut dw = vec![0f32; kdim * self.cout];
+        let mut db = vec![0f32; self.cout];
+        kernels::grad_weights(&cache.col, dy, &mut dw, &mut db, rows, kdim, self.cout, kp);
+        let dx = if need_dx {
+            let w_eff: &[f32] = if cache.w_eff.is_empty() {
+                &params.tensors[self.weight].data
+            } else {
+                &cache.w_eff
+            };
+            let mut dcol = vec![0f32; rows * kdim];
+            kernels::grad_input(dy, w_eff, &mut dcol, rows, kdim, self.cout, kp);
+            col2im(&dcol, n, self.h, self.w, self.cin, self.kh, self.kw)
+        } else {
+            Vec::new()
+        };
+        apply_sgd(params, self.weight, self.bias, self.quant, q, factors, cache, &dw, &db, lr);
+        dx
+    }
+}
+
+/// Lower an NHWC batch into its patch matrix: row `(s, oy, ox)` holds the
+/// zero-padded `kh x kw x cin` receptive field in `(ky, kx, c)` order —
+/// matching the `[kh, kw, cin, cout]` weight layout.
+pub(crate) fn im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let kdim = kh * kw * cin;
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut col = vec![0f32; n * h * w * kdim];
+    let mut row = 0usize;
+    for s in 0..n {
+        let img = &x[s * h * w * cin..(s + 1) * h * w * cin];
+        for oy in 0..h {
+            for ox in 0..w {
+                let dst = &mut col[row * kdim..(row + 1) * kdim];
+                let mut idx = 0usize;
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < ph || iy >= h + ph {
+                        idx += kw * cin; // zero padding rows stay zero
+                        continue;
+                    }
+                    let iy = iy - ph;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pw || ix >= w + pw {
+                            idx += cin;
+                            continue;
+                        }
+                        let ix = ix - pw;
+                        let src = (iy * w + ix) * cin;
+                        dst[idx..idx + cin].copy_from_slice(&img[src..src + cin]);
+                        idx += cin;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    col
+}
+
+/// Adjoint of [`im2col`]: scatter-add patch gradients back onto the NHWC
+/// input grid (padding positions drop out). One fixed patch order —
+/// deterministic by construction.
+pub(crate) fn col2im(
+    dcol: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let kdim = kh * kw * cin;
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut dx = vec![0f32; n * h * w * cin];
+    let mut row = 0usize;
+    for s in 0..n {
+        let img = &mut dx[s * h * w * cin..(s + 1) * h * w * cin];
+        for oy in 0..h {
+            for ox in 0..w {
+                let src = &dcol[row * kdim..(row + 1) * kdim];
+                let mut idx = 0usize;
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < ph || iy >= h + ph {
+                        idx += kw * cin;
+                        continue;
+                    }
+                    let iy = iy - ph;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pw || ix >= w + pw {
+                            idx += cin;
+                            continue;
+                        }
+                        let ix = ix - pw;
+                        let d = (iy * w + ix) * cin;
+                        for c in 0..cin {
+                            img[d + c] += src[idx + c];
+                        }
+                        idx += cin;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    dx
+}
+
+/// 2x2 average pooling, stride 2, over `[h, w, c]` NHWC (h, w even).
+pub struct AvgPool2 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Layer for AvgPool2 {
+    fn name(&self) -> &'static str {
+        "avgpool2"
+    }
+
+    fn in_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    fn out_len(&self) -> usize {
+        (self.h / 2) * (self.w / 2) * self.c
+    }
+
+    fn param_indices(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn quant_slot(&self) -> Option<QuantSlot> {
+        None
+    }
+
+    fn forward(
+        &self,
+        _params: &ParamSet,
+        _q: QuantSpec,
+        _factors: &[f32],
+        x: &[f32],
+        n: usize,
+        _kp: &KernelPolicy,
+    ) -> (Vec<f32>, TrainCache) {
+        let (h, w, c) = (self.h, self.w, self.c);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = vec![0f32; n * oh * ow * c];
+        for s in 0..n {
+            let img = &x[s * h * w * c..(s + 1) * h * w * c];
+            let dst = &mut out[s * oh * ow * c..(s + 1) * oh * ow * c];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let (y0, x0) = (2 * oy, 2 * ox);
+                    for cc in 0..c {
+                        let at = |yy: usize, xx: usize| img[(yy * w + xx) * c + cc];
+                        // fixed summation order: row-major over the window
+                        let v = (at(y0, x0) + at(y0, x0 + 1) + at(y0 + 1, x0)
+                            + at(y0 + 1, x0 + 1))
+                            * 0.25;
+                        dst[(oy * ow + ox) * c + cc] = v;
+                    }
+                }
+            }
+        }
+        (out, TrainCache::default())
+    }
+
+    fn backward(
+        &self,
+        _params: &mut ParamSet,
+        _q: QuantSpec,
+        _factors: &mut [f32],
+        _cache: &TrainCache,
+        _x: &[f32],
+        dy: &[f32],
+        n: usize,
+        _lr: f32,
+        need_dx: bool,
+        _kp: &KernelPolicy,
+    ) -> Vec<f32> {
+        if !need_dx {
+            return Vec::new();
+        }
+        let (h, w, c) = (self.h, self.w, self.c);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut dx = vec![0f32; n * h * w * c];
+        for s in 0..n {
+            let g = &dy[s * oh * ow * c..(s + 1) * oh * ow * c];
+            let img = &mut dx[s * h * w * c..(s + 1) * h * w * c];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let (y0, x0) = (2 * oy, 2 * ox);
+                    for cc in 0..c {
+                        let gv = g[(oy * ow + ox) * c + cc] * 0.25;
+                        img[(y0 * w + x0) * c + cc] = gv;
+                        img[(y0 * w + x0 + 1) * c + cc] = gv;
+                        img[((y0 + 1) * w + x0) * c + cc] = gv;
+                        img[((y0 + 1) * w + x0 + 1) * c + cc] = gv;
+                    }
+                }
+            }
+        }
+        dx
+    }
+}
+
+/// Shape bookkeeping between the conv stack and the dense head. NHWC is
+/// already flat per sample, so forward/backward are identity copies.
+pub struct Flatten {
+    pub len: usize,
+}
+
+impl Layer for Flatten {
+    fn name(&self) -> &'static str {
+        "flatten"
+    }
+
+    fn in_len(&self) -> usize {
+        self.len
+    }
+
+    fn out_len(&self) -> usize {
+        self.len
+    }
+
+    fn param_indices(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn quant_slot(&self) -> Option<QuantSlot> {
+        None
+    }
+
+    fn forward(
+        &self,
+        _params: &ParamSet,
+        _q: QuantSpec,
+        _factors: &[f32],
+        x: &[f32],
+        _n: usize,
+        _kp: &KernelPolicy,
+    ) -> (Vec<f32>, TrainCache) {
+        (x.to_vec(), TrainCache::default())
+    }
+
+    fn backward(
+        &self,
+        _params: &mut ParamSet,
+        _q: QuantSpec,
+        _factors: &mut [f32],
+        _cache: &TrainCache,
+        _x: &[f32],
+        dy: &[f32],
+        _n: usize,
+        _lr: f32,
+        need_dx: bool,
+        _kp: &KernelPolicy,
+    ) -> Vec<f32> {
+        if need_dx {
+            dy.to_vec()
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::layers::Mode;
+
+    fn fp_spec() -> QuantSpec {
+        QuantSpec { mode: Mode::Fp, t_k: 0.05, nq: 0 }
+    }
+
+    #[test]
+    fn im2col_center_and_corner_patches() {
+        // 1 sample, 3x3 single-channel image 1..9, 3x3 kernel
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let col = im2col(&x, 1, 3, 3, 1, 3, 3);
+        assert_eq!(col.len(), 9 * 9);
+        // center patch (oy=1, ox=1) sees the whole image in order
+        let center = &col[4 * 9..5 * 9];
+        assert_eq!(center, &x[..]);
+        // top-left patch (oy=0, ox=0): first row/col zero-padded
+        let tl = &col[0..9];
+        assert_eq!(tl, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), g> == <x, col2im(g)> for random-ish data — the
+        // defining property of the transpose pair
+        let (h, w, cin, kh, kw) = (4usize, 5usize, 2usize, 3usize, 3usize);
+        let n = 2usize;
+        let x: Vec<f32> = (0..n * h * w * cin).map(|i| (i as f32 * 0.37).sin()).collect();
+        let g: Vec<f32> =
+            (0..n * h * w * kh * kw * cin).map(|i| (i as f32 * 0.11).cos()).collect();
+        let col = im2col(&x, n, h, w, cin, kh, kw);
+        let back = col2im(&g, n, h, w, cin, kh, kw);
+        let lhs: f64 = col.iter().zip(&g).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn avgpool_means_and_spreads() {
+        let pool = AvgPool2 { h: 2, w: 2, c: 1 };
+        let mut params = ParamSet { tensors: Vec::new() };
+        let x = vec![1.0f32, 2.0, 3.0, 6.0];
+        let (out, _) = pool.forward(&params, fp_spec(), &[], &x, 1, &KernelPolicy::default());
+        assert_eq!(out, vec![3.0]);
+        let dx = pool.backward(
+            &mut params,
+            fp_spec(),
+            &mut [],
+            &TrainCache::default(),
+            &x,
+            &[4.0],
+            1,
+            0.1,
+            true,
+            &KernelPolicy::default(),
+        );
+        assert_eq!(dx, vec![1.0; 4]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fully-connected layer over the blocked GEMM kernels.
+
+use crate::model::ParamSet;
+use crate::native::kernels::{self, KernelPolicy};
+use crate::native::layers::{apply_sgd, quantize_weights, Layer, QuantSlot, QuantSpec, TrainCache};
+
+/// `out = x @ w + b`, weights `[inp, out]` row-major at `ParamSet`
+/// index `weight`, bias `[out]` at `bias`. Quantized layers carry a
+/// [`QuantSlot`] and run the mode's ternarization in `forward` plus the
+/// STE factor update in `backward`.
+pub struct Dense {
+    pub inp: usize,
+    pub out: usize,
+    pub weight: usize,
+    pub bias: usize,
+    pub quant: Option<QuantSlot>,
+}
+
+impl Layer for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn in_len(&self) -> usize {
+        self.inp
+    }
+
+    fn out_len(&self) -> usize {
+        self.out
+    }
+
+    fn param_indices(&self) -> Vec<usize> {
+        vec![self.weight, self.bias]
+    }
+
+    fn quant_slot(&self) -> Option<QuantSlot> {
+        self.quant
+    }
+
+    fn forward(
+        &self,
+        params: &ParamSet,
+        q: QuantSpec,
+        factors: &[f32],
+        x: &[f32],
+        n: usize,
+        kp: &KernelPolicy,
+    ) -> (Vec<f32>, TrainCache) {
+        let w = &params.tensors[self.weight].data;
+        let b = &params.tensors[self.bias].data;
+        let cache = quantize_weights(w, self.quant, q, factors);
+        let w_eff: &[f32] = if cache.w_eff.is_empty() { w } else { &cache.w_eff };
+        let mut out = vec![0f32; n * self.out];
+        kernels::gemm_bias(x, w_eff, b, &mut out, n, self.inp, self.out, kp);
+        (out, cache)
+    }
+
+    fn backward(
+        &self,
+        params: &mut ParamSet,
+        q: QuantSpec,
+        factors: &mut [f32],
+        cache: &TrainCache,
+        x: &[f32],
+        dy: &[f32],
+        n: usize,
+        lr: f32,
+        need_dx: bool,
+        kp: &KernelPolicy,
+    ) -> Vec<f32> {
+        // grads of the effective (possibly ternary) weights
+        let mut dw = vec![0f32; self.inp * self.out];
+        let mut db = vec![0f32; self.out];
+        kernels::grad_weights(x, dy, &mut dw, &mut db, n, self.inp, self.out, kp);
+        // dL/dx from the *pre-update* effective weights (seed order:
+        // dprev before the parameter step)
+        let dx = if need_dx {
+            let w_eff: &[f32] = if cache.w_eff.is_empty() {
+                &params.tensors[self.weight].data
+            } else {
+                &cache.w_eff
+            };
+            let mut dx = vec![0f32; n * self.inp];
+            kernels::grad_input(dy, w_eff, &mut dx, n, self.inp, self.out, kp);
+            dx
+        } else {
+            Vec::new()
+        };
+        apply_sgd(params, self.weight, self.bias, self.quant, q, factors, cache, &dw, &db, lr);
+        dx
+    }
+}

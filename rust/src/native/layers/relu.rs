@@ -1,0 +1,101 @@
+//! ReLU as its own graph node (the seed trainer fused it into the dense
+//! loop; a separate layer is what lets conv/pool stages reuse it).
+
+use crate::model::ParamSet;
+use crate::native::kernels::KernelPolicy;
+use crate::native::layers::{Layer, QuantSlot, QuantSpec, TrainCache};
+
+/// Elementwise `max(x, 0)` over `len` floats per sample.
+pub struct Relu {
+    pub len: usize,
+}
+
+impl Layer for Relu {
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+
+    fn in_len(&self) -> usize {
+        self.len
+    }
+
+    fn out_len(&self) -> usize {
+        self.len
+    }
+
+    fn param_indices(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn quant_slot(&self) -> Option<QuantSlot> {
+        None
+    }
+
+    fn forward(
+        &self,
+        _params: &ParamSet,
+        _q: QuantSpec,
+        _factors: &[f32],
+        x: &[f32],
+        _n: usize,
+        _kp: &KernelPolicy,
+    ) -> (Vec<f32>, TrainCache) {
+        (x.iter().map(|&v| v.max(0.0)).collect(), TrainCache::default())
+    }
+
+    fn backward(
+        &self,
+        _params: &mut ParamSet,
+        _q: QuantSpec,
+        _factors: &mut [f32],
+        _cache: &TrainCache,
+        x: &[f32],
+        dy: &[f32],
+        _n: usize,
+        _lr: f32,
+        need_dx: bool,
+        _kp: &KernelPolicy,
+    ) -> Vec<f32> {
+        if !need_dx {
+            return Vec::new();
+        }
+        // pass the gradient only where the input was strictly positive —
+        // `!(xv > 0)` also masks NaN, matching the seed's post-ReLU
+        // `act <= 0` mask bit for bit
+        x.iter()
+            .zip(dy)
+            .map(|(&xv, &gv)| if xv > 0.0 { gv } else { 0.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSet;
+
+    #[test]
+    fn forward_clamps_and_backward_masks() {
+        let relu = Relu { len: 4 };
+        let mut params = ParamSet { tensors: Vec::new() };
+        let q = QuantSpec { mode: crate::native::layers::Mode::Fp, t_k: 0.05, nq: 0 };
+        let kp = KernelPolicy::default();
+        let x = vec![-1.0f32, 0.0, 2.0, -0.0];
+        let (out, _) = relu.forward(&params, q, &[], &x, 1, &kp);
+        assert_eq!(out, vec![0.0, 0.0, 2.0, 0.0]);
+        let dy = vec![1.0f32, 2.0, 3.0, 4.0];
+        let dx = relu.backward(
+            &mut params,
+            q,
+            &mut [],
+            &TrainCache::default(),
+            &x,
+            &dy,
+            1,
+            0.1,
+            true,
+            &kp,
+        );
+        assert_eq!(dx, vec![0.0, 0.0, 3.0, 0.0]);
+    }
+}

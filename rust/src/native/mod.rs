@@ -1,14 +1,28 @@
-//! Pure-Rust reference backend: MLP forward/backward + SGD + FTTQ.
+//! Pure-Rust layer-graph training core.
 //!
-//! Exists for three reasons:
+//! Exists for four reasons:
 //!   1. cross-validation — the same math as the L2 JAX graphs, so the
 //!      integration tests can check the HLO artifacts end-to-end;
 //!   2. fast property tests over the coordinator (no PJRT compile cost);
-//!   3. a baseline for the §Perf comparison (XLA hot path vs naive Rust).
+//!   3. the compute hot path for every scenario-grid and sim-fleet run
+//!      in the artifact-less (offline) build;
+//!   4. the baseline for the §Perf comparison (`BENCH_train.json`).
 //!
-//! Only the MLP is implemented natively (the CNN exists solely as an HLO
-//! artifact); the coordinator is generic over `LocalBackend`.
+//! Structure (DESIGN.md §10):
+//!   * [`kernels`] — deterministic cache-blocked, row-parallel GEMM /
+//!     gradient kernels (reductions never partitioned: bit-identical to
+//!     the naive reference loops at any thread count);
+//!   * [`layers`] — the composable `Layer` graph (Dense / ReLU / Conv2d /
+//!     AvgPool2 / Flatten) with per-layer FTTQ/TTQ through `QuantSlot`s.
+//!
+//! The seed's monolithic `NativeMlp` is gone; `tests/native_equiv.rs`
+//! keeps it verbatim as the bit-identity reference for the `mlp` schema.
+//! Models come from the string-keyed registry
+//! ([`crate::model::registry`]): `mlp` (the paper's 784-30-20-10),
+//! `mlp-large`, and a CIFAR-shaped `cnn`.
 
-pub mod mlp;
+pub mod kernels;
+pub mod layers;
 
-pub use mlp::NativeMlp;
+pub use kernels::KernelPolicy;
+pub use layers::{Layer, LayerGraph, Mode, QuantSlot, QuantSpec, TrainCache};

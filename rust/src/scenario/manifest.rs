@@ -15,6 +15,8 @@
 //! protocol = "tfedavg"        # baseline | ttq | fedavg | tfedavg
 //! codec = "ternary"           # ternary | dense | fp16 | quant<b> | stc:k=<f>
 //! task = "mnist"              # mnist | cifar
+//! model = "mlp-large"         # native registry: mlp | mlp-large | cnn
+//!                             # (omit for the task default)
 //! clients = 10                # total clients N
 //! participation = 1.0         # lambda
 //! rounds = 30
@@ -50,10 +52,11 @@
 //! latency_ms = [10.0, 200.0]  # one-way latency, uniform in [lo, hi]
 //! target_acc = 0.5            # time-to-accuracy target (optional)
 //!
-//! [sweep]                     # grid = partitions × codecs × seeds
+//! [sweep]                     # grid = models × partitions × codecs × seeds
 //! seeds = [1, 2, 3]           # default: [experiment seed]
 //! partitions = ["iid", "nc:2"]  # default: [fleet partition]
 //! codecs = ["ternary", "stc:k=0.01"]  # default: [experiment codec]
+//! models = ["mlp", "mlp-large"]  # default: [experiment model]
 //!
 //! [output]
 //! path = "results.json"       # bundle sink; `--out` overrides
@@ -135,6 +138,8 @@ pub struct SweepSpec {
     pub seeds: Vec<u64>,
     pub partitions: Vec<PartitionStrategy>,
     pub codecs: Vec<CodecSpec>,
+    /// registry model names; `""` = the task default (no override)
+    pub models: Vec<String>,
 }
 
 /// One fully-resolved grid cell.
@@ -146,10 +151,17 @@ pub struct GridCell {
 }
 
 impl GridCell {
-    /// Stable display label: `seed=7 partition=nc:2 codec=ternary`.
+    /// Stable display label: `seed=7 partition=nc:2 codec=ternary`, with
+    /// ` model=<name>` appended only under an explicit model (so default
+    /// grids keep their pre-registry labels byte for byte).
     pub fn label(&self) -> String {
+        let model = if self.cfg.model.is_empty() {
+            String::new()
+        } else {
+            format!(" model={}", self.cfg.model)
+        };
         format!(
-            "seed={} partition={} codec={}",
+            "seed={} partition={} codec={}{model}",
             self.cfg.seed,
             self.partition,
             self.cfg.codec.name()
@@ -164,6 +176,7 @@ const EXPERIMENT_KEYS: &[&str] = &[
     "protocol",
     "codec",
     "task",
+    "model",
     "clients",
     "participation",
     "rounds",
@@ -190,7 +203,7 @@ const SIM_KEYS: &[&str] = &[
     "latency_ms",
     "target_acc",
 ];
-const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs"];
+const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs", "models"];
 const OUTPUT_KEYS: &[&str] = &["path"];
 
 impl ScenarioManifest {
@@ -235,11 +248,16 @@ impl ScenarioManifest {
             Some(v) => Task::parse(v.as_str().context("[experiment] task")?)?,
             None => Task::MnistLike,
         };
+        let model = match doc.get("experiment", "model") {
+            Some(v) => v.as_str().context("[experiment] model")?.to_string(),
+            None => String::new(),
+        };
         let seed = get_unsigned(&doc, "experiment", "seed")?.unwrap_or(42);
         let mut base = ExperimentConfig::table2(protocol, task, seed);
         if let Some(spec) = codec {
             base.codec = spec;
         }
+        base.model = model;
         if !protocol.is_centralized() {
             if let Some(n) = get_unsigned(&doc, "experiment", "clients")? {
                 base.n_clients = n as usize;
@@ -357,6 +375,19 @@ impl ScenarioManifest {
                     .context("[sweep] codecs")?
             }
         };
+        let models = match doc.get("sweep", "models") {
+            None => vec![base.model.clone()],
+            Some(v) => {
+                let arr = v.as_arr().context("[sweep] models")?;
+                if arr.is_empty() {
+                    bail!("[sweep] models must not be empty");
+                }
+                arr.iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()
+                    .context("[sweep] models")?
+            }
+        };
 
         // -- [output] -----------------------------------------------------
         let output = match doc.get("output", "path") {
@@ -371,7 +402,7 @@ impl ScenarioManifest {
             availability,
             transport,
             sim,
-            sweep: SweepSpec { seeds, partitions, codecs },
+            sweep: SweepSpec { seeds, partitions, codecs, models },
             output,
         };
         // expanding validates every cell — a bad manifest fails at parse
@@ -388,27 +419,27 @@ impl ScenarioManifest {
     }
 
     /// Expand the sweep into validated grid cells:
-    /// partitions (outer) × codecs × seeds (inner).
+    /// models (outer) × partitions × codecs × seeds (inner).
     pub fn grid(&self) -> Result<Vec<GridCell>> {
         let mut cells = Vec::new();
-        for part in &self.sweep.partitions {
-            for &codec in &self.sweep.codecs {
-                for &seed in &self.sweep.seeds {
-                    let mut cfg = self.base.clone();
-                    cfg.seed = seed;
-                    part.apply(&mut cfg);
-                    cfg.codec = codec;
-                    if !self.protocol_pinned {
-                        cfg.protocol = Protocol::for_codec(codec);
+        for model in &self.sweep.models {
+            for part in &self.sweep.partitions {
+                for &codec in &self.sweep.codecs {
+                    for &seed in &self.sweep.seeds {
+                        let mut cfg = self.base.clone();
+                        cfg.seed = seed;
+                        part.apply(&mut cfg);
+                        cfg.codec = codec;
+                        cfg.model = model.clone();
+                        if !self.protocol_pinned {
+                            cfg.protocol = Protocol::for_codec(codec);
+                        }
+                        let cell = GridCell { cfg, partition: part.name() };
+                        cell.cfg
+                            .validate()
+                            .with_context(|| format!("grid cell {}", cell.label()))?;
+                        cells.push(cell);
                     }
-                    cfg.validate().with_context(|| {
-                        format!(
-                            "grid cell seed={seed} partition={} codec={}",
-                            part.name(),
-                            codec.name()
-                        )
-                    })?;
-                    cells.push(GridCell { cfg, partition: part.name() });
                 }
             }
         }
@@ -618,6 +649,45 @@ mod tests {
         labels.sort();
         labels.dedup();
         assert_eq!(labels.len(), 12);
+    }
+
+    #[test]
+    fn model_key_and_sweep_expand_the_grid() {
+        // explicit model reaches every cell and its label
+        let m = parse("[experiment]\nmodel = \"mlp-large\"\nnative = true\n").unwrap();
+        let grid = m.grid().unwrap();
+        assert_eq!(grid[0].cfg.model, "mlp-large");
+        assert!(grid[0].label().ends_with("model=mlp-large"), "{}", grid[0].label());
+        // models axis is the outermost grid dimension
+        let m = parse(
+            "[experiment]\nnative = true\n[sweep]\nseeds = [1, 2]\n\
+             models = [\"mlp\", \"mlp-large\"]\n",
+        )
+        .unwrap();
+        let grid = m.grid().unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].cfg.model, "mlp");
+        assert_eq!(grid[3].cfg.model, "mlp-large");
+        let mut labels: Vec<String> = grid.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 4);
+        // default grids keep their pre-registry labels (no model suffix)
+        let m = parse("").unwrap();
+        assert!(!m.grid().unwrap()[0].label().contains("model="));
+        // an unknown model fails at parse time (cells validate eagerly)
+        assert!(parse("[experiment]\nmodel = \"vgg\"\nnative = true\n").is_err());
+        // empty models axis rejected like the other axes
+        assert!(parse("[sweep]\nmodels = []\n").is_err());
+    }
+
+    #[test]
+    fn cnn_model_needs_the_cifar_task() {
+        let err = parse("[experiment]\nmodel = \"cnn\"\nnative = true\n").unwrap_err();
+        assert!(format!("{err:#}").contains("input dim"), "{err:#}");
+        let m = parse("[experiment]\ntask = \"cifar\"\nmodel = \"cnn\"\nnative = true\n")
+            .unwrap();
+        assert_eq!(m.grid().unwrap()[0].cfg.model_name(), "cnn");
     }
 
     #[test]

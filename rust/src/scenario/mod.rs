@@ -5,9 +5,11 @@
 //! CLI invocation. This subsystem makes that grid declarative: a TOML
 //! manifest names a fleet (partition regime including Dirichlet(α) label
 //! skew, per-round availability/dropout schedules, straggler traces,
-//! codec, transport) and the sweep axes (seeds × partitions × codecs),
-//! and `tfed run <manifest.toml>` executes the whole thing, emitting one
-//! JSON results bundle with per-cell metrics and cross-cell aggregates.
+//! codec, transport) and the sweep axes (models × seeds × partitions ×
+//! codecs — the `[experiment] model` key / `[sweep] models` axis pick
+//! native-registry architectures), and `tfed run <manifest.toml>`
+//! executes the whole thing, emitting one JSON results bundle with
+//! per-cell metrics and cross-cell aggregates.
 //!
 //! * `toml` — hand-rolled single-file TOML subset parser (`util::json`
 //!   style; the build is offline, so no `toml`/`serde` crates)

@@ -53,6 +53,8 @@ pub struct CellResult {
     pub partition: String,
     pub codec: String,
     pub protocol: String,
+    /// resolved model name (explicit override or the task default)
+    pub model: String,
     pub metrics: RunMetrics,
     /// virtual-time summary; None for real-time cells
     pub sim: Option<CellSim>,
@@ -99,6 +101,7 @@ impl ScenarioResults {
                             ("partition", s(&c.partition)),
                             ("codec", s(&c.codec)),
                             ("protocol", s(&c.protocol)),
+                            ("model", s(&c.model)),
                         ];
                         if let Some(sim) = &c.sim {
                             fields.push((
@@ -156,6 +159,30 @@ pub fn run_scenario_jobs(manifest: &ScenarioManifest, jobs: usize) -> Result<Sce
         bail!("tcp fleets are interactive and run one cell at a time");
     }
     let engine: EngineCache = Mutex::new(None);
+    // fail fast on unresolvable PJRT models: a bad `model` name in a
+    // multi-cell grid must abort before any cell burns compute, not after
+    // the earlier cells already ran (native cells are registry-validated
+    // at parse time and never touch the engine)
+    let mut pjrt_models: Vec<&str> = cells
+        .iter()
+        .filter(|c| !c.cfg.native_backend)
+        .map(|c| c.cfg.model_name())
+        .collect();
+    pjrt_models.sort_unstable();
+    pjrt_models.dedup();
+    if !pjrt_models.is_empty() {
+        let mut cache = engine.lock().unwrap();
+        if cache.is_none() {
+            *cache = Some(Arc::new(Engine::load(default_artifacts_dir())?));
+        }
+        let eng = cache.as_ref().unwrap().clone();
+        drop(cache);
+        for m in pjrt_models {
+            eng.manifest
+                .model(m)
+                .with_context(|| format!("grid model {m:?} has no artifacts"))?;
+        }
+    }
     let results: Vec<CellResult> = parallel_map_indexed(cells.len(), jobs, |i| {
         info!("cell {}/{}: {}", i + 1, cells.len(), cells[i].label());
         run_cell(manifest, &cells[i], &engine)
@@ -187,6 +214,7 @@ fn run_cell(
         partition: cell.partition.clone(),
         codec: cell.cfg.codec.name(),
         protocol: cell.cfg.protocol.name().to_string(),
+        model: cell.cfg.model_name().to_string(),
         metrics,
         sim,
     })
@@ -209,7 +237,7 @@ fn run_cell_metrics(
         cache.clone()
     };
     let backend =
-        make_backend(engine_ref, cfg.task.model_name(), cfg.batch, cfg.native_backend)?;
+        make_backend(engine_ref, cfg.model_name(), cfg.batch, cfg.native_backend)?;
     let mut orch = match (&manifest.sim, &manifest.transport) {
         (Some(sim), _) => Orchestrator::with_sim(
             cfg,
@@ -300,6 +328,8 @@ seeds = [5, 6]
         assert_eq!(parsed.get("grid_size").unwrap().as_usize().unwrap(), 2);
         let cells = parsed.get("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), 2);
+        // resolved model is recorded per cell (task default here)
+        assert_eq!(cells[0].get("model").unwrap().as_str().unwrap(), "mlp");
         let rounds = cells[0]
             .get("metrics")
             .unwrap()

@@ -248,7 +248,7 @@ mod tests {
 
     #[test]
     fn rounds_advance_the_virtual_clock() {
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
         let t = sim(&backend, (0.0, 0));
         let wire = encode_data_frame(&dense_broadcast(2)).unwrap();
         // registered ids 1001/2002 map to shards 1001%2=1 and 2002%2=0
@@ -272,7 +272,7 @@ mod tests {
 
     #[test]
     fn payloads_and_stats_match_plain_loopback() {
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
         let t = sim(&backend, (0.0, 0));
         let runtimes = (0..2u32)
             .map(|cid| ClientRuntime {
@@ -297,7 +297,7 @@ mod tests {
 
     #[test]
     fn virtual_stragglers_delay_without_sleeping() {
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
         // probability 1: every exchange pays the full virtual delay
         let t = sim(&backend, (1.0, 30_000));
         let wire = encode_data_frame(&dense_broadcast(2)).unwrap();
@@ -312,7 +312,7 @@ mod tests {
 
     #[test]
     fn empty_round_is_zero_time() {
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
         let t = sim(&backend, (0.0, 0));
         let vt = t.end_round(1).unwrap();
         assert_eq!(vt.round_secs, 0.0);

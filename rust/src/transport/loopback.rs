@@ -157,7 +157,7 @@ mod tests {
 
     #[test]
     fn round_trip_counts_frames_and_bytes() {
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
         let lb = Loopback::new(vec![ClientRuntime {
             client_id: 0,
             backend: &backend,
@@ -187,7 +187,7 @@ mod tests {
 
     #[test]
     fn same_assignment_is_deterministic() {
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
         let mk = || {
             Loopback::new(vec![ClientRuntime {
                 client_id: 0,

@@ -156,6 +156,10 @@ fn encode_config(w: &mut Writer, cfg: &ExperimentConfig) {
     w.u64(cfg.test_samples as u64);
     w.u8(cfg.native_backend as u8);
     w.bytes(&cfg.codec.to_wire());
+    // model override: length-prefixed utf-8 (empty = task default)
+    let model = cfg.model.as_bytes();
+    w.u32(model.len() as u32);
+    w.bytes(model);
 }
 
 fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
@@ -171,24 +175,43 @@ fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
         1 => Task::CifarLike,
         k => bail!("unknown task tag {k}"),
     };
+    let n_clients = r.u64()? as usize;
+    let participation = r.f64()?;
+    let nc = r.u64()? as usize;
+    let beta = r.f64()?;
+    let dirichlet_alpha = r.f64()?;
+    let batch = r.u64()? as usize;
+    let local_epochs = r.u64()? as usize;
+    let rounds = r.u64()? as usize;
+    let lr = r.f32()?;
+    let seed = r.u64()?;
+    let eval_every = r.u64()? as usize;
+    let train_samples = r.u64()? as usize;
+    let test_samples = r.u64()? as usize;
+    let native_backend = r.u8()? != 0;
+    let codec = CodecSpec::from_wire(r.raw(CodecSpec::WIRE_BYTES)?.try_into().unwrap())?;
+    let model_len = r.u32()? as usize;
+    let model = String::from_utf8(r.raw(model_len)?.to_vec())
+        .map_err(|_| anyhow::anyhow!("config model name is not valid utf-8"))?;
     Ok(ExperimentConfig {
         protocol,
         task,
-        n_clients: r.u64()? as usize,
-        participation: r.f64()?,
-        nc: r.u64()? as usize,
-        beta: r.f64()?,
-        dirichlet_alpha: r.f64()?,
-        batch: r.u64()? as usize,
-        local_epochs: r.u64()? as usize,
-        rounds: r.u64()? as usize,
-        lr: r.f32()?,
-        seed: r.u64()?,
-        eval_every: r.u64()? as usize,
-        train_samples: r.u64()? as usize,
-        test_samples: r.u64()? as usize,
-        native_backend: r.u8()? != 0,
-        codec: CodecSpec::from_wire(r.raw(CodecSpec::WIRE_BYTES)?.try_into().unwrap())?,
+        n_clients,
+        participation,
+        nc,
+        beta,
+        dirichlet_alpha,
+        batch,
+        local_epochs,
+        rounds,
+        lr,
+        seed,
+        eval_every,
+        train_samples,
+        test_samples,
+        native_backend,
+        model,
+        codec,
     })
 }
 
@@ -309,6 +332,7 @@ mod tests {
         cfg.beta = 0.45;
         cfg.dirichlet_alpha = 0.5;
         cfg.native_backend = true;
+        cfg.model = "mlp-large".into();
         cfg.codec = CodecSpec::Quant { bits: 4 };
         let f = Ctrl::Config(cfg.clone()).to_frame();
         match Ctrl::from_frame(&f).unwrap() {

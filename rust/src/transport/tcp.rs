@@ -270,7 +270,7 @@ mod tests {
             crate::config::Task::MnistLike,
             1,
         );
-        let backend = NativeBackend::new(mlp_schema(), 8);
+        let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
 
         std::thread::scope(|s| {
             let client = s.spawn(|| {

@@ -1,0 +1,629 @@
+//! Layer-graph refactor equivalence suite.
+//!
+//! The `reference` module at the bottom is the seed `NativeMlp` trainer,
+//! kept **verbatim** (naive scalar loops, fused ReLU, wq-array
+//! threading): it is the bit-identity oracle for the refactored
+//! [`LayerGraph`] on the `mlp` schema. The suite asserts:
+//!
+//! * (a) graph == seed trainer, bit for bit, across fp/fttq training,
+//!   evaluation, and forward — at every kernel policy (naive, blocked,
+//!   1..N threads);
+//! * (b) finite-difference gradient checks per layer kind (dense via the
+//!   mlp schema, conv/pool/flatten via a tiny CNN);
+//! * (c) 1-vs-N-thread kernel bit-identity at the graph level (the
+//!   kernel-level property lives in `native::kernels` unit tests);
+//! * the registry's typed schema validation (the (w, b)-mismatch
+//!   regression), native TTQ (new capability), and a `cnn` federation
+//!   running end-to-end over loopback, TCP, and the virtual-time sim.
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::availability::AvailabilityModel;
+use tfed::coordinator::backend::{make_backend, NativeBackend};
+use tfed::coordinator::server::{materialize_data, run_experiment, Orchestrator};
+use tfed::coordinator::ClientRuntime;
+use tfed::model::registry::{LayerSpec, ModelDef, ModelError};
+use tfed::model::{init_params, mlp_schema, ModelSchema, ParamSet, ParamSpec};
+use tfed::native::{KernelPolicy, LayerGraph, Mode};
+use tfed::sim::SimSpec;
+use tfed::transport::{TcpBinding, TcpClient};
+use tfed::util::rng::Pcg;
+
+fn param_bits(p: &ParamSet) -> Vec<u32> {
+    p.tensors.iter().flat_map(|t| t.data.iter().map(|v| v.to_bits())).collect()
+}
+
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn mlp_batches(rng: &mut Pcg, batches: usize, n: usize) -> Vec<(Vec<f32>, Vec<u32>)> {
+    (0..batches)
+        .map(|_| {
+            // ReLU-ish sparse inputs exercise the kernels' zero-skip path
+            let x: Vec<f32> = (0..n * 784).map(|_| rng.normal().max(-0.2) - 0.1).collect();
+            let y: Vec<u32> = (0..n).map(|_| rng.below(10)).collect();
+            (x, y)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// (a) + (c): bit-identity vs the seed trainer, at every kernel policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layer_graph_matches_seed_trainer_bit_for_bit() {
+    let schema = mlp_schema();
+    let policies = [
+        KernelPolicy::reference(),
+        KernelPolicy::threaded(1),
+        KernelPolicy::threaded(2),
+        KernelPolicy::threaded(4),
+    ];
+    for (mode, ref_mode, nq) in [
+        (Mode::Fp, reference::Mode::Fp, 0usize),
+        (Mode::Fttq, reference::Mode::Fttq, 3usize),
+    ] {
+        // seed trainer run
+        let mut data_rng = Pcg::seeded(11);
+        let batches = mlp_batches(&mut data_rng, 6, 32);
+        let mut ref_params = init_params(&schema, &mut Pcg::seeded(5));
+        let mut ref_wq = vec![0.05f32; nq];
+        let net = reference::NativeMlp::from_schema(&schema, ref_mode, 0.05).unwrap();
+        let mut ref_losses = Vec::new();
+        for (x, y) in &batches {
+            ref_losses.push(net.train_batch(&mut ref_params, &mut ref_wq, x, y, 32, 0.1).unwrap());
+        }
+        let (ref_eval_loss, ref_eval_acc) =
+            net.evaluate(&ref_params, &ref_wq, &batches[0].0, &batches[0].1, 32);
+        let ref_fwd = net.forward(&ref_params, &ref_wq, &batches[1].0, 32);
+
+        for policy in policies {
+            let graph = LayerGraph::from_schema(&schema, mode, 0.05, policy).unwrap();
+            let mut params = init_params(&schema, &mut Pcg::seeded(5));
+            let mut factors = vec![0.05f32; nq];
+            for ((x, y), want_loss) in batches.iter().zip(&ref_losses) {
+                let loss = graph.train_batch(&mut params, &mut factors, x, y, 32, 0.1).unwrap();
+                assert_eq!(
+                    loss.to_bits(),
+                    want_loss.to_bits(),
+                    "{mode:?} {policy:?}: loss diverged"
+                );
+            }
+            assert_eq!(
+                param_bits(&ref_params),
+                param_bits(&params),
+                "{mode:?} {policy:?}: trained parameters diverged"
+            );
+            assert_eq!(f32_bits(&ref_wq), f32_bits(&factors), "{mode:?} {policy:?}: wq diverged");
+            let (el, ea) = graph.evaluate(&params, &factors, &batches[0].0, &batches[0].1, 32);
+            assert_eq!(el.to_bits(), ref_eval_loss.to_bits());
+            assert_eq!(ea.to_bits(), ref_eval_acc.to_bits());
+            let fwd = graph.forward(&params, &factors, &batches[1].0, 32);
+            assert_eq!(f32_bits(&ref_fwd), f32_bits(&fwd), "{mode:?} {policy:?}: forward");
+        }
+    }
+}
+
+#[test]
+fn mlp_large_is_thread_count_invariant() {
+    // no seed reference exists for mlp-large; the contract is that every
+    // kernel policy computes the same bits
+    let def = tfed::model::registry::model_def("mlp-large").unwrap();
+    let mut data_rng = Pcg::seeded(21);
+    let x: Vec<f32> = (0..64 * 784).map(|_| data_rng.normal().max(0.0)).collect();
+    let y: Vec<u32> = (0..64).map(|_| data_rng.below(10)).collect();
+    let mut want: Option<(Vec<u32>, Vec<u32>)> = None;
+    for policy in [
+        KernelPolicy::reference(),
+        KernelPolicy::threaded(1),
+        KernelPolicy::threaded(4),
+        KernelPolicy::threaded(8),
+    ] {
+        let graph = LayerGraph::from_def(&def, Mode::Fttq, 0.05, policy).unwrap();
+        let mut params = init_params(&def.schema, &mut Pcg::seeded(9));
+        let mut factors = vec![0.05f32; graph.factors_len()];
+        for _ in 0..2 {
+            graph.train_batch(&mut params, &mut factors, &x, &y, 64, 0.05).unwrap();
+        }
+        let got = (param_bits(&params), f32_bits(&factors));
+        match &want {
+            None => want = Some(got),
+            Some(w) => assert_eq!(w, &got, "{policy:?} diverged"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) finite-difference gradient checks per layer kind
+// ---------------------------------------------------------------------------
+
+fn tiny_cnn_def() -> ModelDef {
+    let schema = ModelSchema {
+        name: "tiny-cnn".into(),
+        input_dim: 6 * 6 * 2,
+        num_classes: 4,
+        optimizer: "sgd".into(),
+        default_lr: 0.05,
+        params: vec![
+            ParamSpec { name: "cw".into(), shape: vec![3, 3, 2, 3], quantized: true },
+            ParamSpec { name: "cb".into(), shape: vec![3], quantized: false },
+            ParamSpec { name: "fw".into(), shape: vec![27, 4], quantized: true },
+            ParamSpec { name: "fb".into(), shape: vec![4], quantized: false },
+        ],
+    };
+    let layers = vec![
+        LayerSpec::Conv2d { h: 6, w: 6, cin: 2, cout: 3, kh: 3, kw: 3, relu: true },
+        LayerSpec::AvgPool2 { h: 6, w: 6, c: 3 },
+        LayerSpec::Flatten { len: 27 },
+        LayerSpec::Dense { inp: 27, out: 4, relu: false },
+    ];
+    let def = ModelDef { schema, layers };
+    def.validate().unwrap();
+    def
+}
+
+#[test]
+fn gradcheck_conv_pool_flatten_dense() {
+    let def = tiny_cnn_def();
+    let mut rng = Pcg::seeded(31);
+    let params0 = init_params(&def.schema, &mut rng);
+    let n = 6usize;
+    let x: Vec<f32> = (0..n * 72).map(|_| rng.normal()).collect();
+    let y: Vec<u32> = (0..n).map(|_| rng.below(4)).collect();
+    let graph = LayerGraph::from_def(&def, Mode::Fp, 0.05, KernelPolicy::default()).unwrap();
+
+    // analytic step with tiny lr approximates -lr * grad
+    let lr = 1e-3f32;
+    let mut p_stepped = params0.clone();
+    graph.train_batch(&mut p_stepped, &mut [], &x, &y, n, lr).unwrap();
+
+    let loss_at = |p: &ParamSet| graph.evaluate(p, &[], &x, &y, n).0;
+    // coordinates across every tensor kind: conv w, conv b, fc w, fc b
+    for (ti, ci) in [
+        (0usize, 0usize),
+        (0, 25),
+        (0, 53),
+        (1, 1),
+        (2, 0),
+        (2, 60),
+        (3, 2),
+    ] {
+        let eps = 1e-3f32;
+        let mut pp = params0.clone();
+        pp.tensors[ti].data[ci] += eps;
+        let mut pm = params0.clone();
+        pm.tensors[ti].data[ci] -= eps;
+        let g_num = (loss_at(&pp) - loss_at(&pm)) / (2.0 * eps);
+        let g_ana = (params0.tensors[ti].data[ci] - p_stepped.tensors[ti].data[ci]) / lr;
+        assert!(
+            (g_num - g_ana).abs() < 2e-2 + 0.15 * g_num.abs(),
+            "tensor {ti}[{ci}]: num {g_num} vs ana {g_ana}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry validation regression + native TTQ
+// ---------------------------------------------------------------------------
+
+#[test]
+fn backend_rejects_mismatched_bias_shapes() {
+    // regression: the seed NativeMlp::from_schema accepted any bias shape
+    let mut schema = mlp_schema();
+    schema.params[1].shape = vec![7]; // b1 disagrees with w1 = [784, 30]
+    let err = NativeBackend::new(schema, 16).err().expect("must reject");
+    let model_err = err.downcast_ref::<ModelError>().expect("typed ModelError");
+    assert!(
+        matches!(model_err, ModelError::ShapeMismatch { param, .. } if param == "b1"),
+        "{model_err}"
+    );
+    // the good schema still builds
+    NativeBackend::new(mlp_schema(), 16).unwrap();
+}
+
+#[test]
+fn native_ttq_centralized_protocol_runs() {
+    // TTQ was PJRT-only before the layer graph; now it runs natively
+    let mut cfg = ExperimentConfig::table2(Protocol::Ttq, Task::MnistLike, 3);
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 300;
+    cfg.test_samples = 100;
+    cfg.batch = 16;
+    cfg.lr = 0.1;
+    cfg.native_backend = true;
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let m = run_experiment(cfg, backend.as_ref()).unwrap();
+    assert_eq!(m.records.len(), 2);
+    // wp || wn factors per quantized layer carried across rounds
+    assert_eq!(m.records[1].factors.len(), 6);
+    assert!(m.records[1].factors.iter().all(|f| f.is_finite()));
+    assert!(m.final_acc().is_finite());
+    assert!(m.records.iter().all(|r| r.train_loss.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// cnn end-to-end: loopback == tcp, and the virtual-time sim runs it
+// ---------------------------------------------------------------------------
+
+fn cnn_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::CifarLike, 42);
+    cfg.model = "cnn".into();
+    cfg.n_clients = 3;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 240;
+    cfg.test_samples = 60;
+    cfg.batch = 16;
+    cfg.lr = 0.05;
+    cfg.native_backend = true;
+    cfg
+}
+
+#[test]
+fn cnn_federation_loopback_matches_tcp_bit_for_bit() {
+    let cfg = cnn_cfg();
+    let backend = make_backend(None, "cnn", cfg.batch, true).unwrap();
+    // loopback reference
+    let mut lb = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+    lb.run().unwrap();
+    // real sockets, in-thread clients
+    let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap();
+    let (shards, _test) = materialize_data(&cfg, backend.schema().input_dim).unwrap();
+    let (tcp_metrics, tcp_global) = std::thread::scope(|s| {
+        for (cid, shard) in shards.into_iter().enumerate() {
+            let backend = backend.as_ref();
+            let want_cfg = cfg.clone();
+            s.spawn(move || {
+                let (mut client, got_cfg) =
+                    TcpClient::connect(&addr.to_string(), cid as u32).unwrap();
+                // the model override survives the wire handshake
+                assert_eq!(got_cfg, want_cfg);
+                assert_eq!(got_cfg.model_name(), "cnn");
+                let runtime = ClientRuntime {
+                    client_id: cid as u32,
+                    backend,
+                    shard,
+                    local_epochs: got_cfg.local_epochs,
+                    lr: got_cfg.lr,
+                    codec: got_cfg.codec,
+                };
+                client.serve(&runtime).unwrap();
+            });
+        }
+        let transport = binding.accept_clients(cfg.n_clients, &cfg).unwrap();
+        let mut orch = Orchestrator::with_transport(
+            cfg.clone(),
+            backend.as_ref(),
+            AvailabilityModel::always_on(),
+            Box::new(transport),
+        )
+        .unwrap();
+        let run_result = orch.run();
+        orch.shutdown_transport().unwrap();
+        run_result.unwrap();
+        (orch.metrics.clone(), orch.global().clone())
+    });
+    assert_eq!(lb.global().l2_distance(&tcp_global), 0.0);
+    for (l, t) in lb.metrics.records.iter().zip(&tcp_metrics.records) {
+        assert_eq!(l.up_bytes, t.up_bytes);
+        assert_eq!(l.down_bytes, t.down_bytes);
+        assert_eq!(l.test_acc.to_bits(), t.test_acc.to_bits());
+        assert_eq!(l.train_loss.to_bits(), t.train_loss.to_bits());
+    }
+    assert!(lb.metrics.final_acc().is_finite());
+}
+
+#[test]
+fn cnn_federation_runs_on_the_virtual_time_sim() {
+    let cfg = cnn_cfg();
+    let backend = make_backend(None, "cnn", cfg.batch, true).unwrap();
+    let sim = SimSpec::new(50, 3, 9);
+    let mut orch = Orchestrator::with_sim(
+        cfg,
+        backend.as_ref(),
+        AvailabilityModel::always_on(),
+        sim,
+    )
+    .unwrap();
+    orch.run().unwrap();
+    assert_eq!(orch.metrics.records.len(), 2);
+    for r in &orch.metrics.records {
+        assert!(r.sim_secs > 0.0, "virtual round time must advance");
+        assert!(r.up_bytes > 0 && r.down_bytes > 0);
+    }
+    assert!(orch.metrics.final_acc().is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// the seed trainer, verbatim (bit-identity oracle — do not "improve")
+// ---------------------------------------------------------------------------
+
+#[allow(dead_code)]
+mod reference {
+    use anyhow::{bail, Result};
+    use tfed::model::{ModelSchema, ParamSet};
+    use tfed::quant;
+
+    /// Which training math to run (mirrors the artifact "mode").
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    pub enum Mode {
+        Fp,
+        Fttq,
+    }
+
+    /// Dimensions of one dense layer.
+    #[derive(Clone, Copy, Debug)]
+    struct LayerDims {
+        inp: usize,
+        out: usize,
+    }
+
+    /// Pure-Rust MLP trainer over a ParamSet laid out as [w1,b1,w2,b2,w3,b3].
+    pub struct NativeMlp {
+        layers: Vec<LayerDims>,
+        t_k: f32,
+        mode: Mode,
+    }
+
+    impl NativeMlp {
+        pub fn from_schema(schema: &ModelSchema, mode: Mode, t_k: f32) -> Result<Self> {
+            if schema.params.len() % 2 != 0 {
+                bail!("expected (w, b) pairs");
+            }
+            let mut layers = Vec::new();
+            for pair in schema.params.chunks(2) {
+                let w = &pair[0];
+                if w.shape.len() != 2 {
+                    bail!("native backend only supports dense layers, got {:?}", w.shape);
+                }
+                layers.push(LayerDims { inp: w.shape[0], out: w.shape[1] });
+            }
+            Ok(NativeMlp { layers, t_k, mode })
+        }
+
+        fn check(&self, params: &ParamSet) -> Result<()> {
+            if params.tensors.len() != self.layers.len() * 2 {
+                bail!("param count mismatch");
+            }
+            Ok(())
+        }
+
+        /// Forward pass -> logits [n, classes]. In Fttq mode the weights are
+        /// ternarized with the paper's pipeline first (wq per layer).
+        pub fn forward(&self, params: &ParamSet, wq: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+            let mut act = x.to_vec();
+            let mut cur = self.layers[0].inp;
+            for (li, dims) in self.layers.iter().enumerate() {
+                let w = &params.tensors[li * 2].data;
+                let b = &params.tensors[li * 2 + 1].data;
+                let w_eff: Vec<f32> = match self.mode {
+                    Mode::Fp => w.clone(),
+                    Mode::Fttq => {
+                        let (it, _) = quant::fttq_quantize(w, self.t_k);
+                        quant::dequantize(&it, wq[li])
+                    }
+                };
+                let mut next = vec![0f32; n * dims.out];
+                matmul_bias(&act, &w_eff, b, &mut next, n, cur, dims.out);
+                if li + 1 < self.layers.len() {
+                    for v in &mut next {
+                        *v = v.max(0.0);
+                    }
+                }
+                act = next;
+                cur = dims.out;
+            }
+            act
+        }
+
+        /// (mean masked CE loss, accuracy) without updating anything.
+        pub fn evaluate(
+            &self,
+            params: &ParamSet,
+            wq: &[f32],
+            x: &[f32],
+            y: &[u32],
+            n: usize,
+        ) -> (f32, f32) {
+            let classes = self.layers.last().unwrap().out;
+            let logits = self.forward(params, wq, x, n);
+            let mut loss = 0f64;
+            let mut correct = 0usize;
+            for i in 0..n {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let (lse, argmax) = log_sum_exp(row);
+                loss += (lse - row[y[i] as usize]) as f64;
+                if argmax == y[i] as usize {
+                    correct += 1;
+                }
+            }
+            ((loss / n as f64) as f32, correct as f32 / n as f32)
+        }
+
+        /// One SGD step over a batch; updates params (and wq in Fttq mode)
+        /// in place. Returns the batch mean loss.
+        pub fn train_batch(
+            &self,
+            params: &mut ParamSet,
+            wq: &mut [f32],
+            x: &[f32],
+            y: &[u32],
+            n: usize,
+            lr: f32,
+        ) -> Result<f32> {
+            self.check(params)?;
+            let l = self.layers.len();
+            let classes = self.layers[l - 1].out;
+
+            // ---- forward, keeping activations + ternary patterns ----
+            let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+            let mut terns: Vec<Option<(Vec<i8>, Vec<f32>)>> = Vec::with_capacity(l);
+            let mut cur = self.layers[0].inp;
+            for (li, dims) in self.layers.iter().enumerate() {
+                let w = &params.tensors[li * 2].data;
+                let b = &params.tensors[li * 2 + 1].data;
+                let w_eff: Vec<f32> = match self.mode {
+                    Mode::Fp => {
+                        terns.push(None);
+                        w.clone()
+                    }
+                    Mode::Fttq => {
+                        let (it, _) = quant::fttq_quantize(w, self.t_k);
+                        let dense = quant::dequantize(&it, wq[li]);
+                        terns.push(Some((it, dense.clone())));
+                        dense
+                    }
+                };
+                let mut next = vec![0f32; n * dims.out];
+                matmul_bias(&acts[li], &w_eff, b, &mut next, n, cur, dims.out);
+                if li + 1 < l {
+                    for v in &mut next {
+                        *v = v.max(0.0);
+                    }
+                }
+                acts.push(next);
+                cur = dims.out;
+            }
+
+            // ---- loss + dlogits ----
+            let logits = &acts[l];
+            let mut dlogits = vec![0f32; n * classes];
+            let mut loss = 0f64;
+            for i in 0..n {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let (lse, _) = log_sum_exp(row);
+                loss += (lse - row[y[i] as usize]) as f64;
+                for c in 0..classes {
+                    let p = (row[c] - lse).exp();
+                    dlogits[i * classes + c] =
+                        (p - f32::from(c == y[i] as usize)) / n as f32;
+                }
+            }
+
+            // ---- backward ----
+            let mut dact = dlogits;
+            for li in (0..l).rev() {
+                let dims = self.layers[li];
+                let a_in = &acts[li];
+                // grads of effective (possibly ternary) weights
+                let mut dw = vec![0f32; dims.inp * dims.out];
+                let mut db = vec![0f32; dims.out];
+                // dw = a_in^T @ dact ; db = colsum(dact)
+                for i in 0..n {
+                    for o in 0..dims.out {
+                        let g = dact[i * dims.out + o];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        db[o] += g;
+                        let row = &a_in[i * dims.inp..(i + 1) * dims.inp];
+                        for (k, &aik) in row.iter().enumerate() {
+                            dw[k * dims.out + o] += aik * g;
+                        }
+                    }
+                }
+                // dact_prev = dact @ w_eff^T, with ReLU mask
+                if li > 0 {
+                    let w_eff: Vec<f32> = match &terns[li] {
+                        None => params.tensors[li * 2].data.clone(),
+                        Some((_, dense)) => dense.clone(),
+                    };
+                    let mut dprev = vec![0f32; n * dims.inp];
+                    for i in 0..n {
+                        for k in 0..dims.inp {
+                            let mut s = 0f32;
+                            let wrow = &w_eff[k * dims.out..(k + 1) * dims.out];
+                            let grow = &dact[i * dims.out..(i + 1) * dims.out];
+                            for (wv, gv) in wrow.iter().zip(grow) {
+                                s += wv * gv;
+                            }
+                            // ReLU mask of the input activation
+                            if acts[li][i * dims.inp + k] <= 0.0 {
+                                s = 0.0;
+                            }
+                            dprev[i * dims.inp + k] = s;
+                        }
+                    }
+                    dact = dprev;
+                }
+
+                // ---- apply updates (paper Algorithm 1 STE rules) ----
+                match (&self.mode, &terns[li]) {
+                    (Mode::Fp, _) => {
+                        let w = &mut params.tensors[li * 2].data;
+                        for (wv, g) in w.iter_mut().zip(&dw) {
+                            *wv -= lr * g;
+                        }
+                    }
+                    (Mode::Fttq, Some((it, _))) => {
+                        // dJ/dwq = mean over I_p of dJ/dtheta_t
+                        let mut g_wq = 0f32;
+                        let mut n_pos = 0usize;
+                        for (s, g) in it.iter().zip(&dw) {
+                            if *s > 0 {
+                                g_wq += g;
+                                n_pos += 1;
+                            }
+                        }
+                        g_wq /= n_pos.max(1) as f32;
+                        // latent grads: wq*g on support, g on zeros
+                        let w = &mut params.tensors[li * 2].data;
+                        for ((wv, g), s) in w.iter_mut().zip(&dw).zip(it) {
+                            let scale = if *s != 0 { wq[li] } else { 1.0 };
+                            *wv -= lr * scale * g;
+                        }
+                        wq[li] -= lr * g_wq;
+                    }
+                    (Mode::Fttq, None) => unreachable!(),
+                }
+                let b = &mut params.tensors[li * 2 + 1].data;
+                for (bv, g) in b.iter_mut().zip(&db) {
+                    *bv -= lr * g;
+                }
+            }
+            Ok((loss / n as f64) as f32)
+        }
+    }
+
+    /// out[n, o] = x[n, i] @ w[i, o] + b[o]
+    fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        n: usize,
+        i: usize,
+        o: usize,
+    ) {
+        for r in 0..n {
+            let xrow = &x[r * i..(r + 1) * i];
+            let orow = &mut out[r * o..(r + 1) * o];
+            orow.copy_from_slice(b);
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[k * o..(k + 1) * o];
+                for (ov, &wv) in orow.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+
+    fn log_sum_exp(row: &[f32]) -> (f32, usize) {
+        let mut m = f32::NEG_INFINITY;
+        let mut arg = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > m {
+                m = v;
+                arg = i;
+            }
+        }
+        let s: f32 = row.iter().map(|&v| (v - m).exp()).sum();
+        (m + s.ln(), arg)
+    }
+}

@@ -89,7 +89,7 @@ fn centralized_protocols_reject_the_simulator() {
 
 #[test]
 fn event_trace_is_independent_of_exchange_order() {
-    let backend = NativeBackend::new(mlp_schema(), 8);
+    let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
     let make_sim = || {
         let runtimes: Vec<ClientRuntime> = (0..2u32)
             .map(|cid| ClientRuntime {

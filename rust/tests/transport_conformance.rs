@@ -93,7 +93,7 @@ fn sim_over<'a>(backend: &'a NativeBackend) -> SimTransport<'a> {
 
 #[test]
 fn payloads_and_data_stats_agree_across_all_transports() {
-    let backend = NativeBackend::new(mlp_schema(), 8);
+    let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
 
     // reference: loopback
     let lb = Loopback::new(runtimes(&backend));
@@ -151,7 +151,7 @@ fn payloads_and_data_stats_agree_across_all_transports() {
 
 #[test]
 fn codec_mismatch_is_rejected_by_every_transport() {
-    let backend = NativeBackend::new(mlp_schema(), 8);
+    let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
     let wire = encode_data_frame(&broadcast()).unwrap();
     let bad = assign(0, CodecSpec::Fp16); // clients are configured Dense
 
@@ -191,7 +191,7 @@ fn codec_mismatch_is_rejected_by_every_transport() {
 
 #[test]
 fn unknown_client_is_a_clean_error() {
-    let backend = NativeBackend::new(mlp_schema(), 8);
+    let backend = NativeBackend::new(mlp_schema(), 8).unwrap();
     let wire = encode_data_frame(&broadcast()).unwrap();
     let a = assign(99, CodecSpec::Dense);
     assert!(Loopback::new(runtimes(&backend)).round_trip(99, &a, &wire).is_err());
