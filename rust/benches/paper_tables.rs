@@ -318,7 +318,9 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
 /// kernels must produce bit-identical parameters (asserted here — the
 /// speedup is free, not a different computation). Emits
 /// bench_out/train.csv and BENCH_train.json (repo root), giving the perf
-/// trajectory its training-throughput series.
+/// trajectory its training-throughput series. Also measures the
+/// obs-enabled overhead on the largest model and asserts the <2%
+/// standing contract (DESIGN.md §11).
 fn train() {
     use std::time::Instant;
     use tfed::model::{init_params, registry};
@@ -434,6 +436,73 @@ fn train() {
         "model,mode,kernels,samples_per_sec,us_per_round,speedup_vs_naive",
         &rows,
     );
+
+    // Observability tax: the same mlp-large/fp round with the obs layer
+    // off vs on (per-layer µs counters hot). Min over repeats is the
+    // noise-robust statistic; the standing contract (DESIGN.md §11) caps
+    // the enabled delta at 2% of round time.
+    let obs_overhead = {
+        use tfed::obs::trace;
+        let def = registry::model_def("mlp-large").expect("registry model");
+        let dim = def.schema.input_dim;
+        let classes = def.schema.num_classes;
+        let mut rng = Pcg::new(42, 0xBE_7C);
+        let x: Vec<f32> = (0..samples * dim).map(|_| rng.normal()).collect();
+        let y: Vec<u32> = (0..samples).map(|i| (i % classes) as u32).collect();
+        let graph = LayerGraph::from_def(&def, Mode::Fp, 0.05, KernelPolicy::threaded(4))
+            .expect("graph");
+        let repeats = 5usize;
+        let us_round = |obs_on: bool| -> f64 {
+            if obs_on {
+                tfed::obs::enable();
+            }
+            let mut best = f64::INFINITY;
+            for _ in 0..repeats {
+                let mut prng = Pcg::seeded(7);
+                let mut params = init_params(&def.schema, &mut prng);
+                let mut factors = vec![0.05f32; graph.factors_len()];
+                let t0 = Instant::now();
+                let mut i = 0;
+                while i < samples {
+                    let n = batch.min(samples - i);
+                    graph
+                        .train_batch(
+                            &mut params,
+                            &mut factors,
+                            &x[i * dim..(i + n) * dim],
+                            &y[i..i + n],
+                            n,
+                            lr,
+                        )
+                        .expect("train_batch");
+                    i += n;
+                }
+                best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            // restore the disabled default before the next measurement
+            trace::set_enabled(false);
+            trace::clear();
+            best
+        };
+        let off = us_round(false);
+        let on = us_round(true);
+        let delta_pct = (on - off) / off * 100.0;
+        println!(
+            "obs overhead (mlp-large/fp, min of {repeats}): off {off:.0} us/round, \
+             on {on:.0} us/round, delta {delta_pct:+.2}%"
+        );
+        assert!(
+            delta_pct < 2.0,
+            "obs-enabled round time regressed {delta_pct:.2}% (contract: <2%, DESIGN.md §11)"
+        );
+        obj(vec![
+            ("model", s("mlp-large")),
+            ("us_per_round_off", num(off)),
+            ("us_per_round_on", num(on)),
+            ("delta_pct", num(delta_pct)),
+        ])
+    };
+
     let doc = obj(vec![
         ("bench", s("paper_tables --train")),
         ("scale", s(scale_name())),
@@ -441,6 +510,7 @@ fn train() {
         ("rounds", num(rounds as f64)),
         ("samples_per_round", num(samples as f64)),
         ("models", obj(model_entries)),
+        ("obs_overhead", obs_overhead),
     ]);
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
         "../BENCH_train.json"

@@ -321,18 +321,26 @@ impl CompressedUpdate {
     }
 }
 
-/// Compress every tensor of a ParamSet.
+/// Compress every tensor of a ParamSet. The registry choke point for
+/// observability: every registered codec is traced (`codec.encode` span)
+/// and counted (`tfed_codec_encode_*` series) here, with zero per-codec
+/// instrumentation and zero cost when obs is off.
 pub fn compress(
     codec: &dyn Compressor,
     params: &ParamSet,
     rng: &mut Pcg,
 ) -> Result<CompressedUpdate, CodecError> {
+    crate::obs_span!("codec.encode");
     let tensors = params
         .tensors
         .iter()
         .map(|t| codec.encode_tensor(&t.data, rng))
         .collect::<Result<_, _>>()?;
-    Ok(CompressedUpdate { codec: codec.spec(), tensors })
+    let upd = CompressedUpdate { codec: codec.spec(), tensors };
+    if crate::obs::enabled() {
+        obs_codec("encode", &codec.name(), upd.wire_bytes());
+    }
+    Ok(upd)
 }
 
 /// Rebuild a dense ParamSet from a compressed update against the model's
@@ -342,6 +350,7 @@ pub fn decompress(
     upd: &CompressedUpdate,
     shapes: &[Vec<usize>],
 ) -> Result<ParamSet, CodecError> {
+    crate::obs_span!("codec.decode");
     if upd.codec != codec.spec() {
         return Err(CodecError::BadParams(format!(
             "update was encoded with {}, decoder is {}",
@@ -364,7 +373,20 @@ pub fn decompress(
         }
         tensors.push(Tensor { shape: shape.clone(), data });
     }
+    if crate::obs::enabled() {
+        obs_codec("decode", &codec.name(), upd.wire_bytes());
+    }
     Ok(ParamSet { tensors })
+}
+
+/// Per-codec call + payload-byte counters, e.g.
+/// `tfed_codec_encode_total{codec="ternary"}`. Only reached when obs is
+/// enabled; the registry returns the same handle for a repeated name, so
+/// the lookup is a short lock, not a new series.
+fn obs_codec(dir: &str, name: &str, wire_bytes: usize) {
+    use crate::obs::metrics::counter;
+    counter(&format!("tfed_codec_{dir}_total{{codec=\"{name}\"}}")).inc();
+    counter(&format!("tfed_codec_{dir}_bytes_total{{codec=\"{name}\"}}")).add(wire_bytes as u64);
 }
 
 #[cfg(test)]

@@ -119,39 +119,55 @@ impl ClientRuntime<'_> {
     /// biases, train FTTQ from the broadcast w^q init, re-ternarize, upload.
     fn ternary_round(&self, rng: &mut Pcg, g: &TernaryGlobal) -> Result<Message> {
         let schema = self.backend.schema();
-        let mut start = ParamSet::zeros(schema);
-        for (i, packed) in &g.layers {
-            let idx = *i as usize;
-            let t = start
-                .tensors
-                .get_mut(idx)
-                .ok_or_else(|| anyhow!("broadcast layer index {idx} out of range"))?;
-            let dense = unpack_dequantize(packed, 1.0)?;
-            if dense.len() != t.data.len() {
-                bail!("broadcast layer {idx}: {} values for shape {:?}", dense.len(), t.shape);
+        let start = {
+            crate::obs_span!("client.decode");
+            let mut start = ParamSet::zeros(schema);
+            for (i, packed) in &g.layers {
+                let idx = *i as usize;
+                let t = start
+                    .tensors
+                    .get_mut(idx)
+                    .ok_or_else(|| anyhow!("broadcast layer index {idx} out of range"))?;
+                let dense = unpack_dequantize(packed, 1.0)?;
+                if dense.len() != t.data.len() {
+                    bail!(
+                        "broadcast layer {idx}: {} values for shape {:?}",
+                        dense.len(),
+                        t.shape
+                    );
+                }
+                t.data = dense;
             }
-            t.data = dense;
-        }
-        for (i, data) in &g.fp_tensors {
-            let idx = *i as usize;
-            let t = start
-                .tensors
-                .get_mut(idx)
-                .ok_or_else(|| anyhow!("broadcast tensor index {idx} out of range"))?;
-            if data.len() != t.data.len() {
-                bail!("broadcast tensor {idx}: {} values for shape {:?}", data.len(), t.shape);
+            for (i, data) in &g.fp_tensors {
+                let idx = *i as usize;
+                let t = start
+                    .tensors
+                    .get_mut(idx)
+                    .ok_or_else(|| anyhow!("broadcast tensor index {idx} out of range"))?;
+                if data.len() != t.data.len() {
+                    bail!(
+                        "broadcast tensor {idx}: {} values for shape {:?}",
+                        data.len(),
+                        t.shape
+                    );
+                }
+                t.data = data.clone();
             }
-            t.data = data.clone();
-        }
-        let out = self.backend.train_local(
-            &start,
-            TrainMode::Fttq,
-            &g.wq_init,
-            &self.shard,
-            self.local_epochs,
-            self.lr,
-            rng,
-        )?;
+            start
+        };
+        let out = {
+            crate::obs_span!("client.train");
+            self.backend.train_local(
+                &start,
+                TrainMode::Fttq,
+                &g.wq_init,
+                &self.shard,
+                self.local_epochs,
+                self.lr,
+                rng,
+            )?
+        };
+        crate::obs_span!("client.encode");
         let (patterns, deltas) = self.backend.quantize(&out.params)?;
         let qidx = schema.quantized_indices();
         let upd = ternary_update(
@@ -183,16 +199,23 @@ impl ClientRuntime<'_> {
         let schema = self.backend.schema();
         let shapes: Vec<Vec<usize>> = schema.params.iter().map(|p| p.shape.clone()).collect();
         let codec = compress::build(self.codec)?;
-        let start = compress::decompress(codec.as_ref(), &g.update, &shapes)?;
-        let out = self.backend.train_local(
-            &start,
-            TrainMode::Fp,
-            &[],
-            &self.shard,
-            self.local_epochs,
-            self.lr,
-            rng,
-        )?;
+        let start = {
+            crate::obs_span!("client.decode");
+            compress::decompress(codec.as_ref(), &g.update, &shapes)?
+        };
+        let out = {
+            crate::obs_span!("client.train");
+            self.backend.train_local(
+                &start,
+                TrainMode::Fp,
+                &[],
+                &self.shard,
+                self.local_epochs,
+                self.lr,
+                rng,
+            )?
+        };
+        crate::obs_span!("client.encode");
         let update = compress::compress(codec.as_ref(), &out.params, rng)?;
         Ok(Message::CodedUpdate(CodedUpdate {
             client_id: self.client_id,
@@ -205,29 +228,37 @@ impl ClientRuntime<'_> {
     /// FedAvg: load the dense broadcast, train full precision, upload.
     fn dense_round(&self, rng: &mut Pcg, g: &DenseGlobal) -> Result<Message> {
         let schema = self.backend.schema();
-        let mut start = ParamSet::zeros(schema);
-        if g.tensors.len() != start.tensors.len() {
-            bail!(
-                "broadcast has {} tensors, model wants {}",
-                g.tensors.len(),
-                start.tensors.len()
-            );
-        }
-        for (t, data) in start.tensors.iter_mut().zip(&g.tensors) {
-            if data.len() != t.data.len() {
-                bail!("broadcast tensor: {} values for shape {:?}", data.len(), t.shape);
+        let start = {
+            crate::obs_span!("client.decode");
+            let mut start = ParamSet::zeros(schema);
+            if g.tensors.len() != start.tensors.len() {
+                bail!(
+                    "broadcast has {} tensors, model wants {}",
+                    g.tensors.len(),
+                    start.tensors.len()
+                );
             }
-            t.data = data.clone();
-        }
-        let out = self.backend.train_local(
-            &start,
-            TrainMode::Fp,
-            &[],
-            &self.shard,
-            self.local_epochs,
-            self.lr,
-            rng,
-        )?;
+            for (t, data) in start.tensors.iter_mut().zip(&g.tensors) {
+                if data.len() != t.data.len() {
+                    bail!("broadcast tensor: {} values for shape {:?}", data.len(), t.shape);
+                }
+                t.data = data.clone();
+            }
+            start
+        };
+        let out = {
+            crate::obs_span!("client.train");
+            self.backend.train_local(
+                &start,
+                TrainMode::Fp,
+                &[],
+                &self.shard,
+                self.local_epochs,
+                self.lr,
+                rng,
+            )?
+        };
+        crate::obs_span!("client.encode");
         Ok(Message::DenseUpdate(dense_update(
             self.client_id,
             self.shard.len() as u64,

@@ -30,6 +30,7 @@ use crate::data::partition::{partition, PartitionSpec};
 use crate::data::synth::SynthSpec;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::model::{init_params, ModelSchema, ParamSet};
+use crate::obs::{metrics as obs_metrics, trace};
 use crate::quant;
 use crate::transport::{encode_data_frame, LinkStats, Loopback, RoundAssign, Transport};
 use crate::util::parallel::parallel_map_indexed;
@@ -183,6 +184,9 @@ pub struct Orchestrator<'a> {
     population: Option<Population>,
     /// cumulative transport stats at the last round boundary
     stats_mark: LinkStats,
+    /// obs trace lane (scenario grid-cell index; 0 for standalone runs) —
+    /// keeps spans from parallel `--jobs` cells in separate trace groups
+    obs_lane: u32,
     pub metrics: RunMetrics,
 }
 
@@ -330,6 +334,7 @@ impl<'a> Orchestrator<'a> {
             availability,
             population,
             stats_mark: LinkStats::default(),
+            obs_lane: 0,
             metrics,
         })
     }
@@ -351,6 +356,13 @@ impl<'a> Orchestrator<'a> {
     /// any setting — only wall time changes.
     pub fn set_workers(&mut self, workers: usize) {
         self.workers = workers.max(1);
+    }
+
+    /// Assign this run's obs trace lane (the scenario runner passes the
+    /// grid-cell index). Purely an observability grouping key — results
+    /// are identical at any lane.
+    pub fn set_obs_lane(&mut self, lane: u32) {
+        self.obs_lane = lane;
     }
 
     /// Current dense global model (server state).
@@ -409,15 +421,23 @@ impl<'a> Orchestrator<'a> {
     /// Run one communication round. Returns the round record.
     pub fn round(&mut self, round: usize) -> Result<RoundRecord> {
         let sw = Stopwatch::start();
-        let selected = match self.population {
-            None => {
-                let k = self.cfg.selected_per_round();
-                select_clients(self.cfg.n_clients, k, &mut self.rng)
-            }
-            Some(p) => select_cohort(p.registered, p.cohort, &mut self.rng),
+        trace::set_context(self.obs_lane, round as u32, trace::NO_CLIENT);
+        let selected = {
+            crate::obs_span!("round.select");
+            let selected = match self.population {
+                None => {
+                    let k = self.cfg.selected_per_round();
+                    select_clients(self.cfg.n_clients, k, &mut self.rng)
+                }
+                Some(p) => select_cohort(p.registered, p.cohort, &mut self.rng),
+            };
+            let dropout = self.availability.dropout_for_round(round);
+            apply_dropout(&selected, dropout, &mut self.rng)
         };
-        let dropout = self.availability.dropout_for_round(round);
-        let selected = apply_dropout(&selected, dropout, &mut self.rng);
+        if crate::obs::enabled() {
+            obs_metrics::counter("tfed_rounds_total").inc();
+            obs_metrics::counter("tfed_clients_selected_total").add(selected.len() as u64);
+        }
         // under the simulator, straggler delays are drawn virtually by
         // the transport (per registered client, per round) — the main
         // RNG stream is untouched and nothing ever sleeps
@@ -435,6 +455,10 @@ impl<'a> Orchestrator<'a> {
             Protocol::Ttq => self.round_centralized(round, TrainMode::Ttq)?,
         };
 
+        // a sequential dispatch runs exchanges on this thread and leaves
+        // the last client's span context behind; restore the server lane
+        trace::set_context(self.obs_lane, round as u32, trace::NO_CLIENT);
+
         // communication cost measured at the frame layer
         let stats = self.transport.stats();
         let delta = stats.since(&self.stats_mark);
@@ -446,6 +470,7 @@ impl<'a> Orchestrator<'a> {
 
         let evaluated = round % self.cfg.eval_every == 0 || round == self.cfg.rounds;
         let (test_loss, test_acc) = if evaluated {
+            crate::obs_span!("round.eval");
             let eval_model = match self.cfg.protocol {
                 // the paper reports the accuracy of the *quantized* model
                 Protocol::TFedAvg => self.ternary_inference_model(),
@@ -456,6 +481,10 @@ impl<'a> Orchestrator<'a> {
         } else {
             (f32::NAN, f32::NAN)
         };
+        if evaluated && crate::obs::enabled() {
+            obs_metrics::gauge("tfed_eval_acc").set(test_acc as f64);
+            obs_metrics::gauge("tfed_eval_loss").set(test_loss as f64);
+        }
 
         let rec = RoundRecord {
             round,
@@ -520,27 +549,31 @@ impl<'a> Orchestrator<'a> {
         let shapes: Vec<Vec<usize>> =
             schema.params.iter().map(|p| p.shape.clone()).collect();
 
-        let down_msg = match (self.cfg.protocol, self.cfg.codec) {
-            (Protocol::TFedAvg, _) => {
-                Message::TernaryGlobal(self.ternary_broadcast(round, &schema))
-            }
-            (Protocol::FedAvg, CodecSpec::Dense) => Message::DenseGlobal(DenseGlobal {
-                round: round as u32,
-                tensors: self.global.tensors.iter().map(|t| t.data.clone()).collect(),
-            }),
-            (Protocol::FedAvg, spec) => {
-                // registry codec: compress the broadcast once, pre-dispatch.
-                // Stochastic codecs draw from a round-forked generator —
-                // one fork per round, before the per-client forks, so the
-                // sequence is identical on every transport / worker count.
-                let codec = compress::build(spec)?;
-                let mut crng = self.rng.fork(0xC0DE0 + round as u64);
-                Message::CodedGlobal(CodedGlobal {
+        let down_msg = {
+            crate::obs_span!("round.broadcast");
+            match (self.cfg.protocol, self.cfg.codec) {
+                (Protocol::TFedAvg, _) => {
+                    Message::TernaryGlobal(self.ternary_broadcast(round, &schema))
+                }
+                (Protocol::FedAvg, CodecSpec::Dense) => Message::DenseGlobal(DenseGlobal {
                     round: round as u32,
-                    update: compress::compress(codec.as_ref(), &self.global, &mut crng)?,
-                })
+                    tensors: self.global.tensors.iter().map(|t| t.data.clone()).collect(),
+                }),
+                (Protocol::FedAvg, spec) => {
+                    // registry codec: compress the broadcast once,
+                    // pre-dispatch. Stochastic codecs draw from a
+                    // round-forked generator — one fork per round, before
+                    // the per-client forks, so the sequence is identical
+                    // on every transport / worker count.
+                    let codec = compress::build(spec)?;
+                    let mut crng = self.rng.fork(0xC0DE0 + round as u64);
+                    Message::CodedGlobal(CodedGlobal {
+                        round: round as u32,
+                        update: compress::compress(codec.as_ref(), &self.global, &mut crng)?,
+                    })
+                }
+                _ => unreachable!("centralized protocols never reach round_federated"),
             }
-            _ => unreachable!("centralized protocols never reach round_federated"),
         };
 
         // derive the per-client RNGs up front, in selection order — the
@@ -562,6 +595,9 @@ impl<'a> Orchestrator<'a> {
             .collect();
 
         let replies = self.dispatch(selected, &assigns, &down_msg, delays)?;
+        // single-worker dispatch runs client exchanges on this thread;
+        // take the span context back before server-side aggregation
+        trace::set_context(self.obs_lane, round as u32, trace::NO_CLIENT);
 
         // server side: decode + rebuild + fold, in selection order. The
         // streaming Aggregator applies the final eq.-2 weight as each
@@ -569,6 +605,7 @@ impl<'a> Orchestrator<'a> {
         // server's own shard sizes — so peak memory is one model, not
         // `clients × model`, and the result is bit-identical to the old
         // batch average (same float-op sequence; see DESIGN.md §8).
+        crate::obs_span!("round.aggregate");
         let expected_total: u64 =
             selected.iter().map(|&cid| self.shard_sizes[self.shard_of(cid)] as u64).sum();
         let mut agg = Aggregator::for_schema(&schema, expected_total)?;
@@ -707,9 +744,16 @@ impl<'a> Orchestrator<'a> {
         let links: Vec<usize> = selected.iter().map(|&cid| self.shard_of(cid)).collect();
         // the broadcast is identical for every client: frame it once and
         // fan the same buffer out
-        let down_wire = encode_data_frame(down)?;
+        let down_wire = {
+            crate::obs_span!("round.encode");
+            encode_data_frame(down)?
+        };
         let transport = self.transport.as_ref();
+        let lane = self.obs_lane;
         let exchange = |i: usize| {
+            // tag whichever thread runs this exchange with the client's
+            // span context, so client-side spans group correctly
+            trace::set_context(lane, assigns[i].round, assigns[i].client_id);
             straggle(delays[i]);
             transport.round_trip(links[i], &assigns[i], &down_wire)
         };

@@ -27,8 +27,11 @@
 //!   virtual-time fleet simulator: lazily-profiled registered
 //!   populations, per-client bandwidth/device models, simulated
 //!   time-to-accuracy; DESIGN.md §9), the data pipeline with
-//!   IID/Nc/beta/Dirichlet(α) partitioners, and the PJRT runtime that
-//!   executes the artifacts. Python never runs at request time.
+//!   IID/Nc/beta/Dirichlet(α) partitioners, the `obs` observability
+//!   subsystem (metrics registry + span-based phase tracing + round
+//!   profiler, off by default and free when off; DESIGN.md §11), and
+//!   the PJRT runtime that executes the artifacts. Python never runs
+//!   at request time.
 
 pub mod comms;
 pub mod compress;
@@ -38,6 +41,7 @@ pub mod data;
 pub mod metrics;
 pub mod model;
 pub mod native;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod scenario;

@@ -18,6 +18,7 @@
 //!   tfed run ../examples/scenarios/paper_noniid.toml # declarative grid
 //!   tfed run ../examples/scenarios/paper_noniid.toml --jobs 4   # parallel cells
 //!   tfed run ../examples/scenarios/sim_fleet.toml    # 100k-client virtual-time sim
+//!   tfed run --rounds 5 --trace-out trace.json --metrics-out metrics.prom  # profile
 //!   tfed serve --listen 127.0.0.1:7878 --clients 4 --native
 //!   tfed client --connect 127.0.0.1:7878 --client-id 0
 //!   tfed inspect
@@ -71,6 +72,8 @@ fn real_main() -> Result<()> {
         .opt("straggler-prob", "0.0", "per-client straggler probability")
         .opt("straggler-delay-ms", "0", "straggler reply delay in ms")
         .opt("out", "", "write metrics JSON/CSV (scenario: results bundle) here")
+        .opt("trace-out", "", "write a Chrome/Perfetto trace of the run's phases here")
+        .opt("metrics-out", "", "write Prometheus-text metrics here at end of run")
         .opt("listen", "127.0.0.1:7878", "serve: TCP listen address (port 0 = ephemeral)")
         .opt("connect", "", "client: coordinator address to dial")
         .opt("client-id", "0", "client: this process's client id")
@@ -148,6 +151,16 @@ fn apply_quiet(args: &Args) {
     }
 }
 
+/// The obs sinks named on the CLI (empty string = not requested).
+/// Naming either one turns phase tracing + metrics on for the run;
+/// without them observability stays fully off (the standing contract:
+/// identical outputs, no extra RNG draws, near-zero overhead).
+fn obs_paths(args: &Args) -> Result<(Option<String>, Option<String>)> {
+    let trace = args.get("trace-out")?;
+    let metrics = args.get("metrics-out")?;
+    Ok(((!trace.is_empty()).then_some(trace), (!metrics.is_empty()).then_some(metrics)))
+}
+
 fn engine_for(cfg: &ExperimentConfig) -> Result<Option<Arc<Engine>>> {
     if cfg.native_backend {
         Ok(None)
@@ -200,6 +213,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.is_set("jobs") {
         bail!("--jobs parallelizes scenario grid cells; it needs a manifest run");
     }
+    let (trace_out, metrics_out) = obs_paths(args)?;
+    if trace_out.is_some() || metrics_out.is_some() {
+        tfed::obs::enable();
+    }
     let cfg = build_cfg(args)?;
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
@@ -215,7 +232,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         orch.set_workers(workers);
     }
     orch.run()?;
-    report(&orch.metrics, args)
+    report(&orch.metrics, args)?;
+    tfed::obs::finish(trace_out.as_deref(), metrics_out.as_deref(), args.flag("quiet"))
 }
 
 /// Execute a whole manifest grid and print the per-cell summary table.
@@ -240,7 +258,8 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
         bail!(
             "scenario manifests carry the whole experiment config; move {} into \
              {path:?} (its [experiment]/[fleet]/[availability]/[sim] tables) — only \
-             --out, --jobs and --quiet combine with a manifest run",
+             --out, --jobs, --quiet, --trace-out and --metrics-out combine with a \
+             manifest run",
             offending
                 .iter()
                 .map(|n| format!("--{n}"))
@@ -251,7 +270,9 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     let out = args.get("out")?;
     let out = if out.is_empty() { None } else { Some(out.as_str()) };
     let jobs = args.get_usize("jobs")?.max(1);
-    let (results, written) = tfed::scenario::run_manifest_file(path, out, jobs)?;
+    let (trace_out, metrics_out) = obs_paths(args)?;
+    let obs = tfed::scenario::ObsOverrides { trace_out, metrics_out, quiet: args.flag("quiet") };
+    let (results, written) = tfed::scenario::run_manifest_file(path, out, jobs, &obs)?;
     println!("== scenario {} ({} cells) ==", results.name, results.cells.len());
     for c in &results.cells {
         let sim = match &c.sim {
@@ -290,6 +311,10 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
 /// Run the coordinator over TCP: bind, wait for the fleet, drive rounds.
 fn cmd_serve(args: &Args) -> Result<()> {
     apply_quiet(args);
+    let (trace_out, metrics_out) = obs_paths(args)?;
+    if trace_out.is_some() || metrics_out.is_some() {
+        tfed::obs::enable();
+    }
     let cfg = build_cfg(args)?;
     if cfg.protocol.is_centralized() {
         bail!("serve requires a federated protocol (fedavg | tfedavg)");
@@ -323,7 +348,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("warning: shutdown notify failed: {e:#}");
     }
     run_result?;
-    report(&orch.metrics, args)
+    report(&orch.metrics, args)?;
+    tfed::obs::finish(trace_out.as_deref(), metrics_out.as_deref(), args.flag("quiet"))
 }
 
 /// Join a coordinator as one client: the experiment config (and thus the

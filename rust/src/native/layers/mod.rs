@@ -38,6 +38,7 @@ pub use relu::Relu;
 use crate::model::registry::{dense_from_schema, model_def, LayerSpec, ModelDef, ModelError};
 use crate::model::{ModelSchema, ParamSet};
 use crate::native::kernels::KernelPolicy;
+use crate::obs::{self, metrics::Counter};
 use crate::quant;
 
 /// Which training math a graph runs (mirrors the artifact "mode").
@@ -267,6 +268,12 @@ pub struct LayerGraph {
     nq: usize,
     n_params: usize,
     classes: usize,
+    /// per-layer kernel-time counters (`tfed_layer_{fwd,train}_us_total`
+    /// labeled `layer="<position>.<name>"`), resolved once at build so the
+    /// obs-enabled cost is one clock read and a relaxed add per layer per
+    /// batch; untouched (one relaxed load) when obs is off
+    fwd_us: Vec<&'static Counter>,
+    train_us: Vec<&'static Counter>,
 }
 
 impl LayerGraph {
@@ -313,6 +320,8 @@ impl LayerGraph {
                 LayerSpec::Flatten { len } => layers.push(Box::new(Flatten { len })),
             }
         }
+        let fwd_us = layer_timers("tfed_layer_fwd_us_total", &layers);
+        let train_us = layer_timers("tfed_layer_train_us_total", &layers);
         Ok(LayerGraph {
             layers,
             mode,
@@ -321,6 +330,8 @@ impl LayerGraph {
             nq: qi,
             n_params: pi,
             classes: def.schema.num_classes,
+            fwd_us,
+            train_us,
         })
     }
 
@@ -406,9 +417,14 @@ impl LayerGraph {
             "batch of {n} has the wrong input length"
         );
         let q = self.quant_spec();
+        let obs_on = obs::enabled();
         let mut act = x.to_vec();
-        for layer in &self.layers {
+        for (li, layer) in self.layers.iter().enumerate() {
+            let t0 = obs_on.then(std::time::Instant::now);
             let (out, _) = layer.forward(params, q, factors, &act, n, &self.policy);
+            if let Some(t0) = t0 {
+                self.fwd_us[li].add(t0.elapsed().as_micros() as u64);
+            }
             act = out;
         }
         act
@@ -472,13 +488,18 @@ impl LayerGraph {
         self.check(params, factors, x, n)?;
         let l = self.layers.len();
         let q = self.quant_spec();
+        let obs_on = obs::enabled();
 
         // ---- forward, caching activations + per-layer quant state ----
         let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
         acts.push(x.to_vec());
         let mut caches: Vec<TrainCache> = Vec::with_capacity(l);
         for (li, layer) in self.layers.iter().enumerate() {
+            let t0 = obs_on.then(std::time::Instant::now);
             let (out, cache) = layer.forward(params, q, factors, &acts[li], n, &self.policy);
+            if let Some(t0) = t0 {
+                self.train_us[li].add(t0.elapsed().as_micros() as u64);
+            }
             acts.push(out);
             caches.push(cache);
         }
@@ -501,6 +522,7 @@ impl LayerGraph {
         // ---- backward: each layer applies its own update ----
         let mut dact = dlogits;
         for li in (0..l).rev() {
+            let t0 = obs_on.then(std::time::Instant::now);
             dact = self.layers[li].backward(
                 params,
                 q,
@@ -513,9 +535,23 @@ impl LayerGraph {
                 li > 0,
                 &self.policy,
             );
+            if let Some(t0) = t0 {
+                self.train_us[li].add(t0.elapsed().as_micros() as u64);
+            }
         }
         Ok((loss / n as f64) as f32)
     }
+}
+
+/// Resolve the graph's per-layer kernel-time counters. Registration is
+/// idempotent (same name -> same handle), so rebuilding graphs is free;
+/// the counters only ever tick while obs is enabled.
+fn layer_timers(base: &str, layers: &[Box<dyn Layer>]) -> Vec<&'static Counter> {
+    layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| obs::metrics::counter(&format!("{base}{{layer=\"{i}.{}\"}}", l.name())))
+        .collect()
 }
 
 fn take_slot(schema: &ModelSchema, pi: usize, qi: &mut usize) -> Option<QuantSlot> {

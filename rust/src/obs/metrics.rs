@@ -1,0 +1,324 @@
+//! Lock-cheap metrics registry (offline stand-in for prometheus-client).
+//!
+//! Three instrument kinds — monotonic [`Counter`]s, [`Gauge`]s, and
+//! fixed-log2-bucket [`Histogram`]s — registered once by name and handed
+//! out as `&'static` handles (the registry `Mutex` is touched only at
+//! registration/scrape, never on the hot path). Counters are sharded
+//! across a fixed stripe array so concurrent round workers don't bounce
+//! one cache line; stripes are folded in fixed order at scrape time, so
+//! a scrape of a quiesced registry is deterministic. Exposition follows
+//! the Prometheus text format (`# TYPE` lines, `_bucket{le=...}`
+//! cumulative buckets, `_sum`/`_count`), written by `--metrics-out`.
+//!
+//! Names may carry inline labels (`tfed_frames_total{kind="data"}`);
+//! the label block is spliced after histogram suffixes so the emitted
+//! series stay well-formed.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Stripe fan-out for counters. Power of two; folded at scrape.
+const STRIPES: usize = 8;
+
+/// Log2 histogram resolution: bucket `k` holds values of bit-length `k`
+/// (`2^(k-1) <= v < 2^k`), bucket 0 holds zero, bucket 63 the rest.
+pub const HIST_BUCKETS: usize = 64;
+
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+fn stripe_idx() -> usize {
+    thread_local! {
+        static STRIPE: usize = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed) & (STRIPES - 1);
+    }
+    STRIPE.with(|s| *s)
+}
+
+/// Monotonic counter, striped per-thread to keep `add` contention-free.
+pub struct Counter {
+    stripes: [AtomicU64; STRIPES],
+}
+
+impl Counter {
+    fn new() -> Self {
+        Counter { stripes: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    pub fn add(&self, v: u64) {
+        self.stripes[stripe_idx()].fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Fold the stripes (fixed order; wrapping sum is order-independent).
+    pub fn value(&self) -> u64 {
+        self.stripes.iter().map(|s| s.load(Ordering::Relaxed)).fold(0u64, u64::wrapping_add)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (stored as bits).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-log2-bucket histogram over `u64` observations.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Bucket index for `v`: its bit length (0 for 0), capped at the top bucket.
+pub fn bucket_index(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `k` (`le` label), except the top bucket
+/// which is `+Inf`.
+fn bucket_le(k: usize) -> u64 {
+    (1u64 << k) - 1
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+/// Registration-ordered registry; locked only to register or scrape.
+static REGISTRY: Mutex<Vec<(String, Metric)>> = Mutex::new(Vec::new());
+
+/// Register (or look up) a counter by name. Same name → same handle.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut reg = REGISTRY.lock().unwrap();
+    for (n, m) in reg.iter() {
+        if n == name {
+            match m {
+                Metric::Counter(c) => return c,
+                _ => panic!("metric {name:?} already registered with a different type"),
+            }
+        }
+    }
+    let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+    reg.push((name.to_string(), Metric::Counter(c)));
+    c
+}
+
+/// Register (or look up) a gauge by name. Same name → same handle.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut reg = REGISTRY.lock().unwrap();
+    for (n, m) in reg.iter() {
+        if n == name {
+            match m {
+                Metric::Gauge(g) => return g,
+                _ => panic!("metric {name:?} already registered with a different type"),
+            }
+        }
+    }
+    let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+    reg.push((name.to_string(), Metric::Gauge(g)));
+    g
+}
+
+/// Register (or look up) a histogram by name. Same name → same handle.
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut reg = REGISTRY.lock().unwrap();
+    for (n, m) in reg.iter() {
+        if n == name {
+            match m {
+                Metric::Histogram(h) => return h,
+                _ => panic!("metric {name:?} already registered with a different type"),
+            }
+        }
+    }
+    let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+    reg.push((name.to_string(), Metric::Histogram(h)));
+    h
+}
+
+/// Split `name{labels}` into (`name`, `labels`); labels may be empty.
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], name[i..].trim_start_matches('{').trim_end_matches('}')),
+        None => (name, ""),
+    }
+}
+
+/// Series name with a suffix and an extra label spliced into the block.
+fn series(base: &str, suffix: &str, labels: &str, extra: &str) -> String {
+    let mut all = String::new();
+    if !labels.is_empty() {
+        all.push_str(labels);
+    }
+    if !extra.is_empty() {
+        if !all.is_empty() {
+            all.push(',');
+        }
+        all.push_str(extra);
+    }
+    if all.is_empty() {
+        format!("{base}{suffix}")
+    } else {
+        format!("{base}{suffix}{{{all}}}")
+    }
+}
+
+/// Prometheus text exposition of every registered metric, registration
+/// order, `# TYPE` emitted once per base name.
+pub fn exposition() -> String {
+    use std::fmt::Write as _;
+    let reg = REGISTRY.lock().unwrap();
+    let mut out = String::new();
+    let mut typed: Vec<&str> = Vec::new();
+    for (name, metric) in reg.iter() {
+        let (base, labels) = split_labels(name);
+        let kind = match metric {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        };
+        if !typed.contains(&base) {
+            let _ = writeln!(out, "# TYPE {base} {kind}");
+            typed.push(base);
+        }
+        match metric {
+            Metric::Counter(c) => {
+                let _ = writeln!(out, "{} {}", series(base, "", labels, ""), c.value());
+            }
+            Metric::Gauge(g) => {
+                let _ = writeln!(out, "{} {}", series(base, "", labels, ""), g.value());
+            }
+            Metric::Histogram(h) => {
+                let counts: Vec<u64> =
+                    h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+                let top = counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+                let mut cum = 0u64;
+                for (k, &c) in counts.iter().enumerate().take(top.min(HIST_BUCKETS - 2) + 1) {
+                    cum += c;
+                    let le = format!("le=\"{}\"", bucket_le(k));
+                    let _ = writeln!(out, "{} {}", series(base, "_bucket", labels, &le), cum);
+                }
+                let _ = writeln!(
+                    out,
+                    "{} {}",
+                    series(base, "_bucket", labels, "le=\"+Inf\""),
+                    h.count()
+                );
+                let _ = writeln!(out, "{} {}", series(base, "_sum", labels, ""), h.sum());
+                let _ = writeln!(out, "{} {}", series(base, "_count", labels, ""), h.count());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_folds_across_threads() {
+        let c = counter("test_obs_counter_fold_total");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 4000);
+        // same name returns the same handle
+        assert!(std::ptr::eq(c, counter("test_obs_counter_fold_total")));
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let g = gauge("test_obs_gauge");
+        g.set(1.5);
+        g.set(-2.25);
+        assert_eq!(g.value(), -2.25);
+    }
+
+    #[test]
+    fn histogram_bucket_index_is_bit_length() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn exposition_is_prometheus_shaped() {
+        let c = counter("test_obs_expo_total");
+        c.add(7);
+        let h = histogram("test_obs_expo_bytes");
+        h.observe(0);
+        h.observe(5);
+        h.observe(6);
+        let text = exposition();
+        assert!(text.contains("# TYPE test_obs_expo_total counter"));
+        assert!(text.contains("test_obs_expo_total 7"));
+        assert!(text.contains("# TYPE test_obs_expo_bytes histogram"));
+        // cumulative buckets: le=0 -> 1 (the zero), le=7 -> 3 (all)
+        assert!(text.contains("test_obs_expo_bytes_bucket{le=\"0\"} 1"));
+        assert!(text.contains("test_obs_expo_bytes_bucket{le=\"7\"} 3"));
+        assert!(text.contains("test_obs_expo_bytes_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("test_obs_expo_bytes_sum 11"));
+        assert!(text.contains("test_obs_expo_bytes_count 3"));
+    }
+
+    #[test]
+    fn labeled_names_splice_le_into_block() {
+        let h = histogram("test_obs_labeled_bytes{kind=\"data\"}");
+        h.observe(2);
+        let text = exposition();
+        assert!(text.contains("# TYPE test_obs_labeled_bytes histogram"));
+        assert!(text.contains("test_obs_labeled_bytes_bucket{kind=\"data\",le=\"+Inf\"} 1"));
+        assert!(text.contains("test_obs_labeled_bytes_sum{kind=\"data\"} 2"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Observability: metrics registry + phase tracing + round profiler.
+//!
+//! The measurement substrate for the whole stack (DESIGN.md §11): a
+//! lock-cheap [`metrics`] registry (counters / gauges / log2
+//! histograms, Prometheus text exposition via `--metrics-out`) and
+//! span-based [`trace`] phase tracing (Chrome trace-event JSON via
+//! `--trace-out`, Perfetto-loadable, plus an end-of-run per-phase
+//! summary table on stderr).
+//!
+//! Standing contract: **disabled (the default) must be free.** No RNG
+//! draws, no wire-byte changes, and near-zero overhead — every
+//! instrumentation site is behind the [`trace::enabled`] /
+//! [`enabled`] fast path (one relaxed atomic load) or a no-op guard.
+//! Enabled runs produce byte-identical results, summaries, and
+//! bundles too (observability reads, never steers); only the separate
+//! obs artifacts are added. Regression-tested in `tests/obs_e2e.rs`,
+//! overhead-asserted in the `--train` bench.
+
+pub mod metrics;
+pub mod trace;
+
+use std::io::Write as _;
+
+use anyhow::{Context, Result};
+
+/// Open a phase span for the current scope (no-op unless obs is
+/// enabled or `TFED_LOG=trace`):
+///
+/// ```no_run
+/// fn aggregate() {
+///     tfed::obs_span!("round.aggregate");
+///     // ... phase body; the span closes when the scope ends
+/// }
+/// ```
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        let _obs_span_guard = $crate::obs::trace::span($name);
+    };
+}
+
+/// Turn on span + metrics collection for this process.
+pub fn enable() {
+    trace::set_enabled(true);
+}
+
+/// Is observability collection enabled?
+#[inline]
+pub fn enabled() -> bool {
+    trace::enabled()
+}
+
+/// End-of-run export: drain spans, print the per-phase summary table
+/// (stderr, suppressed by `quiet`), and write the requested artifacts.
+/// No-op when collection was never enabled.
+pub fn finish(trace_out: Option<&str>, metrics_out: Option<&str>, quiet: bool) -> Result<()> {
+    if !trace::enabled() {
+        return Ok(());
+    }
+    let events = trace::take_events();
+    if !quiet {
+        print_summary(&events);
+    }
+    if let Some(path) = trace_out {
+        std::fs::write(path, trace::chrome_trace_json(&events))
+            .with_context(|| format!("writing trace to {path}"))?;
+        crate::info!("wrote Chrome trace ({} spans) to {path}", events.len());
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, metrics::exposition())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        crate::info!("wrote metrics exposition to {path}");
+    }
+    Ok(())
+}
+
+/// Per-phase summary table on stderr (count / total ms / mean µs).
+fn print_summary(events: &[trace::SpanEvent]) {
+    let rows = trace::phase_summary(events);
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "\n=== obs: per-phase summary ({} spans) ===", events.len());
+    let _ = writeln!(err, "{:<24} {:>8} {:>12} {:>12}", "phase", "count", "total(ms)", "mean(us)");
+    for (name, count, total_us) in rows {
+        let _ = writeln!(
+            err,
+            "{:<24} {:>8} {:>12.3} {:>12.1}",
+            name,
+            count,
+            total_us as f64 / 1e3,
+            total_us as f64 / count.max(1) as f64
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! Span-based phase tracing (offline stand-in for tracing + perfetto).
+//!
+//! A span covers one phase of one round — `round.select`,
+//! `client.train`, `sim.end_round`, ... (full taxonomy in DESIGN.md
+//! §11). Spans nest on a thread-local stack; every thread carries a
+//! `(lane, round, client)` context set by the round driver so events
+//! can be grouped after the fact no matter which worker thread ran the
+//! exchange. Collection is gated by one relaxed [`enabled`] load — the
+//! disabled path takes no locks, draws no RNG, and allocates nothing.
+//!
+//! Determinism contract: *structure* is deterministic — span names,
+//! nesting depth, and the `(lane, round, client, seq)` export order are
+//! identical run over run, because within one `(lane, round, client)`
+//! group all spans are emitted by a single thread in program order.
+//! Durations and timestamps are wall-clock and vary; regression tests
+//! compare structure only (the same split `wall_secs` zeroing already
+//! uses in scenario bundles).
+//!
+//! Export formats: Chrome trace-event JSON (`--trace-out`, loadable in
+//! Perfetto; lane → pid, client → tid) and a per-phase summary table on
+//! stderr at end of run.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s};
+use crate::util::logging::{self, Level};
+
+/// Context value for "no client": server-side phases.
+pub const NO_CLIENT: u32 = u32::MAX;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static EVENTS: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+/// Time zero for trace timestamps, pinned when tracing is enabled.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// (lane, round, client) the current thread is working for.
+    static CTX: Cell<(u32, u32, u32)> = const { Cell::new((0, 0, NO_CLIENT)) };
+    /// Current span nesting depth on this thread.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Grid-cell lane (0 outside scenario runs); keeps parallel `--jobs`
+    /// cells from interleaving in the export order.
+    pub lane: u32,
+    pub round: u32,
+    /// Client id, or [`NO_CLIENT`] for server-side phases.
+    pub client: u32,
+    /// Global start-order ticket; ties the per-thread program order down.
+    pub seq: u64,
+    /// Nesting depth at open (0 = top level).
+    pub depth: u32,
+    pub ts_us: u64,
+    pub dur_us: u64,
+}
+
+/// Fast path: is span collection on? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span collection on/off. Pins the trace epoch on first enable.
+pub fn set_enabled(on: bool) {
+    if on {
+        EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the calling thread's (lane, round, client) span context.
+pub fn set_context(lane: u32, round: u32, client: u32) {
+    CTX.with(|c| c.set((lane, round, client)));
+}
+
+/// Drop all collected events (tests / between bench sections).
+pub fn clear() {
+    EVENTS.lock().unwrap().clear();
+    SEQ.store(0, Ordering::Relaxed);
+}
+
+/// Open a span. Returns `None` (a no-op) unless collection is enabled
+/// or `TFED_LOG=trace` asked for span logging — the obs level gate.
+#[must_use]
+pub fn span(name: &'static str) -> Option<Span> {
+    let record = enabled();
+    if !record && !logging::enabled(Level::Trace) {
+        return None;
+    }
+    let (lane, round, client) = CTX.with(|c| c.get());
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    Some(Span {
+        name,
+        lane,
+        round,
+        client,
+        seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        depth,
+        start: Instant::now(),
+        record,
+    })
+}
+
+/// Live span guard; records (and/or logs) on drop.
+pub struct Span {
+    name: &'static str,
+    lane: u32,
+    round: u32,
+    client: u32,
+    seq: u64,
+    depth: u32,
+    start: Instant,
+    record: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        if logging::enabled(Level::Trace) {
+            let client = if self.client == NO_CLIENT {
+                "-".to_string()
+            } else {
+                self.client.to_string()
+            };
+            logging::log(
+                Level::Trace,
+                "tfed::obs",
+                format_args!(
+                    "span {} lane={} round={} client={} {}us",
+                    self.name, self.lane, self.round, client, dur_us
+                ),
+            );
+        }
+        if self.record {
+            let epoch = EPOCH.get_or_init(Instant::now);
+            let ts_us = self.start.saturating_duration_since(*epoch).as_micros() as u64;
+            EVENTS.lock().unwrap().push(SpanEvent {
+                name: self.name,
+                lane: self.lane,
+                round: self.round,
+                client: self.client,
+                seq: self.seq,
+                depth: self.depth,
+                ts_us,
+                dur_us,
+            });
+        }
+    }
+}
+
+/// Drain collected events in the deterministic `(lane, round, client,
+/// seq)` export order.
+pub fn take_events() -> Vec<SpanEvent> {
+    let mut v = std::mem::take(&mut *EVENTS.lock().unwrap());
+    v.sort_by_key(|e| (e.lane, e.round, e.client, e.seq));
+    v
+}
+
+/// Chrome trace-event JSON ("X" complete events; Perfetto-loadable).
+/// Lane maps to pid, client to tid (server lane = tid 0).
+pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
+    let evs = events
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("name", s(e.name)),
+                ("ph", s("X")),
+                ("cat", s("tfed")),
+                ("ts", num(e.ts_us as f64)),
+                ("dur", num(e.dur_us as f64)),
+                ("pid", num(e.lane as f64 + 1.0)),
+                (
+                    "tid",
+                    num(if e.client == NO_CLIENT { 0.0 } else { e.client as f64 + 1.0 }),
+                ),
+                (
+                    "args",
+                    obj(vec![
+                        ("round", num(e.round as f64)),
+                        ("depth", num(e.depth as f64)),
+                        ("seq", num(e.seq as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![("displayTimeUnit", s("ms")), ("traceEvents", arr(evs))]).to_string_pretty()
+}
+
+/// Per-phase rollup: (name, count, total_us), sorted by name.
+pub fn phase_summary(events: &[SpanEvent]) -> Vec<(&'static str, u64, u64)> {
+    let mut by_name: std::collections::BTreeMap<&'static str, (u64, u64)> = Default::default();
+    for e in events {
+        let entry = by_name.entry(e.name).or_insert((0, 0));
+        entry.0 += 1;
+        entry.1 += e.dur_us;
+    }
+    by_name.into_iter().map(|(n, (c, t))| (n, c, t)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Span collection is process-global; serialize the tests that flip it.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_span_is_none() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(false);
+        // default log level is below trace, so the gate stays closed
+        assert!(span("test.noop").is_none());
+    }
+
+    #[test]
+    fn spans_record_names_nesting_and_order() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(true);
+        clear();
+        set_context(0, 3, NO_CLIENT);
+        {
+            let _outer = span("test.outer");
+            {
+                let _inner = span("test.inner");
+            }
+        }
+        set_context(0, 3, 1);
+        {
+            let _c = span("test.client");
+        }
+        set_enabled(false);
+        // other tests may run instrumented code concurrently; keep ours only
+        let events: Vec<SpanEvent> =
+            take_events().into_iter().filter(|e| e.name.starts_with("test.")).collect();
+        set_context(0, 0, NO_CLIENT);
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        // server lane (client = NO_CLIENT = u32::MAX) sorts after client 1;
+        // within a group, seq order = program order (inner closes first)
+        assert_eq!(names, vec!["test.client", "test.inner", "test.outer"]);
+        assert_eq!(events[1].depth, 1);
+        assert_eq!(events[2].depth, 0);
+        assert!(events.iter().all(|e| e.round == 3));
+    }
+
+    #[test]
+    fn chrome_json_parses_and_maps_lanes() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(true);
+        clear();
+        set_context(2, 0, 4);
+        {
+            let _s = span("test.lane");
+        }
+        set_enabled(false);
+        let events: Vec<SpanEvent> =
+            take_events().into_iter().filter(|e| e.name.starts_with("test.")).collect();
+        set_context(0, 0, NO_CLIENT);
+        let text = chrome_trace_json(&events);
+        let doc = crate::util::json::Json::parse(&text).expect("valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("name").unwrap().as_str().unwrap(), "test.lane");
+        assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(evs[0].get("pid").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(evs[0].get("tid").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn summary_rolls_up_by_name() {
+        let events = vec![
+            SpanEvent {
+                name: "b",
+                lane: 0,
+                round: 0,
+                client: 0,
+                seq: 0,
+                depth: 0,
+                ts_us: 0,
+                dur_us: 5,
+            },
+            SpanEvent {
+                name: "a",
+                lane: 0,
+                round: 0,
+                client: 0,
+                seq: 1,
+                depth: 0,
+                ts_us: 5,
+                dur_us: 7,
+            },
+            SpanEvent {
+                name: "b",
+                lane: 0,
+                round: 1,
+                client: 0,
+                seq: 2,
+                depth: 0,
+                ts_us: 12,
+                dur_us: 3,
+            },
+        ];
+        assert_eq!(phase_summary(&events), vec![("a", 1, 7), ("b", 2, 8)]);
+    }
+}

@@ -58,6 +58,10 @@
 //! codecs = ["ternary", "stc:k=0.01"]  # default: [experiment codec]
 //! models = ["mlp", "mlp-large"]  # default: [experiment model]
 //!
+//! [observability]             # phase tracing + metrics (DESIGN.md §11)
+//! trace_out = "trace.json"    # Chrome trace events; `--trace-out` overrides
+//! metrics_out = "metrics.prom"  # Prometheus text; `--metrics-out` overrides
+//!
 //! [output]
 //! path = "results.json"       # bundle sink; `--out` overrides
 //! ```
@@ -130,6 +134,13 @@ pub struct ScenarioManifest {
     pub sweep: SweepSpec,
     /// Results-bundle path from `[output] path` (CLI `--out` overrides).
     pub output: Option<String>,
+    /// Chrome trace sink from `[observability] trace_out`
+    /// (CLI `--trace-out` overrides). Either obs sink turns tracing on;
+    /// the results bundle stays byte-identical either way.
+    pub trace_out: Option<String>,
+    /// Prometheus text sink from `[observability] metrics_out`
+    /// (CLI `--metrics-out` overrides).
+    pub metrics_out: Option<String>,
 }
 
 /// The sweep axes; the grid is their cartesian product.
@@ -169,8 +180,16 @@ impl GridCell {
     }
 }
 
-const TABLES: &[&str] =
-    &["scenario", "experiment", "fleet", "availability", "sim", "sweep", "output"];
+const TABLES: &[&str] = &[
+    "scenario",
+    "experiment",
+    "fleet",
+    "availability",
+    "sim",
+    "sweep",
+    "observability",
+    "output",
+];
 const SCENARIO_KEYS: &[&str] = &["name"];
 const EXPERIMENT_KEYS: &[&str] = &[
     "protocol",
@@ -204,6 +223,7 @@ const SIM_KEYS: &[&str] = &[
     "target_acc",
 ];
 const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs", "models"];
+const OBSERVABILITY_KEYS: &[&str] = &["trace_out", "metrics_out"];
 const OUTPUT_KEYS: &[&str] = &["path"];
 
 impl ScenarioManifest {
@@ -389,6 +409,16 @@ impl ScenarioManifest {
             }
         };
 
+        // -- [observability] ----------------------------------------------
+        let trace_out = match doc.get("observability", "trace_out") {
+            Some(v) => Some(v.as_str().context("[observability] trace_out")?.to_string()),
+            None => None,
+        };
+        let metrics_out = match doc.get("observability", "metrics_out") {
+            Some(v) => Some(v.as_str().context("[observability] metrics_out")?.to_string()),
+            None => None,
+        };
+
         // -- [output] -----------------------------------------------------
         let output = match doc.get("output", "path") {
             Some(v) => Some(v.as_str().context("[output] path")?.to_string()),
@@ -404,6 +434,8 @@ impl ScenarioManifest {
             sim,
             sweep: SweepSpec { seeds, partitions, codecs, models },
             output,
+            trace_out,
+            metrics_out,
         };
         // expanding validates every cell — a bad manifest fails at parse
         // time, not mid-sweep
@@ -460,6 +492,7 @@ fn check_surface(doc: &TomlDoc) -> Result<()> {
             "availability" => AVAILABILITY_KEYS,
             "sim" => SIM_KEYS,
             "sweep" => SWEEP_KEYS,
+            "observability" => OBSERVABILITY_KEYS,
             "output" => OUTPUT_KEYS,
             other => bail!("unknown table [{other}] (expected one of {TABLES:?})"),
         };
@@ -823,5 +856,24 @@ mod tests {
         let m = parse("[output]\npath = \"bundle.json\"\n").unwrap();
         assert_eq!(m.output.as_deref(), Some("bundle.json"));
         assert_eq!(parse("").unwrap().output, None);
+    }
+
+    #[test]
+    fn observability_table_flows_through() {
+        let m = parse(
+            "[observability]\ntrace_out = \"trace.json\"\nmetrics_out = \"m.prom\"\n",
+        )
+        .unwrap();
+        assert_eq!(m.trace_out.as_deref(), Some("trace.json"));
+        assert_eq!(m.metrics_out.as_deref(), Some("m.prom"));
+        // both keys optional, independently
+        let m = parse("[observability]\ntrace_out = \"t.json\"\n").unwrap();
+        assert_eq!(m.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(m.metrics_out, None);
+        let m = parse("").unwrap();
+        assert_eq!((m.trace_out, m.metrics_out), (None, None));
+        // typo safety like every other table
+        assert!(parse("[observability]\ntrace = \"t.json\"\n").is_err());
+        assert!(parse("[observability]\ntrace_out = 1\n").is_err());
     }
 }

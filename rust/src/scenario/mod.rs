@@ -37,22 +37,46 @@ pub use manifest::{FleetTransport, GridCell, ScenarioManifest, SweepSpec};
 pub use runner::{run_scenario, run_scenario_jobs, CellResult, CellSim, ScenarioResults};
 pub use toml::{TomlDoc, TomlValue};
 
+/// CLI-side observability settings for a manifest run. The path
+/// overrides (`--trace-out` / `--metrics-out`) win over the manifest's
+/// `[observability]` table, mirroring how `--out` wins over
+/// `[output] path`.
+#[derive(Clone, Debug, Default)]
+pub struct ObsOverrides {
+    pub trace_out: Option<String>,
+    pub metrics_out: Option<String>,
+    /// suppress the end-of-run phase summary table
+    pub quiet: bool,
+}
+
 /// Load, run, and persist one manifest end-to-end — the
 /// `tfed run <manifest.toml>` entry point. `out_override` replaces the
 /// manifest's `[output] path`; `jobs` caps the number of grid cells in
 /// flight (1 = sequential; order and deterministic bundle bytes are
 /// identical at any value). Returns the results and the bundle path
 /// written (if any).
+///
+/// When either obs sink resolves (CLI override or `[observability]`
+/// table), tracing is enabled for the whole grid and the artifacts are
+/// written after the results bundle — the bundle bytes themselves are
+/// unaffected (`tests/obs_e2e.rs`).
 pub fn run_manifest_file(
     path: &str,
     out_override: Option<&str>,
     jobs: usize,
+    obs: &ObsOverrides,
 ) -> Result<(ScenarioResults, Option<String>)> {
     let manifest = ScenarioManifest::load(path)?;
+    let trace = obs.trace_out.clone().or_else(|| manifest.trace_out.clone());
+    let metrics = obs.metrics_out.clone().or_else(|| manifest.metrics_out.clone());
+    if trace.is_some() || metrics.is_some() {
+        crate::obs::enable();
+    }
     let results = run_scenario_jobs(&manifest, jobs)?;
     let out = out_override.map(str::to_string).or_else(|| manifest.output.clone());
     if let Some(p) = &out {
         results.write_json(p)?;
     }
+    crate::obs::finish(trace.as_deref(), metrics.as_deref(), obs.quiet)?;
     Ok((results, out))
 }

@@ -185,20 +185,23 @@ pub fn run_scenario_jobs(manifest: &ScenarioManifest, jobs: usize) -> Result<Sce
     }
     let results: Vec<CellResult> = parallel_map_indexed(cells.len(), jobs, |i| {
         info!("cell {}/{}: {}", i + 1, cells.len(), cells[i].label());
-        run_cell(manifest, &cells[i], &engine)
+        run_cell(manifest, &cells[i], i as u32, &engine)
     })
     .into_iter()
     .collect::<Result<Vec<_>>>()?;
     Ok(ScenarioResults { name: manifest.name.clone(), cells: results })
 }
 
-/// Run one cell end-to-end and summarize it.
+/// Run one cell end-to-end and summarize it. `lane` is the cell's grid
+/// index: it keys the cell's spans in the obs trace, so `--jobs N` runs
+/// produce the same trace structure as sequential ones.
 fn run_cell(
     manifest: &ScenarioManifest,
     cell: &GridCell,
+    lane: u32,
     engine: &EngineCache,
 ) -> Result<CellResult> {
-    let metrics = run_cell_metrics(manifest, cell, engine)
+    let metrics = run_cell_metrics(manifest, cell, lane, engine)
         .with_context(|| format!("grid cell {}", cell.label()))?;
     let sim = manifest.sim.as_ref().map(|spec| CellSim {
         total_sim_secs: metrics.total_sim_secs(),
@@ -224,6 +227,7 @@ fn run_cell(
 fn run_cell_metrics(
     manifest: &ScenarioManifest,
     cell: &GridCell,
+    lane: u32,
     engine: &EngineCache,
 ) -> Result<RunMetrics> {
     let cfg = cell.cfg.clone();
@@ -266,6 +270,7 @@ fn run_cell_metrics(
             )?
         }
     };
+    orch.set_obs_lane(lane);
     let run_result = orch.run();
     if matches!(manifest.transport, FleetTransport::Tcp { .. }) {
         // teardown failure must never mask the run's own error

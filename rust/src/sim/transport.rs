@@ -167,15 +167,23 @@ impl Transport for SimTransport<'_> {
     }
 
     fn end_round(&self, round: u32) -> Option<VirtualRoundTime> {
+        crate::obs_span!("sim.end_round");
         let mut st = self.state.lock().unwrap();
         let start = st.clock_us;
         let mut completion = start;
+        let mut drained = 0u64;
         while let Some((time_us, client)) = st.pending.pop() {
             completion = completion.max(time_us);
             st.log.push(SimEvent { round, time_us, client });
+            drained += 1;
         }
         st.clock_us = completion;
         let straggler_ms = std::mem::take(&mut st.round_straggle_ms);
+        if crate::obs::enabled() {
+            use crate::obs::metrics::{counter, gauge};
+            counter("tfed_sim_events_total").add(drained);
+            gauge("tfed_sim_clock_secs").set(completion as f64 / 1e6);
+        }
         Some(VirtualRoundTime {
             round_secs: (completion - start) as f64 / 1e6,
             clock_secs: completion as f64 / 1e6,

@@ -62,6 +62,7 @@ impl<'a> Loopback<'a> {
         // the round assignment crosses the "wire" like any control frame
         let abytes = Ctrl::Assign(*assign).to_frame().encode()?;
         link.stats.record_ctrl(abytes.len());
+        link.stats.record_frame(FrameKind::Assign, abytes.len());
         let assign = match Ctrl::from_frame(&Frame::decode(&abytes)?)? {
             Ctrl::Assign(a) => a,
             other => bail!("expected assign frame, got {other:?}"),
@@ -77,6 +78,7 @@ impl<'a> Loopback<'a> {
         // downstream payload arrives as prebuilt frame bytes, decoded at
         // the "client" exactly as the TCP path would
         link.stats.record_down(down_wire.len());
+        link.stats.record_frame(FrameKind::Data, down_wire.len());
         let received = Frame::decode(down_wire)?;
         if received.kind != FrameKind::Data {
             bail!("expected data frame downstream");
@@ -88,8 +90,10 @@ impl<'a> Loopback<'a> {
         let up = link.runtime.handle_round(&mut rng, &down)?;
 
         // upstream payload back through the codec
+        crate::obs_span!("client.upload");
         let ubytes = Frame::data(up.encode()).encode()?;
         link.stats.record_up(ubytes.len());
+        link.stats.record_frame(FrameKind::Data, ubytes.len());
         let up = Message::decode(&Frame::decode(&ubytes)?.payload)?;
         link.stats.record_round_trip();
         Ok((up, ubytes.len()))
@@ -175,6 +179,10 @@ mod tests {
         assert_eq!(s.up_bytes as usize, up.encode().len() + HEADER_BYTES);
         assert_eq!((s.up_frames, s.down_frames, s.round_trips), (1, 1, 1));
         assert!(s.ctrl_bytes > 0);
+        // per-kind view agrees: two data frames (down + up), one assign
+        assert_eq!(s.kind_frames[FrameKind::Data as usize - 1], 2);
+        assert_eq!(s.kind_frames[FrameKind::Assign as usize - 1], 1);
+        assert_eq!(s.frame_size_log2.iter().sum::<u64>(), 3);
         match up {
             Message::DenseUpdate(u) => {
                 assert_eq!(u.client_id, 0);

@@ -7,6 +7,22 @@
 //! control frames (hello, config, round assignment, shutdown) are tracked
 //! separately so protocol overhead is visible but does not pollute the
 //! compression-ratio measurements.
+//!
+//! On top of the directional counters, [`LinkStats::record_frame`] keeps
+//! per-[`FrameKind`] frame counts and a log2 frame-size histogram, and
+//! (only when obs is enabled) mirrors them into the `obs::metrics`
+//! registry — `tfed_frames_total{kind=...}` and `tfed_frame_wire_bytes`.
+//! The pre-existing fields and their accounting are untouched.
+
+use crate::obs;
+use crate::transport::frame::FrameKind;
+
+/// Number of [`FrameKind`] variants (`kind_frames` index = `kind as u8 - 1`).
+pub const FRAME_KINDS: usize = 5;
+
+/// Log2 frame-size buckets: `MAX_FRAME` (64 MiB payload + header) has a
+/// 27-bit wire length, so bucket indices 0..=27 cover every legal frame.
+pub const FRAME_SIZE_BUCKETS: usize = 28;
 
 /// Counters for one server<->client link. Directions are named from the
 /// server's perspective: `up` = client -> server, `down` = server -> client.
@@ -23,6 +39,10 @@ pub struct LinkStats {
     /// wire bytes of control frames, both directions
     pub ctrl_bytes: u64,
     pub ctrl_frames: u64,
+    /// frames by [`FrameKind`] (data, hello, config, assign, shutdown)
+    pub kind_frames: [u64; FRAME_KINDS],
+    /// frame wire sizes by bit length (bucket `k` = sizes of `k` bits)
+    pub frame_size_log2: [u64; FRAME_SIZE_BUCKETS],
 }
 
 impl LinkStats {
@@ -45,6 +65,17 @@ impl LinkStats {
         self.round_trips += 1;
     }
 
+    /// Per-kind frame accounting, called alongside the directional
+    /// `record_*` for every frame that crosses the link. Feeds the obs
+    /// registry when (and only when) observability is enabled.
+    pub fn record_frame(&mut self, kind: FrameKind, wire_bytes: usize) {
+        self.kind_frames[kind as usize - 1] += 1;
+        self.frame_size_log2[size_bucket(wire_bytes)] += 1;
+        if obs::enabled() {
+            obs_record_frame(kind, wire_bytes);
+        }
+    }
+
     /// Fold another link's counters into this one (fleet totals).
     pub fn merge(&mut self, other: &LinkStats) {
         self.up_bytes += other.up_bytes;
@@ -54,6 +85,12 @@ impl LinkStats {
         self.round_trips += other.round_trips;
         self.ctrl_bytes += other.ctrl_bytes;
         self.ctrl_frames += other.ctrl_frames;
+        for (a, b) in self.kind_frames.iter_mut().zip(other.kind_frames.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.frame_size_log2.iter_mut().zip(other.frame_size_log2.iter()) {
+            *a += b;
+        }
     }
 
     /// Counter deltas since an earlier snapshot (per-round accounting).
@@ -66,6 +103,12 @@ impl LinkStats {
             round_trips: self.round_trips.saturating_sub(mark.round_trips),
             ctrl_bytes: self.ctrl_bytes.saturating_sub(mark.ctrl_bytes),
             ctrl_frames: self.ctrl_frames.saturating_sub(mark.ctrl_frames),
+            kind_frames: std::array::from_fn(|i| {
+                self.kind_frames[i].saturating_sub(mark.kind_frames[i])
+            }),
+            frame_size_log2: std::array::from_fn(|i| {
+                self.frame_size_log2[i].saturating_sub(mark.frame_size_log2[i])
+            }),
         }
     }
 
@@ -73,6 +116,27 @@ impl LinkStats {
     pub fn total_bytes(&self) -> u64 {
         self.up_bytes + self.down_bytes + self.ctrl_bytes
     }
+}
+
+/// Frame-size histogram bucket: bit length, capped at the top bucket.
+fn size_bucket(wire_bytes: usize) -> usize {
+    obs::metrics::bucket_index(wire_bytes as u64).min(FRAME_SIZE_BUCKETS - 1)
+}
+
+/// Registry mirror of `record_frame`; handles are resolved once and
+/// cached so the per-frame cost is two relaxed atomic adds.
+fn obs_record_frame(kind: FrameKind, wire_bytes: usize) {
+    use crate::obs::metrics::{counter, histogram, Counter, Histogram};
+    use std::sync::OnceLock;
+    static HIST: OnceLock<&'static Histogram> = OnceLock::new();
+    static KINDS: OnceLock<[&'static Counter; FRAME_KINDS]> = OnceLock::new();
+    let hist = HIST.get_or_init(|| histogram("tfed_frame_wire_bytes"));
+    let kinds = KINDS.get_or_init(|| {
+        ["data", "hello", "config", "assign", "shutdown"]
+            .map(|k| counter(&format!("tfed_frames_total{{kind=\"{k}\"}}")))
+    });
+    hist.observe(wire_bytes as u64);
+    kinds[kind as usize - 1].inc();
 }
 
 #[cfg(test)]
@@ -107,6 +171,29 @@ mod tests {
         assert_eq!(a.up_frames, 2);
         assert_eq!(a.down_bytes, 7);
         assert_eq!(a.round_trips, 1);
+    }
+
+    #[test]
+    fn frame_kinds_and_sizes_accumulate() {
+        let mut s = LinkStats::default();
+        s.record_frame(FrameKind::Data, 100); // 7-bit wire length
+        s.record_frame(FrameKind::Data, 30); // 5 bits
+        s.record_frame(FrameKind::Assign, 14); // 4 bits
+        assert_eq!(s.kind_frames[FrameKind::Data as usize - 1], 2);
+        assert_eq!(s.kind_frames[FrameKind::Assign as usize - 1], 1);
+        assert_eq!((s.frame_size_log2[4], s.frame_size_log2[5], s.frame_size_log2[7]), (1, 1, 1));
+        // merge and since are elementwise over the new arrays
+        let mark = s;
+        s.record_frame(FrameKind::Shutdown, 14);
+        assert_eq!(s.since(&mark).kind_frames, [0, 0, 0, 0, 1]);
+        let mut t = LinkStats::default();
+        t.merge(&s);
+        assert_eq!(t.kind_frames, s.kind_frames);
+        assert_eq!(t.frame_size_log2, s.frame_size_log2);
+        // absurd sizes fold into the top bucket instead of indexing out
+        let mut big = LinkStats::default();
+        big.record_frame(FrameKind::Data, usize::MAX);
+        assert_eq!(big.frame_size_log2[FRAME_SIZE_BUCKETS - 1], 1);
     }
 
     #[test]

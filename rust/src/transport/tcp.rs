@@ -101,6 +101,7 @@ impl TcpBinding {
         let mut stats = LinkStats::default();
         let hello = Frame::read_from(&mut stream)?;
         stats.record_ctrl(hello.wire_len());
+        stats.record_frame(hello.kind, hello.wire_len());
         let cid = match Ctrl::from_frame(&hello)? {
             Ctrl::Hello { client_id } => client_id as usize,
             other => bail!("expected hello, got {other:?}"),
@@ -113,6 +114,7 @@ impl TcpBinding {
         }
         let sent = Ctrl::Config(cfg.clone()).to_frame().write_to(&mut stream)?;
         stats.record_ctrl(sent);
+        stats.record_frame(FrameKind::Config, sent);
         stream.set_read_timeout(None)?;
         Ok((cid, stream, stats))
     }
@@ -141,14 +143,17 @@ impl Transport for TcpTransport {
         let mut link = link.lock().unwrap();
         let sent = Ctrl::Assign(*assign).to_frame().write_to(&mut link.stream)?;
         link.stats.record_ctrl(sent);
+        link.stats.record_frame(FrameKind::Assign, sent);
         link.stream.write_all(down_wire)?;
         link.stats.record_down(down_wire.len());
+        link.stats.record_frame(FrameKind::Data, down_wire.len());
         let reply = Frame::read_from(&mut link.stream)
             .with_context(|| format!("reading client {cid} reply"))?;
         if reply.kind != FrameKind::Data {
             bail!("client {cid}: expected data frame, got {:?}", reply.kind);
         }
         link.stats.record_up(reply.wire_len());
+        link.stats.record_frame(FrameKind::Data, reply.wire_len());
         link.stats.record_round_trip();
         Ok(Message::decode(&reply.payload)?)
     }
@@ -190,8 +195,10 @@ impl TcpClient {
         let mut stats = LinkStats::default();
         let sent = Ctrl::Hello { client_id }.to_frame().write_to(&mut stream)?;
         stats.record_ctrl(sent);
+        stats.record_frame(FrameKind::Hello, sent);
         let f = Frame::read_from(&mut stream)?;
         stats.record_ctrl(f.wire_len());
+        stats.record_frame(f.kind, f.wire_len());
         let cfg = match Ctrl::from_frame(&f)? {
             Ctrl::Config(cfg) => cfg,
             other => bail!("expected config after hello, got {other:?}"),
@@ -209,6 +216,7 @@ impl TcpClient {
             match f.kind {
                 FrameKind::Assign => {
                     self.stats.record_ctrl(f.wire_len());
+                    self.stats.record_frame(FrameKind::Assign, f.wire_len());
                     let a = match Ctrl::from_frame(&f)? {
                         Ctrl::Assign(a) => a,
                         other => bail!("bad assign frame: {other:?}"),
@@ -225,6 +233,7 @@ impl TcpClient {
                 FrameKind::Data => {
                     // server -> client is downstream from the link's view
                     self.stats.record_down(f.wire_len());
+                    self.stats.record_frame(FrameKind::Data, f.wire_len());
                     let a = pending
                         .take()
                         .ok_or_else(|| anyhow!("data frame with no round assignment"))?;
@@ -238,13 +247,18 @@ impl TcpClient {
                     let down = Message::decode(&f.payload)?;
                     let mut rng = Pcg::new(a.rng_seed, a.rng_stream);
                     let up = runtime.handle_round(&mut rng, &down)?;
-                    let sent = Frame::data(up.encode()).write_to(&mut self.stream)?;
+                    let sent = {
+                        crate::obs_span!("client.upload");
+                        Frame::data(up.encode()).write_to(&mut self.stream)?
+                    };
                     self.stats.record_up(sent);
+                    self.stats.record_frame(FrameKind::Data, sent);
                     self.stats.record_round_trip();
                     rounds += 1;
                 }
                 FrameKind::Shutdown => {
                     self.stats.record_ctrl(f.wire_len());
+                    self.stats.record_frame(FrameKind::Shutdown, f.wire_len());
                     return Ok(rounds);
                 }
                 kind => bail!("unexpected frame kind {kind:?} on client link"),

@@ -1,6 +1,9 @@
 //! Tiny leveled logger (offline stand-in for env_logger).
 //!
-//! Level comes from `TFED_LOG` (error|warn|info|debug|trace), default info.
+//! Level comes from `TFED_LOG` (error|warn|info|debug|trace), default info;
+//! unrecognized values warn once and fall back to info. `TFED_LOG=trace`
+//! additionally opens the obs span-logging gate (`obs::trace::span`
+//! completions are logged even when no `--trace-out` collection is on).
 //! Output goes to stderr so stdout stays clean for bench CSV/tables.
 
 use std::io::Write;
@@ -19,17 +22,36 @@ pub enum Level {
     Trace = 4,
 }
 
+/// Parse a `TFED_LOG` value; `None` for unrecognized input.
+fn parse_level(s: &str) -> Option<u8> {
+    match s {
+        "error" => Some(0),
+        "warn" => Some(1),
+        "info" => Some(2),
+        "debug" => Some(3),
+        "trace" => Some(4),
+        _ => None,
+    }
+}
+
 fn level() -> u8 {
     let l = LEVEL.load(Ordering::Relaxed);
     if l != 255 {
         return l;
     }
     let parsed = match std::env::var("TFED_LOG").as_deref() {
-        Ok("error") => 0,
-        Ok("warn") => 1,
-        Ok("debug") => 3,
-        Ok("trace") => 4,
-        _ => 2,
+        Ok(value) => parse_level(value).unwrap_or_else(|| {
+            // warn exactly once, even if two threads race the first parse
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "[tfed] unknown TFED_LOG value {value:?} \
+                     (expected error|warn|info|debug|trace); using info"
+                );
+            });
+            2
+        }),
+        Err(_) => 2,
     };
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
@@ -97,12 +119,43 @@ macro_rules! error {
 mod tests {
     use super::*;
 
+    /// `LEVEL` is process-global; tests that mutate it hold this lock and
+    /// restore the prior raw value (possibly the 255 "unset" sentinel) on
+    /// exit, so they can't race other tests' `enabled()` checks.
+    static LEVEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    struct RestoreLevel(u8);
+
+    impl Drop for RestoreLevel {
+        fn drop(&mut self) {
+            LEVEL.store(self.0, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn parse_level_accepts_every_documented_value() {
+        assert_eq!(parse_level("error"), Some(0));
+        assert_eq!(parse_level("warn"), Some(1));
+        assert_eq!(parse_level("info"), Some(2));
+        assert_eq!(parse_level("debug"), Some(3));
+        assert_eq!(parse_level("trace"), Some(4));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level("INFO"), None); // values are case-sensitive
+    }
+
     #[test]
     fn level_ordering() {
+        let _serial = LEVEL_LOCK.lock().unwrap();
+        let _restore = RestoreLevel(LEVEL.load(Ordering::Relaxed));
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
-        set_level(Level::Info);
+        // stop short of Trace: that level opens the obs span-logging gate
+        // and would race concurrently running obs tests
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
     }
 }

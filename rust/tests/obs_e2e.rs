@@ -1,0 +1,174 @@
+//! Observability regression tests (DESIGN.md §11).
+//!
+//! Two claims are load-bearing enough to pin here:
+//! * **byte identity** — enabling obs must not change a single output
+//!   byte: run metrics, scenario/sim bundles, and wire accounting are
+//!   identical with tracing on and off (obs reads, never steers);
+//! * **trace schema** — an enabled run emits the documented phase
+//!   taxonomy with deterministic structure (names, context, export
+//!   order), and the Chrome export is valid JSON covering every span.
+//!
+//! Obs state is process-global, so every test here serializes on one
+//! lock and restores the disabled default before releasing it.
+
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::run_experiment;
+use tfed::metrics::RunMetrics;
+use tfed::obs::trace;
+use tfed::scenario::{run_scenario, ScenarioManifest};
+use tfed::util::json::Json;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restore the default-off state (and drop any collected spans).
+fn obs_off() {
+    trace::set_enabled(false);
+    trace::clear();
+}
+
+/// Deterministic metrics fingerprint: full JSON with the wall clock
+/// zeroed (losses, accuracies, selections, byte counts all remain).
+fn fingerprint(m: &RunMetrics) -> String {
+    let mut m = m.clone();
+    for r in &mut m.records {
+        r.wall_secs = 0.0;
+    }
+    m.to_json().to_string()
+}
+
+fn small_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, seed);
+    cfg.n_clients = 3;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 300;
+    cfg.test_samples = 60;
+    cfg.batch = 16;
+    cfg.native_backend = true;
+    cfg
+}
+
+const SIM_MANIFEST: &str = r#"
+[scenario]
+name = "obs_sim"
+[experiment]
+clients = 3
+rounds = 2
+local_epochs = 1
+batch = 16
+train_samples = 300
+test_samples = 60
+seed = 7
+native = true
+[sim]
+registered_clients = 50
+"#;
+
+#[test]
+fn enabling_obs_is_byte_invisible() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    let cfg = small_cfg(42);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let baseline = run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let sim_baseline =
+        run_scenario(&ScenarioManifest::parse(SIM_MANIFEST).unwrap()).unwrap();
+
+    tfed::obs::enable();
+    let traced = run_experiment(cfg, backend.as_ref()).unwrap();
+    let sim_traced =
+        run_scenario(&ScenarioManifest::parse(SIM_MANIFEST).unwrap()).unwrap();
+    obs_off();
+
+    // same losses, accuracies, selections, and wire bytes, byte for byte
+    assert_eq!(fingerprint(&baseline), fingerprint(&traced));
+    // sim bundles (wall_secs zeroed by construction) match byte for byte
+    assert_eq!(
+        sim_baseline.to_json().to_string_pretty(),
+        sim_traced.to_json().to_string_pretty()
+    );
+}
+
+#[test]
+fn trace_has_documented_phase_structure() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    tfed::obs::enable();
+
+    // --- one loopback run: the federated phase taxonomy ----------------
+    let cfg = small_cfg(7);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let events = trace::take_events();
+    let names: BTreeSet<&str> = events.iter().map(|e| e.name).collect();
+    for phase in [
+        "round.select",
+        "round.broadcast",
+        "round.encode",
+        "client.decode",
+        "client.train",
+        "client.encode",
+        "client.upload",
+        "round.aggregate",
+        "round.eval",
+    ] {
+        assert!(names.contains(phase), "missing {phase} in {names:?}");
+    }
+    // client phases carry a client id; server phases the NO_CLIENT marker
+    assert!(events
+        .iter()
+        .filter(|e| e.name.starts_with("client."))
+        .all(|e| e.client != trace::NO_CLIENT));
+    assert!(events
+        .iter()
+        .filter(|e| e.name.starts_with("round."))
+        .all(|e| e.client == trace::NO_CLIENT));
+    // both rounds are covered, and the export order is the deterministic
+    // (lane, round, client, seq) key
+    let rounds: BTreeSet<u32> = events.iter().map(|e| e.round).collect();
+    assert!(rounds.len() >= 2, "spans cover rounds {rounds:?}");
+    let keys: Vec<_> = events.iter().map(|e| (e.lane, e.round, e.client, e.seq)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort_unstable();
+    assert_eq!(keys, sorted);
+
+    // the Chrome export parses and covers every span
+    let doc = Json::parse(&trace::chrome_trace_json(&events)).unwrap();
+    assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), events.len());
+
+    // structure (not timing) is reproducible: a second identical run
+    // yields the same (name, lane, round, client, depth) sequence
+    let shape = |evs: &[trace::SpanEvent]| {
+        evs.iter()
+            .map(|e| (e.name, e.lane, e.round, e.client, e.depth))
+            .collect::<Vec<_>>()
+    };
+    trace::clear();
+    run_experiment(cfg, backend.as_ref()).unwrap();
+    assert_eq!(shape(&events), shape(&trace::take_events()));
+
+    // --- one sim run: the virtual-time phase rides along ----------------
+    trace::clear();
+    run_scenario(&ScenarioManifest::parse(SIM_MANIFEST).unwrap()).unwrap();
+    let sim_events = trace::take_events();
+    assert!(sim_events.iter().any(|e| e.name == "sim.end_round"));
+    obs_off();
+
+    // the registry picked up the run (names only; values accumulate
+    // across this process's tests)
+    let text = tfed::obs::metrics::exposition();
+    for metric in [
+        "tfed_rounds_total",
+        "tfed_clients_selected_total",
+        "tfed_frames_total",
+        "tfed_frame_wire_bytes",
+        "tfed_layer_train_us_total",
+        "tfed_sim_events_total",
+    ] {
+        assert!(text.contains(metric), "missing {metric} in exposition");
+    }
+}
