@@ -13,7 +13,7 @@ use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::Orchestrator;
-use tfed::metrics::mb;
+use tfed::eval::mb;
 
 fn cfg_for(codec: &str) -> anyhow::Result<ExperimentConfig> {
     let spec = CodecSpec::parse(codec)?;

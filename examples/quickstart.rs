@@ -11,7 +11,7 @@ use std::sync::Arc;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::Orchestrator;
-use tfed::metrics::mb;
+use tfed::eval::mb;
 use tfed::runtime::manifest::default_artifacts_dir;
 use tfed::runtime::Engine;
 

@@ -15,7 +15,7 @@ use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::{materialize_data, Orchestrator};
 use tfed::coordinator::ClientRuntime;
-use tfed::metrics::RunMetrics;
+use tfed::eval::RunMetrics;
 use tfed::model::ParamSet;
 use tfed::transport::{TcpBinding, TcpClient};
 

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::{make_backend, Backend};
 use tfed::coordinator::run_experiment;
-use tfed::metrics::RunMetrics;
+use tfed::eval::RunMetrics;
 use tfed::runtime::manifest::default_artifacts_dir;
 use tfed::runtime::Engine;
 

@@ -92,6 +92,10 @@ impl Aggregator {
         self.acc.axpy(w, update);
         self.folded_samples = self.folded_samples.saturating_add(num_samples);
         self.folded_updates += 1;
+        if crate::obs::enabled() {
+            crate::obs::metrics::counter("tfed_agg_folds_total").inc();
+            crate::obs::metrics::counter("tfed_agg_samples_total").add(num_samples);
+        }
         Ok(())
     }
 

@@ -28,7 +28,7 @@ use crate::coordinator::selection::{apply_dropout, select_clients, select_cohort
 use crate::sim::{FleetModel, SimSpec, SimTransport};
 use crate::data::partition::{partition, PartitionSpec};
 use crate::data::synth::SynthSpec;
-use crate::metrics::{RoundRecord, RunMetrics};
+use crate::eval::{RoundRecord, RunMetrics};
 use crate::model::{init_params, ModelSchema, ParamSet};
 use crate::obs::{metrics as obs_metrics, trace};
 use crate::quant;
@@ -187,6 +187,8 @@ pub struct Orchestrator<'a> {
     /// obs trace lane (scenario grid-cell index; 0 for standalone runs) —
     /// keeps spans from parallel `--jobs` cells in separate trace groups
     obs_lane: u32,
+    /// grid-cell label stamped on telemetry records ("" standalone)
+    obs_cell: String,
     pub metrics: RunMetrics,
 }
 
@@ -335,6 +337,7 @@ impl<'a> Orchestrator<'a> {
             population,
             stats_mark: LinkStats::default(),
             obs_lane: 0,
+            obs_cell: String::new(),
             metrics,
         })
     }
@@ -363,6 +366,13 @@ impl<'a> Orchestrator<'a> {
     /// are identical at any lane.
     pub fn set_obs_lane(&mut self, lane: u32) {
         self.obs_lane = lane;
+    }
+
+    /// Label telemetry records with this run's grid-cell identity (the
+    /// scenario runner passes `cell.label()`). Observability metadata
+    /// only — results are identical with any label.
+    pub fn set_obs_cell(&mut self, label: &str) {
+        self.obs_cell = label.to_string();
     }
 
     /// Current dense global model (server state).
@@ -510,7 +520,56 @@ impl<'a> Orchestrator<'a> {
             );
         }
         self.metrics.push(rec.clone());
+        // learning-dynamics telemetry (one relaxed load when off; when
+        // on, reads server state only — no RNG, no bundle changes)
+        if crate::obs::telemetry::enabled() {
+            self.record_telemetry(&rec);
+        }
         Ok(rec)
+    }
+
+    /// Build and store this round's learning-dynamics record
+    /// (DESIGN.md §12). The dense fp32 `global` is the shadow
+    /// accumulator: quantization stats compare it against the protocol's
+    /// quantized projection of the same state. Dense protocols record
+    /// zeros (there is no projection to diverge from).
+    fn record_telemetry(&self, rec: &RoundRecord) {
+        use crate::obs::telemetry;
+        let qidx = self.backend.schema().quantized_indices();
+        let proj = match self.cfg.protocol {
+            Protocol::TFedAvg => Some(self.ternary_inference_model()),
+            Protocol::Ttq => Some(self.ttq_inference_model()),
+            Protocol::FedAvg | Protocol::Baseline => None,
+        };
+        let (layer_zero_fraction, sparsity, unbias_residual, divergence, rel) =
+            match &proj {
+                Some(p) => {
+                    let (per_layer, overall) = telemetry::zero_fractions(p, &qidx);
+                    let resid = telemetry::unbias_residual(&self.global, p, &qidx);
+                    let (div, rel) = telemetry::weight_divergence(&self.global, p, &qidx);
+                    (per_layer, overall, resid, div, rel)
+                }
+                None => (vec![0.0; qidx.len()], 0.0, 0.0, 0.0, 0.0),
+            };
+        telemetry::record(telemetry::TelemetryRecord {
+            lane: self.obs_lane,
+            round: rec.round as u64,
+            cell: self.obs_cell.clone(),
+            protocol: self.cfg.protocol.name().to_string(),
+            train_loss: rec.train_loss as f64,
+            test_acc: rec.test_acc as f64,
+            test_loss: rec.test_loss as f64,
+            evaluated: rec.evaluated,
+            factors: rec.factors.iter().map(|&f| f as f64).collect(),
+            layer_zero_fraction,
+            sparsity,
+            unbias_residual,
+            weight_divergence: divergence,
+            rel_divergence: rel,
+            cum_up_bytes: self.metrics.total_up_bytes(),
+            cum_down_bytes: self.metrics.total_down_bytes(),
+            sim_secs: self.metrics.total_sim_secs(),
+        });
     }
 
     /// Run all configured rounds.

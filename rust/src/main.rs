@@ -7,6 +7,7 @@
 //!   client    join a coordinator as one federated client
 //!   inspect   print the artifact manifest the runtime will use
 //!   selftest  PJRT smoke: load + execute every artifact kind once
+//!   report    render paper-style tables/series from run artifacts
 //!
 //! Examples:
 //!   tfed run --protocol tfedavg --task mnist --rounds 30
@@ -19,10 +20,13 @@
 //!   tfed run ../examples/scenarios/paper_noniid.toml --jobs 4   # parallel cells
 //!   tfed run ../examples/scenarios/sim_fleet.toml    # 100k-client virtual-time sim
 //!   tfed run --rounds 5 --trace-out trace.json --metrics-out metrics.prom  # profile
+//!   tfed run --rounds 5 --telemetry-out telemetry.jsonl  # learning telemetry
+//!   tfed run --rounds 30 --metrics-addr 127.0.0.1:9898   # watch the run live
 //!   tfed serve --listen 127.0.0.1:7878 --clients 4 --native
 //!   tfed client --connect 127.0.0.1:7878 --client-id 0
 //!   tfed inspect
 //!   tfed selftest
+//!   tfed report results.json telemetry.jsonl
 
 use std::io::Write;
 use std::sync::Arc;
@@ -35,7 +39,7 @@ use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::{materialize_shard, Orchestrator};
 use tfed::coordinator::ClientRuntime;
-use tfed::metrics::{mb, RunMetrics};
+use tfed::eval::{mb, RunMetrics};
 use tfed::runtime::manifest::default_artifacts_dir;
 use tfed::runtime::Engine;
 use tfed::transport::{TcpBinding, TcpClient};
@@ -74,6 +78,9 @@ fn real_main() -> Result<()> {
         .opt("out", "", "write metrics JSON/CSV (scenario: results bundle) here")
         .opt("trace-out", "", "write a Chrome/Perfetto trace of the run's phases here")
         .opt("metrics-out", "", "write Prometheus-text metrics here at end of run")
+        .opt("telemetry-out", "", "write per-round learning telemetry (JSONL) here")
+        .opt("metrics-addr", "", "serve /metrics + /telemetry live on this address")
+        .opt("metrics-hold-secs", "0", "keep the live endpoint up this long after the run")
         .opt("listen", "127.0.0.1:7878", "serve: TCP listen address (port 0 = ephemeral)")
         .opt("connect", "", "client: coordinator address to dial")
         .opt("client-id", "0", "client: this process's client id")
@@ -90,7 +97,10 @@ fn real_main() -> Result<()> {
         "client" => cmd_client(&args),
         "inspect" => cmd_inspect(),
         "selftest" => cmd_selftest(),
-        other => bail!("unknown command {other:?} (run | serve | client | inspect | selftest)"),
+        "report" => cmd_report(&args),
+        other => bail!(
+            "unknown command {other:?} (run | serve | client | inspect | selftest | report)"
+        ),
     }
 }
 
@@ -151,14 +161,76 @@ fn apply_quiet(args: &Args) {
     }
 }
 
-/// The obs sinks named on the CLI (empty string = not requested).
-/// Naming either one turns phase tracing + metrics on for the run;
-/// without them observability stays fully off (the standing contract:
-/// identical outputs, no extra RNG draws, near-zero overhead).
-fn obs_paths(args: &Args) -> Result<(Option<String>, Option<String>)> {
-    let trace = args.get("trace-out")?;
-    let metrics = args.get("metrics-out")?;
-    Ok(((!trace.is_empty()).then_some(trace), (!metrics.is_empty()).then_some(metrics)))
+/// The observability surface named on the CLI (empty string = not
+/// requested). Naming any sink turns collection on for the run —
+/// `--telemetry-out` / `--metrics-addr` additionally turn on per-round
+/// learning telemetry; without them observability stays fully off (the
+/// standing contract: identical outputs, no extra RNG draws, near-zero
+/// overhead).
+struct ObsCli {
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+    telemetry_out: Option<String>,
+    /// live `/metrics` + `/telemetry` endpoint address
+    metrics_addr: Option<String>,
+    /// keep the endpoint alive this long after the run (for scrapes)
+    hold_secs: u64,
+}
+
+impl ObsCli {
+    fn parse(args: &Args) -> Result<ObsCli> {
+        let opt = |name: &str| -> Result<Option<String>> {
+            let v = args.get(name)?;
+            Ok((!v.is_empty()).then_some(v))
+        };
+        Ok(ObsCli {
+            trace_out: opt("trace-out")?,
+            metrics_out: opt("metrics-out")?,
+            telemetry_out: opt("telemetry-out")?,
+            metrics_addr: opt("metrics-addr")?,
+            hold_secs: args.get_u64("metrics-hold-secs")?,
+        })
+    }
+
+    /// Flip the process-wide collection switches this invocation needs.
+    fn enable(&self) {
+        if self.telemetry_out.is_some() || self.metrics_addr.is_some() {
+            tfed::obs::enable_telemetry();
+        } else if self.trace_out.is_some() || self.metrics_out.is_some() {
+            tfed::obs::enable();
+        }
+    }
+
+    /// Start the live endpoint when `--metrics-addr` was given. Prints a
+    /// flushed `metrics endpoint on http://<addr>` line (launcher scripts
+    /// parse it for the resolved port, like serve's "listening on" line).
+    fn serve_endpoint(&self) -> Result<Option<tfed::obs::http::ObsServer>> {
+        let Some(addr) = &self.metrics_addr else { return Ok(None) };
+        let server = tfed::obs::http::serve(addr)?;
+        println!("metrics endpoint on http://{}", server.addr());
+        std::io::stdout().flush().ok();
+        Ok(Some(server))
+    }
+
+    /// End-of-run: write the sinks (non-fatal), then hold the live
+    /// endpoint open for late scrapes before shutting it down.
+    fn finish(&self, quiet: bool, server: Option<tfed::obs::http::ObsServer>) {
+        tfed::obs::finish(&tfed::obs::Sinks {
+            trace_out: self.trace_out.as_deref(),
+            metrics_out: self.metrics_out.as_deref(),
+            telemetry_out: self.telemetry_out.as_deref(),
+            quiet,
+        });
+        if let Some(server) = server {
+            // flush the run summary before holding: scripts watch for it
+            // to know the endpoint now serves final state
+            std::io::stdout().flush().ok();
+            if self.hold_secs > 0 {
+                std::thread::sleep(std::time::Duration::from_secs(self.hold_secs));
+            }
+            server.shutdown();
+        }
+    }
 }
 
 fn engine_for(cfg: &ExperimentConfig) -> Result<Option<Arc<Engine>>> {
@@ -213,10 +285,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.is_set("jobs") {
         bail!("--jobs parallelizes scenario grid cells; it needs a manifest run");
     }
-    let (trace_out, metrics_out) = obs_paths(args)?;
-    if trace_out.is_some() || metrics_out.is_some() {
-        tfed::obs::enable();
-    }
+    let obs = ObsCli::parse(args)?;
+    obs.enable();
+    let server = obs.serve_endpoint()?;
     let cfg = build_cfg(args)?;
     let engine = engine_for(&cfg)?;
     let backend = make_backend(
@@ -233,7 +304,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     orch.run()?;
     report(&orch.metrics, args)?;
-    tfed::obs::finish(trace_out.as_deref(), metrics_out.as_deref(), args.flag("quiet"))
+    obs.finish(args.flag("quiet"), server);
+    Ok(())
 }
 
 /// Execute a whole manifest grid and print the per-cell summary table.
@@ -258,8 +330,8 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
         bail!(
             "scenario manifests carry the whole experiment config; move {} into \
              {path:?} (its [experiment]/[fleet]/[availability]/[sim] tables) — only \
-             --out, --jobs, --quiet, --trace-out and --metrics-out combine with a \
-             manifest run",
+             --out, --jobs, --quiet, --trace-out, --metrics-out, --telemetry-out, \
+             --metrics-addr and --metrics-hold-secs combine with a manifest run",
             offending
                 .iter()
                 .map(|n| format!("--{n}"))
@@ -270,9 +342,21 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     let out = args.get("out")?;
     let out = if out.is_empty() { None } else { Some(out.as_str()) };
     let jobs = args.get_usize("jobs")?.max(1);
-    let (trace_out, metrics_out) = obs_paths(args)?;
-    let obs = tfed::scenario::ObsOverrides { trace_out, metrics_out, quiet: args.flag("quiet") };
-    let (results, written) = tfed::scenario::run_manifest_file(path, out, jobs, &obs)?;
+    let obs = ObsCli::parse(args)?;
+    // the grid's sink resolution (CLI over [observability] table) lives in
+    // run_manifest_file; the live endpoint is CLI-only and needs telemetry
+    // on regardless of sinks
+    if obs.metrics_addr.is_some() {
+        tfed::obs::enable_telemetry();
+    }
+    let server = obs.serve_endpoint()?;
+    let overrides = tfed::scenario::ObsOverrides {
+        trace_out: obs.trace_out.clone(),
+        metrics_out: obs.metrics_out.clone(),
+        telemetry_out: obs.telemetry_out.clone(),
+        quiet: args.flag("quiet"),
+    };
+    let (results, written) = tfed::scenario::run_manifest_file(path, out, jobs, &overrides)?;
     println!("== scenario {} ({} cells) ==", results.name, results.cells.len());
     for c in &results.cells {
         let sim = match &c.sim {
@@ -305,16 +389,24 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     if let Some(p) = written {
         println!("bundle     : {p}");
     }
+    if let Some(server) = server {
+        // flush the grid summary before holding: scripts watch for the
+        // "bundle" line to know the endpoint now serves final state
+        std::io::stdout().flush().ok();
+        if obs.hold_secs > 0 {
+            std::thread::sleep(std::time::Duration::from_secs(obs.hold_secs));
+        }
+        server.shutdown();
+    }
     Ok(())
 }
 
 /// Run the coordinator over TCP: bind, wait for the fleet, drive rounds.
 fn cmd_serve(args: &Args) -> Result<()> {
     apply_quiet(args);
-    let (trace_out, metrics_out) = obs_paths(args)?;
-    if trace_out.is_some() || metrics_out.is_some() {
-        tfed::obs::enable();
-    }
+    let obs = ObsCli::parse(args)?;
+    obs.enable();
+    let server = obs.serve_endpoint()?;
     let cfg = build_cfg(args)?;
     if cfg.protocol.is_centralized() {
         bail!("serve requires a federated protocol (fedavg | tfedavg)");
@@ -349,7 +441,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     run_result?;
     report(&orch.metrics, args)?;
-    tfed::obs::finish(trace_out.as_deref(), metrics_out.as_deref(), args.flag("quiet"))
+    obs.finish(args.flag("quiet"), server);
+    Ok(())
 }
 
 /// Join a coordinator as one client: the experiment config (and thus the
@@ -442,5 +535,21 @@ fn cmd_selftest() -> Result<()> {
         }
     }
     println!("selftest OK");
+    Ok(())
+}
+
+/// Render paper-style reports offline from run artifacts — results
+/// bundles and telemetry JSONL sinks, auto-detected per file.
+fn cmd_report(args: &Args) -> Result<()> {
+    let files = &args.positional()[1..];
+    if files.is_empty() {
+        bail!("report needs artifacts: tfed report <bundle.json|telemetry.jsonl> ...");
+    }
+    for (i, file) in files.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        print!("{}", tfed::obs::report::render_file(file)?);
+    }
     Ok(())
 }

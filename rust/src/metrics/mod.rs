@@ -1,314 +1,9 @@
-//! Run metrics: per-round records + JSON/CSV sinks.
+//! Deprecated alias of [`crate::eval`] (kept one release).
 //!
-//! Every experiment produces a `RunMetrics`; the bench harness turns these
-//! into the paper's tables/figures and EXPERIMENTS.md quotes them.
+//! The evaluation-record module (`RunMetrics`, `RoundRecord`, `mb`) moved
+//! to [`crate::eval`] so that "metrics" unambiguously refers to the
+//! observability registry ([`crate::obs::metrics`]). Update imports from
+//! `tfed::metrics::…` to `tfed::eval::…`; this shim will be removed in
+//! the next release.
 
-use std::path::Path;
-
-use anyhow::{Context, Result};
-
-use crate::util::json::{arr, num, obj, s, Json};
-
-/// One communication round (or centralized epoch-group).
-#[derive(Clone, Debug)]
-pub struct RoundRecord {
-    pub round: usize,
-    /// mean local training loss across selected clients
-    pub train_loss: f32,
-    /// test accuracy of the reported model (quantized for T-FedAvg/TTQ)
-    pub test_acc: f32,
-    pub test_loss: f32,
-    /// upstream wire bytes this round, measured at the transport frame
-    /// layer (all selected clients, frame headers included)
-    pub up_bytes: u64,
-    /// downstream wire bytes this round
-    pub down_bytes: u64,
-    /// upstream data frames this round (one per client upload)
-    pub up_frames: u64,
-    /// downstream data frames this round (one per client broadcast)
-    pub down_frames: u64,
-    pub wall_secs: f64,
-    /// simulated round completion time in virtual seconds (last cohort
-    /// arrival − round start, from `sim::SimTransport`); 0 when the run
-    /// is not simulated
-    pub sim_secs: f64,
-    /// total straggler delay injected this round, in milliseconds —
-    /// virtual under the simulator, configured-but-wall-capped on real
-    /// transports (availability delay accounting)
-    pub straggler_delay_ms: u64,
-    pub selected: Vec<usize>,
-    /// per-layer quantization factors, if the protocol has them:
-    /// T-FedAvg: mean w^q per layer; TTQ: [wp..., wn...]
-    pub factors: Vec<f32>,
-    /// evaluated this round?
-    pub evaluated: bool,
-}
-
-/// Whole-run metrics.
-#[derive(Clone, Debug, Default)]
-pub struct RunMetrics {
-    pub config_summary: String,
-    pub records: Vec<RoundRecord>,
-}
-
-impl RunMetrics {
-    pub fn new(config_summary: String) -> Self {
-        RunMetrics { config_summary, records: Vec::new() }
-    }
-
-    pub fn push(&mut self, r: RoundRecord) {
-        self.records.push(r);
-    }
-
-    pub fn final_acc(&self) -> f32 {
-        self.records
-            .iter()
-            .rev()
-            .find(|r| r.evaluated)
-            .map(|r| r.test_acc)
-            .unwrap_or(0.0)
-    }
-
-    pub fn best_acc(&self) -> f32 {
-        self.records
-            .iter()
-            .filter(|r| r.evaluated)
-            .map(|r| r.test_acc)
-            .fold(0.0, f32::max)
-    }
-
-    pub fn total_up_bytes(&self) -> u64 {
-        self.records.iter().map(|r| r.up_bytes).sum()
-    }
-
-    pub fn total_down_bytes(&self) -> u64 {
-        self.records.iter().map(|r| r.down_bytes).sum()
-    }
-
-    pub fn total_up_frames(&self) -> u64 {
-        self.records.iter().map(|r| r.up_frames).sum()
-    }
-
-    pub fn total_down_frames(&self) -> u64 {
-        self.records.iter().map(|r| r.down_frames).sum()
-    }
-
-    pub fn total_wall_secs(&self) -> f64 {
-        self.records.iter().map(|r| r.wall_secs).sum()
-    }
-
-    /// Total simulated time across all rounds (virtual seconds; 0 for
-    /// non-simulated runs).
-    pub fn total_sim_secs(&self) -> f64 {
-        self.records.iter().map(|r| r.sim_secs).sum()
-    }
-
-    /// Round throughput on the virtual clock (None for non-simulated
-    /// runs) — the bench's cross-codec "rounds per virtual hour" axis.
-    pub fn rounds_per_virtual_hour(&self) -> Option<f64> {
-        let secs = self.total_sim_secs();
-        if secs > 0.0 {
-            Some(self.records.len() as f64 * 3_600.0 / secs)
-        } else {
-            None
-        }
-    }
-
-    /// Rounds needed to first reach `acc` (None if never).
-    pub fn rounds_to_acc(&self, acc: f32) -> Option<usize> {
-        self.records.iter().find(|r| r.evaluated && r.test_acc >= acc).map(|r| r.round)
-    }
-
-    /// Simulated time to first reach test accuracy `acc`: the virtual
-    /// clock at the end of the first evaluated round whose accuracy
-    /// meets the target (None if never reached, or not simulated).
-    pub fn sim_secs_to_acc(&self, acc: f32) -> Option<f64> {
-        if self.total_sim_secs() <= 0.0 {
-            return None;
-        }
-        let mut clock = 0.0;
-        for r in &self.records {
-            clock += r.sim_secs;
-            if r.evaluated && r.test_acc >= acc {
-                return Some(clock);
-            }
-        }
-        None
-    }
-
-    /// Accuracy series (round, acc) at evaluated rounds — Fig. 6/10 data.
-    pub fn acc_series(&self) -> Vec<(usize, f32)> {
-        self.records
-            .iter()
-            .filter(|r| r.evaluated)
-            .map(|r| (r.round, r.test_acc))
-            .collect()
-    }
-
-    pub fn to_json(&self) -> Json {
-        obj(vec![
-            ("config", s(&self.config_summary)),
-            ("final_acc", num(self.final_acc() as f64)),
-            ("best_acc", num(self.best_acc() as f64)),
-            ("total_up_bytes", num(self.total_up_bytes() as f64)),
-            ("total_down_bytes", num(self.total_down_bytes() as f64)),
-            ("total_wall_secs", num(self.total_wall_secs())),
-            ("total_sim_secs", num(self.total_sim_secs())),
-            (
-                "rounds",
-                arr(self
-                    .records
-                    .iter()
-                    .map(|r| {
-                        obj(vec![
-                            ("round", num(r.round as f64)),
-                            ("train_loss", num(r.train_loss as f64)),
-                            ("test_acc", num(r.test_acc as f64)),
-                            ("test_loss", num(r.test_loss as f64)),
-                            ("up_bytes", num(r.up_bytes as f64)),
-                            ("down_bytes", num(r.down_bytes as f64)),
-                            ("up_frames", num(r.up_frames as f64)),
-                            ("down_frames", num(r.down_frames as f64)),
-                            ("wall_secs", num(r.wall_secs)),
-                            ("sim_secs", num(r.sim_secs)),
-                            ("straggler_delay_ms", num(r.straggler_delay_ms as f64)),
-                            ("evaluated", Json::Bool(r.evaluated)),
-                            (
-                                "factors",
-                                arr(r.factors.iter().map(|&f| num(f as f64)).collect()),
-                            ),
-                        ])
-                    })
-                    .collect()),
-            ),
-        ])
-    }
-
-    pub fn to_csv(&self) -> String {
-        let mut out = String::from(
-            "round,train_loss,test_acc,test_loss,up_bytes,down_bytes,up_frames,down_frames,wall_secs,sim_secs,straggler_delay_ms,evaluated\n",
-        );
-        for r in &self.records {
-            out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{:.4},{:.6},{},{}\n",
-                r.round,
-                r.train_loss,
-                r.test_acc,
-                r.test_loss,
-                r.up_bytes,
-                r.down_bytes,
-                r.up_frames,
-                r.down_frames,
-                r.wall_secs,
-                r.sim_secs,
-                r.straggler_delay_ms,
-                r.evaluated as u8
-            ));
-        }
-        out
-    }
-
-    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
-        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
-            .with_context(|| format!("writing {:?}", path.as_ref()))
-    }
-
-    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
-        std::fs::write(path.as_ref(), self.to_csv())
-            .with_context(|| format!("writing {:?}", path.as_ref()))
-    }
-}
-
-pub fn mb(bytes: u64) -> f64 {
-    bytes as f64 / (1024.0 * 1024.0)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn rec(round: usize, acc: f32, up: u64) -> RoundRecord {
-        RoundRecord {
-            round,
-            train_loss: 1.0,
-            test_acc: acc,
-            test_loss: 0.5,
-            up_bytes: up,
-            down_bytes: up,
-            up_frames: 2,
-            down_frames: 2,
-            wall_secs: 0.1,
-            sim_secs: 0.0,
-            straggler_delay_ms: 0,
-            selected: vec![0, 1],
-            factors: vec![0.1, 0.2],
-            evaluated: true,
-        }
-    }
-
-    #[test]
-    fn aggregates() {
-        let mut m = RunMetrics::new("test".into());
-        m.push(rec(1, 0.5, 100));
-        m.push(rec(2, 0.8, 100));
-        m.push(rec(3, 0.7, 100));
-        assert_eq!(m.final_acc(), 0.7);
-        assert_eq!(m.best_acc(), 0.8);
-        assert_eq!(m.total_up_bytes(), 300);
-        assert_eq!(m.total_up_frames(), 6);
-        assert_eq!(m.total_down_frames(), 6);
-        assert_eq!(m.rounds_to_acc(0.75), Some(2));
-        assert_eq!(m.rounds_to_acc(0.95), None);
-        assert_eq!(m.acc_series().len(), 3);
-    }
-
-    #[test]
-    fn json_and_csv_emit() {
-        let mut m = RunMetrics::new("cfg".into());
-        m.push(rec(1, 0.5, 42));
-        let j = m.to_json().to_string();
-        assert!(j.contains("\"final_acc\""));
-        assert!(j.contains("\"up_bytes\":42"));
-        let parsed = Json::parse(&j).unwrap();
-        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 1);
-        let csv = m.to_csv();
-        assert!(csv.starts_with("round,"));
-        assert_eq!(csv.lines().count(), 2);
-    }
-
-    #[test]
-    fn mb_conversion() {
-        assert!((mb(1024 * 1024) - 1.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn virtual_time_aggregates() {
-        // non-simulated runs: no virtual clock, no time-to-accuracy
-        let mut plain = RunMetrics::new("plain".into());
-        plain.push(rec(1, 0.9, 1));
-        assert_eq!(plain.total_sim_secs(), 0.0);
-        assert_eq!(plain.rounds_per_virtual_hour(), None);
-        assert_eq!(plain.sim_secs_to_acc(0.5), None);
-
-        let mut m = RunMetrics::new("sim".into());
-        for (round, acc, secs) in [(1, 0.3, 40.0), (2, 0.6, 50.0), (3, 0.8, 30.0)] {
-            let mut r = rec(round, acc, 10);
-            r.sim_secs = secs;
-            r.straggler_delay_ms = 500;
-            m.push(r);
-        }
-        assert_eq!(m.total_sim_secs(), 120.0);
-        // 3 rounds in 120 virtual seconds = 90 rounds/hour
-        assert!((m.rounds_per_virtual_hour().unwrap() - 90.0).abs() < 1e-9);
-        // 0.6 is first reached at the end of round 2 (40 + 50 virtual s)
-        assert_eq!(m.sim_secs_to_acc(0.5), Some(90.0));
-        assert_eq!(m.sim_secs_to_acc(0.99), None);
-        // the new columns reach both sinks
-        let j = m.to_json().to_string();
-        assert!(j.contains("\"total_sim_secs\":120"));
-        assert!(j.contains("\"sim_secs\":40"));
-        assert!(j.contains("\"straggler_delay_ms\":500"));
-        let csv = m.to_csv();
-        assert!(csv.lines().next().unwrap().contains("sim_secs,straggler_delay_ms"));
-    }
-}
+pub use crate::eval::*;

@@ -38,7 +38,10 @@ pub use relu::Relu;
 use crate::model::registry::{dense_from_schema, model_def, LayerSpec, ModelDef, ModelError};
 use crate::model::{ModelSchema, ParamSet};
 use crate::native::kernels::KernelPolicy;
-use crate::obs::{self, metrics::Counter};
+use crate::obs::{
+    self,
+    metrics::{Counter, Gauge},
+};
 use crate::quant;
 
 /// Which training math a graph runs (mirrors the artifact "mode").
@@ -274,6 +277,11 @@ pub struct LayerGraph {
     /// batch; untouched (one relaxed load) when obs is off
     fwd_us: Vec<&'static Counter>,
     train_us: Vec<&'static Counter>,
+    /// per-quantized-layer ternary zero-fraction gauges
+    /// (`tfed_layer_zero_fraction`, labeled like the timers; `None` for
+    /// unquantized layers), refreshed from each training batch's cached
+    /// pattern only while telemetry is enabled
+    zero_frac: Vec<Option<&'static Gauge>>,
 }
 
 impl LayerGraph {
@@ -322,6 +330,7 @@ impl LayerGraph {
         }
         let fwd_us = layer_timers("tfed_layer_fwd_us_total", &layers);
         let train_us = layer_timers("tfed_layer_train_us_total", &layers);
+        let zero_frac = layer_zero_gauges(&layers);
         Ok(LayerGraph {
             layers,
             mode,
@@ -332,6 +341,7 @@ impl LayerGraph {
             classes: def.schema.num_classes,
             fwd_us,
             train_us,
+            zero_frac,
         })
     }
 
@@ -503,6 +513,17 @@ impl LayerGraph {
             acts.push(out);
             caches.push(cache);
         }
+        // QuantSlots telemetry point: each quantized layer's ternary
+        // zero fraction, from the pattern the forward already computed —
+        // no extra quantization work, one relaxed load when off.
+        if obs::telemetry::enabled() {
+            for (li, cache) in caches.iter().enumerate() {
+                if let (Some(g), false) = (self.zero_frac[li], cache.pattern.is_empty()) {
+                    let zeros = cache.pattern.iter().filter(|&&v| v == 0).count();
+                    g.set(zeros as f64 / cache.pattern.len() as f64);
+                }
+            }
+        }
 
         // ---- masked softmax-CE loss + dlogits (seed-identical) ----
         let classes = self.classes;
@@ -551,6 +572,23 @@ fn layer_timers(base: &str, layers: &[Box<dyn Layer>]) -> Vec<&'static Counter> 
         .iter()
         .enumerate()
         .map(|(i, l)| obs::metrics::counter(&format!("{base}{{layer=\"{i}.{}\"}}", l.name())))
+        .collect()
+}
+
+/// Resolve per-layer zero-fraction gauges — only where the layer owns a
+/// [`QuantSlot`] (unquantized layers have no ternary pattern to report).
+fn layer_zero_gauges(layers: &[Box<dyn Layer>]) -> Vec<Option<&'static Gauge>> {
+    layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            l.quant_slot().map(|_| {
+                obs::metrics::gauge(&format!(
+                    "tfed_layer_zero_fraction{{layer=\"{i}.{}\"}}",
+                    l.name()
+                ))
+            })
+        })
         .collect()
 }
 

@@ -1,0 +1,187 @@
+//! Minimal blocking HTTP endpoint for live observability (std::net only).
+//!
+//! Toggled by `--metrics-addr HOST:PORT` on `tfed run` / `tfed serve`;
+//! a first concrete step toward the ROADMAP's daemon control plane.
+//! Serves, while the run is in flight:
+//!
+//! * `GET /metrics` — the obs registry's Prometheus text
+//!   [`exposition`](crate::obs::metrics::exposition)
+//! * `GET /telemetry` — a JSON tail of the most recent
+//!   learning-dynamics records ([`crate::obs::telemetry`])
+//! * `GET /` — a one-line index
+//!
+//! The server is a single accept thread handling one connection at a
+//! time — scrape traffic, not a web service. Port 0 binds an ephemeral
+//! port; the resolved address is printed (and flushed) by the CLI as
+//! `metrics endpoint on http://ADDR` so launcher scripts and CI can
+//! parse it. Observability never steers the run: the endpoint only
+//! reads registry/telemetry state and cannot mutate anything.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// How many telemetry records the live `/telemetry` tail returns.
+const TAIL_RECORDS: usize = 256;
+
+/// Accept-loop poll interval (shutdown latency bound).
+const POLL: Duration = Duration::from_millis(25);
+
+/// A running observability endpoint. Dropping it (or calling
+/// [`ObsServer::shutdown`]) stops the accept loop and joins the thread.
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// The bound address (resolved — port 0 becomes the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Bind `addr` and start serving in a background thread.
+pub fn serve(addr: &str) -> Result<ObsServer> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let addr = listener.local_addr().context("resolving metrics endpoint address")?;
+    listener.set_nonblocking(true).context("metrics endpoint set_nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_thread = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("tfed-obs-http".into())
+        .spawn(move || accept_loop(listener, &stop_thread))
+        .context("spawning metrics endpoint thread")?;
+    Ok(ObsServer { addr, stop, handle: Some(handle) })
+}
+
+fn accept_loop(listener: TcpListener, stop: &AtomicBool) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // one scrape at a time; a broken client never kills the run
+                let _ = handle_conn(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let path = read_request_path(&mut stream)?;
+    let (status, content_type, body) = respond(&path);
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Read the request head (bounded) and return the request-target path.
+fn read_request_path(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+    }
+    let line = buf.split(|&b| b == b'\r' || b == b'\n').next().unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    // "GET /path HTTP/1.1" → "/path"; anything malformed maps to 404
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    if method != "GET" {
+        return Ok(String::new());
+    }
+    Ok(target.split('?').next().unwrap_or("").to_string())
+}
+
+/// Route a request path to `(status line, content type, body)`. Pure —
+/// unit-tested without sockets.
+pub(crate) fn respond(path: &str) -> (&'static str, &'static str, String) {
+    match path {
+        "/metrics" => {
+            ("200 OK", "text/plain; version=0.0.4", crate::obs::metrics::exposition())
+        }
+        "/telemetry" => {
+            let recs = crate::obs::telemetry::tail(TAIL_RECORDS);
+            let body = crate::util::json::obj(vec![
+                (
+                    "v",
+                    crate::util::json::num(crate::obs::telemetry::SCHEMA_VERSION as f64),
+                ),
+                (
+                    "records",
+                    crate::util::json::arr(recs.iter().map(|r| r.to_json()).collect()),
+                ),
+            ]);
+            ("200 OK", "application/json", body.to_string())
+        }
+        "/" => (
+            "200 OK",
+            "text/plain",
+            "tfed observability endpoint: GET /metrics (Prometheus text), \
+             GET /telemetry (JSON tail)\n"
+                .to_string(),
+        ),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_shaped_right() {
+        let (status, ct, _) = respond("/metrics");
+        assert_eq!(status, "200 OK");
+        assert!(ct.starts_with("text/plain"));
+        let (status, ct, body) = respond("/telemetry");
+        assert_eq!(status, "200 OK");
+        assert_eq!(ct, "application/json");
+        let doc = crate::util::json::Json::parse(&body).unwrap();
+        assert_eq!(doc.get("v").unwrap().as_usize().unwrap() as u64, 1);
+        assert!(doc.get("records").unwrap().as_arr().is_ok());
+        let (status, _, _) = respond("/nope");
+        assert_eq!(status, "404 Not Found");
+    }
+}

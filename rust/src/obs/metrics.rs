@@ -12,7 +12,10 @@
 //!
 //! Names may carry inline labels (`tfed_frames_total{kind="data"}`);
 //! the label block is spliced after histogram suffixes so the emitted
-//! series stay well-formed.
+//! series stay well-formed. Names are validated at registration (typed
+//! [`MetricError`]; the `try_*` variants return it, the plain variants
+//! panic on it) and label values are escaped (`\`, `"`, newline) at
+//! exposition, so a scrape can never see malformed Prometheus text.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -118,87 +121,237 @@ impl Histogram {
     }
 }
 
+#[derive(Clone, Copy)]
 enum Metric {
     Counter(&'static Counter),
     Gauge(&'static Gauge),
     Histogram(&'static Histogram),
 }
 
-/// Registration-ordered registry; locked only to register or scrape.
-static REGISTRY: Mutex<Vec<(String, Metric)>> = Mutex::new(Vec::new());
-
-/// Register (or look up) a counter by name. Same name → same handle.
-pub fn counter(name: &str) -> &'static Counter {
-    let mut reg = REGISTRY.lock().unwrap();
-    for (n, m) in reg.iter() {
-        if n == name {
-            match m {
-                Metric::Counter(c) => return c,
-                _ => panic!("metric {name:?} already registered with a different type"),
-            }
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
         }
     }
-    let c: &'static Counter = Box::leak(Box::new(Counter::new()));
-    reg.push((name.to_string(), Metric::Counter(c)));
-    c
+}
+
+/// Why a metric could not be registered.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MetricError {
+    /// The name (or its inline label block) is not valid Prometheus
+    /// syntax; emitting it would corrupt the whole exposition.
+    InvalidName { name: String, reason: String },
+    /// The name is already registered as a different instrument kind.
+    TypeMismatch { name: String, registered: &'static str, requested: &'static str },
+}
+
+impl std::fmt::Display for MetricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricError::InvalidName { name, reason } => {
+                write!(f, "invalid metric name {name:?}: {reason}")
+            }
+            MetricError::TypeMismatch { name, registered, requested } => write!(
+                f,
+                "metric {name:?} already registered as a {registered}, requested as a {requested}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MetricError {}
+
+/// One registered series: identity string, parsed name parts (label
+/// values stored raw — escaped at exposition), and the instrument.
+struct Entry {
+    name: String,
+    base: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// Registration-ordered registry; locked only to register or scrape.
+static REGISTRY: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+fn invalid(name: &str, reason: impl Into<String>) -> MetricError {
+    MetricError::InvalidName { name: name.to_string(), reason: reason.into() }
+}
+
+/// Validate `name{label="value",...}` and split it into the base name
+/// and raw (unescaped) label pairs.
+fn parse_name(name: &str) -> Result<(String, Vec<(String, String)>), MetricError> {
+    let (base, label_block) = match name.find('{') {
+        Some(i) => {
+            let rest = &name[i..];
+            let inner = rest
+                .strip_prefix('{')
+                .and_then(|r| r.strip_suffix('}'))
+                .ok_or_else(|| invalid(name, "label block must end with '}'"))?;
+            (&name[..i], Some(inner))
+        }
+        None => (name, None),
+    };
+    let mut chars = base.chars();
+    match chars.next() {
+        None => return Err(invalid(name, "empty metric name")),
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        Some(c) => return Err(invalid(name, format!("name starts with {c:?}"))),
+    }
+    if let Some(c) = chars.find(|&c| !(c.is_ascii_alphanumeric() || c == '_' || c == ':')) {
+        return Err(invalid(name, format!("name contains {c:?}")));
+    }
+    let labels = match label_block {
+        None => Vec::new(),
+        Some(inner) => parse_labels(name, inner)?,
+    };
+    Ok((base.to_string(), labels))
+}
+
+/// Parse `key="value",key="value"`; values may escape `\\`, `\"`, `\n`.
+fn parse_labels(name: &str, inner: &str) -> Result<Vec<(String, String)>, MetricError> {
+    let mut labels = Vec::new();
+    let mut it = inner.chars().peekable();
+    loop {
+        let mut key = String::new();
+        while let Some(&c) = it.peek() {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                key.push(c);
+                it.next();
+            } else {
+                break;
+            }
+        }
+        if key.is_empty() || key.starts_with(|c: char| c.is_ascii_digit()) {
+            return Err(invalid(name, "label name must match [a-zA-Z_][a-zA-Z0-9_]*"));
+        }
+        if it.next() != Some('=') || it.next() != Some('"') {
+            return Err(invalid(name, format!("label {key:?} needs =\"value\"")));
+        }
+        let mut value = String::new();
+        loop {
+            match it.next() {
+                None => return Err(invalid(name, format!("unterminated value for {key:?}"))),
+                Some('"') => break,
+                Some('\\') => match it.next() {
+                    Some('\\') => value.push('\\'),
+                    Some('"') => value.push('"'),
+                    Some('n') => value.push('\n'),
+                    other => {
+                        return Err(invalid(
+                            name,
+                            format!("bad escape {other:?} in value of {key:?}"),
+                        ))
+                    }
+                },
+                Some(c) => value.push(c),
+            }
+        }
+        labels.push((key, value));
+        match it.next() {
+            None => break,
+            Some(',') => continue,
+            Some(c) => return Err(invalid(name, format!("expected ',' after a label, got {c:?}"))),
+        }
+    }
+    Ok(labels)
+}
+
+/// Look `name` up, or insert the instrument `make` builds. Validates the
+/// name on every call (cheap; registration is off the hot path).
+fn lookup_or_insert(name: &str, make: fn() -> Metric) -> Result<Metric, MetricError> {
+    let (base, labels) = parse_name(name)?;
+    let mut reg = REGISTRY.lock().unwrap();
+    if let Some(e) = reg.iter().find(|e| e.name == name) {
+        return Ok(e.metric);
+    }
+    let metric = make();
+    reg.push(Entry { name: name.to_string(), base, labels, metric });
+    Ok(metric)
+}
+
+/// Register (or look up) a counter by name. Same name → same handle.
+pub fn try_counter(name: &str) -> Result<&'static Counter, MetricError> {
+    match lookup_or_insert(name, || Metric::Counter(Box::leak(Box::new(Counter::new()))))? {
+        Metric::Counter(c) => Ok(c),
+        other => Err(MetricError::TypeMismatch {
+            name: name.to_string(),
+            registered: other.kind(),
+            requested: "counter",
+        }),
+    }
 }
 
 /// Register (or look up) a gauge by name. Same name → same handle.
-pub fn gauge(name: &str) -> &'static Gauge {
-    let mut reg = REGISTRY.lock().unwrap();
-    for (n, m) in reg.iter() {
-        if n == name {
-            match m {
-                Metric::Gauge(g) => return g,
-                _ => panic!("metric {name:?} already registered with a different type"),
-            }
-        }
+pub fn try_gauge(name: &str) -> Result<&'static Gauge, MetricError> {
+    match lookup_or_insert(name, || Metric::Gauge(Box::leak(Box::new(Gauge::new()))))? {
+        Metric::Gauge(g) => Ok(g),
+        other => Err(MetricError::TypeMismatch {
+            name: name.to_string(),
+            registered: other.kind(),
+            requested: "gauge",
+        }),
     }
-    let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
-    reg.push((name.to_string(), Metric::Gauge(g)));
-    g
 }
 
 /// Register (or look up) a histogram by name. Same name → same handle.
+pub fn try_histogram(name: &str) -> Result<&'static Histogram, MetricError> {
+    match lookup_or_insert(name, || {
+        Metric::Histogram(Box::leak(Box::new(Histogram::new())))
+    })? {
+        Metric::Histogram(h) => Ok(h),
+        other => Err(MetricError::TypeMismatch {
+            name: name.to_string(),
+            registered: other.kind(),
+            requested: "histogram",
+        }),
+    }
+}
+
+/// Infallible [`try_counter`]: instrumentation sites use literal names,
+/// so a bad name is a programming error — panic with the typed message.
+pub fn counter(name: &str) -> &'static Counter {
+    try_counter(name).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Infallible [`try_gauge`] (panics with the typed [`MetricError`]).
+pub fn gauge(name: &str) -> &'static Gauge {
+    try_gauge(name).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Infallible [`try_histogram`] (panics with the typed [`MetricError`]).
 pub fn histogram(name: &str) -> &'static Histogram {
-    let mut reg = REGISTRY.lock().unwrap();
-    for (n, m) in reg.iter() {
-        if n == name {
-            match m {
-                Metric::Histogram(h) => return h,
-                _ => panic!("metric {name:?} already registered with a different type"),
-            }
+    try_histogram(name).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Escape a label value for the Prometheus text format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
         }
     }
-    let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
-    reg.push((name.to_string(), Metric::Histogram(h)));
-    h
+    out
 }
 
-/// Split `name{labels}` into (`name`, `labels`); labels may be empty.
-fn split_labels(name: &str) -> (&str, &str) {
-    match name.find('{') {
-        Some(i) => (&name[..i], name[i..].trim_start_matches('{').trim_end_matches('}')),
-        None => (name, ""),
-    }
-}
-
-/// Series name with a suffix and an extra label spliced into the block.
-fn series(base: &str, suffix: &str, labels: &str, extra: &str) -> String {
-    let mut all = String::new();
-    if !labels.is_empty() {
-        all.push_str(labels);
-    }
+/// Series name with a suffix and an extra (pre-rendered, trusted) label
+/// spliced into the block; stored values are escaped here.
+fn series(base: &str, suffix: &str, labels: &[(String, String)], extra: &str) -> String {
+    let mut all: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
     if !extra.is_empty() {
-        if !all.is_empty() {
-            all.push(',');
-        }
-        all.push_str(extra);
+        all.push(extra.to_string());
     }
     if all.is_empty() {
         format!("{base}{suffix}")
     } else {
-        format!("{base}{suffix}{{{all}}}")
+        format!("{base}{suffix}{{{}}}", all.join(","))
     }
 }
 
@@ -209,13 +362,9 @@ pub fn exposition() -> String {
     let reg = REGISTRY.lock().unwrap();
     let mut out = String::new();
     let mut typed: Vec<&str> = Vec::new();
-    for (name, metric) in reg.iter() {
-        let (base, labels) = split_labels(name);
-        let kind = match metric {
-            Metric::Counter(_) => "counter",
-            Metric::Gauge(_) => "gauge",
-            Metric::Histogram(_) => "histogram",
-        };
+    for entry in reg.iter() {
+        let (base, labels, metric) = (entry.base.as_str(), &entry.labels, &entry.metric);
+        let kind = metric.kind();
         if !typed.contains(&base) {
             let _ = writeln!(out, "# TYPE {base} {kind}");
             typed.push(base);
@@ -320,5 +469,56 @@ mod tests {
         assert!(text.contains("# TYPE test_obs_labeled_bytes histogram"));
         assert!(text.contains("test_obs_labeled_bytes_bucket{kind=\"data\",le=\"+Inf\"} 1"));
         assert!(text.contains("test_obs_labeled_bytes_sum{kind=\"data\"} 2"));
+    }
+
+    #[test]
+    fn bad_names_are_typed_errors() {
+        for bad in [
+            "",
+            "9starts_with_digit",
+            "has space",
+            "has-dash_total",
+            "name{unclosed=\"x\"",
+            "name{=\"x\"}",
+            "name{k=x}",
+            "name{k=\"unterminated}",
+            "name{k=\"v\" j=\"w\"}",
+            "name{k=\"bad\\q\"}",
+        ] {
+            match try_counter(bad) {
+                Err(MetricError::InvalidName { name, .. }) => assert_eq!(name, bad),
+                Err(other) => panic!("{bad:?} should be InvalidName, got {other}"),
+                Ok(_) => panic!("{bad:?} should have been rejected"),
+            }
+        }
+    }
+
+    #[test]
+    fn type_mismatch_is_a_typed_error() {
+        try_counter("test_obs_kind_clash_total").unwrap();
+        match try_gauge("test_obs_kind_clash_total") {
+            Err(MetricError::TypeMismatch { registered, requested, .. }) => {
+                assert_eq!((registered, requested), ("counter", "gauge"));
+            }
+            Err(other) => panic!("expected TypeMismatch, got {other}"),
+            Ok(_) => panic!("kind clash should not resolve"),
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped_at_exposition() {
+        // registered with input-side escapes: value is `pa\th "q"` + newline
+        let c = counter("test_obs_escape_total{path=\"pa\\\\th \\\"q\\\"\\n\"}");
+        c.inc();
+        let text = exposition();
+        // emitted with the Prometheus escapes, newline as literal \n
+        assert!(
+            text.contains("test_obs_escape_total{path=\"pa\\\\th \\\"q\\\"\\n\"} 1"),
+            "missing escaped series in {text:?}"
+        );
+        // the raw newline in the value never splits the exposition line
+        let series_lines =
+            text.lines().filter(|l| l.starts_with("test_obs_escape_total{")).count();
+        assert_eq!(series_lines, 1);
     }
 }

@@ -1,27 +1,38 @@
-//! Observability: metrics registry + phase tracing + round profiler.
+//! Observability: metrics registry + phase tracing + learning telemetry.
 //!
-//! The measurement substrate for the whole stack (DESIGN.md §11): a
+//! The measurement substrate for the whole stack (DESIGN.md §11–12): a
 //! lock-cheap [`metrics`] registry (counters / gauges / log2
-//! histograms, Prometheus text exposition via `--metrics-out`) and
+//! histograms, Prometheus text exposition via `--metrics-out`),
 //! span-based [`trace`] phase tracing (Chrome trace-event JSON via
 //! `--trace-out`, Perfetto-loadable, plus an end-of-run per-phase
-//! summary table on stderr).
+//! summary table on stderr), per-round learning-dynamics [`telemetry`]
+//! (schema-versioned JSONL via `--telemetry-out`), a live [`http`]
+//! endpoint (`--metrics-addr`, `/metrics` + `/telemetry`), and the
+//! offline [`report`] renderer behind `tfed report`.
 //!
 //! Standing contract: **disabled (the default) must be free.** No RNG
 //! draws, no wire-byte changes, and near-zero overhead — every
 //! instrumentation site is behind the [`trace::enabled`] /
-//! [`enabled`] fast path (one relaxed atomic load) or a no-op guard.
-//! Enabled runs produce byte-identical results, summaries, and
-//! bundles too (observability reads, never steers); only the separate
-//! obs artifacts are added. Regression-tested in `tests/obs_e2e.rs`,
-//! overhead-asserted in the `--train` bench.
+//! [`enabled`] / [`telemetry::enabled`] fast path (one relaxed atomic
+//! load) or a no-op guard. Enabled runs produce byte-identical results,
+//! summaries, and bundles too (observability reads, never steers); only
+//! the separate obs artifacts are added. Regression-tested in
+//! `tests/obs_e2e.rs` + `tests/telemetry_e2e.rs`, overhead-asserted in
+//! the `--train` bench.
+//!
+//! Sink I/O failures at shutdown are **non-fatal**: a run that trained
+//! for an hour must not exit nonzero because a trace path was
+//! unwritable. Failures surface as [`ObsSinkError`] warnings through
+//! [`crate::util::logging`] (with a one-time hint) and `finish` returns
+//! them for callers that want to inspect.
 
+pub mod http;
 pub mod metrics;
+pub mod report;
+pub mod telemetry;
 pub mod trace;
 
 use std::io::Write as _;
-
-use anyhow::{Context, Result};
 
 /// Open a phase span for the current scope (no-op unless obs is
 /// enabled or `TFED_LOG=trace`):
@@ -44,34 +55,113 @@ pub fn enable() {
     trace::set_enabled(true);
 }
 
+/// Turn on learning-dynamics telemetry (and the span/metrics substrate
+/// it annotates). Named `--telemetry-out` / `--metrics-addr` paths do
+/// this; nothing else does.
+pub fn enable_telemetry() {
+    enable();
+    telemetry::set_enabled(true);
+}
+
 /// Is observability collection enabled?
 #[inline]
 pub fn enabled() -> bool {
     trace::enabled()
 }
 
+/// A sink that could not be written at shutdown (non-fatal; see
+/// [`finish`]).
+#[derive(Debug)]
+pub struct ObsSinkError {
+    /// which artifact ("trace" | "metrics" | "telemetry")
+    pub sink: &'static str,
+    pub path: String,
+    pub source: std::io::Error,
+}
+
+impl std::fmt::Display for ObsSinkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "obs {} sink {:?}: {}", self.sink, self.path, self.source)
+    }
+}
+
+impl std::error::Error for ObsSinkError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
+
+/// End-of-run artifact sinks for [`finish`] (None = not requested).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sinks<'a> {
+    pub trace_out: Option<&'a str>,
+    pub metrics_out: Option<&'a str>,
+    pub telemetry_out: Option<&'a str>,
+    /// suppress the per-phase summary table
+    pub quiet: bool,
+}
+
 /// End-of-run export: drain spans, print the per-phase summary table
 /// (stderr, suppressed by `quiet`), and write the requested artifacts.
 /// No-op when collection was never enabled.
-pub fn finish(trace_out: Option<&str>, metrics_out: Option<&str>, quiet: bool) -> Result<()> {
-    if !trace::enabled() {
-        return Ok(());
+///
+/// Sink I/O failures are collected, not propagated: each failure is
+/// logged as a warning (plus a one-time hint that obs sinks are
+/// non-fatal) and returned. The run's own exit status never depends on
+/// an observability artifact.
+pub fn finish(sinks: &Sinks<'_>) -> Vec<ObsSinkError> {
+    let mut errs = Vec::new();
+    if trace::enabled() {
+        let events = trace::take_events();
+        if !sinks.quiet {
+            print_summary(&events);
+        }
+        if let Some(path) = sinks.trace_out {
+            match std::fs::write(path, trace::chrome_trace_json(&events)) {
+                Ok(()) => {
+                    crate::info!("wrote Chrome trace ({} spans) to {path}", events.len())
+                }
+                Err(source) => {
+                    errs.push(ObsSinkError { sink: "trace", path: path.into(), source })
+                }
+            }
+        }
+        if let Some(path) = sinks.metrics_out {
+            match std::fs::write(path, metrics::exposition()) {
+                Ok(()) => crate::info!("wrote metrics exposition to {path}"),
+                Err(source) => {
+                    errs.push(ObsSinkError { sink: "metrics", path: path.into(), source })
+                }
+            }
+        }
     }
-    let events = trace::take_events();
-    if !quiet {
-        print_summary(&events);
+    if telemetry::enabled() {
+        if let Some(path) = sinks.telemetry_out {
+            let recs = telemetry::take();
+            match std::fs::write(path, telemetry::to_jsonl(&recs)) {
+                Ok(()) => {
+                    crate::info!("wrote {} telemetry records to {path}", recs.len())
+                }
+                Err(source) => {
+                    errs.push(ObsSinkError { sink: "telemetry", path: path.into(), source })
+                }
+            }
+        }
     }
-    if let Some(path) = trace_out {
-        std::fs::write(path, trace::chrome_trace_json(&events))
-            .with_context(|| format!("writing trace to {path}"))?;
-        crate::info!("wrote Chrome trace ({} spans) to {path}", events.len());
+    for e in &errs {
+        warn_sink_error(e);
     }
-    if let Some(path) = metrics_out {
-        std::fs::write(path, metrics::exposition())
-            .with_context(|| format!("writing metrics to {path}"))?;
-        crate::info!("wrote metrics exposition to {path}");
-    }
-    Ok(())
+    errs
+}
+
+/// Surface a sink failure: always a warning, plus a one-time hint that
+/// obs artifacts are best-effort (mirrors the `TFED_LOG` parse warning).
+fn warn_sink_error(e: &ObsSinkError) {
+    static HINT: std::sync::Once = std::sync::Once::new();
+    HINT.call_once(|| {
+        crate::warn!("obs sinks are best-effort: the run's results are unaffected, but the artifact below is missing");
+    });
+    crate::warn!("{e}");
 }
 
 /// Per-phase summary table on stderr (count / total ms / mean µs).

@@ -1,0 +1,286 @@
+//! Offline paper-metrics reporter: `tfed report <bundle|telemetry ...>`.
+//!
+//! Renders paper-style outputs from run artifacts alone — no re-run, no
+//! model loading beyond the registry's schemas:
+//!
+//! * from a scenario **results bundle** (the JSON `tfed run <manifest>`
+//!   writes): a Table-IV-style communication-cost / compression-ratio
+//!   table (measured wire bytes vs the dense fp32 equivalent of the same
+//!   frame count) and per-cell accuracy-vs-MB-transferred series;
+//! * from a **telemetry JSONL** sink (`--telemetry-out`, DESIGN.md §12):
+//!   quantization-factor-convergence series plus sparsity / divergence
+//!   trajectories.
+//!
+//! Everything is emitted as markdown with embedded CSV blocks, so the
+//! output is simultaneously human-readable and machine-parsable. The
+//! dense equivalent is `frames × param_count(model) × 4` bytes: what the
+//! same exchange pattern would have cost shipping raw fp32 tensors; the
+//! measured side includes real frame headers, so ratios are honest.
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::mb;
+use crate::util::json::Json;
+
+/// Bytes per parameter for the dense fp32 reference payload.
+const DENSE_BYTES_PER_PARAM: u64 = 4;
+
+/// Render one artifact file (auto-detected) as a markdown report.
+pub fn render_file(path: &str) -> Result<String> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading artifact {path:?}"))?;
+    render_text(path, &text)
+}
+
+/// Render artifact content: scenario bundles are JSON objects with a
+/// `cells` array; telemetry sinks are JSONL with `v`/`round` records.
+pub fn render_text(name: &str, text: &str) -> Result<String> {
+    let trimmed = text.trim_start();
+    if trimmed.is_empty() {
+        bail!("artifact {name:?} is empty");
+    }
+    if let Ok(doc) = Json::parse(text) {
+        if doc.get("cells").is_some() {
+            return report_bundle(name, &doc);
+        }
+    }
+    // not a single JSON document with cells → try JSONL telemetry
+    report_telemetry(name, text)
+}
+
+// -- scenario bundles -------------------------------------------------------
+
+/// Table-IV-style communication table + accuracy-vs-MB series.
+pub fn report_bundle(name: &str, doc: &Json) -> Result<String> {
+    let cells = doc
+        .get("cells")
+        .and_then(|c| c.as_arr().ok())
+        .with_context(|| format!("bundle {name:?} has no cells array"))?;
+    if cells.is_empty() {
+        bail!("bundle {name:?} has zero cells");
+    }
+    let scenario =
+        doc.get("scenario").and_then(|s| s.as_str().ok()).unwrap_or("(unnamed)").to_string();
+    let mut out = String::new();
+    out.push_str(&format!("# tfed report — scenario `{scenario}` ({name})\n\n"));
+
+    // Table IV analogue: measured wire cost vs dense fp32 equivalent.
+    out.push_str("## Communication cost and compression ratio (Table IV analogue)\n\n");
+    out.push_str(
+        "| cell | model | params | up MB | down MB | dense MB | ratio | final acc |\n",
+    );
+    out.push_str("|---|---|---:|---:|---:|---:|---:|---:|\n");
+    let mut csv = String::from(
+        "cell,model,params,up_bytes,down_bytes,dense_bytes,compression_ratio,final_acc\n",
+    );
+    for cell in cells {
+        let row = CellRow::parse(cell)?;
+        let (dense_mb_s, ratio_s, dense_b, ratio_v) = match row.dense_bytes() {
+            Some(d) => {
+                let ratio = d as f64 / (row.up_bytes + row.down_bytes).max(1) as f64;
+                (format!("{:.3}", mb(d)), format!("{ratio:.2}x"), d.to_string(), format!("{ratio:.4}"))
+            }
+            // model not in the native registry (e.g. PJRT-only): no
+            // schema to price the dense payload from
+            None => ("-".into(), "-".into(), String::new(), String::new()),
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.3} | {:.3} | {} | {} | {:.4} |\n",
+            row.label,
+            row.model,
+            row.params.map_or("-".into(), |p| p.to_string()),
+            mb(row.up_bytes),
+            mb(row.down_bytes),
+            dense_mb_s,
+            ratio_s,
+            row.final_acc,
+        ));
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            csv_field(&row.label),
+            row.model,
+            row.params.map_or(String::new(), |p| p.to_string()),
+            row.up_bytes,
+            row.down_bytes,
+            dense_b,
+            ratio_v,
+            row.final_acc,
+        ));
+    }
+    out.push_str("\n```csv\n");
+    out.push_str(&csv);
+    out.push_str("```\n\n");
+
+    // Fig. 6/10 analogue on the communication axis.
+    out.push_str("## Accuracy vs MB transferred\n\n```csv\n");
+    out.push_str("cell,round,cum_up_mb,cum_down_mb,test_acc\n");
+    for cell in cells {
+        let row = CellRow::parse(cell)?;
+        let rounds = cell
+            .get("metrics")
+            .and_then(|m| m.get("rounds"))
+            .and_then(|r| r.as_arr().ok())
+            .with_context(|| format!("cell {:?} has no metrics.rounds", row.label))?;
+        let (mut up, mut down) = (0u64, 0u64);
+        for r in rounds {
+            up += r.get("up_bytes").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+            down += r.get("down_bytes").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+            let evaluated =
+                r.get("evaluated").and_then(|v| v.as_bool().ok()).unwrap_or(false);
+            let acc = r.get("test_acc").and_then(|v| v.as_f64().ok());
+            if let (true, Some(acc)) = (evaluated, acc) {
+                let round = r.get("round").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                out.push_str(&format!(
+                    "{},{},{:.6},{:.6},{}\n",
+                    csv_field(&row.label),
+                    round,
+                    mb(up),
+                    mb(down),
+                    acc
+                ));
+            }
+        }
+    }
+    out.push_str("```\n");
+    Ok(out)
+}
+
+/// The per-cell fields the communication table needs.
+struct CellRow {
+    label: String,
+    model: String,
+    params: Option<usize>,
+    up_bytes: u64,
+    down_bytes: u64,
+    /// total data frames both directions (one model payload each)
+    frames: u64,
+    final_acc: f64,
+}
+
+impl CellRow {
+    fn parse(cell: &Json) -> Result<CellRow> {
+        let label =
+            cell.get("label").and_then(|v| v.as_str().ok()).unwrap_or("(cell)").to_string();
+        let model =
+            cell.get("model").and_then(|v| v.as_str().ok()).unwrap_or("?").to_string();
+        let params = crate::model::registry::model_def(&model)
+            .ok()
+            .map(|d| d.schema.param_count());
+        let metrics = cell
+            .get("metrics")
+            .with_context(|| format!("cell {label:?} has no metrics block"))?;
+        let getn = |k: &str| metrics.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        let frames = metrics
+            .get("rounds")
+            .and_then(|r| r.as_arr().ok())
+            .map(|rs| {
+                rs.iter().fold(0u64, |acc, r| {
+                    acc + r.get("up_frames").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64
+                        + r.get("down_frames").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                            as u64
+                })
+            })
+            .unwrap_or(0);
+        Ok(CellRow {
+            label,
+            model,
+            params,
+            up_bytes: getn("total_up_bytes") as u64,
+            down_bytes: getn("total_down_bytes") as u64,
+            frames,
+            final_acc: getn("final_acc"),
+        })
+    }
+
+    /// Dense fp32 equivalent of the cell's exchange pattern, if the
+    /// model schema is known.
+    fn dense_bytes(&self) -> Option<u64> {
+        self.params.map(|p| self.frames * p as u64 * DENSE_BYTES_PER_PARAM)
+    }
+}
+
+// -- telemetry sinks --------------------------------------------------------
+
+/// Factor-convergence + sparsity/divergence series from a JSONL sink.
+pub fn report_telemetry(name: &str, text: &str) -> Result<String> {
+    let mut recs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = Json::parse(line)
+            .with_context(|| format!("{name}:{}: bad telemetry JSON", lineno + 1))?;
+        let v = doc.get("v").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+        if v != crate::obs::telemetry::SCHEMA_VERSION {
+            bail!(
+                "{name}:{}: telemetry schema v{v}, this build reads v{}",
+                lineno + 1,
+                crate::obs::telemetry::SCHEMA_VERSION
+            );
+        }
+        recs.push(doc);
+    }
+    if recs.is_empty() {
+        bail!("telemetry sink {name:?} holds no records");
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# tfed report — telemetry ({name}, {} records, schema v{})\n\n",
+        recs.len(),
+        crate::obs::telemetry::SCHEMA_VERSION
+    ));
+    out.push_str("## Quantization-factor convergence (Fig. 12/13 analogue)\n\n```csv\n");
+    out.push_str("cell,lane,round,layer,factor\n");
+    for r in &recs {
+        let (cell, lane, round) = rec_key(r);
+        if let Some(fs) = r.get("factors").and_then(|f| f.as_arr().ok()) {
+            for (k, f) in fs.iter().enumerate() {
+                if let Ok(v) = f.as_f64() {
+                    out.push_str(&format!(
+                        "{},{lane},{round},{k},{v}\n",
+                        csv_field(&cell)
+                    ));
+                }
+            }
+        }
+    }
+    out.push_str("```\n\n## Sparsity and weight divergence\n\n```csv\n");
+    out.push_str(
+        "cell,lane,round,sparsity,unbias_residual,weight_divergence,rel_divergence,cum_up_bytes,cum_down_bytes\n",
+    );
+    for r in &recs {
+        let (cell, lane, round) = rec_key(r);
+        let g = |k: &str| {
+            r.get(k).and_then(|v| v.as_f64().ok()).map_or(String::new(), |v| v.to_string())
+        };
+        out.push_str(&format!(
+            "{},{lane},{round},{},{},{},{},{},{}\n",
+            csv_field(&cell),
+            g("sparsity"),
+            g("unbias_residual"),
+            g("weight_divergence"),
+            g("rel_divergence"),
+            g("cum_up_bytes"),
+            g("cum_down_bytes"),
+        ));
+    }
+    out.push_str("```\n");
+    Ok(out)
+}
+
+fn rec_key(r: &Json) -> (String, u64, u64) {
+    (
+        r.get("cell").and_then(|v| v.as_str().ok()).unwrap_or("").to_string(),
+        r.get("lane").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
+        r.get("round").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
+    )
+}
+
+/// Quote a CSV field if it holds a comma or quote.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}

@@ -1,0 +1,221 @@
+//! Learning-dynamics telemetry: one structured record per round per
+//! grid cell (DESIGN.md §12).
+//!
+//! The paper's central claims are trajectory claims — convergence of the
+//! self-learned quantization factors (Fig. 12/13), unbiasedness of FTTQ
+//! updates (§IV-B), reduced weight divergence on non-IID data — so this
+//! sink records exactly those quantities per round: per-layer
+//! quantization factors (FTTQ mean w^q, TTQ wp/wn), ternary sparsity
+//! (zero fraction, overall and per layer), the update-unbiasedness
+//! residual, L2 weight divergence of the quantized projection against
+//! the server's dense fp32 state (the "shadow accumulator" — the
+//! orchestrator's `global` is already the full-precision reference), the
+//! train/test metrics, and cumulative up/down wire bytes from
+//! `LinkStats`, plus the cumulative virtual clock for sim runs.
+//!
+//! Records accumulate in a process-global store and are drained to an
+//! append-only, schema-versioned JSONL file ([`SCHEMA_VERSION`], one
+//! JSON object per line) at `obs::finish`, sorted by `(lane, round)` so
+//! parallel `--jobs` grids serialize deterministically. A live tail is
+//! served by [`crate::obs::http`] while a run is in flight.
+//!
+//! Standing contract: disabled (the default) this module costs one
+//! relaxed atomic load per site ([`enabled`]), draws no RNG, and leaves
+//! every existing artifact byte-identical; enabled it only ever adds the
+//! separate sink file — never a bundle byte (`tests/telemetry_e2e.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::model::ParamSet;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Version of the JSONL record schema; bumped whenever a field is
+/// renamed, removed, or changes meaning (additions are backward
+/// compatible and do not bump it). Every record carries it as `"v"`.
+pub const SCHEMA_VERSION: u64 = 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDS: Mutex<Vec<TelemetryRecord>> = Mutex::new(Vec::new());
+
+/// Is telemetry collection on? One relaxed load — the whole cost of the
+/// disabled path at every instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn record collection on or off (process-global).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Drop all collected records (tests; does not change enablement).
+pub fn clear() {
+    RECORDS.lock().unwrap().clear();
+}
+
+/// One per-round learning-dynamics record (schema v1, DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct TelemetryRecord {
+    /// obs lane = scenario grid-cell index (0 for standalone runs)
+    pub lane: u32,
+    pub round: u64,
+    /// grid-cell label ("" for standalone runs)
+    pub cell: String,
+    pub protocol: String,
+    pub train_loss: f64,
+    /// NaN when the round was not evaluated (emitted as JSON null)
+    pub test_acc: f64,
+    pub test_loss: f64,
+    pub evaluated: bool,
+    /// per-layer quantization factors: T-FedAvg mean w^q per quantized
+    /// layer; TTQ `[wp..., wn...]`; empty for dense protocols
+    pub factors: Vec<f64>,
+    /// zero fraction of the quantized projection, per quantized layer
+    pub layer_zero_fraction: Vec<f64>,
+    /// overall ternary sparsity (zero fraction across all quantized
+    /// elements; 0 for dense protocols)
+    pub sparsity: f64,
+    /// signed mean of (projection − fp32 global) over quantized
+    /// elements — the update-unbiasedness residual (≈0 when eq. 20's
+    /// scaling is unbiased on this weight distribution)
+    pub unbias_residual: f64,
+    /// L2 distance between the quantized projection and the dense fp32
+    /// server state, over quantized layers
+    pub weight_divergence: f64,
+    /// `weight_divergence` normalized by the fp32 norm of the same
+    /// layers (0 when that norm is 0)
+    pub rel_divergence: f64,
+    /// cumulative upstream wire bytes at the end of this round
+    pub cum_up_bytes: u64,
+    pub cum_down_bytes: u64,
+    /// cumulative virtual clock (sim runs; 0 on real transports)
+    pub sim_secs: f64,
+}
+
+impl TelemetryRecord {
+    /// The record as one JSON object (NaN metrics become null).
+    pub fn to_json(&self) -> Json {
+        let fin = |v: f64| if v.is_finite() { num(v) } else { Json::Null };
+        obj(vec![
+            ("v", num(SCHEMA_VERSION as f64)),
+            ("lane", num(self.lane as f64)),
+            ("round", num(self.round as f64)),
+            ("cell", s(&self.cell)),
+            ("protocol", s(&self.protocol)),
+            ("train_loss", fin(self.train_loss)),
+            ("test_acc", fin(self.test_acc)),
+            ("test_loss", fin(self.test_loss)),
+            ("evaluated", Json::Bool(self.evaluated)),
+            ("factors", arr(self.factors.iter().map(|&f| fin(f)).collect())),
+            (
+                "layer_zero_fraction",
+                arr(self.layer_zero_fraction.iter().map(|&f| fin(f)).collect()),
+            ),
+            ("sparsity", fin(self.sparsity)),
+            ("unbias_residual", fin(self.unbias_residual)),
+            ("weight_divergence", fin(self.weight_divergence)),
+            ("rel_divergence", fin(self.rel_divergence)),
+            ("cum_up_bytes", num(self.cum_up_bytes as f64)),
+            ("cum_down_bytes", num(self.cum_down_bytes as f64)),
+            ("sim_secs", fin(self.sim_secs)),
+        ])
+    }
+}
+
+/// Append one record to the process-global store (no-op advice: callers
+/// gate on [`enabled`] so the disabled path never takes this lock).
+pub fn record(rec: TelemetryRecord) {
+    RECORDS.lock().unwrap().push(rec);
+}
+
+/// Drain every collected record, sorted by `(lane, round)` — the same
+/// deterministic order whether grid cells ran sequentially or under
+/// `--jobs N`.
+pub fn take() -> Vec<TelemetryRecord> {
+    let mut recs: Vec<TelemetryRecord> = std::mem::take(&mut *RECORDS.lock().unwrap());
+    recs.sort_by_key(|r| (r.lane, r.round));
+    recs
+}
+
+/// Up to `n` most recent records in collection order (live HTTP tail;
+/// insertion order is arrival order, which may interleave lanes while a
+/// `--jobs` grid is in flight — the JSONL sink is the sorted artifact).
+pub fn tail(n: usize) -> Vec<TelemetryRecord> {
+    let recs = RECORDS.lock().unwrap();
+    recs[recs.len().saturating_sub(n)..].to_vec()
+}
+
+/// Render records as schema-versioned JSONL (one compact object per
+/// line, trailing newline).
+pub fn to_jsonl(recs: &[TelemetryRecord]) -> String {
+    let mut out = String::new();
+    for r in recs {
+        out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+// -- the per-round math (pure; hand-checked in tests/telemetry_e2e.rs) ----
+
+/// Signed mean of `(proj − reference)` over the `qidx` tensors: the
+/// update-unbiasedness residual. 0 when there are no quantized elements.
+pub fn unbias_residual(reference: &ParamSet, proj: &ParamSet, qidx: &[usize]) -> f64 {
+    let mut sum = 0f64;
+    let mut n = 0usize;
+    for &i in qidx {
+        let (a, b) = (&reference.tensors[i].data, &proj.tensors[i].data);
+        for (&r, &p) in a.iter().zip(b.iter()) {
+            sum += p as f64 - r as f64;
+        }
+        n += a.len();
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// `(L2 distance, relative L2 distance)` between `proj` and `reference`
+/// over the `qidx` tensors. The relative form divides by the reference
+/// norm of the same layers (0 when that norm is 0).
+pub fn weight_divergence(
+    reference: &ParamSet,
+    proj: &ParamSet,
+    qidx: &[usize],
+) -> (f64, f64) {
+    let mut dist2 = 0f64;
+    let mut norm2 = 0f64;
+    for &i in qidx {
+        let (a, b) = (&reference.tensors[i].data, &proj.tensors[i].data);
+        for (&r, &p) in a.iter().zip(b.iter()) {
+            let d = p as f64 - r as f64;
+            dist2 += d * d;
+            norm2 += r as f64 * r as f64;
+        }
+    }
+    let dist = dist2.sqrt();
+    let rel = if norm2 > 0.0 { dist / norm2.sqrt() } else { 0.0 };
+    (dist, rel)
+}
+
+/// Zero fraction of the `qidx` tensors of a quantized projection, per
+/// layer and overall (exact zeros — ternary projections are built from
+/// `{−w, 0, +w}` so this is the pattern sparsity, no epsilon games).
+pub fn zero_fractions(proj: &ParamSet, qidx: &[usize]) -> (Vec<f64>, f64) {
+    let mut per_layer = Vec::with_capacity(qidx.len());
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for &i in qidx {
+        let data = &proj.tensors[i].data;
+        let z = data.iter().filter(|&&v| v == 0.0).count();
+        per_layer.push(if data.is_empty() { 0.0 } else { z as f64 / data.len() as f64 });
+        zeros += z;
+        total += data.len();
+    }
+    let overall = if total == 0 { 0.0 } else { zeros as f64 / total as f64 };
+    (per_layer, overall)
+}

@@ -58,9 +58,11 @@
 //! codecs = ["ternary", "stc:k=0.01"]  # default: [experiment codec]
 //! models = ["mlp", "mlp-large"]  # default: [experiment model]
 //!
-//! [observability]             # phase tracing + metrics (DESIGN.md §11)
+//! [observability]             # phase tracing + metrics (DESIGN.md §11-12)
 //! trace_out = "trace.json"    # Chrome trace events; `--trace-out` overrides
 //! metrics_out = "metrics.prom"  # Prometheus text; `--metrics-out` overrides
+//! telemetry_out = "telemetry.jsonl"  # per-round learning telemetry;
+//!                              # `--telemetry-out` overrides
 //!
 //! [output]
 //! path = "results.json"       # bundle sink; `--out` overrides
@@ -141,6 +143,10 @@ pub struct ScenarioManifest {
     /// Prometheus text sink from `[observability] metrics_out`
     /// (CLI `--metrics-out` overrides).
     pub metrics_out: Option<String>,
+    /// Per-round learning-telemetry JSONL sink from
+    /// `[observability] telemetry_out` (CLI `--telemetry-out`
+    /// overrides). Enables telemetry for the run; DESIGN.md §12.
+    pub telemetry_out: Option<String>,
 }
 
 /// The sweep axes; the grid is their cartesian product.
@@ -223,7 +229,7 @@ const SIM_KEYS: &[&str] = &[
     "target_acc",
 ];
 const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs", "models"];
-const OBSERVABILITY_KEYS: &[&str] = &["trace_out", "metrics_out"];
+const OBSERVABILITY_KEYS: &[&str] = &["trace_out", "metrics_out", "telemetry_out"];
 const OUTPUT_KEYS: &[&str] = &["path"];
 
 impl ScenarioManifest {
@@ -418,6 +424,12 @@ impl ScenarioManifest {
             Some(v) => Some(v.as_str().context("[observability] metrics_out")?.to_string()),
             None => None,
         };
+        let telemetry_out = match doc.get("observability", "telemetry_out") {
+            Some(v) => {
+                Some(v.as_str().context("[observability] telemetry_out")?.to_string())
+            }
+            None => None,
+        };
 
         // -- [output] -----------------------------------------------------
         let output = match doc.get("output", "path") {
@@ -436,6 +448,7 @@ impl ScenarioManifest {
             output,
             trace_out,
             metrics_out,
+            telemetry_out,
         };
         // expanding validates every cell — a bad manifest fails at parse
         // time, not mid-sweep
@@ -861,17 +874,19 @@ mod tests {
     #[test]
     fn observability_table_flows_through() {
         let m = parse(
-            "[observability]\ntrace_out = \"trace.json\"\nmetrics_out = \"m.prom\"\n",
+            "[observability]\ntrace_out = \"trace.json\"\nmetrics_out = \"m.prom\"\ntelemetry_out = \"t.jsonl\"\n",
         )
         .unwrap();
         assert_eq!(m.trace_out.as_deref(), Some("trace.json"));
         assert_eq!(m.metrics_out.as_deref(), Some("m.prom"));
-        // both keys optional, independently
+        assert_eq!(m.telemetry_out.as_deref(), Some("t.jsonl"));
+        // all keys optional, independently
         let m = parse("[observability]\ntrace_out = \"t.json\"\n").unwrap();
         assert_eq!(m.trace_out.as_deref(), Some("t.json"));
         assert_eq!(m.metrics_out, None);
+        assert_eq!(m.telemetry_out, None);
         let m = parse("").unwrap();
-        assert_eq!((m.trace_out, m.metrics_out), (None, None));
+        assert_eq!((m.trace_out, m.metrics_out, m.telemetry_out), (None, None, None));
         // typo safety like every other table
         assert!(parse("[observability]\ntrace = \"t.json\"\n").is_err());
         assert!(parse("[observability]\ntrace_out = 1\n").is_err());

@@ -38,13 +38,14 @@ pub use runner::{run_scenario, run_scenario_jobs, CellResult, CellSim, ScenarioR
 pub use toml::{TomlDoc, TomlValue};
 
 /// CLI-side observability settings for a manifest run. The path
-/// overrides (`--trace-out` / `--metrics-out`) win over the manifest's
-/// `[observability]` table, mirroring how `--out` wins over
-/// `[output] path`.
+/// overrides (`--trace-out` / `--metrics-out` / `--telemetry-out`) win
+/// over the manifest's `[observability]` table, mirroring how `--out`
+/// wins over `[output] path`.
 #[derive(Clone, Debug, Default)]
 pub struct ObsOverrides {
     pub trace_out: Option<String>,
     pub metrics_out: Option<String>,
+    pub telemetry_out: Option<String>,
     /// suppress the end-of-run phase summary table
     pub quiet: bool,
 }
@@ -56,10 +57,12 @@ pub struct ObsOverrides {
 /// identical at any value). Returns the results and the bundle path
 /// written (if any).
 ///
-/// When either obs sink resolves (CLI override or `[observability]`
-/// table), tracing is enabled for the whole grid and the artifacts are
-/// written after the results bundle — the bundle bytes themselves are
-/// unaffected (`tests/obs_e2e.rs`).
+/// When any obs sink resolves (CLI override or `[observability]`
+/// table), tracing — plus per-round learning telemetry when
+/// `telemetry_out` resolves — is enabled for the whole grid and the
+/// artifacts are written after the results bundle; the bundle bytes
+/// themselves are unaffected (`tests/obs_e2e.rs`,
+/// `tests/telemetry_e2e.rs`). Sink write failures never fail the run.
 pub fn run_manifest_file(
     path: &str,
     out_override: Option<&str>,
@@ -69,7 +72,10 @@ pub fn run_manifest_file(
     let manifest = ScenarioManifest::load(path)?;
     let trace = obs.trace_out.clone().or_else(|| manifest.trace_out.clone());
     let metrics = obs.metrics_out.clone().or_else(|| manifest.metrics_out.clone());
-    if trace.is_some() || metrics.is_some() {
+    let telemetry = obs.telemetry_out.clone().or_else(|| manifest.telemetry_out.clone());
+    if telemetry.is_some() {
+        crate::obs::enable_telemetry();
+    } else if trace.is_some() || metrics.is_some() {
         crate::obs::enable();
     }
     let results = run_scenario_jobs(&manifest, jobs)?;
@@ -77,6 +83,11 @@ pub fn run_manifest_file(
     if let Some(p) = &out {
         results.write_json(p)?;
     }
-    crate::obs::finish(trace.as_deref(), metrics.as_deref(), obs.quiet)?;
+    crate::obs::finish(&crate::obs::Sinks {
+        trace_out: trace.as_deref(),
+        metrics_out: metrics.as_deref(),
+        telemetry_out: telemetry.as_deref(),
+        quiet: obs.quiet,
+    });
     Ok((results, out))
 }

@@ -25,7 +25,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::backend::make_backend;
 use crate::coordinator::server::Orchestrator;
 use crate::info;
-use crate::metrics::RunMetrics;
+use crate::eval::RunMetrics;
 use crate::runtime::manifest::default_artifacts_dir;
 use crate::runtime::Engine;
 use crate::scenario::manifest::{FleetTransport, GridCell, ScenarioManifest};
@@ -271,6 +271,7 @@ fn run_cell_metrics(
         }
     };
     orch.set_obs_lane(lane);
+    orch.set_obs_cell(&cell.label());
     let run_result = orch.run();
     if matches!(manifest.transport, FleetTransport::Tcp { .. }) {
         // teardown failure must never mask the run's own error

@@ -204,7 +204,7 @@ fn coded_cfg(codec: &str) -> ExperimentConfig {
 
 /// Run a tiny federation for one codec; returns (metrics, total stats,
 /// per-round down-frame wire size predicted from the initial global).
-fn run_codec(codec: &str) -> (tfed::metrics::RunMetrics, tfed::transport::LinkStats, ParamSet) {
+fn run_codec(codec: &str) -> (tfed::eval::RunMetrics, tfed::transport::LinkStats, ParamSet) {
     let cfg = coded_cfg(codec);
     let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
     let mut orch = Orchestrator::new(cfg, backend.as_ref()).unwrap();

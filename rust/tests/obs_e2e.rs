@@ -17,7 +17,7 @@ use std::sync::Mutex;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::run_experiment;
-use tfed::metrics::RunMetrics;
+use tfed::eval::RunMetrics;
 use tfed::obs::trace;
 use tfed::scenario::{run_scenario, ScenarioManifest};
 use tfed::util::json::Json;

@@ -7,7 +7,7 @@ use tfed::coordinator::availability::{AvailabilityModel, Phase};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::run_experiment;
 use tfed::coordinator::server::{FaultSpec, Orchestrator};
-use tfed::metrics::RunMetrics;
+use tfed::eval::RunMetrics;
 use tfed::scenario::{run_scenario, ScenarioManifest};
 use tfed::util::json::Json;
 

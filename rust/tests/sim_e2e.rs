@@ -10,7 +10,7 @@ use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::{make_backend, NativeBackend};
 use tfed::coordinator::client::{ClientRuntime, ShardData};
 use tfed::coordinator::server::Orchestrator;
-use tfed::metrics::RunMetrics;
+use tfed::eval::RunMetrics;
 use tfed::model::{init_params, mlp_schema};
 use tfed::scenario::{run_scenario, ScenarioManifest};
 use tfed::sim::{FleetModel, SimSpec, SimTransport};

@@ -1,0 +1,339 @@
+//! Learning-telemetry regression tests (DESIGN.md §12).
+//!
+//! Pins the PR's standing contract and schema:
+//! * **byte identity** — telemetry on changes only the new sink files:
+//!   run metrics and sim bundles stay byte-identical with it on and off;
+//! * **JSONL schema** — one v1 record per round with the documented key
+//!   set; two identical runs (and `--jobs` grids at any parallelism)
+//!   serialize to byte-equal JSONL;
+//! * **the per-round math** — unbiasedness residual, weight divergence,
+//!   and zero fractions against hand-computed values;
+//! * **the live endpoint** — `/metrics` and `/telemetry` round-trip over
+//!   a real socket;
+//! * **`tfed report`** — the compression-ratio table and the telemetry
+//!   series render from artifacts alone, and schema drift is rejected.
+//!
+//! Telemetry state is process-global, so every test serializes on one
+//! lock and restores the disabled default before releasing it.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::run_experiment;
+use tfed::eval::RunMetrics;
+use tfed::model::{ParamSet, Tensor};
+use tfed::obs::{telemetry, trace};
+use tfed::scenario::{run_scenario, run_scenario_jobs, ScenarioManifest};
+use tfed::util::json::Json;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restore the default-off state (and drop any collected records/spans).
+fn obs_off() {
+    telemetry::set_enabled(false);
+    telemetry::clear();
+    trace::set_enabled(false);
+    trace::clear();
+}
+
+/// Deterministic metrics fingerprint: full JSON with the wall clock
+/// zeroed (losses, accuracies, selections, byte counts all remain).
+fn fingerprint(m: &RunMetrics) -> String {
+    let mut m = m.clone();
+    for r in &mut m.records {
+        r.wall_secs = 0.0;
+    }
+    m.to_json().to_string()
+}
+
+fn small_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, seed);
+    cfg.n_clients = 3;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 300;
+    cfg.test_samples = 60;
+    cfg.batch = 16;
+    cfg.native_backend = true;
+    cfg
+}
+
+const SIM_MANIFEST: &str = r#"
+[scenario]
+name = "telemetry_sim"
+[experiment]
+clients = 3
+rounds = 2
+local_epochs = 1
+batch = 16
+train_samples = 300
+test_samples = 60
+seed = 7
+native = true
+[sim]
+registered_clients = 50
+"#;
+
+/// Two-cell sweep for the `--jobs` determinism claim.
+const SWEEP_MANIFEST: &str = r#"
+[scenario]
+name = "telemetry_sweep"
+[experiment]
+clients = 3
+rounds = 2
+local_epochs = 1
+batch = 16
+train_samples = 300
+test_samples = 60
+seed = 7
+native = true
+[sweep]
+seeds = [1, 2]
+"#;
+
+#[test]
+fn enabling_telemetry_is_byte_invisible() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    let cfg = small_cfg(42);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let baseline = run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let sim_baseline =
+        run_scenario(&ScenarioManifest::parse(SIM_MANIFEST).unwrap()).unwrap();
+
+    tfed::obs::enable_telemetry();
+    let on = run_experiment(cfg, backend.as_ref()).unwrap();
+    let sim_on = run_scenario(&ScenarioManifest::parse(SIM_MANIFEST).unwrap()).unwrap();
+    let n_records = telemetry::take().len();
+    obs_off();
+
+    // same losses, accuracies, selections, and wire bytes, byte for byte
+    assert_eq!(fingerprint(&baseline), fingerprint(&on));
+    assert_eq!(
+        sim_baseline.to_json().to_string_pretty(),
+        sim_on.to_json().to_string_pretty()
+    );
+    // and the enabled pass did collect per-round records (2 rounds each)
+    assert_eq!(n_records, 4);
+}
+
+#[test]
+fn jsonl_records_have_the_v1_schema_and_deterministic_bytes() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    tfed::obs::enable_telemetry();
+    let cfg = small_cfg(7);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    run_experiment(cfg.clone(), backend.as_ref()).unwrap();
+    let jsonl = telemetry::to_jsonl(&telemetry::take());
+    // one record per round, in round order
+    assert_eq!(jsonl.lines().count(), cfg.rounds);
+    const KEYS: &[&str] = &[
+        "v",
+        "lane",
+        "round",
+        "cell",
+        "protocol",
+        "train_loss",
+        "test_acc",
+        "test_loss",
+        "evaluated",
+        "factors",
+        "layer_zero_fraction",
+        "sparsity",
+        "unbias_residual",
+        "weight_divergence",
+        "rel_divergence",
+        "cum_up_bytes",
+        "cum_down_bytes",
+        "sim_secs",
+    ];
+    let mut last_up = 0u64;
+    for (i, line) in jsonl.lines().enumerate() {
+        let doc = Json::parse(line).unwrap();
+        for k in KEYS {
+            assert!(doc.get(k).is_some(), "missing {k} in {line}");
+        }
+        // exactly the documented keys, no stragglers
+        if let Json::Obj(m) = &doc {
+            assert_eq!(m.len(), KEYS.len(), "unexpected keys in {line}");
+        } else {
+            panic!("record is not an object: {line}");
+        }
+        assert_eq!(
+            doc.get("v").unwrap().as_usize().unwrap() as u64,
+            telemetry::SCHEMA_VERSION
+        );
+        assert_eq!(doc.get("round").unwrap().as_usize().unwrap(), i + 1);
+        assert_eq!(doc.get("protocol").unwrap().as_str().unwrap(), "T-FedAvg");
+        // T-FedAvg on the mlp: one factor + one zero fraction per
+        // quantized layer, real sparsity, cumulative bytes monotone
+        let factors = doc.get("factors").unwrap().as_arr().unwrap();
+        let zf = doc.get("layer_zero_fraction").unwrap().as_arr().unwrap();
+        assert!(!factors.is_empty());
+        assert_eq!(factors.len(), zf.len());
+        let sparsity = doc.get("sparsity").unwrap().as_f64().unwrap();
+        assert!(sparsity > 0.0 && sparsity < 1.0, "sparsity {sparsity}");
+        assert!(doc.get("weight_divergence").unwrap().as_f64().unwrap() >= 0.0);
+        let up = doc.get("cum_up_bytes").unwrap().as_f64().unwrap() as u64;
+        assert!(up > last_up, "cumulative up bytes must grow: {last_up} -> {up}");
+        last_up = up;
+    }
+
+    // golden determinism: an identical rerun produces byte-equal JSONL
+    // (records carry no wall-clock fields by design)
+    run_experiment(cfg, backend.as_ref()).unwrap();
+    let jsonl2 = telemetry::to_jsonl(&telemetry::take());
+    obs_off();
+    assert_eq!(jsonl, jsonl2);
+}
+
+#[test]
+fn jobs_grids_drain_to_identical_jsonl() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    tfed::obs::enable_telemetry();
+    let manifest = ScenarioManifest::parse(SWEEP_MANIFEST).unwrap();
+    run_scenario_jobs(&manifest, 1).unwrap();
+    let sequential = telemetry::to_jsonl(&telemetry::take());
+    run_scenario_jobs(&manifest, 2).unwrap();
+    let parallel = telemetry::to_jsonl(&telemetry::take());
+    obs_off();
+    // the drain sorts by (lane, round): any parallelism, same bytes
+    assert_eq!(sequential, parallel);
+    // both lanes present, stamped with their grid-cell labels
+    let lanes: Vec<u64> = sequential
+        .lines()
+        .map(|l| Json::parse(l).unwrap().get("lane").unwrap().as_usize().unwrap() as u64)
+        .collect();
+    assert_eq!(lanes, vec![0, 0, 1, 1]);
+    assert!(sequential
+        .lines()
+        .all(|l| !Json::parse(l).unwrap().get("cell").unwrap().as_str().unwrap().is_empty()));
+}
+
+// -- the per-round math, hand-computed --------------------------------------
+
+fn pset(tensors: Vec<Vec<f32>>) -> ParamSet {
+    ParamSet {
+        tensors: tensors
+            .into_iter()
+            .map(|data| Tensor { shape: vec![data.len()], data })
+            .collect(),
+    }
+}
+
+#[test]
+fn unbias_residual_matches_hand_computation() {
+    let reference = pset(vec![vec![1.0, 2.0, -1.0, 0.0], vec![10.0, 10.0]]);
+    let proj = pset(vec![vec![0.5, 2.5, -1.5, 0.0], vec![0.0, 0.0]]);
+    // only tensor 0 is quantized: diffs are (-0.5, +0.5, -0.5, 0)/4
+    let r = telemetry::unbias_residual(&reference, &proj, &[0]);
+    assert!((r - (-0.125)).abs() < 1e-12, "residual {r}");
+    // no quantized tensors -> 0 by definition
+    assert_eq!(telemetry::unbias_residual(&reference, &proj, &[]), 0.0);
+}
+
+#[test]
+fn weight_divergence_matches_hand_computation() {
+    let reference = pset(vec![vec![1.0, 2.0, -1.0, 0.0]]);
+    let proj = pset(vec![vec![0.5, 2.5, -1.5, 0.0]]);
+    let (dist, rel) = telemetry::weight_divergence(&reference, &proj, &[0]);
+    // dist^2 = 3 * 0.25; ref norm^2 = 1 + 4 + 1 = 6
+    assert!((dist - 0.75f64.sqrt()).abs() < 1e-12, "dist {dist}");
+    assert!((rel - (0.75f64 / 6.0).sqrt()).abs() < 1e-12, "rel {rel}");
+    // zero reference norm: relative divergence defined as 0
+    let zero = pset(vec![vec![0.0, 0.0]]);
+    let off = pset(vec![vec![1.0, 0.0]]);
+    let (dist, rel) = telemetry::weight_divergence(&zero, &off, &[0]);
+    assert_eq!((dist, rel), (1.0, 0.0));
+}
+
+#[test]
+fn zero_fractions_match_hand_computation() {
+    let proj = pset(vec![vec![0.0, 1.0, 0.0, -1.0], vec![2.0, 3.0]]);
+    let (per_layer, overall) = telemetry::zero_fractions(&proj, &[0, 1]);
+    assert_eq!(per_layer, vec![0.5, 0.0]);
+    assert!((overall - 2.0 / 6.0).abs() < 1e-12);
+    let (per_layer, overall) = telemetry::zero_fractions(&proj, &[]);
+    assert_eq!(per_layer, Vec::<f64>::new());
+    assert_eq!(overall, 0.0);
+}
+
+// -- the live endpoint ------------------------------------------------------
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn http_endpoint_round_trips() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    tfed::obs::enable_telemetry();
+    // put real state behind the endpoint
+    let cfg = small_cfg(3);
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    run_experiment(cfg, backend.as_ref()).unwrap();
+
+    let server = tfed::obs::http::serve("127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let metrics = http_get(addr, "/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
+    assert!(metrics.contains("tfed_rounds_total"), "{metrics}");
+    let telem = http_get(addr, "/telemetry");
+    assert!(telem.starts_with("HTTP/1.1 200 OK"));
+    let body = telem.split("\r\n\r\n").nth(1).unwrap();
+    let doc = Json::parse(body).unwrap();
+    assert_eq!(
+        doc.get("v").unwrap().as_usize().unwrap() as u64,
+        telemetry::SCHEMA_VERSION
+    );
+    assert!(!doc.get("records").unwrap().as_arr().unwrap().is_empty());
+    assert!(http_get(addr, "/nope").starts_with("HTTP/1.1 404"));
+    server.shutdown();
+    obs_off();
+}
+
+// -- the offline reporter ---------------------------------------------------
+
+#[test]
+fn report_renders_from_artifacts_alone() {
+    let _g = OBS_LOCK.lock().unwrap();
+    obs_off();
+    tfed::obs::enable_telemetry();
+    let results = run_scenario(&ScenarioManifest::parse(SIM_MANIFEST).unwrap()).unwrap();
+    let jsonl = telemetry::to_jsonl(&telemetry::take());
+    obs_off();
+
+    // bundle -> Table-IV-style communication table + accuracy series
+    let bundle = results.to_json().to_string_pretty();
+    let report = tfed::obs::report::render_text("bundle.json", &bundle).unwrap();
+    assert!(report.contains("Communication cost and compression ratio"));
+    // the mlp row prices a dense equivalent and a real ratio
+    assert!(report.contains("| mlp |"), "{report}");
+    assert!(report.contains("x |"), "no computed ratio in {report}");
+    assert!(report.contains("Accuracy vs MB transferred"));
+    assert!(report.contains("cell,round,cum_up_mb,cum_down_mb,test_acc"));
+
+    // telemetry sink -> factor convergence + sparsity/divergence series
+    let trep = tfed::obs::report::render_text("telemetry.jsonl", &jsonl).unwrap();
+    assert!(trep.contains("Quantization-factor convergence"));
+    assert!(trep.contains("cell,lane,round,layer,factor"));
+    assert!(trep.contains("Sparsity and weight divergence"));
+
+    // schema drift is rejected with the version in the message
+    let bad = jsonl.replace("\"v\":1", "\"v\":2");
+    let err = tfed::obs::report::render_text("bad.jsonl", &bad).unwrap_err();
+    assert!(format!("{err:#}").contains("schema v2"), "{err:#}");
+
+    // empty artifacts are rejected, not rendered as empty reports
+    assert!(tfed::obs::report::render_text("empty", "").is_err());
+}

@@ -31,7 +31,7 @@ fn small_cfg(protocol: Protocol) -> ExperimentConfig {
 
 /// Drive one experiment over TCP with in-thread clients; returns the
 /// orchestrator after the run for inspection.
-fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::metrics::RunMetrics, tfed::model::ParamSet) {
+fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::eval::RunMetrics, tfed::model::ParamSet) {
     let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
     let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
     let addr = binding.local_addr().unwrap();
