@@ -7,6 +7,8 @@
 use anyhow::{bail, Result};
 
 use crate::compress::CodecSpec;
+use crate::coordinator::adversary::AdversarySpec;
+use crate::coordinator::aggregation::AggregatorSpec;
 
 /// Which algorithm of Table II to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -164,6 +166,13 @@ pub struct ExperimentConfig {
     /// (`--codec stc:k=0.01`, `quant8`, `fp16`, ...), `dense` being its
     /// uncompressed native format.
     pub codec: CodecSpec,
+    /// server aggregation rule (`--aggregator` / `[experiment] aggregator`);
+    /// `mean` is the streaming sample-weighted default, byte-identical to
+    /// the pre-registry orchestrator.
+    pub aggregator: AggregatorSpec,
+    /// Byzantine-client behavior assignment (`[adversary]` manifest
+    /// table); the honest default marks nobody.
+    pub adversary: AdversarySpec,
 }
 
 impl ExperimentConfig {
@@ -195,6 +204,8 @@ impl ExperimentConfig {
             native_backend: false,
             model: String::new(),
             codec: protocol.default_codec(),
+            aggregator: AggregatorSpec::Mean,
+            adversary: AdversarySpec::honest(),
         };
         if protocol.is_centralized() {
             cfg.centralized()
@@ -285,6 +296,23 @@ impl ExperimentConfig {
             }
         }
         self.codec.check()?;
+        self.aggregator.check()?;
+        self.adversary.check()?;
+        if self.protocol.is_centralized() {
+            if self.aggregator != AggregatorSpec::Mean {
+                bail!(
+                    "centralized protocol {} aggregates nothing; --aggregator {} has no effect",
+                    self.protocol.name(),
+                    self.aggregator.name()
+                );
+            }
+            if self.adversary.is_active() {
+                bail!(
+                    "centralized protocol {} has no client fleet to corrupt",
+                    self.protocol.name()
+                );
+            }
+        }
         match (self.protocol, self.codec) {
             (Protocol::TFedAvg, CodecSpec::Ternary) => {}
             (Protocol::TFedAvg, c) => bail!(
@@ -326,6 +354,12 @@ impl ExperimentConfig {
         };
         if !self.model.is_empty() {
             codec.push_str(&format!(" model={}", self.model));
+        }
+        if self.aggregator != AggregatorSpec::Mean {
+            codec.push_str(&format!(" aggregator={}", self.aggregator.name()));
+        }
+        if self.adversary.is_active() {
+            codec.push_str(&format!(" adversary={}", self.adversary.label()));
         }
         let nc = if self.dirichlet_alpha != 0.0 {
             format!("Dir({})", self.dirichlet_alpha)
@@ -481,6 +515,52 @@ mod tests {
         let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
         c.codec = CodecSpec::Stc { k: 0.01 };
         assert!(c.summary().contains("codec=stc:k=0.01"), "{}", c.summary());
+    }
+
+    #[test]
+    fn aggregator_and_adversary_validation() {
+        use crate::coordinator::adversary::AdversarySpec;
+        use crate::coordinator::aggregation::AggregatorSpec;
+        let ok = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        // every registered rule validates on a federated protocol
+        for s in ["mean", "trimmed_mean", "median", "norm_clip", "krum:2"] {
+            let mut c = ok.clone();
+            c.aggregator = AggregatorSpec::parse(s).unwrap();
+            c.validate().unwrap();
+        }
+        // invalid rule parameters are caught here too
+        let mut c = ok.clone();
+        c.aggregator = AggregatorSpec::TrimmedMean { beta: 0.7 };
+        assert!(c.validate().is_err());
+        // adversary specs validate (and bad fractions are rejected)
+        let mut c = ok.clone();
+        c.adversary = AdversarySpec::parse("sign_flip", 0.3, 7).unwrap();
+        c.validate().unwrap();
+        let mut c = ok.clone();
+        c.adversary.fraction = 2.0;
+        assert!(c.validate().is_err());
+        // centralized protocols accept neither knob
+        let mut c = ExperimentConfig::table2(Protocol::Baseline, Task::MnistLike, 1);
+        c.aggregator = AggregatorSpec::Median;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::table2(Protocol::Baseline, Task::MnistLike, 1);
+        c.adversary = AdversarySpec::parse("sign_flip", 0.5, 0).unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn summary_mentions_aggregator_and_adversary_only_when_set() {
+        use crate::coordinator::adversary::AdversarySpec;
+        use crate::coordinator::aggregation::AggregatorSpec;
+        let c = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 1);
+        assert!(!c.summary().contains("aggregator="));
+        assert!(!c.summary().contains("adversary="));
+        let mut c = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        c.aggregator = AggregatorSpec::Median;
+        c.adversary = AdversarySpec::parse("scale:10", 0.2, 3).unwrap();
+        let s = c.summary();
+        assert!(s.contains("aggregator=median"), "{s}");
+        assert!(s.contains("adversary=scale:10@0.2"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,464 @@
+//! Byzantine client behaviors: the malicious counterpart of
+//! [`availability`](crate::coordinator::availability)'s honest-but-flaky
+//! axis.
+//!
+//! An [`AdversaryModel`] answers one question: which behavior does
+//! registered client `id` exhibit for the whole run? Assignment draws
+//! from a dedicated server-seeded [`Pcg`] keyed by the client id — never
+//! from the orchestrator's main stream — so the adversarial cast is
+//! identical at any worker count, over all three transports (loopback,
+//! TCP, sim), and whether the behavior is applied in-process or by a
+//! remote `tfed client` that resolved the same spec from the Config
+//! frame.
+//!
+//! Behaviors split into two families the server must handle differently
+//! (DESIGN.md §13):
+//!
+//! * **statistical attacks** (`scale:f`, `sign_flip`, `replay`) produce
+//!   protocol-legal updates with hostile values — absorbed (or not) by
+//!   the configured [`AggregatorSpec`](crate::coordinator::aggregation);
+//! * **protocol deviations** (`corrupt_frame`, `wrong_codec`,
+//!   `wrong_samples`, `oversize`) break the wire contract — detected
+//!   server-side as typed per-client faults and fed to the availability
+//!   accounting as observed dropout, never a panic.
+//!
+//! The default spec ([`AdversarySpec::honest`]) assigns `Honest` to
+//! everyone without constructing an RNG, so default runs stay
+//! bit-identical to the pre-adversary orchestrator.
+
+use std::fmt;
+
+use crate::util::rng::Pcg;
+
+/// Stream salt for the assignment generator: keeps the adversary draws
+/// disjoint from every other derived stream even under equal seeds.
+const ASSIGN_SALT: u64 = 0xADBE_EF00;
+
+/// Largest accepted `scale:f` magnitude: big enough to break undefended
+/// means, small enough that a handful of scaled f32 updates cannot
+/// overflow the f64 accumulator into NaN-poisoning the typed-error path.
+pub const MAX_SCALE: f64 = 1e9;
+
+/// What a Byzantine client does to every round it participates in.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Behavior {
+    /// Protocol-honest client (the default for everyone).
+    Honest,
+    /// Upload `factor * trained_params` (model-poisoning by scaling).
+    Scale(f64),
+    /// Upload `-trained_params` (sign-flipped gradient direction).
+    SignFlip,
+    /// Re-send the previous round's upload (stale-round replay).
+    Replay,
+    /// Upload a frame whose payload decodes to an internally
+    /// inconsistent message (CRC passes; message decode must not).
+    CorruptFrame,
+    /// Mislabel the payload: wrong codec id / wrong message kind.
+    WrongCodec,
+    /// Over-report `num_samples` to grab aggregation weight.
+    WrongSamples,
+    /// Upload a payload larger than the frame codec's `MAX_FRAME`.
+    Oversize,
+}
+
+impl Behavior {
+    /// Stable registry name (what manifests and CLI parse back).
+    pub fn name(&self) -> String {
+        match self {
+            Behavior::Honest => "honest".into(),
+            Behavior::Scale(f) => format!("scale:{f}"),
+            Behavior::SignFlip => "sign_flip".into(),
+            Behavior::Replay => "replay".into(),
+            Behavior::CorruptFrame => "corrupt_frame".into(),
+            Behavior::WrongCodec => "wrong_codec".into(),
+            Behavior::WrongSamples => "wrong_samples".into(),
+            Behavior::Oversize => "oversize".into(),
+        }
+    }
+
+    /// True for the wire-contract-breaking family (detected, not
+    /// aggregated); false for statistical attacks and `Honest`.
+    pub fn is_protocol_deviation(&self) -> bool {
+        matches!(
+            self,
+            Behavior::CorruptFrame
+                | Behavior::WrongCodec
+                | Behavior::WrongSamples
+                | Behavior::Oversize
+        )
+    }
+}
+
+/// Typed validation/parse error for adversary parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdversaryError {
+    /// Behavior name not in the registry.
+    UnknownBehavior { name: String },
+    /// `scale:f` factor NaN, infinite, or beyond [`MAX_SCALE`].
+    BadScale { value: f64 },
+    /// Adversarial fraction NaN or outside [0, 1].
+    BadFraction { value: f64 },
+    /// A behavior that takes no parameter got one (or `scale:` is
+    /// missing its factor).
+    BadParam { name: String },
+}
+
+impl fmt::Display for AdversaryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdversaryError::UnknownBehavior { name } => {
+                write!(f, "unknown adversary behavior {name:?} (known: {})", behavior_names().join(", "))
+            }
+            AdversaryError::BadScale { value } => {
+                write!(f, "scale factor must be finite with |f| <= {MAX_SCALE:e}, got {value}")
+            }
+            AdversaryError::BadFraction { value } => {
+                write!(f, "adversary fraction must be in [0, 1], got {value}")
+            }
+            AdversaryError::BadParam { name } => {
+                write!(f, "malformed adversary behavior parameter in {name:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdversaryError {}
+
+/// Names `AdversarySpec::parse` accepts (scale shown with its parameter
+/// syntax).
+pub fn behavior_names() -> Vec<&'static str> {
+    vec![
+        "honest",
+        "scale:<f>",
+        "sign_flip",
+        "replay",
+        "corrupt_frame",
+        "wrong_codec",
+        "wrong_samples",
+        "oversize",
+    ]
+}
+
+/// The run-level adversary configuration carried in `ExperimentConfig`
+/// (and therefore the Config wire frame): one behavior, the fraction of
+/// the registered population exhibiting it, and the assignment seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdversarySpec {
+    pub behavior: Behavior,
+    /// Probability that a given registered client id is adversarial.
+    pub fraction: f64,
+    /// Seed for the dedicated assignment generator (decoupled from the
+    /// experiment seed so defenses can be swept against a fixed cast).
+    pub seed: u64,
+}
+
+impl Default for AdversarySpec {
+    fn default() -> Self {
+        Self::honest()
+    }
+}
+
+impl AdversarySpec {
+    /// Serialized size in the Config frame: behavior id (u8), scale
+    /// param (f64), fraction (f64), seed (u64).
+    pub const WIRE_BYTES: usize = 25;
+
+    /// The inert default: nobody is adversarial, no RNG is constructed.
+    pub fn honest() -> Self {
+        AdversarySpec { behavior: Behavior::Honest, fraction: 0.0, seed: 0 }
+    }
+
+    /// True when this spec can mark at least one client adversarial.
+    pub fn is_active(&self) -> bool {
+        self.behavior != Behavior::Honest && self.fraction > 0.0
+    }
+
+    /// Parse a behavior string (`"sign_flip"`, `"scale:10"`, ...) plus
+    /// fraction and seed into a validated spec.
+    pub fn parse(behavior: &str, fraction: f64, seed: u64) -> Result<Self, AdversaryError> {
+        let behavior = match behavior {
+            "honest" => Behavior::Honest,
+            "sign_flip" => Behavior::SignFlip,
+            "replay" => Behavior::Replay,
+            "corrupt_frame" => Behavior::CorruptFrame,
+            "wrong_codec" => Behavior::WrongCodec,
+            "wrong_samples" => Behavior::WrongSamples,
+            "oversize" => Behavior::Oversize,
+            s => match s.strip_prefix("scale:") {
+                Some(arg) => {
+                    let f: f64 = arg
+                        .parse()
+                        .map_err(|_| AdversaryError::BadParam { name: s.into() })?;
+                    Behavior::Scale(f)
+                }
+                None if s == "scale" => {
+                    return Err(AdversaryError::BadParam { name: s.into() })
+                }
+                None => return Err(AdversaryError::UnknownBehavior { name: s.into() }),
+            },
+        };
+        let spec = AdversarySpec { behavior, fraction, seed };
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Validate the spec (scale magnitude, fraction range; NaN rejected).
+    pub fn check(&self) -> Result<(), AdversaryError> {
+        if let Behavior::Scale(f) = self.behavior {
+            if !f.is_finite() || f.abs() > MAX_SCALE {
+                return Err(AdversaryError::BadScale { value: f });
+            }
+        }
+        if !(0.0..=1.0).contains(&self.fraction) {
+            return Err(AdversaryError::BadFraction { value: self.fraction });
+        }
+        Ok(())
+    }
+
+    /// Behavior id + parameter for the wire encoding.
+    fn id_param(&self) -> (u8, f64) {
+        match self.behavior {
+            Behavior::Honest => (0, 0.0),
+            Behavior::Scale(f) => (1, f),
+            Behavior::SignFlip => (2, 0.0),
+            Behavior::Replay => (3, 0.0),
+            Behavior::CorruptFrame => (4, 0.0),
+            Behavior::WrongCodec => (5, 0.0),
+            Behavior::WrongSamples => (6, 0.0),
+            Behavior::Oversize => (7, 0.0),
+        }
+    }
+
+    /// Fixed-size Config-frame encoding.
+    pub fn to_wire(&self) -> [u8; Self::WIRE_BYTES] {
+        let (id, param) = self.id_param();
+        let mut out = [0u8; Self::WIRE_BYTES];
+        out[0] = id;
+        out[1..9].copy_from_slice(&param.to_le_bytes());
+        out[9..17].copy_from_slice(&self.fraction.to_le_bytes());
+        out[17..25].copy_from_slice(&self.seed.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate a Config-frame encoding.
+    pub fn from_wire(bytes: [u8; Self::WIRE_BYTES]) -> Result<Self, AdversaryError> {
+        let param = f64::from_le_bytes(bytes[1..9].try_into().unwrap());
+        let fraction = f64::from_le_bytes(bytes[9..17].try_into().unwrap());
+        let seed = u64::from_le_bytes(bytes[17..25].try_into().unwrap());
+        let behavior = match bytes[0] {
+            0 => Behavior::Honest,
+            1 => Behavior::Scale(param),
+            2 => Behavior::SignFlip,
+            3 => Behavior::Replay,
+            4 => Behavior::CorruptFrame,
+            5 => Behavior::WrongCodec,
+            6 => Behavior::WrongSamples,
+            7 => Behavior::Oversize,
+            id => {
+                return Err(AdversaryError::UnknownBehavior { name: format!("wire id {id}") })
+            }
+        };
+        let spec = AdversarySpec { behavior, fraction, seed };
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Summary fragment for run labels (`behavior@fraction`).
+    pub fn label(&self) -> String {
+        format!("{}@{}", self.behavior.name(), self.fraction)
+    }
+}
+
+/// Validated per-client behavior assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdversaryModel {
+    spec: AdversarySpec,
+}
+
+impl Default for AdversaryModel {
+    fn default() -> Self {
+        Self::honest()
+    }
+}
+
+impl AdversaryModel {
+    /// Everyone is honest; `behavior_of` never constructs an RNG.
+    pub fn honest() -> Self {
+        AdversaryModel { spec: AdversarySpec::honest() }
+    }
+
+    /// Validated constructor (the only path to an active model).
+    pub fn new(spec: AdversarySpec) -> Result<Self, AdversaryError> {
+        spec.check()?;
+        Ok(AdversaryModel { spec })
+    }
+
+    pub fn spec(&self) -> AdversarySpec {
+        self.spec
+    }
+
+    /// The behavior client `id` exhibits for the whole run. Pure
+    /// function of (spec seed, client id): each client gets its own
+    /// single-draw generator, so assignment is independent of worker
+    /// count, transport, and iteration order, and any peer holding the
+    /// same spec resolves the same cast.
+    pub fn behavior_of(&self, client_id: u32) -> Behavior {
+        if !self.spec.is_active() {
+            return Behavior::Honest;
+        }
+        let mut rng = Pcg::new(self.spec.seed ^ ASSIGN_SALT, client_id as u64);
+        if rng.next_f64() < self.spec.fraction {
+            self.spec.behavior
+        } else {
+            Behavior::Honest
+        }
+    }
+
+    /// Ids in `0..n` assigned the adversarial behavior (diagnostics and
+    /// tests; the round driver asks per client instead).
+    pub fn adversaries(&self, n: u32) -> Vec<u32> {
+        (0..n).filter(|&id| self.behavior_of(id) != Behavior::Honest).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert() {
+        let m = AdversaryModel::default();
+        assert!(!m.spec().is_active());
+        for id in 0..64 {
+            assert_eq!(m.behavior_of(id), Behavior::Honest);
+        }
+        assert!(m.adversaries(64).is_empty());
+    }
+
+    #[test]
+    fn parse_all_names() {
+        for (s, want) in [
+            ("honest", Behavior::Honest),
+            ("sign_flip", Behavior::SignFlip),
+            ("replay", Behavior::Replay),
+            ("corrupt_frame", Behavior::CorruptFrame),
+            ("wrong_codec", Behavior::WrongCodec),
+            ("wrong_samples", Behavior::WrongSamples),
+            ("oversize", Behavior::Oversize),
+            ("scale:10", Behavior::Scale(10.0)),
+            ("scale:-2.5", Behavior::Scale(-2.5)),
+        ] {
+            let spec = AdversarySpec::parse(s, 0.5, 7).unwrap();
+            assert_eq!(spec.behavior, want, "{s}");
+            // name() round-trips through parse for every behavior
+            let back = AdversarySpec::parse(&spec.behavior.name(), 0.5, 7).unwrap();
+            assert_eq!(back.behavior, want, "{s} via name()");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(matches!(
+            AdversarySpec::parse("gaslight", 0.5, 0).unwrap_err(),
+            AdversaryError::UnknownBehavior { .. }
+        ));
+        assert!(matches!(
+            AdversarySpec::parse("scale", 0.5, 0).unwrap_err(),
+            AdversaryError::BadParam { .. }
+        ));
+        assert!(matches!(
+            AdversarySpec::parse("scale:huge", 0.5, 0).unwrap_err(),
+            AdversaryError::BadParam { .. }
+        ));
+        for f in [f64::NAN, f64::INFINITY, MAX_SCALE * 2.0] {
+            let err = AdversarySpec::parse(&format!("scale:{f}"), 0.5, 0).unwrap_err();
+            assert!(
+                matches!(err, AdversaryError::BadScale { .. } | AdversaryError::BadParam { .. }),
+                "f={f} err={err}"
+            );
+        }
+        for p in [-0.1, 1.1, f64::NAN] {
+            assert!(matches!(
+                AdversarySpec::parse("sign_flip", p, 0).unwrap_err(),
+                AdversaryError::BadFraction { .. }
+            ));
+        }
+        // boundaries are fine
+        AdversarySpec::parse("sign_flip", 0.0, 0).unwrap();
+        AdversarySpec::parse("sign_flip", 1.0, 0).unwrap();
+    }
+
+    #[test]
+    fn wire_roundtrip_every_behavior() {
+        for s in [
+            "honest",
+            "sign_flip",
+            "replay",
+            "corrupt_frame",
+            "wrong_codec",
+            "wrong_samples",
+            "oversize",
+            "scale:123.25",
+        ] {
+            let spec = AdversarySpec::parse(s, 0.25, 0xFEED).unwrap();
+            let back = AdversarySpec::from_wire(spec.to_wire()).unwrap();
+            assert_eq!(back, spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn wire_rejects_unknown_id_and_bad_values() {
+        let mut bytes = AdversarySpec::honest().to_wire();
+        bytes[0] = 99;
+        assert!(AdversarySpec::from_wire(bytes).is_err());
+        let mut bytes = AdversarySpec::parse("sign_flip", 1.0, 0).unwrap().to_wire();
+        bytes[9..17].copy_from_slice(&2.0f64.to_le_bytes()); // fraction 2.0
+        assert!(AdversarySpec::from_wire(bytes).is_err());
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_order_free() {
+        let spec = AdversarySpec::parse("sign_flip", 0.4, 42).unwrap();
+        let m = AdversaryModel::new(spec).unwrap();
+        let forward: Vec<Behavior> = (0..32).map(|id| m.behavior_of(id)).collect();
+        let backward: Vec<Behavior> = (0..32).rev().map(|id| m.behavior_of(id)).collect();
+        let backward: Vec<Behavior> = backward.into_iter().rev().collect();
+        assert_eq!(forward, backward);
+        // a second model from the same spec agrees (remote-client path)
+        let m2 = AdversaryModel::new(spec).unwrap();
+        for id in 0..32 {
+            assert_eq!(m.behavior_of(id), m2.behavior_of(id), "id={id}");
+        }
+    }
+
+    #[test]
+    fn fraction_controls_cast_size() {
+        let all = AdversaryModel::new(AdversarySpec::parse("replay", 1.0, 9).unwrap()).unwrap();
+        assert_eq!(all.adversaries(50).len(), 50);
+        let none = AdversaryModel::new(AdversarySpec::parse("replay", 0.0, 9).unwrap()).unwrap();
+        assert!(none.adversaries(50).is_empty());
+        // ~40% of a large population, not all-or-nothing
+        let some = AdversaryModel::new(AdversarySpec::parse("replay", 0.4, 9).unwrap()).unwrap();
+        let k = some.adversaries(1000).len();
+        assert!((250..550).contains(&k), "k={k}");
+    }
+
+    #[test]
+    fn seed_changes_cast_not_size_regime() {
+        let a = AdversaryModel::new(AdversarySpec::parse("replay", 0.5, 1).unwrap()).unwrap();
+        let b = AdversaryModel::new(AdversarySpec::parse("replay", 0.5, 2).unwrap()).unwrap();
+        assert_ne!(a.adversaries(256), b.adversaries(256));
+    }
+
+    #[test]
+    fn labels_and_errors_display() {
+        let spec = AdversarySpec::parse("scale:10", 0.25, 0).unwrap();
+        assert_eq!(spec.label(), "scale:10@0.25");
+        assert!(!spec.behavior.is_protocol_deviation());
+        assert!(Behavior::Oversize.is_protocol_deviation());
+        let e = AdversaryError::BadFraction { value: 2.0 };
+        assert!(format!("{e}").contains("[0, 1]"));
+        let e = AdversaryError::UnknownBehavior { name: "x".into() };
+        assert!(format!("{e}").contains("known"));
+    }
+}

@@ -16,6 +16,16 @@
 //! the same float-op sequence, hence bit-identical results. The batch
 //! [`weighted_average`] is now a thin wrapper over the fold and the
 //! regression tests compare both against an independent reference.
+//!
+//! **Robust registry** (DESIGN.md §13): [`AggregatorSpec`] is the
+//! string-keyed rule selector next to the codec registry — `mean` (the
+//! streaming fold above, byte-identical default), `trimmed_mean:β`,
+//! `median`, `norm_clip:τ`, and `krum:f`. The robust rules inherently
+//! buffer the round's accepted updates (their math needs cross-client
+//! order statistics), so only the default keeps the `O(model)` streaming
+//! bound; [`robust_aggregate`] is the shared dispatch.
+
+use std::fmt;
 
 use anyhow::{bail, Result};
 
@@ -150,6 +160,372 @@ pub fn weighted_average(updates: &[(u64, ParamSet)]) -> Result<ParamSet> {
         agg.fold(*n, p)?;
     }
     agg.finish()
+}
+
+// ---------------------------------------------------------------------------
+// robust-aggregation registry
+// ---------------------------------------------------------------------------
+
+/// Largest accepted trim fraction: trimming half (or more) from each end
+/// leaves nothing to average.
+pub const MAX_TRIM: f64 = 0.5;
+
+/// Default trim fraction for `trimmed_mean` without a parameter.
+pub const DEFAULT_TRIM: f64 = 0.2;
+
+/// Default norm-clip threshold multiplier (× the cohort's median norm).
+pub const DEFAULT_CLIP_TAU: f64 = 1.0;
+
+/// Default assumed Byzantine count for `krum` without a parameter.
+pub const DEFAULT_KRUM_F: u64 = 1;
+
+/// Typed validation/parse error for aggregation-rule parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AggregatorError {
+    /// Rule name not in the registry.
+    UnknownAggregator { name: String },
+    /// Trim fraction NaN or outside [0, MAX_TRIM).
+    BadTrim { value: f64 },
+    /// Norm-clip multiplier NaN, non-positive, or infinite.
+    BadTau { value: f64 },
+    /// A rule parameter failed to parse.
+    BadParam { name: String },
+}
+
+impl fmt::Display for AggregatorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AggregatorError::UnknownAggregator { name } => {
+                write!(
+                    f,
+                    "unknown aggregator {name:?} (known: {})",
+                    aggregator_names().join(", ")
+                )
+            }
+            AggregatorError::BadTrim { value } => {
+                write!(f, "trim fraction must be in [0, {MAX_TRIM}), got {value}")
+            }
+            AggregatorError::BadTau { value } => {
+                write!(f, "norm-clip multiplier must be finite and > 0, got {value}")
+            }
+            AggregatorError::BadParam { name } => {
+                write!(f, "malformed aggregator parameter in {name:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AggregatorError {}
+
+/// Registry keys `AggregatorSpec::parse` accepts (parameterized rules
+/// shown with their syntax).
+pub fn aggregator_names() -> Vec<&'static str> {
+    vec!["mean", "trimmed_mean[:beta]", "median", "norm_clip[:tau]", "krum[:f]"]
+}
+
+/// Which aggregation rule the server runs — carried in
+/// `ExperimentConfig` and the Config wire frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggregatorSpec {
+    /// The sample-weighted streaming fold above (the byte-identical
+    /// default).
+    Mean,
+    /// Coordinate-wise mean after dropping the `beta` fraction of
+    /// smallest and largest values (unweighted; breakdown point `beta`).
+    TrimmedMean { beta: f64 },
+    /// Coordinate-wise median (unweighted; breakdown point 1/2).
+    Median,
+    /// Clip each update's L2 norm to `tau ×` the cohort median norm,
+    /// then take the sample-weighted mean; clipped ids are reported.
+    NormClip { tau: f64 },
+    /// Krum (Blanchard et al. 2017): return the single update with the
+    /// smallest sum of squared distances to its `n - f - 2` nearest
+    /// neighbors, assuming at most `f` Byzantine clients.
+    Krum { f: u64 },
+}
+
+impl Default for AggregatorSpec {
+    fn default() -> Self {
+        AggregatorSpec::Mean
+    }
+}
+
+impl AggregatorSpec {
+    /// Serialized size in the Config frame: rule id (u8) + parameter
+    /// (f64).
+    pub const WIRE_BYTES: usize = 9;
+
+    /// Registry key + parameter, parseable back by [`Self::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            AggregatorSpec::Mean => "mean".into(),
+            AggregatorSpec::TrimmedMean { beta } => format!("trimmed_mean:{beta}"),
+            AggregatorSpec::Median => "median".into(),
+            AggregatorSpec::NormClip { tau } => format!("norm_clip:{tau}"),
+            AggregatorSpec::Krum { f } => format!("krum:{f}"),
+        }
+    }
+
+    /// Parse a registry key with optional `:param` suffix.
+    pub fn parse(s: &str) -> Result<Self, AggregatorError> {
+        let (key, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        let parse_f64 = |a: &str| {
+            a.parse::<f64>().map_err(|_| AggregatorError::BadParam { name: s.into() })
+        };
+        let spec = match (key, arg) {
+            ("mean", None) => AggregatorSpec::Mean,
+            ("trimmed_mean", None) => AggregatorSpec::TrimmedMean { beta: DEFAULT_TRIM },
+            ("trimmed_mean", Some(a)) => AggregatorSpec::TrimmedMean { beta: parse_f64(a)? },
+            ("median", None) => AggregatorSpec::Median,
+            ("norm_clip", None) => AggregatorSpec::NormClip { tau: DEFAULT_CLIP_TAU },
+            ("norm_clip", Some(a)) => AggregatorSpec::NormClip { tau: parse_f64(a)? },
+            ("krum", None) => AggregatorSpec::Krum { f: DEFAULT_KRUM_F },
+            ("krum", Some(a)) => AggregatorSpec::Krum {
+                f: a.parse::<u64>().map_err(|_| AggregatorError::BadParam { name: s.into() })?,
+            },
+            _ => return Err(AggregatorError::UnknownAggregator { name: s.into() }),
+        };
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Validate rule parameters (NaN rejected like Config validation).
+    pub fn check(&self) -> Result<(), AggregatorError> {
+        match *self {
+            AggregatorSpec::Mean | AggregatorSpec::Median | AggregatorSpec::Krum { .. } => Ok(()),
+            AggregatorSpec::TrimmedMean { beta } => {
+                if (0.0..MAX_TRIM).contains(&beta) {
+                    Ok(())
+                } else {
+                    Err(AggregatorError::BadTrim { value: beta })
+                }
+            }
+            AggregatorSpec::NormClip { tau } => {
+                if tau.is_finite() && tau > 0.0 {
+                    Ok(())
+                } else {
+                    Err(AggregatorError::BadTau { value: tau })
+                }
+            }
+        }
+    }
+
+    fn id_param(&self) -> (u8, f64) {
+        match *self {
+            AggregatorSpec::Mean => (0, 0.0),
+            AggregatorSpec::TrimmedMean { beta } => (1, beta),
+            AggregatorSpec::Median => (2, 0.0),
+            AggregatorSpec::NormClip { tau } => (3, tau),
+            AggregatorSpec::Krum { f } => (4, f as f64),
+        }
+    }
+
+    /// Fixed-size Config-frame encoding.
+    pub fn to_wire(&self) -> [u8; Self::WIRE_BYTES] {
+        let (id, param) = self.id_param();
+        let mut out = [0u8; Self::WIRE_BYTES];
+        out[0] = id;
+        out[1..9].copy_from_slice(&param.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate a Config-frame encoding.
+    pub fn from_wire(bytes: [u8; Self::WIRE_BYTES]) -> Result<Self, AggregatorError> {
+        let param = f64::from_le_bytes(bytes[1..9].try_into().unwrap());
+        let spec = match bytes[0] {
+            0 => AggregatorSpec::Mean,
+            1 => AggregatorSpec::TrimmedMean { beta: param },
+            2 => AggregatorSpec::Median,
+            3 => AggregatorSpec::NormClip { tau: param },
+            4 => AggregatorSpec::Krum { f: param as u64 },
+            id => {
+                return Err(AggregatorError::UnknownAggregator {
+                    name: format!("wire id {id}"),
+                })
+            }
+        };
+        spec.check()?;
+        Ok(spec)
+    }
+}
+
+/// Result of one robust-aggregation pass.
+#[derive(Clone, Debug)]
+pub struct RobustOutcome {
+    pub global: ParamSet,
+    /// Client ids whose updates were norm-clipped (empty for every rule
+    /// but `norm_clip`).
+    pub clipped: Vec<u32>,
+}
+
+/// Run `spec` over the round's accepted updates, given as
+/// `(client_id, num_samples, update)` in selection order. `Mean` here is
+/// the batch wrapper (bit-identical to the streaming fold); the server
+/// keeps its streaming path for the default and calls this for every
+/// robust rule.
+pub fn robust_aggregate(
+    spec: AggregatorSpec,
+    updates: &[(u32, u64, ParamSet)],
+) -> Result<RobustOutcome> {
+    if updates.is_empty() {
+        bail!("no updates to aggregate");
+    }
+    let first = &updates[0].2;
+    for (cid, _, u) in updates {
+        if u.tensors.len() != first.tensors.len()
+            || u.tensors.iter().zip(&first.tensors).any(|(a, b)| a.data.len() != b.data.len())
+        {
+            bail!("client {cid} update shape disagrees with the cohort");
+        }
+    }
+    let outcome = match spec {
+        AggregatorSpec::Mean => {
+            let fleet: Vec<(u64, ParamSet)> =
+                updates.iter().map(|(_, n, p)| (*n, p.clone())).collect();
+            RobustOutcome { global: weighted_average(&fleet)?, clipped: Vec::new() }
+        }
+        AggregatorSpec::TrimmedMean { beta } => {
+            RobustOutcome { global: trimmed_mean(updates, beta), clipped: Vec::new() }
+        }
+        AggregatorSpec::Median => {
+            RobustOutcome { global: coordinate_median(updates), clipped: Vec::new() }
+        }
+        AggregatorSpec::NormClip { tau } => norm_clip(updates, tau)?,
+        AggregatorSpec::Krum { f } => {
+            RobustOutcome { global: krum(updates, f), clipped: Vec::new() }
+        }
+    };
+    if !outcome.global.is_finite() {
+        bail!("aggregated model contains non-finite values");
+    }
+    Ok(outcome)
+}
+
+/// Coordinate-wise trimmed mean: drop `floor(beta·n)` values from each
+/// end of every coordinate's sorted column, average the rest
+/// (unweighted). The trim count is clamped so at least one value
+/// survives on tiny cohorts.
+fn trimmed_mean(updates: &[(u32, u64, ParamSet)], beta: f64) -> ParamSet {
+    let n = updates.len();
+    let k = ((beta * n as f64).floor() as usize).min((n - 1) / 2);
+    reduce_columns(updates, |col| {
+        col.sort_unstable_by(f32::total_cmp);
+        let kept = &col[k..col.len() - k];
+        (kept.iter().map(|&v| v as f64).sum::<f64>() / kept.len() as f64) as f32
+    })
+}
+
+/// Coordinate-wise median (even cohorts average the two middle values).
+fn coordinate_median(updates: &[(u32, u64, ParamSet)]) -> ParamSet {
+    reduce_columns(updates, |col| {
+        col.sort_unstable_by(f32::total_cmp);
+        let n = col.len();
+        if n % 2 == 1 {
+            col[n / 2]
+        } else {
+            ((col[n / 2 - 1] as f64 + col[n / 2] as f64) / 2.0) as f32
+        }
+    })
+}
+
+/// Apply `reduce` to every coordinate's column of per-client values.
+fn reduce_columns(
+    updates: &[(u32, u64, ParamSet)],
+    mut reduce: impl FnMut(&mut Vec<f32>) -> f32,
+) -> ParamSet {
+    let mut out = updates[0].2.clone();
+    let mut col = Vec::with_capacity(updates.len());
+    for (ti, t) in out.tensors.iter_mut().enumerate() {
+        for j in 0..t.data.len() {
+            col.clear();
+            col.extend(updates.iter().map(|(_, _, p)| p.tensors[ti].data[j]));
+            t.data[j] = reduce(&mut col);
+        }
+    }
+    out
+}
+
+/// L2 norm of one update (f64 accumulation, like `ParamSet::l2_distance`).
+fn l2_norm(p: &ParamSet) -> f64 {
+    p.tensors
+        .iter()
+        .flat_map(|t| t.data.iter())
+        .map(|&v| (v as f64) * (v as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Clip each update to `tau ×` the cohort's median norm, then take the
+/// sample-weighted mean. Reports which clients got clipped.
+fn norm_clip(updates: &[(u32, u64, ParamSet)], tau: f64) -> Result<RobustOutcome> {
+    let mut norms: Vec<f64> = updates.iter().map(|(_, _, p)| l2_norm(p)).collect();
+    let mut sorted = norms.clone();
+    sorted.sort_unstable_by(f64::total_cmp);
+    let n = sorted.len();
+    let median_norm = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+    };
+    let threshold = tau * median_norm;
+    let mut clipped = Vec::new();
+    let mut fleet: Vec<(u64, ParamSet)> = Vec::with_capacity(n);
+    for ((cid, samples, p), norm) in updates.iter().zip(norms.drain(..)) {
+        if norm > threshold && norm > 0.0 {
+            let mut scaled = p.clone();
+            scaled.scale((threshold / norm) as f32);
+            clipped.push(*cid);
+            fleet.push((*samples, scaled));
+        } else {
+            fleet.push((*samples, p.clone()));
+        }
+    }
+    Ok(RobustOutcome { global: weighted_average(&fleet)?, clipped })
+}
+
+/// Krum selection: squared-distance matrix over the cohort, score each
+/// update by the sum of its `n - f - 2` smallest squared distances
+/// (clamped to [1, n-1] so small cohorts degrade to nearest-neighbor
+/// rather than failing), return the argmin update (ties → lowest index).
+fn krum(updates: &[(u32, u64, ParamSet)], f: u64) -> ParamSet {
+    let n = updates.len();
+    if n == 1 {
+        return updates[0].2.clone();
+    }
+    let dist2 = krum_distance_matrix(updates);
+    let neighbors = (n as i64 - f as i64 - 2).clamp(1, n as i64 - 1) as usize;
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    for i in 0..n {
+        let mut row: Vec<f64> =
+            (0..n).filter(|&j| j != i).map(|j| dist2[i * n + j]).collect();
+        row.sort_unstable_by(f64::total_cmp);
+        let score: f64 = row[..neighbors].iter().sum();
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    updates[best].2.clone()
+}
+
+/// Pairwise squared L2 distances, row-major `n × n` (exposed for the
+/// golden-fixture property test).
+pub fn krum_distance_matrix(updates: &[(u32, u64, ParamSet)]) -> Vec<f64> {
+    let n = updates.len();
+    let mut dist2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = updates[i].2.l2_distance(&updates[j].2);
+            let d2 = d * d;
+            dist2[i * n + j] = d2;
+            dist2[j * n + i] = d2;
+        }
+    }
+    dist2
 }
 
 #[cfg(test)]
@@ -358,5 +734,174 @@ mod tests {
         let mut agg = Aggregator::for_schema(&schema, 10).unwrap();
         agg.fold(10, &a).unwrap();
         assert!(agg.finish().is_err());
+    }
+
+    // -- robust registry ----------------------------------------------------
+
+    fn fleet(seed: u64, n: usize) -> Vec<(u32, u64, ParamSet)> {
+        let schema = toy_schema();
+        let mut prng = Pcg::seeded(seed);
+        (0..n)
+            .map(|cid| (cid as u32, 10 + cid as u64, init_params(&schema, &mut prng)))
+            .collect()
+    }
+
+    #[test]
+    fn spec_parse_name_roundtrip() {
+        for s in ["mean", "trimmed_mean:0.1", "median", "norm_clip:2.5", "krum:3"] {
+            let spec = AggregatorSpec::parse(s).unwrap();
+            assert_eq!(AggregatorSpec::parse(&spec.name()).unwrap(), spec, "{s}");
+            let back = AggregatorSpec::from_wire(spec.to_wire()).unwrap();
+            assert_eq!(back, spec, "{s} wire");
+        }
+        // bare parameterized names pick up defaults
+        assert_eq!(
+            AggregatorSpec::parse("trimmed_mean").unwrap(),
+            AggregatorSpec::TrimmedMean { beta: DEFAULT_TRIM }
+        );
+        assert_eq!(
+            AggregatorSpec::parse("norm_clip").unwrap(),
+            AggregatorSpec::NormClip { tau: DEFAULT_CLIP_TAU }
+        );
+        assert_eq!(
+            AggregatorSpec::parse("krum").unwrap(),
+            AggregatorSpec::Krum { f: DEFAULT_KRUM_F }
+        );
+    }
+
+    #[test]
+    fn spec_rejects_bad_input() {
+        assert!(matches!(
+            AggregatorSpec::parse("blockchain").unwrap_err(),
+            AggregatorError::UnknownAggregator { .. }
+        ));
+        assert!(matches!(
+            AggregatorSpec::parse("trimmed_mean:0.5").unwrap_err(),
+            AggregatorError::BadTrim { .. }
+        ));
+        assert!(matches!(
+            AggregatorSpec::parse("trimmed_mean:nan").unwrap_err(),
+            AggregatorError::BadParam { .. } | AggregatorError::BadTrim { .. }
+        ));
+        assert!(matches!(
+            AggregatorSpec::parse("norm_clip:0").unwrap_err(),
+            AggregatorError::BadTau { .. }
+        ));
+        assert!(matches!(
+            AggregatorSpec::parse("krum:two").unwrap_err(),
+            AggregatorError::BadParam { .. }
+        ));
+        let mut bytes = AggregatorSpec::Mean.to_wire();
+        bytes[0] = 77;
+        assert!(AggregatorSpec::from_wire(bytes).is_err());
+    }
+
+    #[test]
+    fn robust_mean_matches_streaming_bitwise() {
+        let updates = fleet(21, 7);
+        let out = robust_aggregate(AggregatorSpec::Mean, &updates).unwrap();
+        let batch: Vec<(u64, ParamSet)> =
+            updates.iter().map(|(_, n, p)| (*n, p.clone())).collect();
+        assert_bitwise_eq(&out.global, &weighted_average(&batch).unwrap());
+        assert!(out.clipped.is_empty());
+    }
+
+    #[test]
+    fn median_and_trimmed_mean_shrug_off_one_outlier() {
+        let mut updates = fleet(22, 5);
+        // poison client 0 with a huge scaled update
+        for t in &mut updates[0].2.tensors {
+            for v in &mut t.data {
+                *v *= 1e6;
+            }
+        }
+        let honest_envelope: f32 = updates[1..]
+            .iter()
+            .flat_map(|(_, _, p)| p.tensors.iter())
+            .flat_map(|t| t.data.iter())
+            .fold(0.0, |m, &v| m.max(v.abs()));
+        for spec in [
+            AggregatorSpec::Median,
+            AggregatorSpec::TrimmedMean { beta: 0.2 },
+        ] {
+            let out = robust_aggregate(spec, &updates).unwrap();
+            let worst: f32 = out
+                .global
+                .tensors
+                .iter()
+                .flat_map(|t| t.data.iter())
+                .fold(0.0, |m, &v| m.max(v.abs()));
+            assert!(
+                worst <= honest_envelope + 1e-6,
+                "{spec:?}: {worst} escaped honest envelope {honest_envelope}"
+            );
+        }
+    }
+
+    #[test]
+    fn norm_clip_reports_and_bounds_outliers() {
+        let mut updates = fleet(23, 5);
+        for t in &mut updates[2].2.tensors {
+            for v in &mut t.data {
+                *v *= 1e4;
+            }
+        }
+        let out = robust_aggregate(AggregatorSpec::NormClip { tau: 1.0 }, &updates).unwrap();
+        assert_eq!(out.clipped, vec![2]);
+        // the clipped cohort's mean stays near the honest updates' scale
+        let norms: Vec<f64> = updates.iter().map(|(_, _, p)| l2_norm(p)).collect();
+        let mut sorted = norms.clone();
+        sorted.sort_unstable_by(f64::total_cmp);
+        assert!(l2_norm(&out.global) <= sorted[2] * 1.5);
+    }
+
+    #[test]
+    fn krum_picks_a_cohort_member_and_rejects_the_outlier() {
+        let mut updates = fleet(24, 6);
+        for t in &mut updates[4].2.tensors {
+            for v in &mut t.data {
+                *v = -*v * 50.0;
+            }
+        }
+        let out = robust_aggregate(AggregatorSpec::Krum { f: 1 }, &updates).unwrap();
+        // the selected update is one of the honest members verbatim
+        let picked: Vec<usize> = updates
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, _, p))| p.l2_distance(&out.global) == 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(picked.len(), 1);
+        assert_ne!(picked[0], 4, "krum selected the poisoned update");
+    }
+
+    #[test]
+    fn robust_rules_survive_tiny_cohorts() {
+        for n in 1..4 {
+            let updates = fleet(25, n);
+            for spec in [
+                AggregatorSpec::Mean,
+                AggregatorSpec::TrimmedMean { beta: 0.4 },
+                AggregatorSpec::Median,
+                AggregatorSpec::NormClip { tau: 1.0 },
+                AggregatorSpec::Krum { f: 2 },
+            ] {
+                let out = robust_aggregate(spec, &updates);
+                assert!(out.is_ok(), "n={n} {spec:?}: {out:?}");
+            }
+        }
+        assert!(robust_aggregate(AggregatorSpec::Median, &[]).is_err());
+    }
+
+    #[test]
+    fn robust_rejects_shape_mismatch_and_non_finite() {
+        let mut updates = fleet(26, 3);
+        updates[1].2.tensors[0].data.push(0.0);
+        assert!(robust_aggregate(AggregatorSpec::Median, &updates).is_err());
+        let mut updates = fleet(27, 3);
+        updates[1].2.tensors[0].data[0] = f32::NAN;
+        // NaN sorts to the top under total_cmp and gets trimmed, but the
+        // mean path must still reject it
+        assert!(robust_aggregate(AggregatorSpec::Mean, &updates).is_err());
     }
 }

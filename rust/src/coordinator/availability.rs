@@ -172,6 +172,58 @@ impl AvailabilityModel {
     }
 }
 
+/// Ledger of *observed* (as opposed to scheduled) unavailability. The
+/// [`AvailabilityModel`] predicts dropout; this ledger records what each
+/// round actually saw: selected clients that contributed nothing —
+/// whether the schedule dropped them before the exchange or the server
+/// rejected their update as faulty
+/// ([`ClientFault`](crate::coordinator::server::ClientFault)). From the
+/// aggregation's point of view a Byzantine client and a dropped-out
+/// client are the same event (an update that never landed), so both feed
+/// the same ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObservedDropout {
+    selected: u64,
+    dropped: u64,
+    rejected: u64,
+}
+
+impl ObservedDropout {
+    /// Record one round: how many clients the selector picked, how many
+    /// the availability schedule dropped pre-exchange, and how many
+    /// survivors the server rejected as faulty post-exchange.
+    pub fn note_round(&mut self, selected: usize, dropped: usize, rejected: usize) {
+        self.selected += selected as u64;
+        self.dropped += dropped as u64;
+        self.rejected += rejected as u64;
+    }
+
+    /// Cumulative clients picked by the selector.
+    pub fn selected(&self) -> u64 {
+        self.selected
+    }
+
+    /// Cumulative pre-exchange dropouts (availability schedule).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Cumulative post-exchange rejections (faulty/Byzantine updates).
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Fraction of selected clients that contributed nothing so far —
+    /// the run's empirical dropout rate, rejections included.
+    pub fn observed_rate(&self) -> f64 {
+        if self.selected == 0 {
+            0.0
+        } else {
+            (self.dropped + self.rejected) as f64 / self.selected as f64
+        }
+    }
+}
+
 fn check_prob(what: &'static str, value: f64) -> Result<(), AvailabilityError> {
     // NaN fails the range check and is rejected (Config validation style)
     if (0.0..=1.0).contains(&value) {
@@ -285,6 +337,18 @@ mod tests {
         assert!(!m.has_stragglers());
         let m = AvailabilityModel::new(0.0, Vec::new(), 0.0, 10).unwrap();
         assert!(!m.has_stragglers());
+    }
+
+    #[test]
+    fn observed_ledger_counts_dropout_and_rejections_alike() {
+        let mut led = ObservedDropout::default();
+        assert_eq!(led.observed_rate(), 0.0, "empty ledger divides by nothing");
+        led.note_round(10, 2, 0); // schedule dropped 2
+        led.note_round(10, 0, 3); // server rejected 3
+        assert_eq!(led.selected(), 20);
+        assert_eq!(led.dropped(), 2);
+        assert_eq!(led.rejected(), 3);
+        assert_eq!(led.observed_rate(), 5.0 / 20.0);
     }
 
     #[test]

@@ -7,16 +7,20 @@
 //! zero-padding the tail with a {0,1} sample mask (the masked-loss graphs
 //! make padding exact — see python/tests/test_train.py).
 
+use std::sync::Mutex;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::comms::{
     dense_update, ternary_update, unpack_dequantize, CodedGlobal, CodedUpdate, DenseGlobal,
-    Message, TernaryGlobal,
+    DenseUpdate, Message, TernaryGlobal,
 };
-use crate::compress::{self, CodecSpec};
+use crate::compress::{self, CodecSpec, CompressedUpdate};
+use crate::coordinator::adversary::{AdversaryModel, AdversarySpec, Behavior};
 use crate::coordinator::backend::{Backend, TrainMode};
 use crate::data::synth::Dataset;
 use crate::model::ParamSet;
+use crate::transport::MAX_FRAME;
 use crate::util::rng::Pcg;
 
 /// A client's materialized local data (features copied out of the shared
@@ -85,12 +89,76 @@ pub fn make_chunks(data: &ShardData, order: &[u32], b: usize, nb: usize) -> Vec<
     chunks
 }
 
+/// Per-client adversarial state: the run's [`AdversaryModel`] (behavior
+/// is resolved per exchange from the round assignment's registered
+/// client id, so all transports act out the same server-seeded cast)
+/// plus the replay cache the `replay` behavior needs (guarded so a
+/// worker pool can share the runtime immutably). The honest default is
+/// inert.
+#[derive(Debug)]
+pub struct ClientAdversary {
+    model: AdversaryModel,
+    replay: Mutex<Option<Message>>,
+}
+
+impl Default for ClientAdversary {
+    fn default() -> Self {
+        Self::honest()
+    }
+}
+
+impl ClientAdversary {
+    /// The protocol-honest client every default run gets.
+    pub fn honest() -> Self {
+        Self::from_model(AdversaryModel::honest())
+    }
+
+    /// Act out `model`'s cast (what orchestrators and remote clients
+    /// build from the wire-delivered config).
+    pub fn from_model(model: AdversaryModel) -> Self {
+        ClientAdversary { model, replay: Mutex::new(None) }
+    }
+
+    /// A cast of one: every registered id acts out `behavior`
+    /// (fraction 1.0). Test harness convenience.
+    pub fn with_behavior(behavior: Behavior) -> Self {
+        let spec = AdversarySpec { behavior, fraction: 1.0, seed: 0 };
+        Self::from_model(AdversaryModel::new(spec).expect("fixed behavior spec is valid"))
+    }
+
+    /// The behavior registered client `rid` acts out.
+    pub fn behavior_of(&self, rid: u32) -> Behavior {
+        self.model.behavior_of(rid)
+    }
+
+    /// Apply `behavior`'s protocol deviation to an already-built reply;
+    /// `replay` swaps in the previous round's upload (first round
+    /// replays the fresh one — nothing staler exists). Honest and purely
+    /// statistical behaviors return the reply untouched.
+    pub fn tamper(&self, behavior: Behavior, fresh: Message, negotiated: CodecSpec) -> Message {
+        match behavior {
+            Behavior::Replay => {
+                let mut cache = self.replay.lock().unwrap();
+                let stale = cache.clone().unwrap_or_else(|| fresh.clone());
+                *cache = Some(fresh);
+                stale
+            }
+            Behavior::CorruptFrame => corrupt_message(fresh),
+            Behavior::WrongCodec => mislabel_message(fresh, negotiated),
+            Behavior::WrongSamples => inflate_samples(fresh),
+            Behavior::Oversize => oversize_message(fresh),
+            _ => fresh,
+        }
+    }
+}
+
 /// The client side of one protocol round: decode the broadcast, train
 /// locally, quantize, encode the upload. One instance per client; the
 /// `Loopback` transport holds them in-process, the `tfed client`
 /// subcommand holds exactly one in its own process. Stateless across
-/// rounds (all cross-round state travels in the messages), so a worker
-/// pool may drive different clients concurrently.
+/// rounds (all cross-round state travels in the messages — except the
+/// guarded replay cache an adversarial `replay` client keeps), so a
+/// worker pool may drive different clients concurrently.
 pub struct ClientRuntime<'a> {
     pub client_id: u32,
     pub backend: &'a dyn Backend,
@@ -100,24 +168,40 @@ pub struct ClientRuntime<'a> {
     /// negotiated payload codec (from the experiment config); broadcasts
     /// and round assignments carrying any other codec are rejected
     pub codec: CodecSpec,
+    /// the run's Byzantine cast (honest by default, from the config's
+    /// `AdversarySpec`); behavior resolves per exchange from the round
+    /// assignment's registered client id, so loopback, TCP, and the
+    /// sim's registered population all act out the same cast
+    pub adversary: ClientAdversary,
 }
 
 impl ClientRuntime<'_> {
     /// Handle one downstream broadcast; returns the upstream update.
-    /// `rng` is the round-assigned generator (seeded by the server), so the
-    /// result is independent of where or when this client runs.
-    pub fn handle_round(&self, rng: &mut Pcg, down: &Message) -> Result<Message> {
-        match down {
-            Message::TernaryGlobal(g) => self.ternary_round(rng, g),
-            Message::DenseGlobal(g) => self.dense_round(rng, g),
-            Message::CodedGlobal(g) => self.coded_round(rng, g),
+    /// `rng` is the round-assigned generator (seeded by the server) and
+    /// `rid` the assignment's registered client id, so the result is
+    /// independent of where or when this client runs. An adversarial
+    /// runtime trains honestly, then applies its behavior to the trained
+    /// parameters (statistical attacks) or the outgoing message
+    /// (protocol deviations).
+    pub fn handle_round(&self, rng: &mut Pcg, rid: u32, down: &Message) -> Result<Message> {
+        let behavior = self.adversary.behavior_of(rid);
+        let fresh = match down {
+            Message::TernaryGlobal(g) => self.ternary_round(rng, behavior, g),
+            Message::DenseGlobal(g) => self.dense_round(rng, behavior, g),
+            Message::CodedGlobal(g) => self.coded_round(rng, behavior, g),
             other => bail!("client received upstream message kind {}", other.kind()),
-        }
+        }?;
+        Ok(self.adversary.tamper(behavior, fresh, self.codec))
     }
 
     /// T-FedAvg (Algorithm 2): rebuild bare {-1,0,+1} latent weights + fp
     /// biases, train FTTQ from the broadcast w^q init, re-ternarize, upload.
-    fn ternary_round(&self, rng: &mut Pcg, g: &TernaryGlobal) -> Result<Message> {
+    fn ternary_round(
+        &self,
+        rng: &mut Pcg,
+        behavior: Behavior,
+        g: &TernaryGlobal,
+    ) -> Result<Message> {
         let schema = self.backend.schema();
         let start = {
             crate::obs_span!("client.decode");
@@ -168,6 +252,8 @@ impl ClientRuntime<'_> {
             )?
         };
         crate::obs_span!("client.encode");
+        let mut out = out;
+        attack_params(behavior, &mut out.params);
         let (patterns, deltas) = self.backend.quantize(&out.params)?;
         let qidx = schema.quantized_indices();
         let upd = ternary_update(
@@ -188,7 +274,7 @@ impl ClientRuntime<'_> {
     /// trained parameters with the same codec. Stochastic codecs draw
     /// from the round-assigned `rng` *after* training, so upload encoding
     /// is as reproducible as the training itself.
-    fn coded_round(&self, rng: &mut Pcg, g: &CodedGlobal) -> Result<Message> {
+    fn coded_round(&self, rng: &mut Pcg, behavior: Behavior, g: &CodedGlobal) -> Result<Message> {
         if g.update.codec != self.codec {
             bail!(
                 "broadcast codec {} does not match negotiated codec {}",
@@ -216,6 +302,8 @@ impl ClientRuntime<'_> {
             )?
         };
         crate::obs_span!("client.encode");
+        let mut out = out;
+        attack_params(behavior, &mut out.params);
         let update = compress::compress(codec.as_ref(), &out.params, rng)?;
         Ok(Message::CodedUpdate(CodedUpdate {
             client_id: self.client_id,
@@ -226,7 +314,7 @@ impl ClientRuntime<'_> {
     }
 
     /// FedAvg: load the dense broadcast, train full precision, upload.
-    fn dense_round(&self, rng: &mut Pcg, g: &DenseGlobal) -> Result<Message> {
+    fn dense_round(&self, rng: &mut Pcg, behavior: Behavior, g: &DenseGlobal) -> Result<Message> {
         let schema = self.backend.schema();
         let start = {
             crate::obs_span!("client.decode");
@@ -259,6 +347,8 @@ impl ClientRuntime<'_> {
             )?
         };
         crate::obs_span!("client.encode");
+        let mut out = out;
+        attack_params(behavior, &mut out.params);
         Ok(Message::DenseUpdate(dense_update(
             self.client_id,
             self.shard.len() as u64,
@@ -266,6 +356,119 @@ impl ClientRuntime<'_> {
             out.mean_loss,
         )))
     }
+}
+
+/// Statistical attacks transform the trained parameters *before*
+/// encoding, so they ride every codec's legal wire format.
+fn attack_params(behavior: Behavior, params: &mut ParamSet) {
+    match behavior {
+        Behavior::Scale(f) => params.scale(f as f32),
+        Behavior::SignFlip => params.scale(-1.0),
+        _ => {}
+    }
+}
+
+/// (client_id, num_samples, train_loss) of any upstream update message.
+fn update_identity(msg: &Message) -> (u32, u64, f32) {
+    match msg {
+        Message::TernaryUpdate(u) => (u.client_id, u.num_samples, u.train_loss),
+        Message::DenseUpdate(u) => (u.client_id, u.num_samples, u.train_loss),
+        Message::CodedUpdate(u) => (u.client_id, u.num_samples, u.train_loss),
+        _ => (0, 0, 0.0),
+    }
+}
+
+/// `corrupt_frame`: damage the payload so the server's decode path fails
+/// with a typed per-client error while the frame layer stays legal.
+fn corrupt_message(msg: Message) -> Message {
+    match msg {
+        Message::TernaryUpdate(mut u) => {
+            // dropping one packed byte breaks the nb == len.div_ceil(4)
+            // invariant the wire decoder enforces
+            match u.layers.iter_mut().find(|l| !l.pattern.bytes.is_empty()) {
+                Some(layer) => {
+                    layer.pattern.bytes.pop();
+                }
+                None => u.fp_tensors.push((u32::MAX, Vec::new())),
+            }
+            Message::TernaryUpdate(u)
+        }
+        Message::DenseUpdate(mut u) => {
+            match u.tensors.iter_mut().find(|t| !t.is_empty()) {
+                Some(t) => {
+                    t.pop();
+                }
+                None => u.tensors.clear(),
+            }
+            Message::DenseUpdate(u)
+        }
+        Message::CodedUpdate(mut u) => {
+            match u.update.tensors.iter_mut().find(|t| !t.is_empty()) {
+                Some(t) => t.truncate(t.len() / 2),
+                None => u.update.tensors.clear(),
+            }
+            Message::CodedUpdate(u)
+        }
+        other => other,
+    }
+}
+
+/// `wrong_codec`: answer with a payload the negotiated protocol does not
+/// expect — a mislabeled codec id, or the wrong message kind entirely.
+fn mislabel_message(msg: Message, negotiated: CodecSpec) -> Message {
+    match msg {
+        Message::CodedUpdate(mut u) => {
+            u.update.codec =
+                if negotiated == CodecSpec::Fp16 { CodecSpec::Dense } else { CodecSpec::Fp16 };
+            Message::CodedUpdate(u)
+        }
+        Message::TernaryUpdate(u) => Message::DenseUpdate(DenseUpdate {
+            client_id: u.client_id,
+            num_samples: u.num_samples,
+            tensors: Vec::new(),
+            train_loss: u.train_loss,
+        }),
+        Message::DenseUpdate(u) => Message::CodedUpdate(CodedUpdate {
+            client_id: u.client_id,
+            num_samples: u.num_samples,
+            train_loss: u.train_loss,
+            update: CompressedUpdate { codec: CodecSpec::Fp16, tensors: Vec::new() },
+        }),
+        other => other,
+    }
+}
+
+/// `wrong_samples`: over-report the shard size to grab aggregation weight
+/// (the server verifies the claim against its own shard bookkeeping).
+fn inflate_samples(msg: Message) -> Message {
+    match msg {
+        Message::TernaryUpdate(mut u) => {
+            u.num_samples = u.num_samples * 2 + 1;
+            Message::TernaryUpdate(u)
+        }
+        Message::DenseUpdate(mut u) => {
+            u.num_samples = u.num_samples * 2 + 1;
+            Message::DenseUpdate(u)
+        }
+        Message::CodedUpdate(mut u) => {
+            u.num_samples = u.num_samples * 2 + 1;
+            Message::CodedUpdate(u)
+        }
+        other => other,
+    }
+}
+
+/// `oversize`: reply with a payload the frame layer must refuse to encode
+/// (one tensor of MAX_FRAME / 4 + 1 floats exceeds the frame cap by
+/// construction, before headers).
+fn oversize_message(msg: Message) -> Message {
+    let (client_id, num_samples, train_loss) = update_identity(&msg);
+    Message::DenseUpdate(DenseUpdate {
+        client_id,
+        num_samples,
+        tensors: vec![vec![0.0f32; MAX_FRAME / 4 + 1]],
+        train_loss,
+    })
 }
 
 /// A shuffled epoch order over a shard.
@@ -324,6 +527,130 @@ mod tests {
         let mut o = epoch_order(50, &mut rng);
         o.sort_unstable();
         assert_eq!(o, (0..50).collect::<Vec<u32>>());
+    }
+
+    fn dense_msg(cid: u32, n: u64) -> Message {
+        Message::DenseUpdate(DenseUpdate {
+            client_id: cid,
+            num_samples: n,
+            tensors: vec![vec![1.0, 2.0, 3.0]],
+            train_loss: 0.5,
+        })
+    }
+
+    #[test]
+    fn honest_tamper_is_identity() {
+        let adv = ClientAdversary::honest();
+        assert_eq!(adv.behavior_of(7), Behavior::Honest);
+        let msg = dense_msg(3, 10);
+        assert_eq!(adv.tamper(Behavior::Honest, msg.clone(), CodecSpec::Dense), msg);
+        // statistical behaviors also leave the built message untouched
+        assert_eq!(adv.tamper(Behavior::SignFlip, msg.clone(), CodecSpec::Dense), msg);
+    }
+
+    #[test]
+    fn with_behavior_casts_every_registered_id() {
+        let adv = ClientAdversary::with_behavior(Behavior::SignFlip);
+        for rid in [0u32, 1, 99, 1_000_000] {
+            assert_eq!(adv.behavior_of(rid), Behavior::SignFlip);
+        }
+    }
+
+    #[test]
+    fn replay_returns_previous_round_upload() {
+        let adv = ClientAdversary::with_behavior(Behavior::Replay);
+        let r1 = dense_msg(3, 10);
+        let r2 = Message::DenseUpdate(DenseUpdate {
+            client_id: 3,
+            num_samples: 10,
+            tensors: vec![vec![9.0, 9.0, 9.0]],
+            train_loss: 0.1,
+        });
+        // first round has nothing staler than itself
+        assert_eq!(adv.tamper(Behavior::Replay, r1.clone(), CodecSpec::Dense), r1);
+        // second round replays the first
+        assert_eq!(adv.tamper(Behavior::Replay, r2.clone(), CodecSpec::Dense), r1);
+        // third round replays the second
+        assert_eq!(adv.tamper(Behavior::Replay, dense_msg(3, 10), CodecSpec::Dense), r2);
+    }
+
+    #[test]
+    fn corrupt_dense_drops_a_value() {
+        let adv = ClientAdversary::honest();
+        match adv.tamper(Behavior::CorruptFrame, dense_msg(1, 5), CodecSpec::Dense) {
+            Message::DenseUpdate(u) => assert_eq!(u.tensors[0].len(), 2),
+            other => panic!("unexpected kind {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn corrupt_ternary_breaks_wire_decode() {
+        use crate::comms::{TernaryLayer, TernaryUpdate};
+        use crate::compress::pack_ternary;
+        let honest = Message::TernaryUpdate(TernaryUpdate {
+            client_id: 2,
+            num_samples: 7,
+            layers: vec![TernaryLayer {
+                param_index: 0,
+                pattern: pack_ternary(&[1, -1, 0, 1, -1]),
+                wq: 0.8,
+                delta: 0.1,
+            }],
+            fp_tensors: vec![(1, vec![0.25, -0.5])],
+            train_loss: 0.3,
+        });
+        assert!(Message::decode(&honest.encode()).is_ok());
+        let adv = ClientAdversary::honest();
+        let bad = adv.tamper(Behavior::CorruptFrame, honest, CodecSpec::Ternary);
+        let err = Message::decode(&bad.encode()).unwrap_err().to_string();
+        assert!(err.contains("inconsistent"), "got: {err}");
+    }
+
+    #[test]
+    fn mislabel_swaps_codec_or_kind() {
+        let adv = ClientAdversary::honest();
+        let coded = Message::CodedUpdate(CodedUpdate {
+            client_id: 4,
+            num_samples: 6,
+            train_loss: 0.2,
+            update: CompressedUpdate { codec: CodecSpec::Fp16, tensors: vec![vec![0, 1]] },
+        });
+        match adv.tamper(Behavior::WrongCodec, coded, CodecSpec::Fp16) {
+            Message::CodedUpdate(u) => assert_eq!(u.update.codec, CodecSpec::Dense),
+            other => panic!("unexpected kind {}", other.kind()),
+        }
+        // a dense reply mutates into a whole different message kind
+        match adv.tamper(Behavior::WrongCodec, dense_msg(4, 6), CodecSpec::Dense) {
+            Message::CodedUpdate(u) => {
+                assert_eq!(u.client_id, 4);
+                assert_eq!(u.num_samples, 6);
+            }
+            other => panic!("unexpected kind {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn inflate_overreports_samples_only() {
+        let adv = ClientAdversary::honest();
+        match adv.tamper(Behavior::WrongSamples, dense_msg(5, 10), CodecSpec::Dense) {
+            Message::DenseUpdate(u) => {
+                assert_eq!(u.num_samples, 21);
+                assert_eq!(u.tensors[0], vec![1.0, 2.0, 3.0]);
+            }
+            other => panic!("unexpected kind {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn oversize_exceeds_frame_cap() {
+        let adv = ClientAdversary::honest();
+        match adv.tamper(Behavior::Oversize, dense_msg(6, 4), CodecSpec::Dense) {
+            Message::DenseUpdate(u) => {
+                assert_eq!(u.client_id, 6);
+                assert!(u.tensors[0].len() * 4 > MAX_FRAME);
+            }
+            other => panic!("unexpected kind {}", other.kind()),
+        }
     }
 
     #[test]

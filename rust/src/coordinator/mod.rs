@@ -3,9 +3,13 @@
 //! * `selection` — seeded client sampling (participation ratio lambda)
 //! * `aggregation` — streaming data-size-weighted FedAvg fold (eq. 2):
 //!   O(model) peak memory at any fleet size, bit-identical to the batch
-//!   average
+//!   average — plus the string-keyed robust-aggregation registry
+//!   (trimmed mean, coordinate median, norm clipping, Krum)
 //! * `availability` — per-round dropout schedules and straggler delay
-//!   traces (validated probabilities, typed errors)
+//!   traces (validated probabilities, typed errors), plus the observed
+//!   ledger that counts fault rejections as dropout
+//! * `adversary` — the Byzantine client axis: typed misbehaviors cast
+//!   per registered client id from a server-seeded generator
 //! * `client` — local shard materialization + epoch-chunk batching + the
 //!   `ClientRuntime` round handler shared by loopback and remote clients
 //! * `backend` — compute abstraction: PJRT artifacts or the native mirror
@@ -13,6 +17,7 @@
 //!   (Algorithm 2): selected clients fan out over a `transport::Transport`
 //!   via a worker pool, and every cross-network byte is framed and counted
 
+pub mod adversary;
 pub mod aggregation;
 pub mod availability;
 pub mod backend;
@@ -20,8 +25,14 @@ pub mod client;
 pub mod selection;
 pub mod server;
 
-pub use aggregation::{weighted_average, Aggregator};
-pub use availability::{AvailabilityError, AvailabilityModel, Phase};
+pub use adversary::{AdversaryError, AdversaryModel, AdversarySpec, Behavior};
+pub use aggregation::{
+    aggregator_names, krum_distance_matrix, robust_aggregate, weighted_average, Aggregator,
+    AggregatorSpec, RobustOutcome,
+};
+pub use availability::{AvailabilityError, AvailabilityModel, ObservedDropout, Phase};
 pub use backend::{Backend, LocalOutcome, NativeBackend, PjrtBackend, TrainMode};
-pub use client::{ClientRuntime, ShardData};
-pub use server::{materialize_data, materialize_shard, run_experiment, Orchestrator};
+pub use client::{ClientAdversary, ClientRuntime, ShardData};
+pub use server::{
+    materialize_data, materialize_shard, run_experiment, ClientFault, Orchestrator,
+};

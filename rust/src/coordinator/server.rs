@@ -12,6 +12,16 @@
 //! transport. `Orchestrator::with_sim` swaps in the virtual-time
 //! `sim::SimTransport` and a lazily-profiled registered population, so
 //! million-client fleets run in seconds of wall time (DESIGN.md §9).
+//!
+//! The server does not trust its clients: every reply is decoded and
+//! validated individually, and a malformed, mislabeled, oversized, or
+//! sample-count-inflated update becomes a typed [`ClientFault`] that
+//! rejects *that client's* contribution — the round aggregates the
+//! survivors (under the configured
+//! [`AggregatorSpec`](crate::coordinator::aggregation::AggregatorSpec)
+//! robust rule) instead of panicking or aborting (DESIGN.md §13).
+
+use std::fmt;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -20,10 +30,13 @@ use crate::comms::{
 };
 use crate::compress::{self, CodecSpec};
 use crate::config::{ExperimentConfig, Protocol, Task};
-use crate::coordinator::aggregation::Aggregator;
-use crate::coordinator::availability::{AvailabilityModel, REAL_STRAGGLE_CAP_MS};
+use crate::coordinator::adversary::AdversaryModel;
+use crate::coordinator::aggregation::{robust_aggregate, Aggregator, AggregatorSpec};
+use crate::coordinator::availability::{
+    AvailabilityModel, ObservedDropout, REAL_STRAGGLE_CAP_MS,
+};
 use crate::coordinator::backend::{Backend, TrainMode};
-use crate::coordinator::client::{ClientRuntime, ShardData};
+use crate::coordinator::client::{ClientAdversary, ClientRuntime, ShardData};
 use crate::coordinator::selection::{apply_dropout, select_clients, select_cohort};
 use crate::sim::{FleetModel, SimSpec, SimTransport};
 use crate::data::partition::{partition, PartitionSpec};
@@ -62,6 +75,86 @@ impl FaultSpec {
         AvailabilityModel::try_from(spec.clone())?;
         Ok(spec)
     }
+}
+
+/// Why one client's round contribution was rejected. Every arm is a
+/// *per-client* verdict: the round continues with the surviving cohort
+/// and the rejection is reported in `RoundRecord::rejected` — from the
+/// availability ledger's point of view, a Byzantine client and a
+/// dropped-out client look the same (an update that never arrived).
+#[derive(Clone, Debug)]
+pub enum ClientFault {
+    /// The exchange itself failed: the link died, a frame checksum
+    /// mismatched, or the reply payload refused to decode (corrupt and
+    /// oversized adversaries land here).
+    Exchange { detail: String },
+    /// Reply decoded to a message kind the protocol does not expect.
+    WrongKind { kind: u8 },
+    /// Coded reply labeled with a codec other than the negotiated one.
+    CodecMismatch { got: String, want: String },
+    /// Ternary reply with the wrong quantized-layer count.
+    LayerCount { got: usize, want: usize },
+    /// Tensor count or shape disagrees with the model schema.
+    Shape { detail: String },
+    /// Payload decompression/rebuild failed.
+    Decode { detail: String },
+    /// Client-reported sample count disagrees with the server-side shard
+    /// size. The server knows every shard's size from its own partition
+    /// of the data, so a client cannot grab aggregation weight by
+    /// over-reporting `num_samples` (historically this aborted the whole
+    /// round; now it costs only the liar their contribution).
+    SampleCount { reported: u64, expected: u64 },
+    /// Update contains NaN or infinite values.
+    NonFinite,
+}
+
+impl fmt::Display for ClientFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientFault::Exchange { detail } => write!(f, "exchange failed: {detail}"),
+            ClientFault::WrongKind { kind } => {
+                write!(f, "unexpected message kind {kind}")
+            }
+            ClientFault::CodecMismatch { got, want } => {
+                write!(f, "replied with codec {got}, negotiated {want}")
+            }
+            ClientFault::LayerCount { got, want } => {
+                write!(f, "{got} quantized layers, model has {want}")
+            }
+            ClientFault::Shape { detail } => write!(f, "shape mismatch: {detail}"),
+            ClientFault::Decode { detail } => write!(f, "undecodable update: {detail}"),
+            ClientFault::SampleCount { reported, expected } => {
+                write!(f, "reported {reported} samples, server expected {expected}")
+            }
+            ClientFault::NonFinite => write!(f, "update contains non-finite values"),
+        }
+    }
+}
+
+/// What a federated round hands back to the driver: training loss over
+/// the accepted cohort, protocol factors, and the per-client rejection /
+/// clipping verdicts for the round record.
+struct FederatedOutcome {
+    train_loss: f32,
+    factors: Vec<f32>,
+    rejected: Vec<u32>,
+    clipped: Vec<u32>,
+}
+
+impl FederatedOutcome {
+    fn clean(train_loss: f32, factors: Vec<f32>) -> Self {
+        FederatedOutcome { train_loss, factors, rejected: Vec::new(), clipped: Vec::new() }
+    }
+}
+
+/// One client's reply, decoded and validated against the server's own
+/// view of the run (schema shapes, negotiated codec, shard size).
+struct DecodedUpdate {
+    num_samples: u64,
+    train_loss: f32,
+    /// per-quantized-layer wq factors (T-FedAvg replies; empty otherwise)
+    wqs: Vec<f32>,
+    params: ParamSet,
 }
 
 /// Synthesize the datasets and compute the client partition (indices only,
@@ -179,6 +272,9 @@ pub struct Orchestrator<'a> {
     last_wq_mean: Vec<f32>,
     rng: Pcg,
     availability: AvailabilityModel,
+    /// what the rounds actually saw: scheduled dropouts plus per-client
+    /// fault rejections, both counted as clients that contributed nothing
+    observed: ObservedDropout,
     /// virtual registered population (None = every client is real and
     /// selection runs over `0..n_clients`, the historical behavior)
     population: Option<Population>,
@@ -288,6 +384,12 @@ impl<'a> Orchestrator<'a> {
             Some(t) => t,
             None if cfg.protocol.is_centralized() => Box::new(Loopback::new(Vec::new())),
             None => {
+                // the fleet's adversarial cast: each runtime carries the
+                // whole model and resolves its behavior per registered id
+                // at exchange time, so loopback, TCP, and sim populations
+                // act out the identical server-seeded cast
+                let cast = AdversaryModel::new(cfg.adversary)
+                    .map_err(|e| anyhow!("invalid adversary spec: {e}"))?;
                 let runtimes: Vec<ClientRuntime<'a>> = shards
                     .drain(..)
                     .enumerate()
@@ -298,6 +400,7 @@ impl<'a> Orchestrator<'a> {
                         local_epochs: cfg.local_epochs,
                         lr: cfg.lr,
                         codec: cfg.codec,
+                        adversary: ClientAdversary::from_model(cast.clone()),
                     })
                     .collect();
                 let fleet = Loopback::new(runtimes);
@@ -334,6 +437,7 @@ impl<'a> Orchestrator<'a> {
             last_wq_mean: vec![backend.wq_init(); nq],
             rng,
             availability,
+            observed: ObservedDropout::default(),
             population,
             stats_mark: LinkStats::default(),
             obs_lane: 0,
@@ -378,6 +482,12 @@ impl<'a> Orchestrator<'a> {
     /// Current dense global model (server state).
     pub fn global(&self) -> &ParamSet {
         &self.global
+    }
+
+    /// The run's observed-availability ledger: cumulative scheduled
+    /// dropouts plus per-client fault rejections.
+    pub fn observed_dropout(&self) -> ObservedDropout {
+        self.observed
     }
 
     pub fn shard_sizes(&self) -> Vec<usize> {
@@ -432,9 +542,9 @@ impl<'a> Orchestrator<'a> {
     pub fn round(&mut self, round: usize) -> Result<RoundRecord> {
         let sw = Stopwatch::start();
         trace::set_context(self.obs_lane, round as u32, trace::NO_CLIENT);
-        let selected = {
+        let (picked, selected) = {
             crate::obs_span!("round.select");
-            let selected = match self.population {
+            let picked = match self.population {
                 None => {
                     let k = self.cfg.selected_per_round();
                     select_clients(self.cfg.n_clients, k, &mut self.rng)
@@ -442,7 +552,8 @@ impl<'a> Orchestrator<'a> {
                 Some(p) => select_cohort(p.registered, p.cohort, &mut self.rng),
             };
             let dropout = self.availability.dropout_for_round(round);
-            apply_dropout(&selected, dropout, &mut self.rng)
+            let kept = apply_dropout(&picked, dropout, &mut self.rng);
+            (picked.len(), kept)
         };
         if crate::obs::enabled() {
             obs_metrics::counter("tfed_rounds_total").inc();
@@ -457,13 +568,24 @@ impl<'a> Orchestrator<'a> {
             self.straggler_delays(&selected)
         };
 
-        let (train_loss, factors) = match self.cfg.protocol {
+        let outcome = match self.cfg.protocol {
             Protocol::TFedAvg | Protocol::FedAvg => {
                 self.round_federated(round, &selected, &delays)?
             }
-            Protocol::Baseline => self.round_centralized(round, TrainMode::Fp)?,
-            Protocol::Ttq => self.round_centralized(round, TrainMode::Ttq)?,
+            Protocol::Baseline => {
+                let (l, f) = self.round_centralized(round, TrainMode::Fp)?;
+                FederatedOutcome::clean(l, f)
+            }
+            Protocol::Ttq => {
+                let (l, f) = self.round_centralized(round, TrainMode::Ttq)?;
+                FederatedOutcome::clean(l, f)
+            }
         };
+        let FederatedOutcome { train_loss, factors, rejected, clipped } = outcome;
+        // both scheduled dropouts and fault rejections land in the
+        // observed-availability ledger: from the aggregation's point of
+        // view each is a selected client whose update never arrived
+        self.observed.note_round(picked, picked - selected.len(), rejected.len());
 
         // a sequential dispatch runs exchanges on this thread and leaves
         // the last client's span context behind; restore the server lane
@@ -512,6 +634,8 @@ impl<'a> Orchestrator<'a> {
             selected,
             factors,
             evaluated,
+            rejected,
+            clipped,
         };
         if evaluated {
             info!(
@@ -569,6 +693,8 @@ impl<'a> Orchestrator<'a> {
             cum_up_bytes: self.metrics.total_up_bytes(),
             cum_down_bytes: self.metrics.total_down_bytes(),
             sim_secs: self.metrics.total_sim_secs(),
+            rejected: rec.rejected.len() as u64,
+            clipped: rec.clipped.len() as u64,
         });
     }
 
@@ -602,7 +728,7 @@ impl<'a> Orchestrator<'a> {
         round: usize,
         selected: &[usize],
         delays: &[u64],
-    ) -> Result<(f32, Vec<f32>)> {
+    ) -> Result<FederatedOutcome> {
         let schema = self.backend.schema().clone();
         let qidx = schema.quantized_indices();
         let shapes: Vec<Vec<usize>> =
@@ -658,102 +784,228 @@ impl<'a> Orchestrator<'a> {
         // take the span context back before server-side aggregation
         trace::set_context(self.obs_lane, round as u32, trace::NO_CLIENT);
 
-        // server side: decode + rebuild + fold, in selection order. The
-        // streaming Aggregator applies the final eq.-2 weight as each
-        // update arrives — the sample total is known up front from the
-        // server's own shard sizes — so peak memory is one model, not
-        // `clients × model`, and the result is bit-identical to the old
-        // batch average (same float-op sequence; see DESIGN.md §8).
+        // server side: decode + validate + aggregate, in selection order.
+        // Two-pass design (DESIGN.md §13): the default `mean` aggregator
+        // first attempts the historical streaming fold, which applies the
+        // final eq.-2 weight as each update arrives — peak memory is one
+        // model, not `clients × model`, and the result is bit-identical
+        // to the old batch average (same float-op sequence; DESIGN.md §8).
+        // Any per-client fault — or any robust aggregation rule — takes
+        // the fault-tolerant batch path instead, which rejects bad
+        // updates individually and aggregates the survivors.
         crate::obs_span!("round.aggregate");
-        let expected_total: u64 =
-            selected.iter().map(|&cid| self.shard_sizes[self.shard_of(cid)] as u64).sum();
-        let mut agg = Aggregator::for_schema(&schema, expected_total)?;
-        let mut loss_acc = 0f64;
-        let mut wq_mean = vec![0f32; qidx.len()];
-        for (slot, reply) in replies.into_iter().enumerate() {
-            let expect_n = self.shard_sizes[self.shard_of(selected[slot])] as u64;
-            let (num_samples, rebuilt) = match (self.cfg.protocol, reply) {
-                (Protocol::TFedAvg, Message::TernaryUpdate(u)) => {
-                    if u.layers.len() != qidx.len() {
-                        bail!(
-                            "client {}: {} quantized layers, model has {}",
-                            selected[slot],
-                            u.layers.len(),
-                            qidx.len()
-                        );
-                    }
-                    for (k, l) in u.layers.iter().enumerate() {
-                        wq_mean[k] += l.wq / selected.len() as f32;
-                    }
-                    loss_acc += u.train_loss as f64;
-                    (u.num_samples, rebuild_update(&u, &shapes)?)
+        let (global, wq_mean, loss_sum, accepted, rejected, clipped) =
+            match if self.cfg.aggregator == AggregatorSpec::Mean {
+                self.fold_mean_optimistic(selected, &replies, &schema, &shapes, qidx.len())?
+            } else {
+                None
+            } {
+                Some((global, wq_mean, loss_sum)) => {
+                    (global, wq_mean, loss_sum, selected.len(), Vec::new(), Vec::new())
                 }
-                (Protocol::FedAvg, Message::DenseUpdate(u))
-                    if self.cfg.codec == CodecSpec::Dense =>
-                {
-                    loss_acc += u.train_loss as f64;
-                    let mut p = ParamSet::zeros(&schema);
-                    if u.tensors.len() != p.tensors.len() {
-                        bail!(
-                            "client {}: update has {} tensors, model wants {}",
-                            selected[slot],
-                            u.tensors.len(),
-                            p.tensors.len()
-                        );
-                    }
-                    for ((t, data), shape) in
-                        p.tensors.iter_mut().zip(u.tensors).zip(&shapes)
-                    {
-                        if t.data.len() != data.len() {
-                            bail!("tensor size mismatch for shape {shape:?}");
-                        }
-                        t.data = data;
-                    }
-                    (u.num_samples, p)
-                }
-                (Protocol::FedAvg, Message::CodedUpdate(u))
-                    if self.cfg.codec != CodecSpec::Dense =>
-                {
-                    if u.update.codec != self.cfg.codec {
-                        bail!(
-                            "client {} replied with codec {}, negotiated {}",
-                            selected[slot],
-                            u.update.codec.name(),
-                            self.cfg.codec.name()
-                        );
-                    }
-                    loss_acc += u.train_loss as f64;
-                    let codec = compress::build(self.cfg.codec)?;
-                    (u.num_samples, compress::decompress(codec.as_ref(), &u.update, &shapes)?)
-                }
-                (_, other) => bail!(
-                    "client {} returned unexpected message kind {}",
-                    selected[slot],
-                    other.kind()
-                ),
+                None => self.fold_robust(round, selected, &replies, &schema, &shapes, qidx.len())?,
             };
-            if num_samples != expect_n {
-                bail!(
-                    "client {} reported {} samples, server expected {}",
-                    selected[slot],
-                    num_samples,
-                    expect_n
-                );
-            }
-            agg.fold(num_samples, &rebuilt)?;
+        self.global = global;
+        if !clipped.is_empty() && crate::obs::enabled() {
+            obs_metrics::counter("tfed_updates_clipped_total").add(clipped.len() as u64);
         }
-
-        // server aggregation (eq. 2)
-        let folded = agg.folded();
-        self.global = agg.finish()?;
-        debug!("aggregated {} updates from {} clients", folded, selected.len());
+        debug!(
+            "aggregated {} updates from {} clients ({} rejected)",
+            accepted,
+            selected.len(),
+            rejected.len()
+        );
         let factors = if self.cfg.protocol == Protocol::TFedAvg {
             self.last_wq_mean = wq_mean.clone();
             wq_mean
         } else {
             vec![]
         };
-        Ok(((loss_acc / selected.len().max(1) as f64) as f32, factors))
+        Ok(FederatedOutcome {
+            train_loss: (loss_sum / accepted.max(1) as f64) as f32,
+            factors,
+            rejected,
+            clipped,
+        })
+    }
+
+    /// Decode one client's reply and validate it against the server's own
+    /// view of the run: message kind, layer/tensor counts, shapes, the
+    /// negotiated codec, the server-side shard size, and finiteness. Every
+    /// failure is a typed per-client verdict, never a round abort.
+    fn decode_update(
+        &self,
+        cid: usize,
+        reply: &Message,
+        schema: &ModelSchema,
+        shapes: &[Vec<usize>],
+        n_quantized: usize,
+    ) -> Result<DecodedUpdate, ClientFault> {
+        let (num_samples, train_loss, wqs, params) = match (self.cfg.protocol, reply) {
+            (Protocol::TFedAvg, Message::TernaryUpdate(u)) => {
+                if u.layers.len() != n_quantized {
+                    return Err(ClientFault::LayerCount {
+                        got: u.layers.len(),
+                        want: n_quantized,
+                    });
+                }
+                let rebuilt = rebuild_update(u, shapes)
+                    .map_err(|e| ClientFault::Decode { detail: format!("{e:#}") })?;
+                let wqs = u.layers.iter().map(|l| l.wq).collect();
+                (u.num_samples, u.train_loss, wqs, rebuilt)
+            }
+            (Protocol::FedAvg, Message::DenseUpdate(u))
+                if self.cfg.codec == CodecSpec::Dense =>
+            {
+                let mut p = ParamSet::zeros(schema);
+                if u.tensors.len() != p.tensors.len() {
+                    return Err(ClientFault::Shape {
+                        detail: format!(
+                            "update has {} tensors, model wants {}",
+                            u.tensors.len(),
+                            p.tensors.len()
+                        ),
+                    });
+                }
+                for ((t, data), shape) in p.tensors.iter_mut().zip(&u.tensors).zip(shapes) {
+                    if t.data.len() != data.len() {
+                        return Err(ClientFault::Shape {
+                            detail: format!(
+                                "{} values for tensor of shape {shape:?}",
+                                data.len()
+                            ),
+                        });
+                    }
+                    t.data.clone_from(data);
+                }
+                (u.num_samples, u.train_loss, Vec::new(), p)
+            }
+            (Protocol::FedAvg, Message::CodedUpdate(u))
+                if self.cfg.codec != CodecSpec::Dense =>
+            {
+                if u.update.codec != self.cfg.codec {
+                    return Err(ClientFault::CodecMismatch {
+                        got: u.update.codec.name(),
+                        want: self.cfg.codec.name(),
+                    });
+                }
+                let codec = compress::build(self.cfg.codec)
+                    .map_err(|e| ClientFault::Decode { detail: format!("{e:#}") })?;
+                let p = compress::decompress(codec.as_ref(), &u.update, shapes)
+                    .map_err(|e| ClientFault::Decode { detail: format!("{e:#}") })?;
+                (u.num_samples, u.train_loss, Vec::new(), p)
+            }
+            (_, other) => return Err(ClientFault::WrongKind { kind: other.kind() }),
+        };
+        // never trust the client's sample count: the server partitioned
+        // the data itself, so it knows exactly how many samples this
+        // client's shard holds
+        let expect_n = self.shard_sizes[self.shard_of(cid)] as u64;
+        if num_samples != expect_n {
+            return Err(ClientFault::SampleCount { reported: num_samples, expected: expect_n });
+        }
+        if !params.is_finite() {
+            return Err(ClientFault::NonFinite);
+        }
+        Ok(DecodedUpdate { num_samples, train_loss, wqs, params })
+    }
+
+    /// Pass 1 — the historical streaming fold (`mean` only): assume the
+    /// whole cohort is honest and fold each update as it is decoded, in
+    /// selection order. Returns `Ok(None)` at the first per-client fault
+    /// so the caller can rerun fault-tolerantly; honest rounds never take
+    /// that fallback and keep the byte-identical legacy float-op sequence.
+    #[allow(clippy::type_complexity)]
+    fn fold_mean_optimistic(
+        &self,
+        selected: &[usize],
+        replies: &[Result<Message>],
+        schema: &ModelSchema,
+        shapes: &[Vec<usize>],
+        n_quantized: usize,
+    ) -> Result<Option<(ParamSet, Vec<f32>, f64)>> {
+        let expected_total: u64 =
+            selected.iter().map(|&cid| self.shard_sizes[self.shard_of(cid)] as u64).sum();
+        let mut agg = Aggregator::for_schema(schema, expected_total)?;
+        let mut wq_mean = vec![0f32; n_quantized];
+        let mut loss_sum = 0f64;
+        for (slot, reply) in replies.iter().enumerate() {
+            let Ok(msg) = reply else { return Ok(None) };
+            let Ok(dec) = self.decode_update(selected[slot], msg, schema, shapes, n_quantized)
+            else {
+                return Ok(None);
+            };
+            for (k, wq) in dec.wqs.iter().enumerate() {
+                wq_mean[k] += wq / selected.len() as f32;
+            }
+            loss_sum += dec.train_loss as f64;
+            agg.fold(dec.num_samples, &dec.params)?;
+        }
+        // server aggregation (eq. 2)
+        Ok(Some((agg.finish()?, wq_mean, loss_sum)))
+    }
+
+    /// Pass 2 — the fault-tolerant batch path: decode every reply, reject
+    /// faulty ones individually (typed, logged, counted), and run the
+    /// configured robust aggregation rule over the accepted cohort. Used
+    /// for every non-`mean` aggregator, and for `mean` once the
+    /// optimistic pass hits a fault. Errors only when *no* update
+    /// survives — one Byzantine client can no longer abort a round.
+    #[allow(clippy::type_complexity)]
+    fn fold_robust(
+        &self,
+        round: usize,
+        selected: &[usize],
+        replies: &[Result<Message>],
+        schema: &ModelSchema,
+        shapes: &[Vec<usize>],
+        n_quantized: usize,
+    ) -> Result<(ParamSet, Vec<f32>, f64, usize, Vec<u32>, Vec<u32>)> {
+        let mut updates: Vec<(u32, u64, ParamSet)> = Vec::new();
+        let mut wq_rows: Vec<Vec<f32>> = Vec::new();
+        let mut loss_sum = 0f64;
+        let mut rejected: Vec<u32> = Vec::new();
+        for (slot, reply) in replies.iter().enumerate() {
+            let cid = selected[slot] as u32;
+            let fault = match reply {
+                Ok(msg) => {
+                    match self.decode_update(selected[slot], msg, schema, shapes, n_quantized)
+                    {
+                        Ok(dec) => {
+                            wq_rows.push(dec.wqs);
+                            loss_sum += dec.train_loss as f64;
+                            updates.push((cid, dec.num_samples, dec.params));
+                            continue;
+                        }
+                        Err(fault) => fault,
+                    }
+                }
+                Err(e) => ClientFault::Exchange { detail: format!("{e:#}") },
+            };
+            info!("round {round}: rejecting client {cid}: {fault}");
+            if crate::obs::enabled() {
+                obs_metrics::counter("tfed_updates_rejected_total").inc();
+            }
+            rejected.push(cid);
+        }
+        if updates.is_empty() {
+            bail!(
+                "round {round}: every update was rejected ({} of {} clients)",
+                rejected.len(),
+                selected.len()
+            );
+        }
+        let outcome = robust_aggregate(self.cfg.aggregator, &updates)?;
+        // protocol factors average over the accepted cohort only: a
+        // rejected update's wq never reaches the next broadcast
+        let n_ok = updates.len();
+        let mut wq_mean = vec![0f32; n_quantized];
+        for row in &wq_rows {
+            for (k, wq) in row.iter().enumerate() {
+                wq_mean[k] += wq / n_ok as f32;
+            }
+        }
+        Ok((outcome.global, wq_mean, loss_sum, n_ok, rejected, outcome.clipped))
     }
 
     /// Algorithm 2 downstream payload: server re-quantizes the global model
@@ -783,17 +1035,22 @@ impl<'a> Orchestrator<'a> {
     /// Fan the round out over the transport with a worker pool. Results
     /// come back indexed by selection slot, so downstream aggregation
     /// order (and therefore float summation) is schedule-independent.
+    /// Each slot carries its own `Result`: a failed exchange (dead link,
+    /// frame error, undecodable reply) is *that client's* fault verdict,
+    /// not a round abort — the aggregation pass decides what to do with
+    /// it. The outer `Result` covers server-side broadcast encoding only.
     /// `delays` (per slot, ms) injects straggler latency before a
     /// client's exchange — it shifts wall time only (capped, see
     /// `straggle`), never results; under the sim transport delays are
     /// virtual and `delays` is all zeros.
+    #[allow(clippy::type_complexity)]
     fn dispatch(
         &self,
         selected: &[usize],
         assigns: &[RoundAssign],
         down: &Message,
         delays: &[u64],
-    ) -> Result<Vec<Message>> {
+    ) -> Result<Vec<Result<Message>>> {
         let n = selected.len();
         if n == 0 {
             return Ok(Vec::new());
@@ -817,11 +1074,9 @@ impl<'a> Orchestrator<'a> {
             transport.round_trip(links[i], &assigns[i], &down_wire)
         };
         if self.workers <= 1 {
-            // fail-fast: collect() short-circuits at the first error, so
-            // one bad exchange never burns the rest of the cohort's compute
-            return (0..n).map(exchange).collect();
+            return Ok((0..n).map(exchange).collect());
         }
-        parallel_map_indexed(n, self.workers, exchange).into_iter().collect()
+        Ok(parallel_map_indexed(n, self.workers, exchange))
     }
 
     // -- centralized (Baseline / TTQ) ----------------------------------------

@@ -46,6 +46,16 @@ pub struct RoundRecord {
     pub factors: Vec<f32>,
     /// evaluated this round?
     pub evaluated: bool,
+    /// clients whose updates the server rejected this round (typed
+    /// per-client faults: malformed, mislabeled, sample-count mismatch,
+    /// non-finite, failed exchange). Empty on honest rounds — and only
+    /// emitted to JSON when non-empty, so honest bundles keep their
+    /// historical bytes.
+    pub rejected: Vec<u32>,
+    /// clients whose updates the norm-clipping aggregator scaled down
+    /// (empty for every other aggregation rule; same conditional JSON
+    /// emission as `rejected`)
+    pub clipped: Vec<u32>,
 }
 
 /// Whole-run metrics.
@@ -164,7 +174,7 @@ impl RunMetrics {
                     .records
                     .iter()
                     .map(|r| {
-                        obj(vec![
+                        let mut fields = vec![
                             ("round", num(r.round as f64)),
                             ("train_loss", num(r.train_loss as f64)),
                             ("test_acc", num(r.test_acc as f64)),
@@ -181,7 +191,22 @@ impl RunMetrics {
                                 "factors",
                                 arr(r.factors.iter().map(|&f| num(f as f64)).collect()),
                             ),
-                        ])
+                        ];
+                        // emitted only when non-empty: honest-run JSON
+                        // stays byte-identical to pre-adversary bundles
+                        if !r.rejected.is_empty() {
+                            fields.push((
+                                "rejected",
+                                arr(r.rejected.iter().map(|&c| num(c as f64)).collect()),
+                            ));
+                        }
+                        if !r.clipped.is_empty() {
+                            fields.push((
+                                "clipped",
+                                arr(r.clipped.iter().map(|&c| num(c as f64)).collect()),
+                            ));
+                        }
+                        obj(fields)
                     })
                     .collect()),
             ),
@@ -247,6 +272,8 @@ mod tests {
             selected: vec![0, 1],
             factors: vec![0.1, 0.2],
             evaluated: true,
+            rejected: vec![],
+            clipped: vec![],
         }
     }
 
@@ -278,6 +305,27 @@ mod tests {
         let csv = m.to_csv();
         assert!(csv.starts_with("round,"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn rejection_fields_appear_only_when_nonempty() {
+        // honest round: no "rejected"/"clipped" keys at all, so bundles
+        // from pre-adversary builds keep their exact bytes
+        let mut honest = RunMetrics::new("cfg".into());
+        honest.push(rec(1, 0.5, 10));
+        let j = honest.to_json().to_string();
+        assert!(!j.contains("\"rejected\""));
+        assert!(!j.contains("\"clipped\""));
+
+        let mut attacked = RunMetrics::new("cfg".into());
+        let mut r = rec(1, 0.5, 10);
+        r.rejected = vec![3, 7];
+        r.clipped = vec![1];
+        attacked.push(r);
+        let j = attacked.to_json().to_string();
+        assert!(j.contains("\"rejected\":[3,7]"));
+        assert!(j.contains("\"clipped\":[1]"));
+        Json::parse(&j).unwrap();
     }
 
     #[test]

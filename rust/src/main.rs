@@ -38,7 +38,9 @@ use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::server::{materialize_shard, Orchestrator};
-use tfed::coordinator::ClientRuntime;
+use tfed::coordinator::{
+    AdversaryModel, AdversarySpec, AggregatorSpec, ClientAdversary, ClientRuntime,
+};
 use tfed::eval::{mb, RunMetrics};
 use tfed::runtime::manifest::default_artifacts_dir;
 use tfed::runtime::Engine;
@@ -75,6 +77,10 @@ fn real_main() -> Result<()> {
         .opt("dropout", "0.0", "client dropout probability (fault injection)")
         .opt("straggler-prob", "0.0", "per-client straggler probability")
         .opt("straggler-delay-ms", "0", "straggler reply delay in ms")
+        .opt("aggregator", "mean", "mean | trimmed_mean[:beta] | median | norm_clip[:tau] | krum[:f]")
+        .opt("adversary", "honest", "Byzantine cast: honest | scale:<f> | sign_flip | replay | corrupt_frame | wrong_codec | wrong_samples | oversize")
+        .opt("adversary-fraction", "1.0", "fraction of registered clients cast as adversarial")
+        .opt("adversary-seed", "0", "seed for the adversary casting generator")
         .opt("out", "", "write metrics JSON/CSV (scenario: results bundle) here")
         .opt("trace-out", "", "write a Chrome/Perfetto trace of the run's phases here")
         .opt("metrics-out", "", "write Prometheus-text metrics here at end of run")
@@ -137,6 +143,13 @@ fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
         cfg.beta = args.get_f64("beta")?;
         cfg.dirichlet_alpha = args.get_f64("alpha")?;
     }
+    cfg.aggregator = AggregatorSpec::parse(&args.get("aggregator")?)?;
+    cfg.adversary = AdversarySpec::parse(
+        &args.get("adversary")?,
+        args.get_f64("adversary-fraction")?,
+        args.get_u64("adversary-seed")?,
+    )
+    .map_err(|e| anyhow::anyhow!("invalid --adversary: {e}"))?;
     cfg.batch = args.get_usize("batch")?;
     cfg.local_epochs = args.get_usize("epochs")?;
     cfg.rounds = args.get_usize("rounds")?;
@@ -318,6 +331,7 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
         "protocol", "codec", "task", "model", "clients", "participation", "nc", "beta",
         "alpha", "batch", "epochs", "rounds", "lr", "seed", "train-samples",
         "test-samples", "eval-every", "dropout", "straggler-prob", "straggler-delay-ms",
+        "aggregator", "adversary", "adversary-fraction", "adversary-seed",
         "workers", "listen", "connect", "client-id",
     ];
     let offending: Vec<&str> = config_opts
@@ -329,7 +343,7 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
     if !offending.is_empty() {
         bail!(
             "scenario manifests carry the whole experiment config; move {} into \
-             {path:?} (its [experiment]/[fleet]/[availability]/[sim] tables) — only \
+             {path:?} (its [experiment]/[fleet]/[availability]/[adversary]/[sim] tables) — only \
              --out, --jobs, --quiet, --trace-out, --metrics-out, --telemetry-out, \
              --metrics-addr and --metrics-hold-secs combine with a manifest run",
             offending
@@ -469,6 +483,9 @@ fn cmd_client(args: &Args) -> Result<()> {
         cfg.native_backend,
     )?;
     let shard = materialize_shard(&cfg, backend.schema().input_dim, client_id as usize)?;
+    // the adversary cast is derived from the wire-delivered config, so a
+    // remote client acts out exactly the role the coordinator assigned it
+    let cast = AdversaryModel::new(cfg.adversary)?;
     let runtime = ClientRuntime {
         client_id,
         backend: backend.as_ref(),
@@ -476,6 +493,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         local_epochs: cfg.local_epochs,
         lr: cfg.lr,
         codec: cfg.codec,
+        adversary: ClientAdversary::from_model(cast),
     };
     let rounds = client.serve(&runtime)?;
     println!(

@@ -142,6 +142,53 @@ pub fn report_bundle(name: &str, doc: &Json) -> Result<String> {
         }
     }
     out.push_str("```\n");
+
+    // Robustness section: only rendered when the grid had a Byzantine
+    // axis or a non-default aggregator, so honest-default reports stay
+    // byte-identical to pre-robustness builds.
+    let robust: Vec<(String, String, String, u64, u64)> = cells
+        .iter()
+        .filter_map(|cell| {
+            let label = cell
+                .get("label")
+                .and_then(|v| v.as_str().ok())
+                .unwrap_or("(cell)")
+                .to_string();
+            let aggregator = cell
+                .get("aggregator")
+                .and_then(|v| v.as_str().ok())
+                .unwrap_or("mean")
+                .to_string();
+            let adversary = cell
+                .get("adversary")
+                .and_then(|v| v.as_str().ok())
+                .map(str::to_string);
+            let (mut rejected, mut clipped) = (0u64, 0u64);
+            if let Some(rounds) =
+                cell.get("metrics").and_then(|m| m.get("rounds")).and_then(|r| r.as_arr().ok())
+            {
+                for r in rounds {
+                    let count = |k: &str| {
+                        r.get(k).and_then(|v| v.as_arr().ok()).map_or(0, |a| a.len() as u64)
+                    };
+                    rejected += count("rejected");
+                    clipped += count("clipped");
+                }
+            }
+            (adversary.is_some() || aggregator != "mean" || rejected + clipped > 0)
+                .then(|| (label, aggregator, adversary.unwrap_or_else(|| "honest".into()), rejected, clipped))
+        })
+        .collect();
+    if !robust.is_empty() {
+        out.push_str("\n## Robust aggregation under Byzantine clients\n\n");
+        out.push_str("| cell | aggregator | adversary | rejected | clipped |\n");
+        out.push_str("|---|---|---|---:|---:|\n");
+        for (label, aggregator, adversary, rejected, clipped) in &robust {
+            out.push_str(&format!(
+                "| {label} | {aggregator} | {adversary} | {rejected} | {clipped} |\n"
+            ));
+        }
+    }
     Ok(out)
 }
 
@@ -265,6 +312,24 @@ pub fn report_telemetry(name: &str, text: &str) -> Result<String> {
         ));
     }
     out.push_str("```\n");
+
+    // Rejection/clip trajectory: only when some round actually rejected
+    // or clipped an update, so honest-run reports are unchanged.
+    let gu = |r: &Json, k: &str| r.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+    if recs.iter().any(|r| gu(r, "rejected") + gu(r, "clipped") > 0) {
+        out.push_str("\n## Rejected and clipped updates per round\n\n```csv\n");
+        out.push_str("cell,lane,round,rejected,clipped\n");
+        for r in &recs {
+            let (cell, lane, round) = rec_key(r);
+            out.push_str(&format!(
+                "{},{lane},{round},{},{}\n",
+                csv_field(&cell),
+                gu(r, "rejected"),
+                gu(r, "clipped"),
+            ));
+        }
+        out.push_str("```\n");
+    }
     Ok(out)
 }
 

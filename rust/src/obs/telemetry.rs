@@ -92,6 +92,11 @@ pub struct TelemetryRecord {
     pub cum_down_bytes: u64,
     /// cumulative virtual clock (sim runs; 0 on real transports)
     pub sim_secs: f64,
+    /// clients rejected this round by per-update validation (typed
+    /// `ClientFault`s — Byzantine / malformed updates; 0 on honest runs)
+    pub rejected: u64,
+    /// clients norm-clipped this round by the `norm_clip` aggregator
+    pub clipped: u64,
 }
 
 impl TelemetryRecord {
@@ -120,6 +125,10 @@ impl TelemetryRecord {
             ("cum_up_bytes", num(self.cum_up_bytes as f64)),
             ("cum_down_bytes", num(self.cum_down_bytes as f64)),
             ("sim_secs", fin(self.sim_secs)),
+            // schema v1 addition (additive, no version bump): robustness
+            // counters — 0/0 on honest rounds
+            ("rejected", num(self.rejected as f64)),
+            ("clipped", num(self.clipped as f64)),
         ])
     }
 }

@@ -28,6 +28,8 @@
 //! test_samples = 2000
 //! eval_every = 1
 //! native = true               # pure-Rust backend (no artifacts needed)
+//! aggregator = "mean"         # mean | trimmed_mean[:beta] | median |
+//!                             # norm_clip[:tau] | krum[:f]
 //!
 //! [fleet]
 //! partition = "nc:2"          # iid | nc:<k> | beta:<b> | dirichlet:alpha=<a>
@@ -41,6 +43,13 @@
 //! phase_rounds = [10, 20]     # dropout becomes phase_dropout[i]
 //! phase_dropout = [0.2, 0.5]  #   from round phase_rounds[i] onward
 //!
+//! [adversary]                 # Byzantine client axis (DESIGN.md §13)
+//! behavior = "sign_flip"      # scale:<f> | sign_flip | replay |
+//!                             # corrupt_frame | wrong_codec |
+//!                             # wrong_samples | oversize
+//! fraction = 0.3              # P(a client is adversarial); default 1.0
+//! seed = 7                    # behavior-assignment seed; default 0
+//!
 //! [sim]                       # virtual-time fleet simulation (DESIGN.md §9)
 //! registered_clients = 100000 # required: virtual fleet size (≥ clients)
 //! cohort = 16                 # sampled per round; default: selected_per_round
@@ -52,11 +61,12 @@
 //! latency_ms = [10.0, 200.0]  # one-way latency, uniform in [lo, hi]
 //! target_acc = 0.5            # time-to-accuracy target (optional)
 //!
-//! [sweep]                     # grid = models × partitions × codecs × seeds
+//! [sweep]          # grid = models × partitions × codecs × aggregators × seeds
 //! seeds = [1, 2, 3]           # default: [experiment seed]
 //! partitions = ["iid", "nc:2"]  # default: [fleet partition]
 //! codecs = ["ternary", "stc:k=0.01"]  # default: [experiment codec]
 //! models = ["mlp", "mlp-large"]  # default: [experiment model]
+//! aggregators = ["mean", "median"]  # default: [experiment aggregator]
 //!
 //! [observability]             # phase tracing + metrics (DESIGN.md §11-12)
 //! trace_out = "trace.json"    # Chrome trace events; `--trace-out` overrides
@@ -81,6 +91,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compress::CodecSpec;
 use crate::config::{ExperimentConfig, Protocol, Task};
+use crate::coordinator::adversary::{behavior_names, AdversarySpec};
+use crate::coordinator::aggregation::AggregatorSpec;
 use crate::coordinator::availability::{AvailabilityModel, Phase};
 use crate::data::partition::PartitionStrategy;
 use crate::scenario::toml::TomlDoc;
@@ -157,6 +169,8 @@ pub struct SweepSpec {
     pub codecs: Vec<CodecSpec>,
     /// registry model names; `""` = the task default (no override)
     pub models: Vec<String>,
+    /// robust-aggregation rules (defense axis for adversary grids)
+    pub aggregators: Vec<AggregatorSpec>,
 }
 
 /// One fully-resolved grid cell.
@@ -169,16 +183,22 @@ pub struct GridCell {
 
 impl GridCell {
     /// Stable display label: `seed=7 partition=nc:2 codec=ternary`, with
-    /// ` model=<name>` appended only under an explicit model (so default
-    /// grids keep their pre-registry labels byte for byte).
+    /// ` model=<name>` appended only under an explicit model and
+    /// ` aggregator=<rule>` only under a non-default aggregation rule (so
+    /// default grids keep their pre-registry labels byte for byte).
     pub fn label(&self) -> String {
         let model = if self.cfg.model.is_empty() {
             String::new()
         } else {
             format!(" model={}", self.cfg.model)
         };
+        let agg = if self.cfg.aggregator == AggregatorSpec::Mean {
+            String::new()
+        } else {
+            format!(" aggregator={}", self.cfg.aggregator.name())
+        };
         format!(
-            "seed={} partition={} codec={}{model}",
+            "seed={} partition={} codec={}{model}{agg}",
             self.cfg.seed,
             self.partition,
             self.cfg.codec.name()
@@ -191,6 +211,7 @@ const TABLES: &[&str] = &[
     "experiment",
     "fleet",
     "availability",
+    "adversary",
     "sim",
     "sweep",
     "observability",
@@ -213,10 +234,12 @@ const EXPERIMENT_KEYS: &[&str] = &[
     "test_samples",
     "eval_every",
     "native",
+    "aggregator",
 ];
 const FLEET_KEYS: &[&str] = &["partition", "transport", "listen"];
 const AVAILABILITY_KEYS: &[&str] =
     &["dropout", "straggler_prob", "straggler_delay_ms", "phase_rounds", "phase_dropout"];
+const ADVERSARY_KEYS: &[&str] = &["behavior", "fraction", "seed"];
 const SIM_KEYS: &[&str] = &[
     "registered_clients",
     "cohort",
@@ -228,7 +251,7 @@ const SIM_KEYS: &[&str] = &[
     "latency_ms",
     "target_acc",
 ];
-const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs", "models"];
+const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs", "models", "aggregators"];
 const OBSERVABILITY_KEYS: &[&str] = &["trace_out", "metrics_out", "telemetry_out"];
 const OUTPUT_KEYS: &[&str] = &["path"];
 
@@ -320,6 +343,11 @@ impl ScenarioManifest {
         if let Some(v) = doc.get("experiment", "native") {
             base.native_backend = v.as_bool().context("[experiment] native")?;
         }
+        if let Some(v) = doc.get("experiment", "aggregator") {
+            base.aggregator =
+                AggregatorSpec::parse(v.as_str().context("[experiment] aggregator")?)
+                    .map_err(|e| anyhow!("[experiment] aggregator: {e}"))?;
+        }
 
         // -- [fleet] ------------------------------------------------------
         let partition = match doc.get("fleet", "partition") {
@@ -346,6 +374,9 @@ impl ScenarioManifest {
 
         // -- [availability] -----------------------------------------------
         let availability = parse_availability(&doc)?;
+
+        // -- [adversary] --------------------------------------------------
+        base.adversary = parse_adversary(&doc)?;
 
         // -- [sim] --------------------------------------------------------
         let sim = parse_sim(&doc, &base)?;
@@ -414,6 +445,19 @@ impl ScenarioManifest {
                     .context("[sweep] models")?
             }
         };
+        let aggregators = match doc.get("sweep", "aggregators") {
+            None => vec![base.aggregator],
+            Some(v) => {
+                let arr = v.as_arr().context("[sweep] aggregators")?;
+                if arr.is_empty() {
+                    bail!("[sweep] aggregators must not be empty");
+                }
+                arr.iter()
+                    .map(|s| AggregatorSpec::parse(s.as_str()?).map_err(|e| anyhow!("{e}")))
+                    .collect::<Result<Vec<_>>>()
+                    .context("[sweep] aggregators")?
+            }
+        };
 
         // -- [observability] ----------------------------------------------
         let trace_out = match doc.get("observability", "trace_out") {
@@ -444,7 +488,7 @@ impl ScenarioManifest {
             availability,
             transport,
             sim,
-            sweep: SweepSpec { seeds, partitions, codecs, models },
+            sweep: SweepSpec { seeds, partitions, codecs, models, aggregators },
             output,
             trace_out,
             metrics_out,
@@ -464,26 +508,29 @@ impl ScenarioManifest {
     }
 
     /// Expand the sweep into validated grid cells:
-    /// models (outer) × partitions × codecs × seeds (inner).
+    /// models (outer) × partitions × codecs × aggregators × seeds (inner).
     pub fn grid(&self) -> Result<Vec<GridCell>> {
         let mut cells = Vec::new();
         for model in &self.sweep.models {
             for part in &self.sweep.partitions {
                 for &codec in &self.sweep.codecs {
-                    for &seed in &self.sweep.seeds {
-                        let mut cfg = self.base.clone();
-                        cfg.seed = seed;
-                        part.apply(&mut cfg);
-                        cfg.codec = codec;
-                        cfg.model = model.clone();
-                        if !self.protocol_pinned {
-                            cfg.protocol = Protocol::for_codec(codec);
+                    for &aggregator in &self.sweep.aggregators {
+                        for &seed in &self.sweep.seeds {
+                            let mut cfg = self.base.clone();
+                            cfg.seed = seed;
+                            part.apply(&mut cfg);
+                            cfg.codec = codec;
+                            cfg.model = model.clone();
+                            cfg.aggregator = aggregator;
+                            if !self.protocol_pinned {
+                                cfg.protocol = Protocol::for_codec(codec);
+                            }
+                            let cell = GridCell { cfg, partition: part.name() };
+                            cell.cfg
+                                .validate()
+                                .with_context(|| format!("grid cell {}", cell.label()))?;
+                            cells.push(cell);
                         }
-                        let cell = GridCell { cfg, partition: part.name() };
-                        cell.cfg
-                            .validate()
-                            .with_context(|| format!("grid cell {}", cell.label()))?;
-                        cells.push(cell);
                     }
                 }
             }
@@ -503,6 +550,7 @@ fn check_surface(doc: &TomlDoc) -> Result<()> {
             "experiment" => EXPERIMENT_KEYS,
             "fleet" => FLEET_KEYS,
             "availability" => AVAILABILITY_KEYS,
+            "adversary" => ADVERSARY_KEYS,
             "sim" => SIM_KEYS,
             "sweep" => SWEEP_KEYS,
             "observability" => OBSERVABILITY_KEYS,
@@ -557,6 +605,25 @@ fn parse_availability(doc: &TomlDoc) -> Result<AvailabilityModel> {
         .collect();
     AvailabilityModel::new(dropout, phases, straggler_prob, straggler_delay_ms)
         .map_err(|e| anyhow!("[availability]: {e}"))
+}
+
+/// Parse the `[adversary]` table into a validated [`AdversarySpec`]
+/// (honest when the table is absent). `behavior` is required; `fraction`
+/// defaults to 1.0 (the whole fleet misbehaves) and `seed` to 0.
+fn parse_adversary(doc: &TomlDoc) -> Result<AdversarySpec> {
+    if doc.table("adversary").is_none() {
+        return Ok(AdversarySpec::honest());
+    }
+    let behavior = match doc.get("adversary", "behavior") {
+        Some(v) => v.as_str().context("[adversary] behavior")?.to_string(),
+        None => bail!(
+            "[adversary] needs `behavior = \"...\"` (one of {:?})",
+            behavior_names()
+        ),
+    };
+    let fraction = get_float(doc, "adversary", "fraction")?.unwrap_or(1.0);
+    let seed = get_unsigned(doc, "adversary", "seed")?.unwrap_or(0);
+    AdversarySpec::parse(&behavior, fraction, seed).map_err(|e| anyhow!("[adversary]: {e}"))
 }
 
 /// Parse the `[sim]` table into a validated [`SimSpec`] (None when the
@@ -755,6 +822,69 @@ mod tests {
         assert_eq!(m.availability.dropout_for_round(10), 0.3);
         assert_eq!(m.availability.dropout_for_round(25), 0.6);
         assert!(m.availability.has_stragglers());
+    }
+
+    #[test]
+    fn adversary_table_and_aggregator_axis() {
+        use crate::coordinator::adversary::Behavior;
+        // [adversary] reaches every grid cell's config
+        let m = parse(
+            "[experiment]\nnative = true\n\
+             [adversary]\nbehavior = \"sign_flip\"\nfraction = 0.3\nseed = 7\n",
+        )
+        .unwrap();
+        let spec = m.grid().unwrap()[0].cfg.adversary;
+        assert_eq!(spec.behavior, Behavior::SignFlip);
+        assert_eq!(spec.fraction, 0.3);
+        assert_eq!(spec.seed, 7);
+        // defaults: fraction = 1.0 (whole fleet), seed = 0
+        let m = parse("[adversary]\nbehavior = \"replay\"\n").unwrap();
+        assert_eq!(m.base.adversary.fraction, 1.0);
+        assert_eq!(m.base.adversary.seed, 0);
+        // [experiment] aggregator pins the rule for the whole grid
+        let m = parse("[experiment]\naggregator = \"median\"\n").unwrap();
+        assert_eq!(m.grid().unwrap()[0].cfg.aggregator, AggregatorSpec::Median);
+        // the aggregators sweep axis expands the grid and labels
+        // non-default cells (default `mean` labels stay historical)
+        let m = parse(
+            "[sweep]\nseeds = [1, 2]\naggregators = [\"mean\", \"trimmed_mean:0.2\"]\n",
+        )
+        .unwrap();
+        let grid = m.grid().unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].cfg.aggregator, AggregatorSpec::Mean);
+        assert!(!grid[0].label().contains("aggregator="));
+        assert_eq!(grid[2].cfg.aggregator, AggregatorSpec::TrimmedMean { beta: 0.2 });
+        assert!(grid[2].label().contains("aggregator=trimmed_mean:0.2"));
+        let mut labels: Vec<String> = grid.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn adversary_reject_paths() {
+        // behavior is required when the table is present
+        assert!(parse("[adversary]\nfraction = 0.5\n").is_err());
+        // unknown behavior / key, bad fraction (typed validation)
+        assert!(parse("[adversary]\nbehavior = \"lie\"\n").is_err());
+        assert!(parse("[adversary]\nbehaviour = \"replay\"\n").is_err());
+        assert!(parse("[adversary]\nbehavior = \"replay\"\nfraction = 1.5\n").is_err());
+        // bad aggregator key / param
+        assert!(parse("[experiment]\naggregator = \"mode\"\n").is_err());
+        assert!(parse("[experiment]\naggregator = \"trimmed_mean:0.9\"\n").is_err());
+        assert!(parse("[sweep]\naggregators = []\n").is_err());
+        assert!(parse("[sweep]\naggregators = [\"average\"]\n").is_err());
+        // centralized protocols reject adversaries and robust rules
+        // (ExperimentConfig::validate, exercised at parse time)
+        assert!(parse(
+            "[experiment]\nprotocol = \"baseline\"\n[adversary]\nbehavior = \"sign_flip\"\n"
+        )
+        .is_err());
+        assert!(parse(
+            "[experiment]\nprotocol = \"baseline\"\naggregator = \"median\"\n"
+        )
+        .is_err());
     }
 
     #[test]

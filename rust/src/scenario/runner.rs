@@ -55,6 +55,12 @@ pub struct CellResult {
     pub protocol: String,
     /// resolved model name (explicit override or the task default)
     pub model: String,
+    /// aggregation-rule registry key; emitted to the bundle only when it
+    /// differs from the default `mean` (honest bundles keep their bytes)
+    pub aggregator: String,
+    /// adversary label (`behavior@fraction`); None for honest fleets —
+    /// and absent from the bundle, same byte-stability contract
+    pub adversary: Option<String>,
     pub metrics: RunMetrics,
     /// virtual-time summary; None for real-time cells
     pub sim: Option<CellSim>,
@@ -103,6 +109,12 @@ impl ScenarioResults {
                             ("protocol", s(&c.protocol)),
                             ("model", s(&c.model)),
                         ];
+                        if c.aggregator != "mean" {
+                            fields.push(("aggregator", s(&c.aggregator)));
+                        }
+                        if let Some(adv) = &c.adversary {
+                            fields.push(("adversary", s(adv)));
+                        }
                         if let Some(sim) = &c.sim {
                             fields.push((
                                 "sim",
@@ -218,6 +230,12 @@ fn run_cell(
         codec: cell.cfg.codec.name(),
         protocol: cell.cfg.protocol.name().to_string(),
         model: cell.cfg.model_name().to_string(),
+        aggregator: cell.cfg.aggregator.name(),
+        adversary: cell
+            .cfg
+            .adversary
+            .is_active()
+            .then(|| cell.cfg.adversary.label()),
         metrics,
         sim,
     })
@@ -347,6 +365,45 @@ seeds = [5, 6]
         assert!(parsed.get("aggregate").unwrap().get("mean_final_acc").is_some());
         // real-time cells carry no sim block
         assert!(cells[0].get("sim").is_none());
+        // honest default cells carry neither robustness field: bundles
+        // from pre-adversary builds keep their exact keys
+        assert!(cells[0].get("aggregator").is_none());
+        assert!(cells[0].get("adversary").is_none());
+    }
+
+    #[test]
+    fn adversarial_cells_label_the_bundle() {
+        let m = ScenarioManifest::parse(
+            r#"
+[scenario]
+name = "byz"
+[experiment]
+clients = 3
+rounds = 2
+local_epochs = 1
+batch = 16
+train_samples = 240
+test_samples = 60
+seed = 5
+native = true
+aggregator = "median"
+[adversary]
+behavior = "sign_flip"
+fraction = 0.4
+seed = 9
+"#,
+        )
+        .unwrap();
+        let r = run_scenario(&m).unwrap();
+        assert_eq!(r.cells.len(), 1);
+        let text = r.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let cell = &parsed.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(cell.get("aggregator").unwrap().as_str().unwrap(), "median");
+        assert_eq!(cell.get("adversary").unwrap().as_str().unwrap(), "sign_flip@0.4");
+        // sign-flip is a statistical attack: updates stay well-formed, so
+        // nothing is rejected — the round simply aggregates robustly
+        assert!(r.cells[0].metrics.final_acc().is_finite());
     }
 
     #[test]

@@ -243,6 +243,7 @@ mod tests {
                 local_epochs: 1,
                 lr: 0.05,
                 codec: CodecSpec::Dense,
+                adversary: Default::default(),
             })
             .collect();
         SimTransport::new(
@@ -290,6 +291,7 @@ mod tests {
                 local_epochs: 1,
                 lr: 0.05,
                 codec: CodecSpec::Dense,
+                adversary: Default::default(),
             })
             .collect();
         let lb = Loopback::new(runtimes);

@@ -6,7 +6,7 @@
 //! | offset | size | field                              |
 //! |--------|------|------------------------------------|
 //! | 0      | 4    | magic `0x4D524654` ("TFRM")        |
-//! | 4      | 1    | version (currently 2)              |
+//! | 4      | 1    | version (currently 3)              |
 //! | 5      | 1    | kind ([`FrameKind`])               |
 //! | 6      | 4    | payload length (<= [`MAX_FRAME`])  |
 //! | 10     | 4    | CRC-32 (IEEE) of the payload       |
@@ -24,10 +24,11 @@ use std::io::{ErrorKind, Read, Write};
 
 /// "TFRM" — distinct from the message-layer magic "TFED".
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"TFRM");
-/// Bumped 1 -> 2 when the Config frame grew the model-override field, so
-/// a mixed-version server/client pairing fails the version check with a
+/// Bumped 1 -> 2 when the Config frame grew the model-override field and
+/// 2 -> 3 when it grew the aggregator + adversary specs, so a
+/// mixed-version server/client pairing fails the version check with a
 /// clear error instead of a confusing trailing-bytes/short-read decode.
-pub const FRAME_VERSION: u8 = 2;
+pub const FRAME_VERSION: u8 = 3;
 /// Fixed header size: magic + version + kind + length + CRC.
 pub const HEADER_BYTES: usize = 14;
 /// Upper bound on one frame's payload. The largest legitimate payload is a

@@ -87,7 +87,7 @@ impl<'a> Loopback<'a> {
 
         // client-side work with the server-assigned RNG
         let mut rng = Pcg::new(assign.rng_seed, assign.rng_stream);
-        let up = link.runtime.handle_round(&mut rng, &down)?;
+        let up = link.runtime.handle_round(&mut rng, assign.client_id, &down)?;
 
         // upstream payload back through the codec
         crate::obs_span!("client.upload");
@@ -169,6 +169,7 @@ mod tests {
             local_epochs: 1,
             lr: 0.05,
             codec: CodecSpec::Dense,
+            adversary: Default::default(),
         }]);
         let down = dense_broadcast(2);
         let wire = encode_data_frame(&down).unwrap();
@@ -204,6 +205,7 @@ mod tests {
                 local_epochs: 1,
                 lr: 0.05,
                 codec: CodecSpec::Dense,
+                adversary: Default::default(),
             }])
         };
         let wire = encode_data_frame(&dense_broadcast(4)).unwrap();

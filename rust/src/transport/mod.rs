@@ -51,6 +51,8 @@ use crate::comms::messages::{Reader, Writer};
 use crate::comms::Message;
 use crate::compress::CodecSpec;
 use crate::config::{ExperimentConfig, Protocol, Task};
+use crate::coordinator::adversary::AdversarySpec;
+use crate::coordinator::aggregation::AggregatorSpec;
 
 pub use frame::{crc32, Frame, FrameError, FrameKind, HEADER_BYTES, MAX_FRAME};
 pub use loopback::Loopback;
@@ -160,6 +162,10 @@ fn encode_config(w: &mut Writer, cfg: &ExperimentConfig) {
     let model = cfg.model.as_bytes();
     w.u32(model.len() as u32);
     w.bytes(model);
+    // frame version 3: aggregation rule + adversary assignment, so a
+    // remote client resolves its own behavior from the same spec
+    w.bytes(&cfg.aggregator.to_wire());
+    w.bytes(&cfg.adversary.to_wire());
 }
 
 fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
@@ -193,6 +199,11 @@ fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
     let model_len = r.u32()? as usize;
     let model = String::from_utf8(r.raw(model_len)?.to_vec())
         .map_err(|_| anyhow::anyhow!("config model name is not valid utf-8"))?;
+    let aggregator = AggregatorSpec::from_wire(
+        r.raw(AggregatorSpec::WIRE_BYTES)?.try_into().unwrap(),
+    )?;
+    let adversary =
+        AdversarySpec::from_wire(r.raw(AdversarySpec::WIRE_BYTES)?.try_into().unwrap())?;
     Ok(ExperimentConfig {
         protocol,
         task,
@@ -212,6 +223,8 @@ fn decode_config(r: &mut Reader) -> Result<ExperimentConfig> {
         native_backend,
         model,
         codec,
+        aggregator,
+        adversary,
     })
 }
 
@@ -334,11 +347,28 @@ mod tests {
         cfg.native_backend = true;
         cfg.model = "mlp-large".into();
         cfg.codec = CodecSpec::Quant { bits: 4 };
+        cfg.aggregator = AggregatorSpec::TrimmedMean { beta: 0.15 };
+        cfg.adversary = AdversarySpec::parse("scale:-4.5", 0.3, 0xBAD5EED).unwrap();
         let f = Ctrl::Config(cfg.clone()).to_frame();
         match Ctrl::from_frame(&f).unwrap() {
             Ctrl::Config(got) => assert_eq!(got, cfg),
             other => panic!("wrong ctrl {other:?}"),
         }
+    }
+
+    #[test]
+    fn config_rejects_bad_aggregator_and_adversary_wire() {
+        let cfg = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 1);
+        let f = Ctrl::Config(cfg).to_frame();
+        // the aggregator id byte sits right after the model length prefix
+        // (empty model): flip it to an unknown rule id
+        let agg_off = f.payload.len() - AggregatorSpec::WIRE_BYTES - AdversarySpec::WIRE_BYTES;
+        let mut bad = f.clone();
+        bad.payload[agg_off] = 200;
+        assert!(Ctrl::from_frame(&bad).is_err());
+        let mut bad = f.clone();
+        bad.payload[agg_off + AggregatorSpec::WIRE_BYTES] = 200; // behavior id
+        assert!(Ctrl::from_frame(&bad).is_err());
     }
 
     #[test]

@@ -246,7 +246,7 @@ impl TcpClient {
                     }
                     let down = Message::decode(&f.payload)?;
                     let mut rng = Pcg::new(a.rng_seed, a.rng_stream);
-                    let up = runtime.handle_round(&mut rng, &down)?;
+                    let up = runtime.handle_round(&mut rng, a.client_id, &down)?;
                     let sent = {
                         crate::obs_span!("client.upload");
                         Frame::data(up.encode()).write_to(&mut self.stream)?
@@ -302,6 +302,7 @@ mod tests {
                     local_epochs: 1,
                     lr: 0.05,
                     codec: got_cfg.codec,
+                    adversary: Default::default(),
                 };
                 let rounds = client.serve(&runtime).unwrap();
                 (got_cfg, rounds, client.stats)

@@ -1,0 +1,308 @@
+//! Byzantine conformance matrix (DESIGN.md §13): every adversarial
+//! behavior, against every robust-aggregation rule, over every transport
+//! (loopback, TCP, sim), must end in one of exactly two outcomes —
+//! the round **converges** (statistical attacks absorbed or not by the
+//! configured rule) or the faulty updates are **rejected as typed
+//! per-client verdicts** — never a panic, never a silent wrong answer.
+//!
+//! Also pinned here:
+//! * honest/default runs are bit-identical whether the adversary axis is
+//!   spelled out or left at its defaults (the PR-7 byte-identity bar);
+//! * the server never trusts a client-reported sample count (the
+//!   `wrong_samples` regression);
+//! * trimmed-mean and coordinate-median recover at least the undefended
+//!   `mean` accuracy under sign-flip adversaries on a Dirichlet
+//!   non-IID partition (the paper-facing robustness claim);
+//! * fault rejections land in the observed-availability ledger.
+
+mod common;
+
+use common::{fingerprint, run_over_tcp};
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::availability::AvailabilityModel;
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::Orchestrator;
+use tfed::coordinator::{AdversaryModel, AdversarySpec, AggregatorSpec, Behavior};
+use tfed::eval::RunMetrics;
+use tfed::sim::SimSpec;
+
+/// Every non-honest behavior that can ride the full matrix. `oversize`
+/// is excluded: its frame-encode failure kills a real TCP connection at
+/// the client (by design), so it gets a loopback-only test below.
+const MATRIX_BEHAVIORS: &[&str] = &[
+    "scale:50",
+    "sign_flip",
+    "replay",
+    "corrupt_frame",
+    "wrong_codec",
+    "wrong_samples",
+];
+
+const MATRIX_AGGREGATORS: &[&str] =
+    &["mean", "trimmed_mean:0.25", "median", "norm_clip:1.5", "krum:1"];
+
+fn small_cfg(protocol: Protocol) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::table2(protocol, Task::MnistLike, 42);
+    cfg.n_clients = 4;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 160;
+    cfg.test_samples = 40;
+    cfg.batch = 16;
+    cfg.lr = 0.1;
+    cfg.native_backend = true;
+    cfg
+}
+
+/// First casting seed under which exactly `want` of the `n` registered
+/// clients act out `behavior` — a deterministic mixed cohort, so a
+/// protocol deviation never rejects the whole round and the honest rest
+/// keeps the run converging.
+fn seed_for_cast(behavior: &str, fraction: f64, n: u32, want: usize) -> u64 {
+    (0..10_000u64)
+        .find(|&seed| {
+            let spec = AdversarySpec::parse(behavior, fraction, seed).unwrap();
+            AdversaryModel::new(spec).unwrap().adversaries(n).len() == want
+        })
+        .expect("some seed yields the wanted cast size")
+}
+
+fn adversarial_cfg(behavior: &str, aggregator: &str) -> (ExperimentConfig, Vec<u32>) {
+    let mut cfg = small_cfg(Protocol::TFedAvg);
+    let seed = seed_for_cast(behavior, 0.5, cfg.n_clients as u32, 2);
+    cfg.adversary = AdversarySpec::parse(behavior, 0.5, seed).unwrap();
+    cfg.aggregator = AggregatorSpec::parse(aggregator).unwrap();
+    cfg.validate().unwrap();
+    let cast = AdversaryModel::new(cfg.adversary).unwrap().adversaries(cfg.n_clients as u32);
+    (cfg, cast)
+}
+
+/// The matrix cell contract: finite metrics, and — with participation
+/// 1.0, so every client is selected every round — protocol deviations
+/// reject exactly the adversarial cast while statistical attacks reject
+/// nobody.
+fn assert_cell(label: &str, m: &RunMetrics, behavior: Behavior, cast: &[u32]) {
+    assert!(m.final_acc().is_finite(), "{label}: non-finite accuracy");
+    for rec in &m.records {
+        assert!(rec.train_loss.is_finite(), "{label}: non-finite loss");
+        if behavior.is_protocol_deviation() {
+            assert_eq!(
+                rec.rejected, cast,
+                "{label} round {}: deviations must reject exactly the cast",
+                rec.round
+            );
+        } else {
+            assert!(
+                rec.rejected.is_empty(),
+                "{label} round {}: statistical attacks are protocol-legal",
+                rec.round
+            );
+        }
+    }
+}
+
+#[test]
+fn matrix_loopback_every_behavior_against_every_aggregator() {
+    for behavior in MATRIX_BEHAVIORS {
+        for aggregator in MATRIX_AGGREGATORS {
+            let label = format!("loopback/{behavior}/{aggregator}");
+            let (cfg, cast) = adversarial_cfg(behavior, aggregator);
+            assert_eq!(cast.len(), 2, "{label}");
+            let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+            let mut orch = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+            orch.run().unwrap_or_else(|e| panic!("{label}: round driver died: {e:#}"));
+            assert_cell(&label, &orch.metrics, cfg.adversary.behavior, &cast);
+            // fault rejections are availability from aggregation's view
+            let observed = orch.observed_dropout();
+            if cfg.adversary.behavior.is_protocol_deviation() {
+                assert_eq!(observed.rejected(), (cast.len() * cfg.rounds) as u64, "{label}");
+                assert!(observed.observed_rate() > 0.0, "{label}");
+            } else {
+                assert_eq!(observed.rejected(), 0, "{label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn matrix_tcp_every_behavior() {
+    // one statistical-robust rule over real sockets; loopback already
+    // covers the full aggregator axis and TCP shares the server code
+    for behavior in MATRIX_BEHAVIORS {
+        let label = format!("tcp/{behavior}/median");
+        let (cfg, cast) = adversarial_cfg(behavior, "median");
+        let (metrics, global) = run_over_tcp(&cfg);
+        assert_cell(&label, &metrics, cfg.adversary.behavior, &cast);
+        assert!(global.is_finite(), "{label}: non-finite global");
+    }
+}
+
+#[test]
+fn matrix_sim_every_behavior() {
+    // the virtual fleet casts by *registered* id: the cohort is sampled
+    // from 10k ids, so adversarial membership varies per round and a
+    // cohort may even be all-Byzantine — in which case the round must
+    // fail typed ("every update was rejected"), not panic
+    for behavior in MATRIX_BEHAVIORS {
+        let label = format!("sim/{behavior}/trimmed_mean");
+        let mut cfg = small_cfg(Protocol::TFedAvg);
+        cfg.adversary = AdversarySpec::parse(behavior, 0.25, 11).unwrap();
+        cfg.aggregator = AggregatorSpec::parse("trimmed_mean:0.25").unwrap();
+        cfg.validate().unwrap();
+        let model = AdversaryModel::new(cfg.adversary).unwrap();
+        let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+        let mut orch = Orchestrator::with_sim(
+            cfg.clone(),
+            backend.as_ref(),
+            AvailabilityModel::always_on(),
+            SimSpec::new(10_000, 8, 5),
+        )
+        .unwrap();
+        match orch.run() {
+            Ok(()) => {
+                for rec in &orch.metrics.records {
+                    assert!(rec.train_loss.is_finite(), "{label}");
+                    // rejected ids are always a subset of the round's
+                    // adversarial selections, never an honest client
+                    let adv_selected: Vec<u32> = rec
+                        .selected
+                        .iter()
+                        .map(|&rid| rid as u32)
+                        .filter(|&rid| model.behavior_of(rid) != Behavior::Honest)
+                        .collect();
+                    for rid in &rec.rejected {
+                        assert!(adv_selected.contains(rid), "{label}: rejected honest {rid}");
+                    }
+                    if cfg.adversary.behavior.is_protocol_deviation() {
+                        assert_eq!(rec.rejected, adv_selected, "{label} round {}", rec.round);
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("rejected"), "{label}: untyped failure: {msg}");
+            }
+        }
+    }
+}
+
+#[test]
+fn oversize_is_rejected_on_loopback() {
+    // the frame layer refuses to encode the payload; the exchange error
+    // becomes a typed per-client rejection and the round still completes
+    let (cfg, cast) = adversarial_cfg("oversize", "median");
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut orch = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+    orch.run().unwrap();
+    for rec in &orch.metrics.records {
+        assert_eq!(rec.rejected, cast, "round {}", rec.round);
+        assert!(rec.train_loss.is_finite());
+    }
+}
+
+#[test]
+fn server_rejects_misreported_sample_counts() {
+    // regression: the seed trusted the client-reported num_samples in
+    // the aggregation weight; the server now verifies it against its own
+    // shard bookkeeping and rejects the mismatch as a typed fault
+    let (cfg, cast) = adversarial_cfg("wrong_samples", "mean");
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut orch = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+    orch.run().unwrap();
+    for rec in &orch.metrics.records {
+        assert_eq!(rec.rejected, cast, "round {}", rec.round);
+    }
+    // the honest majority still learned something finite
+    assert!(orch.metrics.final_acc().is_finite());
+    assert_eq!(orch.observed_dropout().rejected(), (cast.len() * cfg.rounds) as u64);
+}
+
+#[test]
+fn honest_runs_are_bit_identical_with_the_axis_spelled_out() {
+    // the PR-7 byte-identity bar: the Byzantine axis at its defaults —
+    // implicit, explicit, or active-behavior-with-zero-fraction — must
+    // not move a single RNG draw or output byte
+    let base = small_cfg(Protocol::TFedAvg);
+    let backend = make_backend(None, "mlp", base.batch, true).unwrap();
+    let run = |cfg: &ExperimentConfig| {
+        let mut orch = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+        orch.run().unwrap();
+        (fingerprint(&orch.metrics), orch.global().clone())
+    };
+    let (fp_default, g_default) = run(&base);
+
+    let mut explicit = base.clone();
+    explicit.aggregator = AggregatorSpec::parse("mean").unwrap();
+    explicit.adversary = AdversarySpec::parse("honest", 0.0, 0).unwrap();
+    let (fp_explicit, g_explicit) = run(&explicit);
+    assert_eq!(fp_default, fp_explicit);
+    assert_eq!(g_default.l2_distance(&g_explicit), 0.0);
+
+    let mut inactive = base.clone();
+    inactive.adversary = AdversarySpec::parse("sign_flip", 0.0, 99).unwrap();
+    assert!(!inactive.adversary.is_active());
+    let (fp_inactive, g_inactive) = run(&inactive);
+    assert_eq!(fp_default, fp_inactive);
+    assert_eq!(g_default.l2_distance(&g_inactive), 0.0);
+
+    // and the records never grow robustness fields on honest runs
+    let json = fp_default;
+    assert!(!json.contains("\"rejected\""), "honest JSON grew a rejected field");
+    assert!(!json.contains("\"clipped\""), "honest JSON grew a clipped field");
+}
+
+#[test]
+fn robust_rules_recover_mean_accuracy_under_sign_flip_on_dirichlet() {
+    // the paper-facing claim: on a Dirichlet non-IID partition with a
+    // third of the fleet sign-flipping, the undefended mean is dragged
+    // toward zero (the flipped updates cancel honest mass) while
+    // trimmed-mean and coordinate-median keep learning
+    let mut base = ExperimentConfig::table2(Protocol::FedAvg, Task::MnistLike, 42);
+    base.n_clients = 6;
+    base.rounds = 4;
+    base.local_epochs = 1;
+    base.train_samples = 600;
+    base.test_samples = 150;
+    base.batch = 16;
+    base.lr = 0.1;
+    base.dirichlet_alpha = 0.5;
+    base.native_backend = true;
+    let seed = seed_for_cast("sign_flip", 0.5, base.n_clients as u32, 2);
+    base.adversary = AdversarySpec::parse("sign_flip", 0.5, seed).unwrap();
+
+    let backend = make_backend(None, "mlp", base.batch, true).unwrap();
+    let acc_of = |aggregator: &str| {
+        let mut cfg = base.clone();
+        cfg.aggregator = AggregatorSpec::parse(aggregator).unwrap();
+        cfg.validate().unwrap();
+        let mut orch = Orchestrator::new(cfg, backend.as_ref()).unwrap();
+        orch.run().unwrap();
+        orch.metrics.final_acc()
+    };
+    let mean = acc_of("mean");
+    let trimmed = acc_of("trimmed_mean:0.34");
+    let median = acc_of("median");
+    assert!(
+        trimmed >= mean - 1e-4,
+        "trimmed_mean {trimmed} fell below undefended mean {mean}"
+    );
+    assert!(median >= mean - 1e-4, "median {median} fell below undefended mean {mean}");
+}
+
+#[test]
+fn norm_clip_reports_clipped_clients_in_the_round_records() {
+    // a scaled update is protocol-legal; norm_clip bounds it and the
+    // round record says which client got clipped
+    let (cfg, cast) = adversarial_cfg("scale:50", "norm_clip:1.5");
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let mut orch = Orchestrator::new(cfg.clone(), backend.as_ref()).unwrap();
+    orch.run().unwrap();
+    let clipped_total: usize = orch.metrics.records.iter().map(|r| r.clipped.len()).sum();
+    assert!(clipped_total > 0, "a 50x-scaled update escaped the clip");
+    for rec in &orch.metrics.records {
+        for cid in &rec.clipped {
+            assert!(cast.contains(cid), "clipped honest client {cid}");
+        }
+        assert!(rec.rejected.is_empty(), "scaling is legal, never rejected");
+    }
+}

@@ -1,0 +1,319 @@
+//! Property and golden-fixture tests for the robust-aggregation registry
+//! (DESIGN.md §13):
+//!
+//! * order invariance — shuffling the cohort must not change the
+//!   aggregate (bitwise for the sort-based rules, within float-reorder
+//!   tolerance for the weighted means);
+//! * breakdown points — trimmed-mean and median match hand-computed
+//!   references and hold the honest envelope up to their breakdown
+//!   bound, then demonstrably fail beyond it (the bound is tight, not
+//!   just safe);
+//! * `mean` registry entry ≡ streaming [`Aggregator`] fold, bit for bit,
+//!   over randomized fleets — the robust registry must not move the
+//!   repo's byte-identity bar for the default path;
+//! * Krum distance matrix against a hardcoded golden on a fixed
+//!   8-client fixture, including the lowest-index tie-break.
+
+use tfed::coordinator::{
+    krum_distance_matrix, robust_aggregate, weighted_average, Aggregator, AggregatorSpec,
+};
+use tfed::model::{ParamSet, Tensor};
+use tfed::util::proptest::forall;
+use tfed::util::rng::Pcg;
+
+/// Single-tensor ParamSet — aggregation is coordinate-wise, so one flat
+/// tensor exercises every rule.
+fn params(data: Vec<f32>) -> ParamSet {
+    let shape = vec![data.len()];
+    ParamSet { tensors: vec![Tensor { shape, data }] }
+}
+
+/// Cohort of `n` clients with `dim`-coordinate normal updates and random
+/// sample counts in [1, 100].
+fn random_fleet(rng: &mut Pcg, n: usize, dim: usize) -> Vec<(u32, u64, ParamSet)> {
+    (0..n)
+        .map(|i| {
+            let samples = rng.below(100) as u64 + 1;
+            let data = (0..dim).map(|_| rng.normal()).collect();
+            (i as u32, samples, params(data))
+        })
+        .collect()
+}
+
+fn flat(p: &ParamSet) -> &[f32] {
+    &p.tensors[0].data
+}
+
+fn assert_bitwise_eq(a: &ParamSet, b: &ParamSet, label: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{label}");
+    for (x, y) in a.tensors.iter().zip(&b.tensors) {
+        for (u, v) in x.data.iter().zip(&y.data) {
+            assert_eq!(u.to_bits(), v.to_bits(), "{label}: {u} != {v}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mean: registry wrapper ≡ streaming fold, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mean_registry_entry_matches_streaming_fold_bit_for_bit() {
+    forall(50, |rng| {
+        let fleet = random_fleet(rng, 1 + rng.below(8) as usize, 1 + rng.below(40) as usize);
+
+        // hand-rolled streaming reference: the exact float-op sequence
+        // the server's optimistic path performs
+        let total: u64 = fleet.iter().map(|(_, n, _)| *n).sum();
+        let mut zero = fleet[0].2.clone();
+        zero.scale(0.0);
+        let mut agg = Aggregator::start(zero, total).unwrap();
+        for (_, n, p) in &fleet {
+            agg.fold(*n, p).unwrap();
+        }
+        let streamed = agg.finish().unwrap();
+
+        let pairs: Vec<(u64, ParamSet)> =
+            fleet.iter().map(|(_, n, p)| (*n, p.clone())).collect();
+        let batch = weighted_average(&pairs).unwrap();
+        assert_bitwise_eq(&streamed, &batch, "weighted_average vs streaming");
+
+        let robust = robust_aggregate(AggregatorSpec::Mean, &fleet).unwrap();
+        assert!(robust.clipped.is_empty());
+        assert_bitwise_eq(&streamed, &robust.global, "registry mean vs streaming");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// order invariance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sort_based_rules_are_bitwise_order_invariant() {
+    // trimmed-mean, median, and krum sort internally, so any cohort
+    // permutation must yield the exact same bits
+    let specs = [
+        AggregatorSpec::TrimmedMean { beta: 0.25 },
+        AggregatorSpec::Median,
+        AggregatorSpec::Krum { f: 1 },
+    ];
+    forall(30, |rng| {
+        let fleet = random_fleet(rng, 5, 9);
+        let mut shuffled = fleet.clone();
+        rng.shuffle(&mut shuffled);
+        let mut reversed = fleet.clone();
+        reversed.reverse();
+        for spec in specs {
+            let label = spec.name();
+            let a = robust_aggregate(spec, &fleet).unwrap().global;
+            let b = robust_aggregate(spec, &shuffled).unwrap().global;
+            let c = robust_aggregate(spec, &reversed).unwrap().global;
+            assert_bitwise_eq(&a, &b, &label);
+            assert_bitwise_eq(&a, &c, &label);
+        }
+    });
+}
+
+#[test]
+fn weighted_rules_are_order_invariant_within_float_tolerance() {
+    // mean and norm_clip accumulate in cohort order; permutations may
+    // reassociate float additions but must agree to reorder tolerance,
+    // and norm_clip must flag the same client set either way
+    forall(30, |rng| {
+        let fleet = random_fleet(rng, 6, 9);
+        let mut reversed = fleet.clone();
+        reversed.reverse();
+        for spec in [AggregatorSpec::Mean, AggregatorSpec::NormClip { tau: 1.2 }] {
+            let a = robust_aggregate(spec, &fleet).unwrap();
+            let b = robust_aggregate(spec, &reversed).unwrap();
+            assert!(
+                a.global.l2_distance(&b.global) < 1e-5,
+                "{}: reorder moved the aggregate by {}",
+                spec.name(),
+                a.global.l2_distance(&b.global)
+            );
+            let mut ca = a.clipped.clone();
+            let mut cb = b.clipped.clone();
+            ca.sort_unstable();
+            cb.sort_unstable();
+            assert_eq!(ca, cb, "{}: clip set changed under reorder", spec.name());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// breakdown points, against hand-rolled references
+// ---------------------------------------------------------------------------
+
+/// Honest single-coordinate cohort: tight cluster around 1.0.
+const HONEST: [f32; 4] = [0.9, 1.0, 1.05, 1.1];
+
+fn one_dim_fleet(values: &[f32]) -> Vec<(u32, u64, ParamSet)> {
+    values.iter().enumerate().map(|(i, &v)| (i as u32, 10, params(vec![v]))).collect()
+}
+
+#[test]
+fn trimmed_mean_matches_hand_computed_reference() {
+    // n = 5, beta = 0.2 → trim k = floor(0.2·5) = 1 from each end:
+    // sorted [0.9, 1.0, 1.05, 1.1, 1000] keeps [1.0, 1.05, 1.1]
+    let mut values = HONEST.to_vec();
+    values.push(1000.0);
+    let fleet = one_dim_fleet(&values);
+    let spec = AggregatorSpec::TrimmedMean { beta: 0.2 };
+    let got = robust_aggregate(spec, &fleet).unwrap().global;
+    let want = ((1.0f64 + 1.05f32 as f64 + 1.1f32 as f64) / 3.0) as f32;
+    assert_eq!(flat(&got), &[want]);
+}
+
+#[test]
+fn trimmed_mean_holds_the_envelope_up_to_its_breakdown_point_and_not_beyond() {
+    // beta = 0.2 on n = 5 trims one value per end: one poisoned client
+    // is absorbed, two overwhelm the trim and drag the aggregate out
+    let spec = AggregatorSpec::TrimmedMean { beta: 0.2 };
+    let lo = HONEST.iter().copied().min_by(f32::total_cmp).unwrap();
+    let hi = HONEST.iter().copied().max_by(f32::total_cmp).unwrap();
+
+    let mut one_poison = HONEST.to_vec();
+    one_poison.push(1000.0);
+    let v = flat(&robust_aggregate(spec, &one_dim_fleet(&one_poison)).unwrap().global)[0];
+    assert!((lo..=hi).contains(&v), "one poison escaped the trim: {v}");
+
+    let two_poison = [HONEST[0], HONEST[1], HONEST[2], 1000.0, 1000.0];
+    let v = flat(&robust_aggregate(spec, &one_dim_fleet(&two_poison)).unwrap().global)[0];
+    assert!(v > hi, "two poisons past the breakdown point were absorbed: {v}");
+}
+
+#[test]
+fn median_matches_hand_computed_reference_and_breakdown() {
+    // odd cohort: middle value; even cohort: mean of the two middles
+    let got = robust_aggregate(
+        AggregatorSpec::Median,
+        &one_dim_fleet(&[3.0, 1.0, 2.0, 5.0, 4.0]),
+    )
+    .unwrap()
+    .global;
+    assert_eq!(flat(&got), &[3.0]);
+    let got = robust_aggregate(AggregatorSpec::Median, &one_dim_fleet(&[4.0, 1.0, 2.0, 3.0]))
+        .unwrap()
+        .global;
+    assert_eq!(flat(&got), &[2.5]);
+
+    // breakdown: a minority of poisons cannot move the median out of
+    // the honest envelope; a majority owns it
+    let lo = HONEST.iter().copied().min_by(f32::total_cmp).unwrap();
+    let hi = HONEST.iter().copied().max_by(f32::total_cmp).unwrap();
+    let minority = [HONEST[0], HONEST[1], HONEST[2], 1000.0, 1000.0];
+    let v = flat(&robust_aggregate(AggregatorSpec::Median, &one_dim_fleet(&minority))
+        .unwrap()
+        .global)[0];
+    assert!((lo..=hi).contains(&v), "minority poisons moved the median: {v}");
+    let majority = [HONEST[0], HONEST[1], 1000.0, 1000.0, 1000.0];
+    let v = flat(&robust_aggregate(AggregatorSpec::Median, &one_dim_fleet(&majority))
+        .unwrap()
+        .global)[0];
+    assert_eq!(v, 1000.0, "a poisoned majority must own the median");
+}
+
+#[test]
+fn norm_clip_flags_exactly_the_outlier_and_bounds_its_pull() {
+    // three unit-scale updates and one at 100x: only the outlier is
+    // clipped, and the aggregate stays near the honest mean instead of
+    // being dragged a quarter of the way to 100
+    let fleet = vec![
+        (0u32, 10u64, params(vec![1.0, 0.0])),
+        (1, 10, params(vec![0.0, 1.0])),
+        (2, 10, params(vec![0.5, 0.5])),
+        (3, 10, params(vec![100.0, 0.0])),
+    ];
+    let out = robust_aggregate(AggregatorSpec::NormClip { tau: 1.5 }, &fleet).unwrap();
+    assert_eq!(out.clipped, vec![3]);
+    let honest_mean = robust_aggregate(AggregatorSpec::Mean, &fleet[..3]).unwrap();
+    assert!(
+        out.global.l2_distance(&honest_mean.global) < 1.0,
+        "clipped aggregate strayed {} from the honest mean",
+        out.global.l2_distance(&honest_mean.global)
+    );
+    let undefended = robust_aggregate(AggregatorSpec::Mean, &fleet).unwrap();
+    assert!(undefended.global.l2_distance(&honest_mean.global) > 10.0);
+}
+
+// ---------------------------------------------------------------------------
+// Krum golden fixture
+// ---------------------------------------------------------------------------
+
+/// Fixed 8-client fixture: client `i` holds the tensor `[i, 2i]`, so
+/// dist²(i, j) = (i−j)² + (2i−2j)² = 5(i−j)² exactly in f64.
+fn krum_fixture() -> Vec<(u32, u64, ParamSet)> {
+    (0..8u32)
+        .map(|i| (i, 10, params(vec![i as f32, 2.0 * i as f32])))
+        .collect()
+}
+
+#[test]
+fn krum_distance_matrix_matches_the_golden() {
+    #[rustfmt::skip]
+    const GOLDEN: [f64; 64] = [
+          0.0,   5.0,  20.0,  45.0,  80.0, 125.0, 180.0, 245.0,
+          5.0,   0.0,   5.0,  20.0,  45.0,  80.0, 125.0, 180.0,
+         20.0,   5.0,   0.0,   5.0,  20.0,  45.0,  80.0, 125.0,
+         45.0,  20.0,   5.0,   0.0,   5.0,  20.0,  45.0,  80.0,
+         80.0,  45.0,  20.0,   5.0,   0.0,   5.0,  20.0,  45.0,
+        125.0,  80.0,  45.0,  20.0,   5.0,   0.0,   5.0,  20.0,
+        180.0, 125.0,  80.0,  45.0,  20.0,   5.0,   0.0,   5.0,
+        245.0, 180.0, 125.0,  80.0,  45.0,  20.0,   5.0,   0.0,
+    ];
+    let dist2 = krum_distance_matrix(&krum_fixture());
+    assert_eq!(dist2.len(), 64);
+    for (idx, (&got, &want)) in dist2.iter().zip(GOLDEN.iter()).enumerate() {
+        assert!(
+            (got - want).abs() < 1e-9,
+            "dist2[{}][{}] = {got}, golden says {want}",
+            idx / 8,
+            idx % 8
+        );
+    }
+}
+
+#[test]
+fn krum_selects_the_lowest_index_among_tied_central_members() {
+    // with f = 1 on n = 8 colinear clients, indices 2..=5 tie on the
+    // 5-nearest-neighbor score; the registry pins ties to the lowest
+    // index, and the winner is returned verbatim
+    let fleet = krum_fixture();
+    let got = robust_aggregate(AggregatorSpec::Krum { f: 1 }, &fleet).unwrap().global;
+    assert_bitwise_eq(&got, &fleet[2].2, "krum tie-break");
+}
+
+#[test]
+fn krum_always_returns_a_cohort_member_verbatim() {
+    forall(30, |rng| {
+        let fleet = random_fleet(rng, 2 + rng.below(6) as usize, 5);
+        let got = robust_aggregate(AggregatorSpec::Krum { f: 1 }, &fleet).unwrap().global;
+        assert!(
+            fleet.iter().any(|(_, _, p)| {
+                flat(p).iter().zip(flat(&got)).all(|(a, b)| a.to_bits() == b.to_bits())
+            }),
+            "krum synthesized a tensor outside the cohort"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// registry surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shape_disagreement_is_a_typed_error_for_every_rule() {
+    let fleet = vec![
+        (0u32, 10u64, params(vec![1.0, 2.0])),
+        (1, 10, params(vec![1.0, 2.0, 3.0])),
+    ];
+    for name in tfed::coordinator::aggregator_names() {
+        let spec = AggregatorSpec::parse(name).unwrap();
+        let err = robust_aggregate(spec, &fleet).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("shape disagrees"),
+            "{name}: unexpected error {err:#}"
+        );
+    }
+}

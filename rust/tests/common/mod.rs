@@ -1,0 +1,78 @@
+//! Helpers shared across the e2e integration suites (`mod common;`).
+//!
+//! Each integration test file is its own crate, so anything needed by
+//! more than one suite lives here: the deterministic run fingerprint and
+//! the in-thread TCP federation driver. Suites that only use a subset
+//! would otherwise warn, hence the file-level `dead_code` allow.
+#![allow(dead_code)]
+
+use tfed::config::ExperimentConfig;
+use tfed::coordinator::availability::AvailabilityModel;
+use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::server::{materialize_data, Orchestrator};
+use tfed::coordinator::{AdversaryModel, ClientAdversary, ClientRuntime};
+use tfed::eval::RunMetrics;
+use tfed::model::ParamSet;
+use tfed::transport::{TcpBinding, TcpClient};
+
+/// Deterministic metrics fingerprint: the full metrics JSON with the
+/// wall clock zeroed (losses, accuracies, selections, byte counts, and
+/// the virtual clock all remain — they must reproduce).
+pub fn fingerprint(m: &RunMetrics) -> String {
+    let mut m = m.clone();
+    for r in &mut m.records {
+        r.wall_secs = 0.0;
+    }
+    m.to_json().to_string()
+}
+
+/// Drive one experiment over real TCP sockets with in-thread clients;
+/// returns the run metrics and the final global parameters.
+///
+/// Each client derives its Byzantine role (if any) from the
+/// wire-delivered config, exactly like the `tfed client` subcommand, so
+/// adversarial suites can reuse this driver unchanged.
+pub fn run_over_tcp(cfg: &ExperimentConfig) -> (RunMetrics, ParamSet) {
+    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
+    let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap();
+    let (shards, _test) = materialize_data(cfg, backend.schema().input_dim).unwrap();
+    std::thread::scope(|s| {
+        for (cid, shard) in shards.into_iter().enumerate() {
+            let backend = backend.as_ref();
+            let want_cfg = cfg.clone();
+            s.spawn(move || {
+                let (mut client, got_cfg) =
+                    TcpClient::connect(&addr.to_string(), cid as u32).unwrap();
+                // the wire-delivered config is exactly the server's
+                assert_eq!(got_cfg, want_cfg);
+                let cast = AdversaryModel::new(got_cfg.adversary).unwrap();
+                let runtime = ClientRuntime {
+                    client_id: cid as u32,
+                    backend,
+                    shard,
+                    local_epochs: got_cfg.local_epochs,
+                    lr: got_cfg.lr,
+                    codec: got_cfg.codec,
+                    adversary: ClientAdversary::from_model(cast),
+                };
+                let rounds = client.serve(&runtime).unwrap();
+                assert_eq!(rounds as usize, got_cfg.rounds);
+            });
+        }
+        let transport = binding.accept_clients(cfg.n_clients, cfg).unwrap();
+        let mut orch = Orchestrator::with_transport(
+            cfg.clone(),
+            backend.as_ref(),
+            AvailabilityModel::always_on(),
+            Box::new(transport),
+        )
+        .unwrap();
+        // shut the clients down before asserting, so a failed run reports
+        // the driver's error rather than client-side panics
+        let run_result = orch.run();
+        orch.shutdown_transport().unwrap();
+        run_result.unwrap();
+        (orch.metrics.clone(), orch.global().clone())
+    })
+}

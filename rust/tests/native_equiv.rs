@@ -289,6 +289,7 @@ fn cnn_federation_loopback_matches_tcp_bit_for_bit() {
                     local_epochs: got_cfg.local_epochs,
                     lr: got_cfg.lr,
                     codec: got_cfg.codec,
+                    adversary: Default::default(),
                 };
                 client.serve(&runtime).unwrap();
             });

@@ -3,6 +3,9 @@
 //! call orders, and the checked-in `sim_fleet.toml` acceptance scenario
 //! (100k registered clients, multi-round, byte-identical bundles).
 
+mod common;
+
+use common::fingerprint;
 use tfed::comms::{DenseGlobal, Message};
 use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
@@ -10,22 +13,11 @@ use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::{make_backend, NativeBackend};
 use tfed::coordinator::client::{ClientRuntime, ShardData};
 use tfed::coordinator::server::Orchestrator;
-use tfed::eval::RunMetrics;
 use tfed::model::{init_params, mlp_schema};
 use tfed::scenario::{run_scenario, ScenarioManifest};
 use tfed::sim::{FleetModel, SimSpec, SimTransport};
 use tfed::transport::{encode_data_frame, Loopback, RoundAssign, Transport};
 use tfed::util::rng::Pcg;
-
-/// Deterministic metrics fingerprint: full JSON with the wall clock
-/// zeroed. Virtual time (`sim_secs`) stays in — it must reproduce.
-fn fingerprint(m: &RunMetrics) -> String {
-    let mut m = m.clone();
-    for r in &mut m.records {
-        r.wall_secs = 0.0;
-    }
-    m.to_json().to_string()
-}
 
 fn sim_cfg(seed: u64) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, seed);
@@ -107,6 +99,7 @@ fn event_trace_is_independent_of_exchange_order() {
                 local_epochs: 1,
                 lr: 0.05,
                 codec: CodecSpec::Dense,
+                adversary: Default::default(),
             })
             .collect();
         SimTransport::new(

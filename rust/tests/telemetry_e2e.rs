@@ -16,14 +16,16 @@
 //! Telemetry state is process-global, so every test serializes on one
 //! lock and restores the disabled default before releasing it.
 
+mod common;
+
 use std::io::{Read as _, Write as _};
 use std::net::TcpStream;
 use std::sync::Mutex;
 
+use common::fingerprint;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::backend::make_backend;
 use tfed::coordinator::run_experiment;
-use tfed::eval::RunMetrics;
 use tfed::model::{ParamSet, Tensor};
 use tfed::obs::{telemetry, trace};
 use tfed::scenario::{run_scenario, run_scenario_jobs, ScenarioManifest};
@@ -37,16 +39,6 @@ fn obs_off() {
     telemetry::clear();
     trace::set_enabled(false);
     trace::clear();
-}
-
-/// Deterministic metrics fingerprint: full JSON with the wall clock
-/// zeroed (losses, accuracies, selections, byte counts all remain).
-fn fingerprint(m: &RunMetrics) -> String {
-    let mut m = m.clone();
-    for r in &mut m.records {
-        r.wall_secs = 0.0;
-    }
-    m.to_json().to_string()
 }
 
 fn small_cfg(seed: u64) -> ExperimentConfig {
@@ -150,6 +142,8 @@ fn jsonl_records_have_the_v1_schema_and_deterministic_bytes() {
         "cum_up_bytes",
         "cum_down_bytes",
         "sim_secs",
+        "rejected",
+        "clipped",
     ];
     let mut last_up = 0u64;
     for (i, line) in jsonl.lines().enumerate() {

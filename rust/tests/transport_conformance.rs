@@ -47,6 +47,7 @@ fn runtimes(backend: &NativeBackend) -> Vec<ClientRuntime<'_>> {
             local_epochs: 1,
             lr: 0.05,
             codec: CodecSpec::Dense,
+            adversary: Default::default(),
         })
         .collect()
 }
@@ -129,6 +130,7 @@ fn payloads_and_data_stats_agree_across_all_transports() {
                     local_epochs: 1,
                     lr: 0.05,
                     codec: CodecSpec::Dense,
+                    adversary: Default::default(),
                 };
                 client.serve(&runtime).unwrap();
             });
@@ -179,6 +181,7 @@ fn codec_mismatch_is_rejected_by_every_transport() {
                 local_epochs: 1,
                 lr: 0.05,
                 codec: CodecSpec::Dense,
+                adversary: Default::default(),
             };
             client.serve(&runtime)
         });

@@ -4,17 +4,17 @@
 //! path, and the `serve` / `client` subcommands must do the same across
 //! OS processes.
 
+mod common;
+
 use std::io::{BufRead, BufReader, Read};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
+use common::run_over_tcp;
 use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
-use tfed::coordinator::availability::AvailabilityModel;
 use tfed::coordinator::backend::make_backend;
-use tfed::coordinator::server::{materialize_data, Orchestrator};
-use tfed::coordinator::ClientRuntime;
-use tfed::transport::{TcpBinding, TcpClient};
+use tfed::coordinator::server::Orchestrator;
 
 fn small_cfg(protocol: Protocol) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::table2(protocol, Task::MnistLike, 42);
@@ -27,51 +27,6 @@ fn small_cfg(protocol: Protocol) -> ExperimentConfig {
     cfg.lr = 0.1;
     cfg.native_backend = true;
     cfg
-}
-
-/// Drive one experiment over TCP with in-thread clients; returns the
-/// orchestrator after the run for inspection.
-fn run_over_tcp(cfg: &ExperimentConfig) -> (tfed::eval::RunMetrics, tfed::model::ParamSet) {
-    let backend = make_backend(None, "mlp", cfg.batch, true).unwrap();
-    let binding = TcpBinding::bind("127.0.0.1:0").unwrap();
-    let addr = binding.local_addr().unwrap();
-    let (shards, _test) = materialize_data(cfg, backend.schema().input_dim).unwrap();
-    std::thread::scope(|s| {
-        for (cid, shard) in shards.into_iter().enumerate() {
-            let backend = backend.as_ref();
-            let want_cfg = cfg.clone();
-            s.spawn(move || {
-                let (mut client, got_cfg) =
-                    TcpClient::connect(&addr.to_string(), cid as u32).unwrap();
-                // the wire-delivered config is exactly the server's
-                assert_eq!(got_cfg, want_cfg);
-                let runtime = ClientRuntime {
-                    client_id: cid as u32,
-                    backend,
-                    shard,
-                    local_epochs: got_cfg.local_epochs,
-                    lr: got_cfg.lr,
-                    codec: got_cfg.codec,
-                };
-                let rounds = client.serve(&runtime).unwrap();
-                assert_eq!(rounds as usize, got_cfg.rounds);
-            });
-        }
-        let transport = binding.accept_clients(cfg.n_clients, cfg).unwrap();
-        let mut orch = Orchestrator::with_transport(
-            cfg.clone(),
-            backend.as_ref(),
-            AvailabilityModel::always_on(),
-            Box::new(transport),
-        )
-        .unwrap();
-        // shut the clients down before asserting, so a failed run reports
-        // the driver's error rather than client-side panics
-        let run_result = orch.run();
-        orch.shutdown_transport().unwrap();
-        run_result.unwrap();
-        (orch.metrics.clone(), orch.global().clone())
-    })
 }
 
 #[test]
