@@ -128,6 +128,25 @@ pub fn write_csv(name: &str, header: &str, rows: &[String]) {
     println!("  -> wrote {path:?}");
 }
 
+/// Append one bench section's results to the run ledger named by
+/// `TFED_LEDGER` (no-op when unset, so default bench runs write exactly
+/// the files they always did). Flat `name → value` pairs, e.g.
+/// `ternary/up_bytes_per_round`; the perf trajectory `tfed diff` gates
+/// on accumulates here.
+pub fn append_bench(section: &str, values: &[(String, f64)]) {
+    let Ok(path) = std::env::var("TFED_LEDGER") else { return };
+    if path.is_empty() || values.is_empty() {
+        return;
+    }
+    let record = tfed::obs::store::bench_record(section, values);
+    let appended = tfed::obs::store::Ledger::open(&path)
+        .and_then(|ledger| ledger.append(std::slice::from_ref(&record)));
+    match appended {
+        Ok(()) => println!("  -> appended bench [{section}] to ledger {path}"),
+        Err(e) => eprintln!("warning: bench ledger append to {path:?} failed: {e}"),
+    }
+}
+
 /// Which sections to run: args after `--` (cargo bench -- --table2); empty
 /// means all. The `--bench` flag cargo injects is ignored.
 pub fn selected_sections() -> Vec<String> {

@@ -18,7 +18,10 @@
 //! simulated time-to-accuracy over a 100k-registered-client fleet), and
 //! the train section emits BENCH_train.json (native layer-graph training
 //! throughput per model x mode x kernel/thread config, naive baseline
-//! included, bit-identity asserted).
+//! included, bit-identity asserted). With TFED_LEDGER=<path> set, the
+//! compression/sim/train sections additionally append their headline
+//! numbers as bench records to that run ledger, so `tfed history` /
+//! `tfed diff` can gate perf regressions across bench runs.
 
 #[path = "common.rs"]
 mod common;
@@ -238,6 +241,7 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
         ["dense", "fp16", "quant8", "quant4", "quant1", "stc:k=0.01", "ternary"];
     let mut rows = Vec::new();
     let mut entries = Vec::new();
+    let mut ledger_vals = Vec::new();
     let mut dense_up = f64::NAN;
     let mut dense_down = f64::NAN;
     for name in codecs {
@@ -287,6 +291,10 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
                 ("round_wall_secs", num(wall)),
             ]),
         ));
+        ledger_vals.push((format!("{name}/best_acc"), m.best_acc() as f64));
+        ledger_vals.push((format!("{name}/up_bytes_per_round"), up));
+        ledger_vals.push((format!("{name}/down_bytes_per_round"), down));
+        ledger_vals.push((format!("{name}/compression_ratio_vs_dense"), ratio));
     }
     write_csv(
         "compression.csv",
@@ -307,6 +315,7 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
     };
     std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_compression.json");
     println!("  -> wrote {path}");
+    append_bench("compression", &ledger_vals);
     println!("shape: ternary/quant1 ~16x, stc(1%) deepest, fp16 2x, quant8 ~4x;");
     println!("accuracy within a few points of dense for every codec at this scale.");
 }
@@ -348,6 +357,7 @@ fn train() {
     );
     let mut rows = Vec::new();
     let mut model_entries = Vec::new();
+    let mut ledger_vals = Vec::new();
     for model in ["mlp", "mlp-large", "cnn"] {
         let def = registry::model_def(model).expect("registry model");
         let dim = def.schema.input_dim;
@@ -420,6 +430,7 @@ fn train() {
                         ("speedup_vs_naive", num(speedup)),
                     ]),
                 ));
+                ledger_vals.push((format!("{model}/{mode_name}/{label}/samples_per_sec"), sps));
             }
             mode_entries.push((
                 mode_name,
@@ -519,6 +530,7 @@ fn train() {
     };
     std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_train.json");
     println!("  -> wrote {path}");
+    append_bench("train", &ledger_vals);
     println!("shape: blocked-4t >= 4x naive on mlp-large (row-parallel + transposed");
     println!("gradient GEMM), identical bits everywhere; mlp is too small to gain much.");
 }
@@ -554,11 +566,17 @@ fn sim() {
         "codec", "protocol", "best_acc", "vsecs/round", "rounds/vhour", "tta (vsecs)"
     );
     let mut rows = Vec::new();
+    let mut ledger_vals = Vec::new();
     for cell in &results.cells {
         let m = &cell.metrics;
         let sim = cell.sim.as_ref().expect("sim cells carry a sim summary");
         let vsecs_per_round = sim.total_sim_secs / m.records.len() as f64;
         let tta = sim.sim_secs_to_target;
+        ledger_vals
+            .push((format!("{}/rounds_per_virtual_hour", cell.codec), sim.rounds_per_virtual_hour));
+        if let Some(t) = tta {
+            ledger_vals.push((format!("{}/sim_secs_to_target", cell.codec), t));
+        }
         println!(
             "{:<12} {:<10} {:>8.2}% {:>12.1} {:>12.1} {:>14}",
             cell.codec,
@@ -585,6 +603,7 @@ fn sim() {
     );
     results.write_json(out_path).expect("write BENCH_sim.json");
     println!("  -> wrote {out_path}");
+    append_bench("sim", &ledger_vals);
     println!("shape: compact codecs win transfer time on slow links, so ternary/stc");
     println!("reach the accuracy target in less virtual time than dense/fp16.");
 }

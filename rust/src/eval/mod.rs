@@ -4,8 +4,8 @@
 //! into the paper's tables/figures and EXPERIMENTS.md quotes them.
 //!
 //! Formerly `crate::metrics` — renamed so "metrics" unambiguously means
-//! the observability registry ([`crate::obs::metrics`]). The old path
-//! survives one release as a re-export shim.
+//! the observability registry ([`crate::obs::metrics`]). The old
+//! re-export shim is gone; import from `crate::eval`.
 
 use std::path::Path;
 

@@ -29,11 +29,12 @@
 //!   time-to-accuracy; DESIGN.md §9), the data pipeline with
 //!   IID/Nc/beta/Dirichlet(α) partitioners, the `obs` observability
 //!   subsystem (metrics registry + span-based phase tracing + round
-//!   profiler + learning-dynamics telemetry with a live HTTP endpoint
-//!   and the offline `tfed report` renderer, off by default and free
-//!   when off; DESIGN.md §11–12), the `eval` per-round result records,
-//!   and the PJRT runtime that executes the artifacts. Python never
-//!   runs at request time.
+//!   profiler + learning-dynamics telemetry with a live HTTP endpoint,
+//!   the offline `tfed report` renderer, and the append-only cross-run
+//!   ledger behind `tfed history`/`query`/`diff`, off by default and
+//!   free when off; DESIGN.md §11–12, §14), the `eval` per-round result
+//!   records, and the PJRT runtime that executes the artifacts. Python
+//!   never runs at request time.
 
 pub mod comms;
 pub mod compress;
@@ -41,7 +42,6 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
-pub mod metrics;
 pub mod model;
 pub mod native;
 pub mod obs;

@@ -8,6 +8,10 @@
 //!   inspect   print the artifact manifest the runtime will use
 //!   selftest  PJRT smoke: load + execute every artifact kind once
 //!   report    render paper-style tables/series from run artifacts
+//!   history   list the runs recorded in a ledger (see --ledger-out)
+//!   query     render one recorded run: metrics, wire totals, compression
+//!   diff      compare two recorded runs/benches; nonzero exit on a
+//!             threshold breach (CI perf gate)
 //!
 //! Examples:
 //!   tfed run --protocol tfedavg --task mnist --rounds 30
@@ -27,6 +31,10 @@
 //!   tfed inspect
 //!   tfed selftest
 //!   tfed report results.json telemetry.jsonl
+//!   tfed run scenario.toml --ledger-out runs.tfed  # record runs durably
+//!   tfed history --ledger-out runs.tfed --codec ternary
+//!   tfed query 3 --ledger-out runs.tfed
+//!   tfed diff 1 3 --ledger-out runs.tfed --max-acc-drop 0.01
 
 use std::io::Write;
 use std::sync::Arc;
@@ -87,6 +95,11 @@ fn real_main() -> Result<()> {
         .opt("telemetry-out", "", "write per-round learning telemetry (JSONL) here")
         .opt("metrics-addr", "", "serve /metrics + /telemetry live on this address")
         .opt("metrics-hold-secs", "0", "keep the live endpoint up this long after the run")
+        .opt("ledger-out", "", "append run records to this ledger; history/query/diff read it (default runs.tfed)")
+        .opt("partition", "", "history: filter by partition name (iid | nc:2 | ...)")
+        .opt("max-acc-drop", "0.02", "diff: max tolerated final-accuracy drop")
+        .opt("max-mb-grow-pct", "10", "diff: max tolerated wire-MB growth, percent")
+        .opt("max-perf-drop-pct", "20", "diff: max tolerated throughput drop, percent")
         .opt("listen", "127.0.0.1:7878", "serve: TCP listen address (port 0 = ephemeral)")
         .opt("connect", "", "client: coordinator address to dial")
         .opt("client-id", "0", "client: this process's client id")
@@ -104,8 +117,11 @@ fn real_main() -> Result<()> {
         "inspect" => cmd_inspect(),
         "selftest" => cmd_selftest(),
         "report" => cmd_report(&args),
+        "history" => cmd_history(&args),
+        "query" => cmd_query(&args),
+        "diff" => cmd_diff(&args),
         other => bail!(
-            "unknown command {other:?} (run | serve | client | inspect | selftest | report)"
+            "unknown command {other:?} (run | serve | client | inspect | selftest | report | history | query | diff)"
         ),
     }
 }
@@ -184,6 +200,9 @@ struct ObsCli {
     trace_out: Option<String>,
     metrics_out: Option<String>,
     telemetry_out: Option<String>,
+    /// append the finished run to this cross-run ledger (needs no
+    /// collection switches — it reads the run's metrics after the fact)
+    ledger_out: Option<String>,
     /// live `/metrics` + `/telemetry` endpoint address
     metrics_addr: Option<String>,
     /// keep the endpoint alive this long after the run (for scrapes)
@@ -200,6 +219,7 @@ impl ObsCli {
             trace_out: opt("trace-out")?,
             metrics_out: opt("metrics-out")?,
             telemetry_out: opt("telemetry-out")?,
+            ledger_out: opt("ledger-out")?,
             metrics_addr: opt("metrics-addr")?,
             hold_secs: args.get_u64("metrics-hold-secs")?,
         })
@@ -288,6 +308,59 @@ fn availability_from(args: &Args) -> Result<AvailabilityModel> {
     )?)
 }
 
+/// Canonical partition name for a flag-driven config — the inverse of
+/// `PartitionStrategy::apply`, so CLI runs land in the ledger with the
+/// same partition identity a manifest cell would have.
+fn partition_label(cfg: &ExperimentConfig) -> String {
+    if cfg.dirichlet_alpha > 0.0 {
+        format!("dirichlet:alpha={}", cfg.dirichlet_alpha)
+    } else if cfg.beta != 1.0 {
+        format!("beta:{}", cfg.beta)
+    } else if cfg.nc != 10 {
+        format!("nc:{}", cfg.nc)
+    } else {
+        "iid".into()
+    }
+}
+
+/// Append a finished flag-driven run (`tfed run` / `tfed serve`) to the
+/// ledger, labeled exactly like the equivalent scenario grid cell.
+/// Best-effort like every obs sink: a failed append warns, never fails
+/// the run that already finished.
+fn append_run_ledger(path: &str, cfg: &ExperimentConfig, metrics: &RunMetrics) {
+    let partition = partition_label(cfg);
+    let codec = cfg.codec.name();
+    let aggregator = cfg.aggregator.name();
+    let mut label = format!("seed={} partition={partition} codec={codec}", cfg.seed);
+    if !cfg.model.is_empty() {
+        label.push_str(&format!(" model={}", cfg.model));
+    }
+    if aggregator != "mean" {
+        label.push_str(&format!(" aggregator={aggregator}"));
+    }
+    let adversary = cfg.adversary.is_active().then(|| cfg.adversary.label());
+    let info = tfed::obs::store::RunInfo {
+        label: &label,
+        seed: cfg.seed,
+        partition: &partition,
+        codec: &codec,
+        protocol: cfg.protocol.name(),
+        model: cfg.model_name(),
+        aggregator: &aggregator,
+        adversary: adversary.as_deref(),
+        metrics,
+        target_acc: None,
+    };
+    let append = || -> std::result::Result<(), tfed::obs::store::LedgerError> {
+        let ledger = tfed::obs::store::Ledger::open(path)?;
+        ledger.append(&tfed::obs::store::run_records(&info))
+    };
+    match append() {
+        Ok(()) => println!("ledger     : {path}"),
+        Err(e) => eprintln!("warning: ledger append to {path:?} failed: {e} (run results unaffected)"),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     apply_quiet(args);
     // `tfed run <manifest.toml>` switches to the declarative scenario
@@ -309,6 +382,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.batch,
         cfg.native_backend,
     )?;
+    // the orchestrator takes the config by value; keep a copy only when
+    // the ledger will need its identity after the run
+    let ledger_cfg = obs.ledger_out.is_some().then(|| cfg.clone());
     let mut orch =
         Orchestrator::with_availability(cfg, backend.as_ref(), availability_from(args)?)?;
     let workers = args.get_usize("workers")?;
@@ -317,6 +393,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     orch.run()?;
     report(&orch.metrics, args)?;
+    if let (Some(path), Some(cfg)) = (&obs.ledger_out, &ledger_cfg) {
+        append_run_ledger(path, cfg, &orch.metrics);
+    }
     obs.finish(args.flag("quiet"), server);
     Ok(())
 }
@@ -345,7 +424,7 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
             "scenario manifests carry the whole experiment config; move {} into \
              {path:?} (its [experiment]/[fleet]/[availability]/[adversary]/[sim] tables) — only \
              --out, --jobs, --quiet, --trace-out, --metrics-out, --telemetry-out, \
-             --metrics-addr and --metrics-hold-secs combine with a manifest run",
+             --ledger-out, --metrics-addr and --metrics-hold-secs combine with a manifest run",
             offending
                 .iter()
                 .map(|n| format!("--{n}"))
@@ -368,6 +447,7 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
         trace_out: obs.trace_out.clone(),
         metrics_out: obs.metrics_out.clone(),
         telemetry_out: obs.telemetry_out.clone(),
+        ledger_out: obs.ledger_out.clone(),
         quiet: args.flag("quiet"),
     };
     let (results, written) = tfed::scenario::run_manifest_file(path, out, jobs, &overrides)?;
@@ -438,6 +518,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("listening on {addr} — waiting for {} clients", cfg.n_clients);
     std::io::stdout().flush().ok();
     let transport = binding.accept_clients(cfg.n_clients, &cfg)?;
+    let ledger_cfg = obs.ledger_out.is_some().then(|| cfg.clone());
     let mut orch = Orchestrator::with_transport(
         cfg,
         backend.as_ref(),
@@ -455,6 +536,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     run_result?;
     report(&orch.metrics, args)?;
+    if let (Some(path), Some(cfg)) = (&obs.ledger_out, &ledger_cfg) {
+        append_run_ledger(path, cfg, &orch.metrics);
+    }
     obs.finish(args.flag("quiet"), server);
     Ok(())
 }
@@ -569,5 +653,69 @@ fn cmd_report(args: &Args) -> Result<()> {
         }
         print!("{}", tfed::obs::report::render_file(file)?);
     }
+    Ok(())
+}
+
+/// The ledger path the read-side subcommands operate on: `--ledger-out`
+/// if given, the default `runs.tfed` otherwise.
+fn ledger_path(args: &Args) -> Result<String> {
+    let p = args.get("ledger-out")?;
+    Ok(if p.is_empty() { "runs.tfed".into() } else { p })
+}
+
+/// List the runs (and bench records) in a ledger, newest last.
+fn cmd_history(args: &Args) -> Result<()> {
+    let view = tfed::obs::lens::load(&ledger_path(args)?)?;
+    // filters apply only when named explicitly — the run/serve defaults
+    // ("auto", "mean", ...) must not silently hide history
+    let sel = |name: &str| -> Result<Option<String>> {
+        Ok(if args.is_set(name) { Some(args.get(name)?) } else { None })
+    };
+    let filter = tfed::obs::lens::HistoryFilter {
+        model: sel("model")?,
+        codec: sel("codec")?,
+        aggregator: sel("aggregator")?,
+        partition: sel("partition")?,
+        seed: args.is_set("seed").then(|| args.get_u64("seed")).transpose()?,
+    };
+    print!("{}", tfed::obs::lens::render_history(&view, &filter));
+    Ok(())
+}
+
+/// Render one recorded run in full.
+fn cmd_query(args: &Args) -> Result<()> {
+    let Some(sel) = args.positional().get(1) else {
+        bail!("query needs a run selector: tfed query <seq|id|id@k> [--ledger-out <path>]");
+    };
+    let view = tfed::obs::lens::load(&ledger_path(args)?)?;
+    print!("{}", tfed::obs::lens::render_entry(tfed::obs::lens::find(&view, sel)?));
+    if let Some(d) = &view.damage {
+        eprintln!("warning: {d}");
+    }
+    Ok(())
+}
+
+/// Compare two recorded runs (or bench records). Exits nonzero when any
+/// regression threshold is breached — the CI perf gate.
+fn cmd_diff(args: &Args) -> Result<()> {
+    let (Some(a), Some(b)) = (args.positional().get(1), args.positional().get(2)) else {
+        bail!("diff needs two selectors: tfed diff <a> <b> [--ledger-out <path>]");
+    };
+    let view = tfed::obs::lens::load(&ledger_path(args)?)?;
+    let thresholds = tfed::obs::lens::DiffThresholds {
+        max_acc_drop: args.get_f64("max-acc-drop")?,
+        max_mb_grow_pct: args.get_f64("max-mb-grow-pct")?,
+        max_perf_drop_pct: args.get_f64("max-perf-drop-pct")?,
+    };
+    let d = tfed::obs::lens::diff(&view, a, b, &thresholds)?;
+    print!("{}", d.text);
+    if !d.breaches.is_empty() {
+        bail!(
+            "perf gate: {} threshold breach(es):\n  {}",
+            d.breaches.len(),
+            d.breaches.join("\n  ")
+        );
+    }
+    println!("perf gate: OK");
     Ok(())
 }

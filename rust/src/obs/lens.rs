@@ -1,0 +1,688 @@
+//! Read-side of the run ledger: grouping, selection, and the rendering
+//! behind `tfed history` / `tfed query` / `tfed diff`.
+//!
+//! [`crate::obs::store`] owns bytes; this module owns meaning. It folds
+//! a record stream into per-run entries, resolves the CLI's run
+//! selectors, and renders the three views. `diff` doubles as the CI perf
+//! gate: it compares two runs (or two bench records) and reports every
+//! threshold breach, which the CLI turns into a nonzero exit.
+//!
+//! Run ids are config-derived ([`store::run_id`]), so reruns of the same
+//! experiment share an id. Selectors therefore come in three shapes:
+//! a bare sequence number (`3` — the stable per-ledger position shown by
+//! `history`), a bare id (`r1c0ffee2` — latest occurrence wins), or
+//! `id@k` (k-th occurrence of that id, 0-based, for comparing reruns).
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::mb;
+use crate::obs::store::{self, Record, RecordKind};
+use crate::util::json::Json;
+
+/// One run folded out of the record stream.
+pub struct RunEntry {
+    /// 1-based position in the ledger (order of appearance).
+    pub seq: usize,
+    /// Config-derived run id from the header record.
+    pub id: String,
+    pub header: Json,
+    pub rounds: Vec<Json>,
+    pub summary: Option<Json>,
+    pub timestamp: Option<Json>,
+}
+
+/// One bench record (standalone — no rounds/summary attached).
+pub struct BenchEntry {
+    pub seq: usize,
+    /// `b` + CRC-32 of the payload: content-derived like run ids.
+    pub id: String,
+    pub section: String,
+    pub values: Vec<(String, f64)>,
+}
+
+pub enum Entry {
+    Run(RunEntry),
+    Bench(BenchEntry),
+}
+
+impl Entry {
+    pub fn seq(&self) -> usize {
+        match self {
+            Entry::Run(r) => r.seq,
+            Entry::Bench(b) => b.seq,
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        match self {
+            Entry::Run(r) => &r.id,
+            Entry::Bench(b) => &b.id,
+        }
+    }
+}
+
+/// A fully grouped ledger, plus any torn-tail damage the scan hit.
+pub struct LedgerView {
+    pub entries: Vec<Entry>,
+    /// Human-readable damage note (None for a clean file). The intact
+    /// prefix is still fully usable.
+    pub damage: Option<String>,
+}
+
+/// String field accessor with "" default — header fields are
+/// emit-controlled by us, so absence means an older record version.
+fn st<'a>(doc: &'a Json, key: &str) -> &'a str {
+    doc.get(key).and_then(|v| v.as_str().ok()).unwrap_or("")
+}
+
+fn f(doc: &Json, key: &str) -> f64 {
+    doc.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+}
+
+/// Group a decoded record stream into run/bench entries.
+pub fn view_of(records: &[Record], damage: Option<String>) -> Result<LedgerView> {
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut current: Option<RunEntry> = None;
+    for rec in records {
+        let doc = rec.doc()?;
+        match rec.kind {
+            RecordKind::RunHeader => {
+                if let Some(run) = current.take() {
+                    entries.push(Entry::Run(run));
+                }
+                let id = st(&doc, "id").to_string();
+                current = Some(RunEntry {
+                    seq: 0,
+                    id,
+                    header: doc,
+                    rounds: Vec::new(),
+                    summary: None,
+                    timestamp: None,
+                });
+            }
+            RecordKind::Round | RecordKind::Summary | RecordKind::Timestamp => {
+                let run = current
+                    .as_mut()
+                    .with_context(|| format!("{} record before any run header", rec.kind.name()))?;
+                match rec.kind {
+                    RecordKind::Round => run.rounds.push(doc),
+                    RecordKind::Summary => run.summary = Some(doc),
+                    _ => run.timestamp = Some(doc),
+                }
+            }
+            RecordKind::Bench => {
+                if let Some(run) = current.take() {
+                    entries.push(Entry::Run(run));
+                }
+                let values = doc
+                    .get("values")
+                    .and_then(|v| v.as_obj().ok())
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, v)| v.as_f64().ok().map(|x| (k.clone(), x)))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                entries.push(Entry::Bench(BenchEntry {
+                    seq: 0,
+                    id: format!("b{:08x}", crate::transport::frame::crc32(&rec.payload)),
+                    section: st(&doc, "section").to_string(),
+                    values,
+                }));
+            }
+        }
+    }
+    if let Some(run) = current.take() {
+        entries.push(Entry::Run(run));
+    }
+    for (i, e) in entries.iter_mut().enumerate() {
+        match e {
+            Entry::Run(r) => r.seq = i + 1,
+            Entry::Bench(b) => b.seq = i + 1,
+        }
+    }
+    Ok(LedgerView { entries, damage })
+}
+
+/// Load and group a ledger file. Torn-tail damage is surfaced as a note,
+/// never an error — `history` on a crashed run's ledger must still work.
+pub fn load(path: &str) -> Result<LedgerView> {
+    let scanned = store::read_ledger(path).with_context(|| format!("reading ledger {path:?}"))?;
+    let damage = scanned.damage.as_ref().map(|d| {
+        format!("torn tail at byte {} ({d}); listing the intact prefix", scanned.good_len)
+    });
+    view_of(&scanned.records, damage)
+}
+
+/// Resolve a run selector: `3` (seq) | `r1c0ffee2` (latest with that id)
+/// | `r1c0ffee2@0` (k-th occurrence, 0-based).
+pub fn find<'a>(view: &'a LedgerView, sel: &str) -> Result<&'a Entry> {
+    if !sel.is_empty() && sel.bytes().all(|b| b.is_ascii_digit()) {
+        let seq: usize = sel.parse().unwrap();
+        return view
+            .entries
+            .iter()
+            .find(|e| e.seq() == seq)
+            .with_context(|| format!("no entry with seq {seq} (ledger has {})", view.entries.len()));
+    }
+    if let Some((id, k)) = sel.rsplit_once('@') {
+        let k: usize = k.parse().with_context(|| format!("bad occurrence index in {sel:?}"))?;
+        return view
+            .entries
+            .iter()
+            .filter(|e| e.id() == id)
+            .nth(k)
+            .with_context(|| format!("fewer than {} occurrences of id {id:?}", k + 1));
+    }
+    view.entries
+        .iter()
+        .rev()
+        .find(|e| e.id() == sel)
+        .with_context(|| format!("no entry with id {sel:?} (try `tfed history`)"))
+}
+
+/// `tfed history` filters — empty/None means "any".
+#[derive(Default)]
+pub struct HistoryFilter {
+    pub model: Option<String>,
+    pub codec: Option<String>,
+    pub aggregator: Option<String>,
+    pub partition: Option<String>,
+    pub seed: Option<u64>,
+}
+
+impl HistoryFilter {
+    fn is_empty(&self) -> bool {
+        self.model.is_none()
+            && self.codec.is_none()
+            && self.aggregator.is_none()
+            && self.partition.is_none()
+            && self.seed.is_none()
+    }
+
+    fn matches(&self, run: &RunEntry) -> bool {
+        let want = |field: &Option<String>, key: &str| {
+            field.as_deref().is_none_or(|w| st(&run.header, key) == w)
+        };
+        want(&self.model, "model")
+            && want(&self.codec, "codec")
+            && want(&self.aggregator, "aggregator")
+            && want(&self.partition, "partition")
+            && self.seed.is_none_or(|w| f(&run.header, "seed") as u64 == w)
+    }
+}
+
+/// Render the run list. Bench entries are listed too (they share the
+/// sequence numbering) unless a run-identity filter is active.
+pub fn render_history(view: &LedgerView, filter: &HistoryFilter) -> String {
+    let mut out = String::from("  seq  id         final_acc  rounds  label\n");
+    let mut shown = 0usize;
+    for e in &view.entries {
+        match e {
+            Entry::Run(r) => {
+                if !filter.matches(r) {
+                    continue;
+                }
+                let final_acc = r.summary.as_ref().map(|s| f(s, "final_acc")).unwrap_or(0.0);
+                out.push_str(&format!(
+                    "{:>5}  {}  {:>9.4}  {:>6}  {}\n",
+                    r.seq,
+                    r.id,
+                    final_acc,
+                    r.rounds.len(),
+                    st(&r.header, "label"),
+                ));
+                shown += 1;
+            }
+            Entry::Bench(b) => {
+                if !filter.is_empty() {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "{:>5}  {}  {:>9}  {:>6}  bench [{}] ({} values)\n",
+                    b.seq,
+                    b.id,
+                    "-",
+                    "-",
+                    b.section,
+                    b.values.len(),
+                ));
+                shown += 1;
+            }
+        }
+    }
+    if shown == 0 {
+        out.push_str("  (no matching entries)\n");
+    }
+    if let Some(d) = &view.damage {
+        out.push_str(&format!("warning: {d}\n"));
+    }
+    out
+}
+
+/// Dense fp32 reference ratio, priced exactly like `obs/report.rs`:
+/// every data frame re-costed at `param_count × 4` bytes, divided by the
+/// measured wire bytes. None when the model is unknown to the registry.
+fn compression_ratio(run: &RunEntry) -> Option<(f64, usize)> {
+    let model = st(&run.header, "model");
+    let params = crate::model::registry::model_def(model).ok().map(|d| d.schema.param_count())?;
+    let summary = run.summary.as_ref()?;
+    let frames =
+        (f(summary, "total_up_frames") + f(summary, "total_down_frames")) as u64;
+    let wire =
+        ((f(summary, "total_up_bytes") + f(summary, "total_down_bytes")) as u64).max(1);
+    let dense = frames * params as u64 * 4;
+    Some((dense as f64 / wire as f64, params))
+}
+
+/// Render one run in full (`tfed query`).
+pub fn render_entry(entry: &Entry) -> String {
+    let run = match entry {
+        Entry::Run(r) => r,
+        Entry::Bench(b) => {
+            let mut out = format!("bench {} (seq {}) [{}]\n", b.id, b.seq, b.section);
+            for (k, v) in &b.values {
+                out.push_str(&format!("  {k} : {v}\n"));
+            }
+            return out;
+        }
+    };
+    let h = &run.header;
+    let mut out = format!("run {} (seq {})\n", run.id, run.seq);
+    out.push_str(&format!("  label      : {}\n", st(h, "label")));
+    out.push_str(&format!("  config     : {}\n", st(h, "config")));
+    out.push_str(&format!("  repo       : {}\n", st(h, "repo")));
+    out.push_str(&format!(
+        "  identity   : model={} codec={} aggregator={} partition={} protocol={} seed={}\n",
+        st(h, "model"),
+        st(h, "codec"),
+        st(h, "aggregator"),
+        st(h, "partition"),
+        st(h, "protocol"),
+        f(h, "seed") as u64,
+    ));
+    if h.get("adversary").is_some() {
+        out.push_str(&format!("  adversary  : {}\n", st(h, "adversary")));
+    }
+    if let Some(s) = &run.summary {
+        out.push_str(&format!(
+            "  accuracy   : final {:.4}, best {:.4} over {} rounds\n",
+            f(s, "final_acc"),
+            f(s, "best_acc"),
+            run.rounds.len(),
+        ));
+        out.push_str(&format!(
+            "  upstream   : {:.3} MB in {} frames\n",
+            mb(f(s, "total_up_bytes") as u64),
+            f(s, "total_up_frames") as u64,
+        ));
+        out.push_str(&format!(
+            "  downstream : {:.3} MB in {} frames\n",
+            mb(f(s, "total_down_bytes") as u64),
+            f(s, "total_down_frames") as u64,
+        ));
+        if let Some((ratio, params)) = compression_ratio(run) {
+            out.push_str(&format!(
+                "  compression: {ratio:.2}x vs dense fp32 ({params} params)\n"
+            ));
+        }
+        if f(s, "total_sim_secs") > 0.0 {
+            out.push_str(&format!(
+                "  sim        : {:.1} virtual secs, {:.1} rounds/virtual-hour\n",
+                f(s, "total_sim_secs"),
+                f(s, "rounds_per_virtual_hour"),
+            ));
+            if s.get("target_acc").is_some() {
+                match s.get("sim_secs_to_target") {
+                    Some(t) => out.push_str(&format!(
+                        "  to-target  : {:.1} virtual secs to acc {:.2}\n",
+                        t.as_f64().unwrap_or(0.0),
+                        f(s, "target_acc"),
+                    )),
+                    None => out.push_str(&format!(
+                        "  to-target  : acc {:.2} never reached\n",
+                        f(s, "target_acc"),
+                    )),
+                }
+            }
+        }
+    }
+    if let Some(t) = &run.timestamp {
+        out.push_str(&format!(
+            "  recorded   : unix_ms {} (wall {:.2}s)\n",
+            f(t, "unix_ms") as u64,
+            f(t, "total_wall_secs"),
+        ));
+    }
+    out.push_str("  rounds:\n");
+    out.push_str("  round,train_loss,test_acc,up_bytes,down_bytes,sim_secs\n");
+    for r in &run.rounds {
+        out.push_str(&format!(
+            "  {},{},{},{},{},{}\n",
+            f(r, "round") as u64,
+            f(r, "train_loss"),
+            f(r, "test_acc"),
+            f(r, "up_bytes") as u64,
+            f(r, "down_bytes") as u64,
+            f(r, "sim_secs"),
+        ));
+    }
+    out
+}
+
+/// Regression thresholds for the diff gate. A breach is *b regressing
+/// relative to a* beyond the allowance; negatives tighten the gate
+/// (e.g. `--max-acc-drop=-0.01` demands improvement).
+pub struct DiffThresholds {
+    /// Max tolerated `a.final_acc − b.final_acc`.
+    pub max_acc_drop: f64,
+    /// Max tolerated total-MB growth, in percent of a's total.
+    pub max_mb_grow_pct: f64,
+    /// Max tolerated throughput drop (rounds/virtual-hour, bench
+    /// samples/sec), in percent of a's value.
+    pub max_perf_drop_pct: f64,
+}
+
+/// A rendered diff plus every threshold breach (empty = gate passes).
+pub struct Diff {
+    pub text: String,
+    pub breaches: Vec<String>,
+}
+
+fn diff_runs(a: &RunEntry, b: &RunEntry, t: &DiffThresholds) -> Diff {
+    let mut text = format!(
+        "diff a={} (seq {}) vs b={} (seq {})\n",
+        a.id, a.seq, b.id, b.seq
+    );
+    let mut breaches = Vec::new();
+    let sa = a.summary.as_ref();
+    let sb = b.summary.as_ref();
+    let g = |s: &Option<&Json>, k: &str| s.map(|s| f(s, k)).unwrap_or(0.0);
+    let mut drift = false;
+
+    let acc_a = g(&sa, "final_acc");
+    let acc_b = g(&sb, "final_acc");
+    let acc_drop = acc_a - acc_b;
+    text.push_str(&format!(
+        "  final_acc     : a {:.4}  b {:.4}  delta {:+.4}\n",
+        acc_a,
+        acc_b,
+        acc_b - acc_a
+    ));
+    drift |= acc_drop != 0.0;
+    if acc_drop > t.max_acc_drop {
+        breaches.push(format!(
+            "final_acc dropped {acc_drop:.4} (> max-acc-drop {:.4})",
+            t.max_acc_drop
+        ));
+    }
+
+    let mb_a = mb((g(&sa, "total_up_bytes") + g(&sa, "total_down_bytes")) as u64);
+    let mb_b = mb((g(&sb, "total_up_bytes") + g(&sb, "total_down_bytes")) as u64);
+    let grow_pct = if mb_a > 0.0 { (mb_b - mb_a) / mb_a * 100.0 } else { 0.0 };
+    text.push_str(&format!(
+        "  total MB      : a {:.3}  b {:.3}  delta {:+.1}%\n",
+        mb_a, mb_b, grow_pct
+    ));
+    drift |= mb_a != mb_b;
+    if grow_pct > t.max_mb_grow_pct {
+        breaches.push(format!(
+            "wire bytes grew {grow_pct:.1}% (> max-mb-grow-pct {:.1})",
+            t.max_mb_grow_pct
+        ));
+    }
+
+    let rvh_a = g(&sa, "rounds_per_virtual_hour");
+    let rvh_b = g(&sb, "rounds_per_virtual_hour");
+    if rvh_a > 0.0 && rvh_b > 0.0 {
+        let drop_pct = (rvh_a - rvh_b) / rvh_a * 100.0;
+        text.push_str(&format!(
+            "  rounds/vhour  : a {:.1}  b {:.1}  delta {:+.1}%\n",
+            rvh_a, rvh_b, -drop_pct
+        ));
+        drift |= rvh_a != rvh_b;
+        if drop_pct > t.max_perf_drop_pct {
+            breaches.push(format!(
+                "rounds/virtual-hour dropped {drop_pct:.1}% (> max-perf-drop-pct {:.1})",
+                t.max_perf_drop_pct
+            ));
+        }
+    }
+
+    if a.rounds.len() == b.rounds.len() {
+        text.push_str("  per-round (b − a):\n");
+        text.push_str("  round,d_test_acc,d_up_bytes,d_sim_secs\n");
+        for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+            let d_acc = f(rb, "test_acc") - f(ra, "test_acc");
+            let d_up = f(rb, "up_bytes") - f(ra, "up_bytes");
+            let d_sim = f(rb, "sim_secs") - f(ra, "sim_secs");
+            drift |= d_acc != 0.0 || d_up != 0.0 || d_sim != 0.0;
+            text.push_str(&format!("  {},{},{},{}\n", f(ra, "round") as u64, d_acc, d_up, d_sim));
+        }
+    } else {
+        text.push_str(&format!(
+            "  rounds        : a has {}, b has {} (per-round diff skipped)\n",
+            a.rounds.len(),
+            b.rounds.len()
+        ));
+        drift = true;
+    }
+
+    if !drift {
+        text.push_str("  zero drift: runs are metrically identical\n");
+    }
+    Diff { text, breaches }
+}
+
+fn diff_benches(a: &BenchEntry, b: &BenchEntry, t: &DiffThresholds) -> Result<Diff> {
+    if a.section != b.section {
+        bail!(
+            "cannot diff bench sections {:?} vs {:?} — pick entries from the same section",
+            a.section,
+            b.section
+        );
+    }
+    let mut text = format!(
+        "bench diff [{}] a={} (seq {}) vs b={} (seq {})\n",
+        a.section, a.id, a.seq, b.id, b.seq
+    );
+    let mut breaches = Vec::new();
+    let mut drift = false;
+    for (k, va) in &a.values {
+        let Some(vb) = b.values.iter().find(|(kb, _)| kb == k).map(|(_, v)| *v) else {
+            text.push_str(&format!("  {k} : only in a\n"));
+            drift = true;
+            continue;
+        };
+        let pct = if *va != 0.0 { (vb - va) / va * 100.0 } else { 0.0 };
+        text.push_str(&format!("  {k} : a {va}  b {vb}  delta {pct:+.1}%\n"));
+        drift |= *va != vb;
+        // throughput-shaped keys are gated; cost-shaped keys are
+        // informational (their gate is the run-level MB check)
+        let higher_better =
+            k.contains("samples_per_sec") || k.contains("rounds_per_virtual_hour");
+        if higher_better && -pct > t.max_perf_drop_pct {
+            breaches.push(format!(
+                "{k} dropped {:.1}% (> max-perf-drop-pct {:.1})",
+                -pct, t.max_perf_drop_pct
+            ));
+        }
+    }
+    for (k, _) in &b.values {
+        if !a.values.iter().any(|(ka, _)| ka == k) {
+            text.push_str(&format!("  {k} : only in b\n"));
+            drift = true;
+        }
+    }
+    if !drift {
+        text.push_str("  zero drift: bench values are identical\n");
+    }
+    Ok(Diff { text, breaches })
+}
+
+/// Diff two ledger entries (`tfed diff`). Run-vs-run and bench-vs-bench
+/// are supported; mixing the two is an error.
+pub fn diff(view: &LedgerView, sel_a: &str, sel_b: &str, t: &DiffThresholds) -> Result<Diff> {
+    let a = find(view, sel_a)?;
+    let b = find(view, sel_b)?;
+    match (a, b) {
+        (Entry::Run(a), Entry::Run(b)) => Ok(diff_runs(a, b, t)),
+        (Entry::Bench(a), Entry::Bench(b)) => diff_benches(a, b, t),
+        _ => bail!("cannot diff a run against a bench record"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{RoundRecord, RunMetrics};
+    use crate::obs::store::{bench_record, run_records, RunInfo};
+
+    fn metrics(accs: &[f32]) -> RunMetrics {
+        let mut m = RunMetrics::new("cfg".into());
+        for (i, &acc) in accs.iter().enumerate() {
+            m.push(RoundRecord {
+                round: i + 1,
+                train_loss: 0.4,
+                test_acc: acc,
+                test_loss: 0.8,
+                up_bytes: 1000,
+                down_bytes: 900,
+                up_frames: 4,
+                down_frames: 4,
+                wall_secs: 0.2,
+                sim_secs: 30.0,
+                straggler_delay_ms: 0,
+                selected: vec![0],
+                factors: vec![],
+                evaluated: true,
+                rejected: vec![],
+                clipped: vec![],
+            });
+        }
+        m
+    }
+
+    fn records_for(seed: u64, accs: &[f32]) -> Vec<Record> {
+        let m = metrics(accs);
+        run_records(&RunInfo {
+            label: "cell",
+            seed,
+            partition: "iid",
+            codec: "ternary",
+            protocol: "T-FedAvg",
+            model: "mlp",
+            aggregator: "mean",
+            adversary: None,
+            metrics: &m,
+            target_acc: None,
+        })
+    }
+
+    fn thresholds() -> DiffThresholds {
+        DiffThresholds { max_acc_drop: 0.02, max_mb_grow_pct: 10.0, max_perf_drop_pct: 20.0 }
+    }
+
+    #[test]
+    fn grouping_selectors_and_history() {
+        let mut recs = records_for(1, &[0.5, 0.6]);
+        recs.extend(records_for(2, &[0.4, 0.7]));
+        recs.push(bench_record("train", &[("mlp/samples_per_sec".into(), 100.0)]));
+        let view = view_of(&recs, None).unwrap();
+        assert_eq!(view.entries.len(), 3);
+
+        // seq selector
+        let e = find(&view, "2").unwrap();
+        assert_eq!(e.seq(), 2);
+        // id selector (ids differ by seed)
+        let id1 = view.entries[0].id().to_string();
+        assert!(id1.starts_with('r'));
+        assert_eq!(find(&view, &id1).unwrap().seq(), 1);
+        // occurrence selector on a rerun-shared id
+        let mut rerun = records_for(1, &[0.5, 0.6]);
+        rerun.extend(records_for(1, &[0.5, 0.6]));
+        let rview = view_of(&rerun, None).unwrap();
+        assert_eq!(rview.entries[0].id(), rview.entries[1].id());
+        let sel = format!("{}@1", rview.entries[0].id());
+        assert_eq!(find(&rview, &sel).unwrap().seq(), 2);
+        // bare id → latest occurrence
+        assert_eq!(find(&rview, rview.entries[0].id()).unwrap().seq(), 2);
+
+        let hist = render_history(&view, &HistoryFilter::default());
+        assert!(hist.contains(&id1));
+        assert!(hist.contains("bench [train]"));
+        // filter by seed keeps exactly one run and hides bench rows
+        let hist =
+            render_history(&view, &HistoryFilter { seed: Some(2), ..Default::default() });
+        assert!(!hist.contains(&id1));
+        assert!(!hist.contains("bench"));
+        assert!(hist.contains("0.7000"));
+        // no match → explicit empty marker
+        let hist = render_history(
+            &view,
+            &HistoryFilter { codec: Some("topk".into()), ..Default::default() },
+        );
+        assert!(hist.contains("no matching entries"));
+    }
+
+    #[test]
+    fn query_renders_pricing_and_sim() {
+        let view = view_of(&records_for(1, &[0.5, 0.6]), None).unwrap();
+        let q = render_entry(find(&view, "1").unwrap());
+        assert!(q.contains("final 0.6000"));
+        assert!(q.contains("compression:"));
+        assert!(q.contains("x vs dense fp32"));
+        assert!(q.contains("rounds/virtual-hour"));
+        assert!(q.contains("round,train_loss,test_acc"));
+    }
+
+    #[test]
+    fn identical_runs_diff_to_zero_drift() {
+        let mut recs = records_for(1, &[0.5, 0.6]);
+        recs.extend(records_for(1, &[0.5, 0.6]));
+        let view = view_of(&recs, None).unwrap();
+        let d = diff(&view, "1", "2", &thresholds()).unwrap();
+        assert!(d.breaches.is_empty(), "{:?}", d.breaches);
+        assert!(d.text.contains("zero drift"));
+        // a negative allowance turns even zero drift into a breach — the
+        // CI lever for asserting the gate trips
+        let strict =
+            DiffThresholds { max_acc_drop: -0.01, ..thresholds() };
+        let d = diff(&view, "1", "2", &strict).unwrap();
+        assert!(!d.breaches.is_empty());
+    }
+
+    #[test]
+    fn regressions_breach_their_thresholds() {
+        let mut recs = records_for(1, &[0.5, 0.6]);
+        recs.extend(records_for(2, &[0.4, 0.5]));
+        let view = view_of(&recs, None).unwrap();
+        // acc dropped 0.1 > 0.02 allowance
+        let d = diff(&view, "1", "2", &thresholds()).unwrap();
+        assert!(d.breaches.iter().any(|b| b.contains("final_acc")), "{:?}", d.breaches);
+
+        // injected bench throughput regression: 1000 → 500 samples/sec
+        let recs = vec![
+            bench_record("train", &[("mlp/samples_per_sec".into(), 1000.0)]),
+            bench_record("train", &[("mlp/samples_per_sec".into(), 500.0)]),
+        ];
+        let view = view_of(&recs, None).unwrap();
+        let d = diff(&view, "1", "2", &thresholds()).unwrap();
+        assert!(d.breaches.iter().any(|b| b.contains("samples_per_sec")), "{:?}", d.breaches);
+        // and the reverse direction (speedup) passes the gate
+        let d = diff(&view, "2", "1", &thresholds()).unwrap();
+        assert!(d.breaches.is_empty(), "{:?}", d.breaches);
+    }
+
+    #[test]
+    fn mixed_and_mismatched_diffs_error() {
+        let mut recs = records_for(1, &[0.5]);
+        recs.push(bench_record("train", &[("x".into(), 1.0)]));
+        recs.push(bench_record("sim", &[("x".into(), 1.0)]));
+        let view = view_of(&recs, None).unwrap();
+        assert!(diff(&view, "1", "2", &thresholds()).is_err());
+        assert!(diff(&view, "2", "3", &thresholds()).is_err());
+        assert!(find(&view, "9").is_err());
+        assert!(find(&view, "nope").is_err());
+    }
+}

@@ -394,6 +394,35 @@ pub fn exposition() -> String {
                 );
                 let _ = writeln!(out, "{} {}", series(base, "_sum", labels, ""), h.sum());
                 let _ = writeln!(out, "{} {}", series(base, "_count", labels, ""), h.count());
+                // estimated quantiles from the log2 bucket bounds: the
+                // upper bound of the first bucket covering the target
+                // rank. Conservative (over-estimates within a bucket),
+                // but readable without a Perfetto/PromQL round-trip.
+                let count = h.count();
+                if count > 0 {
+                    for (q, suffix) in [(0.50, "_p50"), (0.95, "_p95"), (0.99, "_p99")] {
+                        let target = ((q * count as f64).ceil() as u64).max(1);
+                        let mut cum = 0u64;
+                        let mut at = HIST_BUCKETS - 1;
+                        for (k, &c) in counts.iter().enumerate() {
+                            cum += c;
+                            if cum >= target {
+                                at = k;
+                                break;
+                            }
+                        }
+                        if at == HIST_BUCKETS - 1 {
+                            let _ = writeln!(out, "{} +Inf", series(base, suffix, labels, ""));
+                        } else {
+                            let _ = writeln!(
+                                out,
+                                "{} {}",
+                                series(base, suffix, labels, ""),
+                                bucket_le(at)
+                            );
+                        }
+                    }
+                }
             }
         }
     }
@@ -459,6 +488,25 @@ mod tests {
         assert!(text.contains("test_obs_expo_bytes_bucket{le=\"+Inf\"} 3"));
         assert!(text.contains("test_obs_expo_bytes_sum 11"));
         assert!(text.contains("test_obs_expo_bytes_count 3"));
+    }
+
+    #[test]
+    fn histogram_quantiles_are_bucket_bound_estimates() {
+        let h = histogram("test_obs_quantile_us");
+        // 10 observations: nine land in le=7 (values 4..=7), one in le=63
+        for v in [4, 4, 5, 5, 5, 6, 6, 7, 7, 40] {
+            h.observe(v);
+        }
+        let text = exposition();
+        // p50 rank 5 and p95 rank 10 resolve to their buckets' upper
+        // bounds; p99 rounds up to rank 10 as well
+        assert!(text.contains("test_obs_quantile_us_p50 7"));
+        assert!(text.contains("test_obs_quantile_us_p95 63"));
+        assert!(text.contains("test_obs_quantile_us_p99 63"));
+        // an empty histogram emits no quantile series at all
+        let _ = histogram("test_obs_quantile_empty_us");
+        let text = exposition();
+        assert!(!text.contains("test_obs_quantile_empty_us_p50"));
     }
 
     #[test]

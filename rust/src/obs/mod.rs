@@ -7,8 +7,11 @@
 //! `--trace-out`, Perfetto-loadable, plus an end-of-run per-phase
 //! summary table on stderr), per-round learning-dynamics [`telemetry`]
 //! (schema-versioned JSONL via `--telemetry-out`), a live [`http`]
-//! endpoint (`--metrics-addr`, `/metrics` + `/telemetry`), and the
-//! offline [`report`] renderer behind `tfed report`.
+//! endpoint (`--metrics-addr`, `/metrics` + `/telemetry`), the
+//! offline [`report`] renderer behind `tfed report`, and the durable
+//! cross-run ledger (append-only [`store`], query/diff [`lens`],
+//! DESIGN.md §14) behind `--ledger-out` and `tfed history` / `query`
+//! / `diff`.
 //!
 //! Standing contract: **disabled (the default) must be free.** No RNG
 //! draws, no wire-byte changes, and near-zero overhead — every
@@ -27,8 +30,10 @@
 //! them for callers that want to inspect.
 
 pub mod http;
+pub mod lens;
 pub mod metrics;
 pub mod report;
+pub mod store;
 pub mod telemetry;
 pub mod trace;
 

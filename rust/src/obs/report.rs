@@ -26,10 +26,35 @@ use crate::util::json::Json;
 const DENSE_BYTES_PER_PARAM: u64 = 4;
 
 /// Render one artifact file (auto-detected) as a markdown report.
+/// Binary files opening with the ledger magic are rendered through the
+/// ledger query layer ([`crate::obs::lens`]); everything else is text
+/// (bundle JSON or telemetry JSONL).
 pub fn render_file(path: &str) -> Result<String> {
-    let text =
-        std::fs::read_to_string(path).with_context(|| format!("reading artifact {path:?}"))?;
+    let bytes = std::fs::read(path).with_context(|| format!("reading artifact {path:?}"))?;
+    if bytes.len() >= 4
+        && bytes[..4] == crate::obs::store::LEDGER_MAGIC.to_le_bytes()
+    {
+        return render_ledger(path);
+    }
+    let text = String::from_utf8(bytes)
+        .map_err(|_| anyhow::anyhow!("artifact {path:?} is neither a ledger nor UTF-8 text"))?;
     render_text(path, &text)
+}
+
+/// Ledger report: the history table followed by every entry in full,
+/// reusing the `tfed history`/`query` renderers verbatim.
+fn render_ledger(path: &str) -> Result<String> {
+    let view = crate::obs::lens::load(path)?;
+    let mut out = format!("# Run ledger {path:?} ({} entries)\n\n", view.entries.len());
+    out.push_str(&crate::obs::lens::render_history(
+        &view,
+        &crate::obs::lens::HistoryFilter::default(),
+    ));
+    for entry in &view.entries {
+        out.push('\n');
+        out.push_str(&crate::obs::lens::render_entry(entry));
+    }
+    Ok(out)
 }
 
 /// Render artifact content: scenario bundles are JSON objects with a

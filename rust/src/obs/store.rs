@@ -1,0 +1,657 @@
+//! Append-only run ledger: the durable cross-run store behind
+//! `tfed history` / `query` / `diff` (DESIGN.md §14).
+//!
+//! A ledger file (`runs.tfed` by convention) is a flat sequence of
+//! CRC-framed, schema-versioned records. The framing discipline is
+//! [`crate::transport::frame`]'s, reused rather than reinvented — same
+//! length-prefix + CRC-32 layout, same typed-error posture, same
+//! size bound — under a distinct magic so a ledger can never be
+//! mistaken for wire traffic (or vice versa):
+//!
+//! | offset | size | field                               |
+//! |--------|------|-------------------------------------|
+//! | 0      | 4    | magic `0x4C524654` ("TFRL")         |
+//! | 4      | 1    | record version (currently 1)        |
+//! | 5      | 1    | kind ([`RecordKind`])               |
+//! | 6      | 4    | payload length (<= [`MAX_RECORD`])  |
+//! | 10     | 4    | CRC-32 (IEEE) of the payload        |
+//! | 14     | len  | payload (canonical compact JSON)    |
+//!
+//! Payloads are `util::json` documents emitted compactly — objects are
+//! BTreeMaps, so a given value has exactly one byte encoding.
+//!
+//! **Determinism contract.** Every record except [`RecordKind::Timestamp`]
+//! is byte-reproducible: rerunning the same fully-seeded experiment and
+//! appending it to a fresh ledger produces identical header/round/summary
+//! payloads (run ids are config-derived, never clocked). All wall-clock
+//! fields — per-round `wall_secs`, append time — are quarantined into the
+//! run's single timestamp record, which diff/query treat as provenance,
+//! never as a compared metric. `tests/store_e2e.rs` pins this.
+//!
+//! **Durability.** Appends are single `write_all` calls on an
+//! append-mode handle. A crash mid-append leaves a torn final record;
+//! [`Ledger::open`] recovers by truncating back to the last intact
+//! record boundary, so the next append lands on a clean frame. Readers
+//! ([`read_ledger`]) return the intact prefix plus the typed damage, so
+//! `tfed history` on a torn ledger still lists every completed run.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::eval::RunMetrics;
+use crate::transport::frame::{crc32, MAX_FRAME};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// "TFRL" — distinct from the wire-frame magic "TFRM" and the
+/// message-layer magic "TFED".
+pub const LEDGER_MAGIC: u32 = u32::from_le_bytes(*b"TFRL");
+/// Bump on any payload-schema change so an old binary fails a new ledger
+/// with a clear [`LedgerError::BadVersion`], never a confusing decode.
+pub const RECORD_VERSION: u8 = 1;
+/// Fixed header size: magic + version + kind + length + CRC.
+pub const HEADER_BYTES: usize = 14;
+/// Upper bound on one record's payload — the transport's frame bound;
+/// a corrupt length can never trigger a giant allocation.
+pub const MAX_RECORD: usize = MAX_FRAME;
+
+/// What a ledger record carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecordKind {
+    /// Run identity: config fingerprint, model/codec/aggregator/partition,
+    /// seed, repo stamp, and the deterministic run id.
+    RunHeader = 1,
+    /// One communication round (loss/acc, wire bytes, sim_secs,
+    /// rejections) — everything except the quarantined wall clock.
+    Round = 2,
+    /// Whole-run rollup: final/best accuracy, byte/frame totals,
+    /// virtual-time aggregates.
+    Summary = 3,
+    /// One bench section's results as a flat name → value map
+    /// (`paper_tables` perf trajectory).
+    Bench = 4,
+    /// The run's wall-clock quarantine: append time + per-round
+    /// `wall_secs`. The only record kind allowed to differ across reruns.
+    Timestamp = 5,
+}
+
+impl RecordKind {
+    pub fn from_u8(k: u8) -> Option<RecordKind> {
+        Some(match k {
+            1 => RecordKind::RunHeader,
+            2 => RecordKind::Round,
+            3 => RecordKind::Summary,
+            4 => RecordKind::Bench,
+            5 => RecordKind::Timestamp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RecordKind::RunHeader => "run_header",
+            RecordKind::Round => "round",
+            RecordKind::Summary => "summary",
+            RecordKind::Bench => "bench",
+            RecordKind::Timestamp => "timestamp",
+        }
+    }
+
+    /// Only this kind may carry nondeterministic (wall-clock) fields.
+    pub fn is_wall_clock(self) -> bool {
+        matches!(self, RecordKind::Timestamp)
+    }
+}
+
+/// Typed decode/IO errors, mirroring [`crate::transport::frame::FrameError`]:
+/// corruption maps to a specific variant; nothing here panics on file input.
+#[derive(Debug)]
+pub enum LedgerError {
+    WrongMagic(u32),
+    BadVersion(u8),
+    UnknownKind(u8),
+    /// Declared payload length exceeds [`MAX_RECORD`].
+    Oversized { len: usize },
+    /// Ran out of bytes before the declared end of the record.
+    Truncated { wanted: usize, got: usize },
+    CrcMismatch { expected: u32, got: u32 },
+    /// The framing was intact but the payload JSON was not what the
+    /// record kind promises.
+    BadPayload { kind: &'static str, reason: String },
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for LedgerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LedgerError::WrongMagic(m) => write!(f, "bad ledger magic {m:#010x}"),
+            LedgerError::BadVersion(v) => write!(f, "unsupported ledger record version {v}"),
+            LedgerError::UnknownKind(k) => write!(f, "unknown ledger record kind {k}"),
+            LedgerError::Oversized { len } => {
+                write!(f, "record payload length {len} exceeds MAX_RECORD {MAX_RECORD}")
+            }
+            LedgerError::Truncated { wanted, got } => {
+                write!(f, "record truncated: got {got} of {wanted} bytes")
+            }
+            LedgerError::CrcMismatch { expected, got } => {
+                write!(f, "record CRC mismatch: header says {expected:#010x}, payload hashes to {got:#010x}")
+            }
+            LedgerError::BadPayload { kind, reason } => {
+                write!(f, "bad {kind} record payload: {reason}")
+            }
+            LedgerError::Io(e) => write!(f, "ledger I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for LedgerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LedgerError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LedgerError {
+    fn from(e: std::io::Error) -> LedgerError {
+        LedgerError::Io(e)
+    }
+}
+
+/// One decoded ledger record: kind + canonical-JSON payload bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    pub kind: RecordKind,
+    pub payload: Vec<u8>,
+}
+
+impl Record {
+    /// Wrap a JSON document as a record (compact emission — the one
+    /// canonical byte encoding).
+    pub fn json(kind: RecordKind, doc: &Json) -> Record {
+        Record { kind, payload: doc.to_string().into_bytes() }
+    }
+
+    /// Parse the payload back into a document.
+    pub fn doc(&self) -> Result<Json, LedgerError> {
+        let text = std::str::from_utf8(&self.payload).map_err(|e| LedgerError::BadPayload {
+            kind: self.kind.name(),
+            reason: format!("payload is not UTF-8: {e}"),
+        })?;
+        Json::parse(text).map_err(|e| LedgerError::BadPayload {
+            kind: self.kind.name(),
+            reason: format!("payload is not JSON: {e}"),
+        })
+    }
+
+    /// Total bytes this record occupies in the file.
+    pub fn wire_len(&self) -> usize {
+        HEADER_BYTES + self.payload.len()
+    }
+
+    /// Serialize header + payload.
+    pub fn encode(&self) -> Result<Vec<u8>, LedgerError> {
+        if self.payload.len() > MAX_RECORD {
+            return Err(LedgerError::Oversized { len: self.payload.len() });
+        }
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&LEDGER_MAGIC.to_le_bytes());
+        out.push(RECORD_VERSION);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        Ok(out)
+    }
+}
+
+/// Validate a header; returns (kind, payload length, expected CRC).
+fn parse_header(head: [u8; HEADER_BYTES]) -> Result<(RecordKind, usize, u32), LedgerError> {
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != LEDGER_MAGIC {
+        return Err(LedgerError::WrongMagic(magic));
+    }
+    if head[4] != RECORD_VERSION {
+        return Err(LedgerError::BadVersion(head[4]));
+    }
+    let kind = RecordKind::from_u8(head[5]).ok_or(LedgerError::UnknownKind(head[5]))?;
+    let len = u32::from_le_bytes(head[6..10].try_into().unwrap()) as usize;
+    if len > MAX_RECORD {
+        return Err(LedgerError::Oversized { len });
+    }
+    let crc = u32::from_le_bytes(head[10..14].try_into().unwrap());
+    Ok((kind, len, crc))
+}
+
+/// Decode one record starting at `off`; returns it plus the next offset.
+fn decode_at(bytes: &[u8], off: usize) -> Result<(Record, usize), LedgerError> {
+    let rest = &bytes[off..];
+    if rest.len() < HEADER_BYTES {
+        return Err(LedgerError::Truncated { wanted: HEADER_BYTES, got: rest.len() });
+    }
+    let (kind, len, crc) = parse_header(rest[..HEADER_BYTES].try_into().unwrap())?;
+    let total = HEADER_BYTES + len;
+    if rest.len() < total {
+        return Err(LedgerError::Truncated { wanted: total, got: rest.len() });
+    }
+    let payload = &rest[HEADER_BYTES..total];
+    let got = crc32(payload);
+    if got != crc {
+        return Err(LedgerError::CrcMismatch { expected: crc, got });
+    }
+    Ok((Record { kind, payload: payload.to_vec() }, off + total))
+}
+
+/// A scan's outcome: the intact record prefix, the byte offset where it
+/// ends, and the typed damage that stopped the scan (None = clean EOF).
+pub struct ScanResult {
+    pub records: Vec<Record>,
+    /// Offset of the last intact record boundary — the recovery
+    /// truncation point for an append after a torn write.
+    pub good_len: usize,
+    pub damage: Option<LedgerError>,
+}
+
+/// Decode records front-to-back, stopping (not failing) at the first
+/// damaged one — an append-only log's tail is the only place an
+/// interrupted writer can leave garbage, and everything before it is
+/// still good.
+pub fn scan(bytes: &[u8]) -> ScanResult {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    let mut damage = None;
+    while off < bytes.len() {
+        match decode_at(bytes, off) {
+            Ok((rec, next)) => {
+                records.push(rec);
+                off = next;
+            }
+            Err(e) => {
+                damage = Some(e);
+                break;
+            }
+        }
+    }
+    ScanResult { records, good_len: off, damage }
+}
+
+/// Read every intact record of a ledger file; torn-tail damage is
+/// reported in the result, not fatal. Only real I/O failures error.
+pub fn read_ledger(path: impl AsRef<Path>) -> Result<ScanResult, LedgerError> {
+    let bytes = std::fs::read(path.as_ref())?;
+    Ok(scan(&bytes))
+}
+
+/// An open (append-mode) ledger.
+pub struct Ledger {
+    path: PathBuf,
+}
+
+impl Ledger {
+    /// Open a ledger for appending, creating it if absent. If a previous
+    /// append was interrupted, the torn final record is truncated away so
+    /// the file ends on an intact record boundary.
+    pub fn open(path: impl AsRef<Path>) -> Result<Ledger, LedgerError> {
+        let p = path.as_ref().to_path_buf();
+        match std::fs::metadata(&p) {
+            Ok(md) => {
+                let scanned = read_ledger(&p)?;
+                if (scanned.good_len as u64) < md.len() {
+                    let f = std::fs::OpenOptions::new().write(true).open(&p)?;
+                    f.set_len(scanned.good_len as u64)?;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e.into()),
+        }
+        Ok(Ledger { path: p })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append records as one contiguous write, so a run's header, rounds,
+    /// summary, and timestamp land together (or a single torn tail).
+    pub fn append(&self, records: &[Record]) -> Result<(), LedgerError> {
+        let mut buf = Vec::new();
+        for r in records {
+            buf.extend_from_slice(&r.encode()?);
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// record builders
+// ---------------------------------------------------------------------------
+
+/// Identity + results of one run about to be appended.
+pub struct RunInfo<'a> {
+    /// Display label (the scenario cell label, or its CLI equivalent).
+    pub label: &'a str,
+    pub seed: u64,
+    /// Canonical partition-strategy name (`iid`, `nc:2`, ...).
+    pub partition: &'a str,
+    pub codec: &'a str,
+    pub protocol: &'a str,
+    /// Resolved model name (registry key).
+    pub model: &'a str,
+    pub aggregator: &'a str,
+    /// Adversary label (`behavior@fraction`); None for honest fleets.
+    pub adversary: Option<&'a str>,
+    pub metrics: &'a RunMetrics,
+    /// Time-to-accuracy target (sim grids); threads `sim_secs_to_target`
+    /// into the summary record.
+    pub target_acc: Option<f64>,
+}
+
+/// Build-stamp for the run header: git-describe output when the build
+/// exports `TFED_GIT_DESCRIBE`, the package identity otherwise. Constant
+/// per binary, so reruns from one build are byte-identical.
+pub fn repo_stamp() -> &'static str {
+    option_env!("TFED_GIT_DESCRIBE").unwrap_or(concat!("tfed-", env!("CARGO_PKG_VERSION")))
+}
+
+/// The identity fields of the run-header payload, id excluded.
+fn header_fields(info: &RunInfo<'_>) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("label", s(info.label)),
+        ("config", s(&info.metrics.config_summary)),
+        ("seed", num(info.seed as f64)),
+        ("partition", s(info.partition)),
+        ("codec", s(info.codec)),
+        ("protocol", s(info.protocol)),
+        ("model", s(info.model)),
+        ("aggregator", s(info.aggregator)),
+        ("repo", s(repo_stamp())),
+        ("rounds", num(info.metrics.records.len() as f64)),
+    ];
+    if let Some(adv) = info.adversary {
+        fields.push(("adversary", s(adv)));
+    }
+    fields
+}
+
+/// Deterministic run id: `r` + CRC-32 (hex) of the canonical header
+/// payload with the id itself excluded. No clock, no counter — the same
+/// fully-seeded config always maps to the same id, which is what makes
+/// rerun payloads byte-identical. Reruns therefore *share* an id; the
+/// CLI disambiguates by ledger sequence number or an `@<k>` suffix.
+pub fn run_id(info: &RunInfo<'_>) -> String {
+    format!("r{:08x}", crc32(obj(header_fields(info)).to_string().as_bytes()))
+}
+
+/// Build the full record sequence for one run: header, one record per
+/// round, summary, and the wall-clock timestamp record.
+pub fn run_records(info: &RunInfo<'_>) -> Vec<Record> {
+    let id = run_id(info);
+    let mut fields = header_fields(info);
+    fields.push(("id", s(&id)));
+    let mut out = vec![Record::json(RecordKind::RunHeader, &obj(fields))];
+
+    for r in &info.metrics.records {
+        // wall_secs deliberately absent: quarantined below
+        let mut f = vec![
+            ("run", s(&id)),
+            ("round", num(r.round as f64)),
+            ("train_loss", num(r.train_loss as f64)),
+            ("test_acc", num(r.test_acc as f64)),
+            ("test_loss", num(r.test_loss as f64)),
+            ("up_bytes", num(r.up_bytes as f64)),
+            ("down_bytes", num(r.down_bytes as f64)),
+            ("up_frames", num(r.up_frames as f64)),
+            ("down_frames", num(r.down_frames as f64)),
+            ("sim_secs", num(r.sim_secs)),
+            ("straggler_delay_ms", num(r.straggler_delay_ms as f64)),
+            ("evaluated", Json::Bool(r.evaluated)),
+        ];
+        // same conditional emission as the bundle: honest rounds keep
+        // their bytes
+        if !r.rejected.is_empty() {
+            f.push(("rejected", arr(r.rejected.iter().map(|&c| num(c as f64)).collect())));
+        }
+        if !r.clipped.is_empty() {
+            f.push(("clipped", arr(r.clipped.iter().map(|&c| num(c as f64)).collect())));
+        }
+        out.push(Record::json(RecordKind::Round, &obj(f)));
+    }
+
+    let m = info.metrics;
+    let mut sf = vec![
+        ("run", s(&id)),
+        ("final_acc", num(m.final_acc() as f64)),
+        ("best_acc", num(m.best_acc() as f64)),
+        ("total_up_bytes", num(m.total_up_bytes() as f64)),
+        ("total_down_bytes", num(m.total_down_bytes() as f64)),
+        ("total_up_frames", num(m.total_up_frames() as f64)),
+        ("total_down_frames", num(m.total_down_frames() as f64)),
+        ("total_sim_secs", num(m.total_sim_secs())),
+    ];
+    if let Some(rvh) = m.rounds_per_virtual_hour() {
+        sf.push(("rounds_per_virtual_hour", num(rvh)));
+    }
+    if let Some(t) = info.target_acc {
+        sf.push(("target_acc", num(t)));
+        if let Some(tta) = m.sim_secs_to_acc(t as f32) {
+            sf.push(("sim_secs_to_target", num(tta)));
+        }
+    }
+    out.push(Record::json(RecordKind::Summary, &obj(sf)));
+
+    // the wall-clock quarantine: every nondeterministic field of the run
+    // lives in this one record and nowhere else
+    let unix_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    out.push(Record::json(
+        RecordKind::Timestamp,
+        &obj(vec![
+            ("run", s(&id)),
+            ("unix_ms", num(unix_ms)),
+            ("total_wall_secs", num(m.total_wall_secs())),
+            ("wall_secs", arr(m.records.iter().map(|r| num(r.wall_secs)).collect())),
+        ]),
+    ));
+    out
+}
+
+/// One bench section's results as a flat name → value map (keys like
+/// `mlp/fp/blocked-4t/samples_per_sec`). Bench values are measured
+/// throughput, so this kind is *not* covered by the rerun byte-identity
+/// contract — it is the perf-trajectory series diff gates on.
+pub fn bench_record(section: &str, values: &[(String, f64)]) -> Record {
+    let doc = obj(vec![
+        ("section", s(section)),
+        ("repo", s(repo_stamp())),
+        ("values", obj(values.iter().map(|(k, v)| (k.as_str(), num(*v))).collect())),
+    ]);
+    Record::json(RecordKind::Bench, &doc)
+}
+
+/// Append every cell of a finished scenario, in bundle order — the cell
+/// order is the grid order at any `--jobs`, so ledgers are append-order
+/// deterministic too. Returns the number of runs appended.
+pub fn append_cells(
+    path: &str,
+    cells: &[crate::scenario::runner::CellResult],
+) -> Result<usize, LedgerError> {
+    let ledger = Ledger::open(path)?;
+    let mut records = Vec::new();
+    for c in cells {
+        let info = RunInfo {
+            label: &c.label,
+            seed: c.seed,
+            partition: &c.partition,
+            codec: &c.codec,
+            protocol: &c.protocol,
+            model: &c.model,
+            aggregator: &c.aggregator,
+            adversary: c.adversary.as_deref(),
+            metrics: &c.metrics,
+            target_acc: c.sim.as_ref().and_then(|s| s.target_acc),
+        };
+        records.extend(run_records(&info));
+    }
+    ledger.append(&records)?;
+    Ok(cells.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::RoundRecord;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tfed_store_{}_{name}.tfed", std::process::id()))
+    }
+
+    fn metrics(rounds: usize, wall: f64) -> RunMetrics {
+        let mut m = RunMetrics::new("cfg summary".into());
+        for round in 1..=rounds {
+            m.push(RoundRecord {
+                round,
+                train_loss: 0.5,
+                test_acc: 0.25 + round as f32 / 10.0,
+                test_loss: 0.9,
+                up_bytes: 100 * round as u64,
+                down_bytes: 90 * round as u64,
+                up_frames: 4,
+                down_frames: 4,
+                wall_secs: wall,
+                sim_secs: 0.0,
+                straggler_delay_ms: 0,
+                selected: vec![0, 1],
+                factors: vec![0.1],
+                evaluated: true,
+                rejected: vec![],
+                clipped: vec![],
+            });
+        }
+        m
+    }
+
+    fn info<'a>(m: &'a RunMetrics) -> RunInfo<'a> {
+        RunInfo {
+            label: "seed=7 partition=iid codec=ternary",
+            seed: 7,
+            partition: "iid",
+            codec: "ternary",
+            protocol: "T-FedAvg",
+            model: "mlp",
+            aggregator: "mean",
+            adversary: None,
+            metrics: m,
+            target_acc: None,
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_all_kinds() {
+        for kind in [
+            RecordKind::RunHeader,
+            RecordKind::Round,
+            RecordKind::Summary,
+            RecordKind::Bench,
+            RecordKind::Timestamp,
+        ] {
+            let rec = Record::json(kind, &obj(vec![("k", num(1.0))]));
+            let bytes = rec.encode().unwrap();
+            assert_eq!(bytes.len(), rec.wire_len());
+            let (back, next) = decode_at(&bytes, 0).unwrap();
+            assert_eq!(back, rec);
+            assert_eq!(next, bytes.len());
+            assert_eq!(RecordKind::from_u8(kind as u8), Some(kind));
+        }
+        assert_eq!(RecordKind::from_u8(77), None);
+    }
+
+    #[test]
+    fn every_truncation_and_byte_flip_is_detected() {
+        let rec = Record::json(RecordKind::Summary, &obj(vec![("final_acc", num(0.9))]));
+        let bytes = rec.encode().unwrap();
+        for cut in 0..bytes.len() {
+            let r = scan(&bytes[..cut]);
+            assert!(r.records.is_empty(), "cut={cut}");
+            assert_eq!(r.good_len, 0, "cut={cut}");
+            if cut > 0 {
+                assert!(r.damage.is_some(), "cut={cut}");
+            }
+        }
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0xFF;
+            assert!(scan(&bad).damage.is_some(), "flip at {pos} went undetected");
+        }
+    }
+
+    #[test]
+    fn torn_tail_recovery_on_open() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        let m = metrics(2, 0.1);
+        let ledger = Ledger::open(&path).unwrap();
+        ledger.append(&run_records(&info(&m))).unwrap();
+        let intact = read_ledger(&path).unwrap();
+        assert!(intact.damage.is_none());
+        let n_intact = intact.records.len();
+
+        // tear the final record: cut 5 bytes off the file
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let torn = read_ledger(&path).unwrap();
+        assert!(matches!(torn.damage, Some(LedgerError::Truncated { .. })));
+        assert_eq!(torn.records.len(), n_intact - 1);
+
+        // reopen: the torn tail is truncated away, and a fresh append
+        // decodes cleanly end to end
+        let ledger = Ledger::open(&path).unwrap();
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len() as usize,
+            torn.good_len
+        );
+        ledger.append(&run_records(&info(&m))).unwrap();
+        let healed = read_ledger(&path).unwrap();
+        assert!(healed.damage.is_none());
+        assert_eq!(healed.records.len(), (n_intact - 1) + n_intact);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rerun_payloads_are_byte_identical_outside_timestamp() {
+        // different wall clocks, same experiment: only the timestamp
+        // record may differ
+        let m1 = metrics(3, 0.25);
+        let m2 = metrics(3, 7.5);
+        let a = run_records(&info(&m1));
+        let b = run_records(&info(&m2));
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.kind, rb.kind);
+            if ra.kind.is_wall_clock() {
+                continue;
+            }
+            assert_eq!(ra.encode().unwrap(), rb.encode().unwrap(), "{}", ra.kind.name());
+            // and the wall clock never leaks outside the quarantine
+            assert!(!String::from_utf8(ra.payload.clone()).unwrap().contains("wall_secs"));
+        }
+        // ids are config-derived and stable
+        assert_eq!(run_id(&info(&m1)), run_id(&info(&m2)));
+    }
+
+    #[test]
+    fn bench_record_shape() {
+        let rec = bench_record(
+            "train",
+            &[("mlp/fp/blocked-4t/samples_per_sec".to_string(), 1234.5)],
+        );
+        assert_eq!(rec.kind, RecordKind::Bench);
+        let doc = rec.doc().unwrap();
+        assert_eq!(doc.get("section").unwrap().as_str().unwrap(), "train");
+        let v = doc.get("values").unwrap().get("mlp/fp/blocked-4t/samples_per_sec").unwrap();
+        assert_eq!(v.as_f64().unwrap(), 1234.5);
+    }
+}

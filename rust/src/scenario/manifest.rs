@@ -73,6 +73,8 @@
 //! metrics_out = "metrics.prom"  # Prometheus text; `--metrics-out` overrides
 //! telemetry_out = "telemetry.jsonl"  # per-round learning telemetry;
 //!                              # `--telemetry-out` overrides
+//! ledger_out = "runs.tfed"    # append-only cross-run ledger;
+//!                              # `--ledger-out` overrides (DESIGN.md §14)
 //!
 //! [output]
 //! path = "results.json"       # bundle sink; `--out` overrides
@@ -159,6 +161,10 @@ pub struct ScenarioManifest {
     /// `[observability] telemetry_out` (CLI `--telemetry-out`
     /// overrides). Enables telemetry for the run; DESIGN.md §12.
     pub telemetry_out: Option<String>,
+    /// Cross-run ledger from `[observability] ledger_out`
+    /// (CLI `--ledger-out` overrides): every cell is appended as
+    /// durable run records after the bundle is written. DESIGN.md §14.
+    pub ledger_out: Option<String>,
 }
 
 /// The sweep axes; the grid is their cartesian product.
@@ -252,7 +258,7 @@ const SIM_KEYS: &[&str] = &[
     "target_acc",
 ];
 const SWEEP_KEYS: &[&str] = &["seeds", "partitions", "codecs", "models", "aggregators"];
-const OBSERVABILITY_KEYS: &[&str] = &["trace_out", "metrics_out", "telemetry_out"];
+const OBSERVABILITY_KEYS: &[&str] = &["trace_out", "metrics_out", "telemetry_out", "ledger_out"];
 const OUTPUT_KEYS: &[&str] = &["path"];
 
 impl ScenarioManifest {
@@ -474,6 +480,10 @@ impl ScenarioManifest {
             }
             None => None,
         };
+        let ledger_out = match doc.get("observability", "ledger_out") {
+            Some(v) => Some(v.as_str().context("[observability] ledger_out")?.to_string()),
+            None => None,
+        };
 
         // -- [output] -----------------------------------------------------
         let output = match doc.get("output", "path") {
@@ -493,6 +503,7 @@ impl ScenarioManifest {
             trace_out,
             metrics_out,
             telemetry_out,
+            ledger_out,
         };
         // expanding validates every cell — a bad manifest fails at parse
         // time, not mid-sweep
@@ -1004,21 +1015,27 @@ mod tests {
     #[test]
     fn observability_table_flows_through() {
         let m = parse(
-            "[observability]\ntrace_out = \"trace.json\"\nmetrics_out = \"m.prom\"\ntelemetry_out = \"t.jsonl\"\n",
+            "[observability]\ntrace_out = \"trace.json\"\nmetrics_out = \"m.prom\"\ntelemetry_out = \"t.jsonl\"\nledger_out = \"runs.tfed\"\n",
         )
         .unwrap();
         assert_eq!(m.trace_out.as_deref(), Some("trace.json"));
         assert_eq!(m.metrics_out.as_deref(), Some("m.prom"));
         assert_eq!(m.telemetry_out.as_deref(), Some("t.jsonl"));
+        assert_eq!(m.ledger_out.as_deref(), Some("runs.tfed"));
         // all keys optional, independently
         let m = parse("[observability]\ntrace_out = \"t.json\"\n").unwrap();
         assert_eq!(m.trace_out.as_deref(), Some("t.json"));
         assert_eq!(m.metrics_out, None);
         assert_eq!(m.telemetry_out, None);
+        assert_eq!(m.ledger_out, None);
         let m = parse("").unwrap();
-        assert_eq!((m.trace_out, m.metrics_out, m.telemetry_out), (None, None, None));
+        assert_eq!(
+            (m.trace_out, m.metrics_out, m.telemetry_out, m.ledger_out),
+            (None, None, None, None)
+        );
         // typo safety like every other table
         assert!(parse("[observability]\ntrace = \"t.json\"\n").is_err());
         assert!(parse("[observability]\ntrace_out = 1\n").is_err());
+        assert!(parse("[observability]\nledger_out = 1\n").is_err());
     }
 }

@@ -46,6 +46,8 @@ pub struct ObsOverrides {
     pub trace_out: Option<String>,
     pub metrics_out: Option<String>,
     pub telemetry_out: Option<String>,
+    /// append every cell to this run ledger (`--ledger-out`)
+    pub ledger_out: Option<String>,
     /// suppress the end-of-run phase summary table
     pub quiet: bool,
 }
@@ -62,7 +64,10 @@ pub struct ObsOverrides {
 /// `telemetry_out` resolves — is enabled for the whole grid and the
 /// artifacts are written after the results bundle; the bundle bytes
 /// themselves are unaffected (`tests/obs_e2e.rs`,
-/// `tests/telemetry_e2e.rs`). Sink write failures never fail the run.
+/// `tests/telemetry_e2e.rs`). When a ledger path resolves
+/// (`--ledger-out` / `[observability] ledger_out`), every cell is also
+/// appended to that run ledger after the bundle is written
+/// (`tests/store_e2e.rs`). Sink write failures never fail the run.
 pub fn run_manifest_file(
     path: &str,
     out_override: Option<&str>,
@@ -78,10 +83,19 @@ pub fn run_manifest_file(
     } else if trace.is_some() || metrics.is_some() {
         crate::obs::enable();
     }
+    let ledger = obs.ledger_out.clone().or_else(|| manifest.ledger_out.clone());
     let results = run_scenario_jobs(&manifest, jobs)?;
     let out = out_override.map(str::to_string).or_else(|| manifest.output.clone());
     if let Some(p) = &out {
         results.write_json(p)?;
+    }
+    // ledger appends are best-effort like every other obs sink: the
+    // bundle is already on disk, so a failed append must not fail the run
+    if let Some(p) = &ledger {
+        match crate::obs::store::append_cells(p, &results.cells) {
+            Ok(n) => crate::info!("appended {n} run(s) to ledger {p}"),
+            Err(e) => crate::warn!("obs ledger sink {p:?}: {e} (results unaffected)"),
+        }
     }
     crate::obs::finish(&crate::obs::Sinks {
         trace_out: trace.as_deref(),

@@ -1,0 +1,214 @@
+//! End-to-end contracts for the run ledger (DESIGN.md §14):
+//! durability (torn-final-record recovery), determinism (rerun
+//! byte-identity with wall clocks quarantined, `--jobs`-independent
+//! append order), the history/query/diff renderings, and the diff
+//! perf gate's exit-code behavior through the real binary.
+
+use std::path::PathBuf;
+
+use tfed::obs::lens;
+use tfed::obs::store::{self, Ledger, Record, RecordKind};
+use tfed::scenario::{run_scenario, run_scenario_jobs, ScenarioManifest, ScenarioResults};
+
+const MANIFEST: &str = r#"
+[scenario]
+name = "store-e2e"
+[experiment]
+clients = 3
+rounds = 2
+local_epochs = 1
+batch = 16
+train_samples = 240
+test_samples = 60
+seed = 5
+native = true
+[sweep]
+seeds = [5, 6]
+"#;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tfed_store_e2e_{}_{name}.tfed", std::process::id()))
+}
+
+fn fresh(name: &str) -> PathBuf {
+    let p = tmp(name);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn run_grid() -> ScenarioResults {
+    run_scenario(&ScenarioManifest::parse(MANIFEST).unwrap()).unwrap()
+}
+
+/// The ledger's determinism fingerprint: every payload except the
+/// wall-clock quarantine, in order.
+fn stable_payloads(records: &[Record]) -> Vec<(RecordKind, Vec<u8>)> {
+    records
+        .iter()
+        .filter(|r| !r.kind.is_wall_clock())
+        .map(|r| (r.kind, r.payload.clone()))
+        .collect()
+}
+
+#[test]
+fn rerun_appends_are_byte_identical_outside_timestamps() {
+    let path = fresh("rerun");
+    let p = path.to_str().unwrap();
+    let first = run_grid();
+    let second = run_grid();
+    assert_eq!(store::append_cells(p, &first.cells).unwrap(), 2);
+    assert_eq!(store::append_cells(p, &second.cells).unwrap(), 2);
+
+    let scanned = store::read_ledger(&path).unwrap();
+    assert!(scanned.damage.is_none());
+    // two appends of the same grid → the record stream splits exactly
+    // in half, and the stable halves match byte for byte
+    let n = scanned.records.len();
+    assert_eq!(n % 2, 0);
+    let a = stable_payloads(&scanned.records[..n / 2]);
+    let b = stable_payloads(&scanned.records[n / 2..]);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "rerun produced different stable record bytes");
+    // the wall clock lives only in the quarantine: no stable payload
+    // mentions it, and every run carries exactly one timestamp record
+    for (_, payload) in &a {
+        let text = String::from_utf8(payload.clone()).unwrap();
+        assert!(!text.contains("wall_secs"), "wall clock leaked: {text}");
+    }
+    let timestamps =
+        scanned.records.iter().filter(|r| r.kind == RecordKind::Timestamp).count();
+    assert_eq!(timestamps, 4);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn jobs_parallelism_preserves_append_order() {
+    let m = ScenarioManifest::parse(MANIFEST).unwrap();
+    let sequential = run_scenario_jobs(&m, 1).unwrap();
+    let parallel = run_scenario_jobs(&m, 2).unwrap();
+    let (p1, p2) = (fresh("jobs1"), fresh("jobs2"));
+    store::append_cells(p1.to_str().unwrap(), &sequential.cells).unwrap();
+    store::append_cells(p2.to_str().unwrap(), &parallel.cells).unwrap();
+    let a = stable_payloads(&store::read_ledger(&p1).unwrap().records);
+    let b = stable_payloads(&store::read_ledger(&p2).unwrap().records);
+    assert_eq!(a, b, "--jobs changed ledger append order or content");
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
+
+#[test]
+fn torn_final_record_recovers_and_keeps_history_readable() {
+    let path = fresh("torn");
+    let p = path.to_str().unwrap();
+    let results = run_grid();
+    store::append_cells(p, &results.cells).unwrap();
+    let intact = store::read_ledger(&path).unwrap().records.len();
+
+    // simulate a crash mid-append: the file ends inside the last record
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+
+    // the reader still serves the intact prefix, with typed damage; the
+    // torn record was the grid's final timestamp, so both runs list
+    let view = lens::load(p).unwrap();
+    assert!(view.damage.as_deref().unwrap().contains("torn tail"));
+    assert_eq!(view.entries.len(), 2);
+    let hist = lens::render_history(&view, &lens::HistoryFilter::default());
+    assert!(hist.contains("warning: torn tail"));
+
+    // reopening truncates the tear; the next append decodes cleanly
+    store::append_cells(p, &results.cells).unwrap();
+    let healed = store::read_ledger(&path).unwrap();
+    assert!(healed.damage.is_none(), "tear survived reopen: {:?}", healed.damage);
+    assert_eq!(healed.records.len(), (intact - 1) + intact);
+    assert_eq!(lens::load(p).unwrap().entries.len(), 4);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn history_query_and_diff_render_the_recorded_grid() {
+    let path = fresh("render");
+    let p = path.to_str().unwrap();
+    let results = run_grid();
+    store::append_cells(p, &results.cells).unwrap();
+    store::append_cells(p, &results.cells).unwrap();
+    let view = lens::load(p).unwrap();
+    assert_eq!(view.entries.len(), 4);
+
+    // history: all four runs — each seed's cell listed once per append
+    let hist = lens::render_history(&view, &lens::HistoryFilter::default());
+    assert_eq!(hist.matches("seed=5 ").count(), 2);
+    assert_eq!(hist.matches("seed=6 ").count(), 2);
+    // seed filter narrows to that seed's rerun pair
+    let hist5 = lens::render_history(
+        &view,
+        &lens::HistoryFilter { seed: Some(5), ..Default::default() },
+    );
+    assert!(hist5.contains("seed=5"));
+    assert!(!hist5.contains("seed=6"));
+
+    // query: identity, totals, compression pricing, per-round CSV
+    let q = lens::render_entry(lens::find(&view, "1").unwrap());
+    assert!(q.contains("model=mlp"));
+    assert!(q.contains("codec=ternary"));
+    assert!(q.contains("x vs dense fp32"));
+    assert!(q.contains("round,train_loss,test_acc"));
+    assert!(q.contains("recorded   : unix_ms"));
+
+    // seq 1 and 3 are the same seed-5 cell from each append: zero drift
+    let t = lens::DiffThresholds {
+        max_acc_drop: 0.02,
+        max_mb_grow_pct: 10.0,
+        max_perf_drop_pct: 20.0,
+    };
+    let d = lens::diff(&view, "1", "3", &t).unwrap();
+    assert!(d.breaches.is_empty(), "identical reruns breached: {:?}", d.breaches);
+    assert!(d.text.contains("zero drift"));
+    // the rerun-shared id resolves via occurrence selectors too
+    let id = view.entries[0].id().to_string();
+    let d = lens::diff(&view, &format!("{id}@0"), &format!("{id}@1"), &t).unwrap();
+    assert!(d.text.contains("zero drift"));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The CI perf gate end-to-end: `tfed diff` through the real binary,
+/// exit 0 on a clean comparison and nonzero on an injected >threshold
+/// samples/sec regression.
+#[test]
+fn diff_exit_codes_gate_regressions() {
+    let path = fresh("gate");
+    let p = path.to_str().unwrap();
+    let ledger = Ledger::open(&path).unwrap();
+    ledger
+        .append(&[
+            store::bench_record("train", &[("mlp/fp/blocked-4t/samples_per_sec".into(), 1000.0)]),
+            store::bench_record("train", &[("mlp/fp/blocked-4t/samples_per_sec".into(), 500.0)]),
+        ])
+        .unwrap();
+
+    let bin = env!("CARGO_BIN_EXE_tfed");
+    let run = |a: &str, b: &str| {
+        std::process::Command::new(bin)
+            .args(["diff", a, b, "--ledger-out", p])
+            .output()
+            .expect("spawn tfed diff")
+    };
+    // 1000 → 500 samples/sec is a 50% drop: breach, nonzero exit
+    let out = run("1", "2");
+    assert!(!out.status.success(), "regression diff exited 0");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("perf gate"));
+    // 500 → 1000 is a speedup: gate passes
+    let out = run("2", "1");
+    assert!(out.status.success(), "speedup diff exited nonzero: {:?}", out);
+    assert!(String::from_utf8_lossy(&out.stdout).contains("perf gate: OK"));
+
+    // history through the binary lists both bench records
+    let out = std::process::Command::new(bin)
+        .args(["history", "--ledger-out", p])
+        .output()
+        .expect("spawn tfed history");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.matches("bench [train]").count(), 2);
+    let _ = std::fs::remove_file(&path);
+}
