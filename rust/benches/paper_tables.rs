@@ -301,11 +301,68 @@ fn compression(engine: &Option<std::sync::Arc<tfed::runtime::Engine>>) {
         "codec,protocol,best_acc,up_bytes_per_round,down_bytes_per_round,ratio_vs_dense,round_wall_secs",
         &rows,
     );
+
+    // Ternary codec hot loops: pack / unpack / dequantize throughput over
+    // a 4M-trit buffer (best of N — the noise-robust statistic). GB/s is
+    // measured on the unpacked side: 1 B/trit for the i8 pattern loops,
+    // 4 B/trit for the f32 dequantize output.
+    let hot_loops = {
+        use std::time::Instant;
+        use tfed::compress::{pack_ternary, unpack_dequantize, unpack_ternary};
+        use tfed::util::rng::Pcg;
+        let trits = 4usize << 20;
+        let repeats = match scale() {
+            Scale::Quick => 3usize,
+            Scale::Default => 7,
+            Scale::Full => 15,
+        };
+        let mut rng = Pcg::new(42, 0x7E_44);
+        let it: Vec<i8> = (0..trits).map(|_| (rng.below(3) as i8) - 1).collect();
+        let packed = pack_ternary(&it);
+        let best = |f: &mut dyn FnMut()| -> f64 {
+            let mut b = f64::INFINITY;
+            for _ in 0..repeats {
+                let t0 = Instant::now();
+                f();
+                b = b.min(t0.elapsed().as_secs_f64());
+            }
+            b
+        };
+        let pack_s = best(&mut || {
+            std::hint::black_box(pack_ternary(&it));
+        });
+        let unpack_s = best(&mut || {
+            std::hint::black_box(unpack_ternary(&packed).unwrap());
+        });
+        let deq_s = best(&mut || {
+            std::hint::black_box(unpack_dequantize(&packed, 0.05).unwrap());
+        });
+        let gb = |bytes: usize, secs: f64| bytes as f64 / secs.max(1e-9) / 1e9;
+        let pack_gbps = gb(trits, pack_s);
+        let unpack_gbps = gb(trits, unpack_s);
+        let deq_gbps = gb(4 * trits, deq_s);
+        println!(
+            "codec hot loops ({}M trits, best of {repeats}): pack {pack_gbps:.2} GB/s, \
+             unpack {unpack_gbps:.2} GB/s, dequantize {deq_gbps:.2} GB/s",
+            trits >> 20
+        );
+        ledger_vals.push(("hot_loops/pack_gbps".to_string(), pack_gbps));
+        ledger_vals.push(("hot_loops/unpack_gbps".to_string(), unpack_gbps));
+        ledger_vals.push(("hot_loops/dequantize_gbps".to_string(), deq_gbps));
+        obj(vec![
+            ("trits", num(trits as f64)),
+            ("pack_gbps", num(pack_gbps)),
+            ("unpack_gbps", num(unpack_gbps)),
+            ("dequantize_gbps", num(deq_gbps)),
+        ])
+    };
+
     let doc = obj(vec![
         ("bench", s("paper_tables --compression")),
         ("baseline", s("dense")),
         ("scale", s(scale_name())),
         ("codecs", obj(entries)),
+        ("hot_loops", hot_loops),
     ]);
     // land next to ROADMAP.md when run via `cargo bench` (cwd = rust/)
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
@@ -351,6 +408,16 @@ fn train() {
         ("blocked-2t", KernelPolicy::threaded(2)),
         ("blocked-4t", KernelPolicy::threaded(4)),
     ];
+    // The packed tier computes on the 2-bit cells: a different (but
+    // contracted, DESIGN.md §15) float-op order, so it carries its own
+    // bit-identity reference (packed-naive) instead of joining the fp
+    // chain. Quantized modes only — fp layers have no cells to pack.
+    let packed_configs: &[(&str, KernelPolicy)] = &[
+        ("packed-naive", KernelPolicy::packed_reference()),
+        ("packed-1t", KernelPolicy::packed(1)),
+        ("packed-2t", KernelPolicy::packed(2)),
+        ("packed-4t", KernelPolicy::packed(4)),
+    ];
     println!(
         "{:<10} {:<5} {:<11} {:>13} {:>13} {:>9}",
         "model", "mode", "kernels", "samples/sec", "us/round", "speedup"
@@ -368,9 +435,14 @@ fn train() {
         let mut mode_entries = Vec::new();
         for (mode, mode_name) in [(Mode::Fp, "fp"), (Mode::Fttq, "fttq"), (Mode::Ttq, "ttq")] {
             let mut naive_sps = f64::NAN;
-            let mut reference_bits: Option<Vec<u32>> = None;
+            // one bit-identity reference per tier family: [fp, packed]
+            let mut references: [Option<Vec<u32>>; 2] = [None, None];
             let mut kernel_entries = Vec::new();
-            for (label, policy) in configs {
+            let mut mode_configs: Vec<(&str, KernelPolicy)> = configs.to_vec();
+            if !matches!(mode, Mode::Fp) {
+                mode_configs.extend_from_slice(packed_configs);
+            }
+            for (label, policy) in &mode_configs {
                 let graph = LayerGraph::from_def(&def, mode, 0.05, *policy).expect("graph");
                 let mut prng = Pcg::seeded(7);
                 let mut params = init_params(&def.schema, &mut prng);
@@ -400,19 +472,22 @@ fn train() {
                     naive_sps = sps;
                 }
                 let speedup = sps / naive_sps;
-                // the whole point of the kernel contract: every config is
-                // the same computation, down to the last bit
+                // the whole point of the kernel contract: every config in
+                // a tier family is the same computation, down to the last
+                // bit — fp configs against naive, packed against its own
+                // packed-naive oracle
                 let bits: Vec<u32> = params
                     .tensors
                     .iter()
                     .flat_map(|t| t.data.iter().map(|v| v.to_bits()))
                     .chain(factors.iter().map(|v| v.to_bits()))
                     .collect();
-                match &reference_bits {
-                    None => reference_bits = Some(bits),
+                let family = label.starts_with("packed") as usize;
+                match &references[family] {
+                    None => references[family] = Some(bits),
                     Some(want) => assert_eq!(
                         want, &bits,
-                        "{model}/{mode_name}/{label}: kernels diverged from naive"
+                        "{model}/{mode_name}/{label}: kernels diverged from their tier oracle"
                     ),
                 }
                 println!(
@@ -442,6 +517,100 @@ fn train() {
         }
         model_entries.push((model, obj(mode_entries)));
     }
+    // Quantized inference: forward-only, the packed-ternary GEMM against
+    // the fp32 blocked GEMM over each quantized layer's lowered [k, o]
+    // matrix (dense: [inp, out]; conv: [kh*kw*cin, cout] — the im2col
+    // shape), single-threaded both sides. The packed fast path is
+    // asserted bit-identical to its naive packed oracle inline, so the
+    // speedup is measured against a contracted float-op order, never an
+    // unchecked one (DESIGN.md §15).
+    let quantized_inference = {
+        use tfed::native::kernels::{self, PackedWeights};
+        let reps = match scale() {
+            Scale::Quick => 4usize,
+            Scale::Default => 16,
+            Scale::Full => 48,
+        };
+        let n = 256usize;
+        println!("\n--- quantized inference (fttq forward), {n} rows x {reps} reps ---");
+        println!(
+            "{:<10} {:>14} {:>14} {:>9}",
+            "model", "blocked s/s", "packed s/s", "speedup"
+        );
+        let mut entries = Vec::new();
+        for model in ["mlp-large", "cnn"] {
+            let def = registry::model_def(model).expect("registry model");
+            // lowered GEMM shape of every quantized weight tensor
+            let shapes: Vec<(usize, usize)> = def
+                .schema
+                .params
+                .iter()
+                .filter(|p| p.quantized)
+                .map(|p| match p.shape.as_slice() {
+                    [k, o] => (*k, *o),
+                    [kh, kw, cin, cout] => (kh * kw * cin, *cout),
+                    other => panic!("unexpected weight shape {other:?}"),
+                })
+                .collect();
+            let wq = 0.05f32;
+            let mut rng = Pcg::new(42, 0x9A_11);
+            let mut blocked_secs = 0f64;
+            let mut packed_secs = 0f64;
+            for &(k, o) in &shapes {
+                let x: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+                let it: Vec<i8> =
+                    (0..k * o).map(|_| (rng.below(3) as i8) - 1).collect();
+                let w_eff: Vec<f32> = it.iter().map(|&t| t as f32 * wq).collect();
+                let b: Vec<f32> = (0..o).map(|_| rng.normal() * 0.1).collect();
+                let pw = PackedWeights::from_pattern(&it, k, o);
+                let mut out = vec![0f32; n * o];
+                let fp1 = KernelPolicy::threaded(1);
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    kernels::gemm_bias(&x, &w_eff, &b, &mut out, n, k, o, &fp1);
+                }
+                blocked_secs += t0.elapsed().as_secs_f64();
+                let p1 = KernelPolicy::packed(1);
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    kernels::packed_gemm_bias(&x, &pw, &b, wq, wq, &mut out, n, &p1);
+                }
+                packed_secs += t0.elapsed().as_secs_f64();
+                // inline oracle bit-identity: the fast path must be the
+                // packed contract's exact computation on these shapes
+                let mut want = vec![0f32; n * o];
+                kernels::packed_gemm_bias_naive(&x, &pw, &b, wq, wq, &mut want, n);
+                assert_eq!(
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{model} ({k}x{o}): packed forward diverged from its oracle"
+                );
+            }
+            let bsps = (n * reps) as f64 / blocked_secs.max(1e-9);
+            let psps = (n * reps) as f64 / packed_secs.max(1e-9);
+            let speedup = psps / bsps;
+            println!("{model:<10} {bsps:>14.0} {psps:>14.0} {speedup:>8.2}x");
+            rows.push(format!("{model},fttq-infer,blocked-1t,{bsps:.1},,1.000"));
+            rows.push(format!("{model},fttq-infer,packed-1t,{psps:.1},,{speedup:.3}"));
+            entries.push((
+                model,
+                obj(vec![
+                    ("blocked_samples_per_sec", num(bsps)),
+                    ("packed_samples_per_sec", num(psps)),
+                    ("packed_speedup_vs_blocked", num(speedup)),
+                    ("oracle_bit_identical", Json::Bool(true)),
+                ]),
+            ));
+            ledger_vals
+                .push((format!("{model}/fttq_infer/blocked_samples_per_sec"), bsps));
+            ledger_vals
+                .push((format!("{model}/fttq_infer/packed_samples_per_sec"), psps));
+            ledger_vals
+                .push((format!("{model}/fttq_infer/packed_speedup_vs_blocked"), speedup));
+        }
+        obj(entries)
+    };
+
     write_csv(
         "train.csv",
         "model,mode,kernels,samples_per_sec,us_per_round,speedup_vs_naive",
@@ -521,6 +690,7 @@ fn train() {
         ("rounds", num(rounds as f64)),
         ("samples_per_round", num(samples as f64)),
         ("models", obj(model_entries)),
+        ("quantized_inference", quantized_inference),
         ("obs_overhead", obs_overhead),
     ]);
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
@@ -532,7 +702,9 @@ fn train() {
     println!("  -> wrote {path}");
     append_bench("train", &ledger_vals);
     println!("shape: blocked-4t >= 4x naive on mlp-large (row-parallel + transposed");
-    println!("gradient GEMM), identical bits everywhere; mlp is too small to gain much.");
+    println!("gradient GEMM), identical bits per tier family; mlp is too small to gain");
+    println!("much; packed forward beats fp32 blocked on the quantized-inference rows");
+    println!("(16x less weight traffic per output).");
 }
 
 /// Virtual-time fleet comparison: runs the checked-in

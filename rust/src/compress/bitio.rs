@@ -33,18 +33,48 @@ impl BitWriter {
         self.nbits += 1;
     }
 
-    /// Push the low `n` bits of `v`, LSB first.
+    /// Push the low `n` bits of `v`, LSB first. Chunked: the head merges
+    /// into the current partial byte, the body lands whole bytes, the
+    /// tail opens a new partial byte — no per-bit loop.
     pub fn push_bits(&mut self, v: u32, n: u32) {
         debug_assert!(n <= 32);
-        for i in 0..n {
-            self.push_bit((v >> i) & 1 == 1);
+        if n == 0 {
+            return;
+        }
+        let mask = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+        let mut acc = (v & mask) as u64;
+        let mut left = n as usize;
+        let slot = self.nbits % 8;
+        if slot != 0 {
+            let take = (8 - slot).min(left);
+            // bits of `acc` beyond the byte boundary fall off the u8 shift
+            *self.out.last_mut().unwrap() |= (acc as u8) << slot;
+            acc >>= take;
+            left -= take;
+            self.nbits += take;
+        }
+        while left >= 8 {
+            self.out.push(acc as u8);
+            acc >>= 8;
+            left -= 8;
+            self.nbits += 8;
+        }
+        if left > 0 {
+            self.out.push(acc as u8);
+            self.nbits += left;
         }
     }
 
-    /// Unary code: `q` one-bits terminated by a zero-bit.
+    /// Unary code: `q` one-bits terminated by a zero-bit, emitted in
+    /// 32-bit all-ones chunks.
     pub fn push_unary(&mut self, q: u32) {
-        for _ in 0..q {
-            self.push_bit(true);
+        let mut left = q;
+        while left >= 32 {
+            self.push_bits(u32::MAX, 32);
+            left -= 32;
+        }
+        if left > 0 {
+            self.push_bits((1u32 << left) - 1, left);
         }
         self.push_bit(false);
     }
@@ -82,29 +112,62 @@ impl<'a> BitReader<'a> {
         Ok(bit)
     }
 
-    /// Read `n` bits, LSB first.
+    /// Read `n` bits, LSB first. Chunked: one windowed multi-byte load
+    /// per call instead of `n` bit probes. Error behavior matches the
+    /// per-bit loop exactly: a short read consumes the remaining bits and
+    /// reports the first missing position.
     pub fn read_bits(&mut self, n: u32) -> Result<u32, CodecError> {
         debug_assert!(n <= 32);
-        let mut v = 0u32;
-        for i in 0..n {
-            if self.read_bit()? {
-                v |= 1 << i;
-            }
+        if n == 0 {
+            return Ok(0);
         }
-        Ok(v)
+        let len = self.len_bits();
+        if self.pos + n as usize > len {
+            self.pos = len;
+            return Err(CodecError::Truncated { wanted: len + 1, got: len });
+        }
+        let start = self.pos / 8;
+        let off = self.pos % 8;
+        // n <= 32 and off <= 7 => at most 5 source bytes, fits a u64
+        let nbytes = (off + n as usize).div_ceil(8);
+        let mut win = 0u64;
+        for (i, &byte) in self.b[start..start + nbytes].iter().enumerate() {
+            win |= (byte as u64) << (8 * i);
+        }
+        win >>= off;
+        let mask = if n == 32 { u32::MAX as u64 } else { (1u64 << n) - 1 };
+        self.pos += n as usize;
+        Ok((win & mask) as u32)
     }
 
     /// Read a unary run of ones terminated by a zero. A run longer than
     /// `max` is corrupt (the caller knows a content-derived bound).
+    /// Chunked: scans the run a byte at a time via trailing-ones counts,
+    /// with the same consumed-bit positions and errors as the bit loop.
     pub fn read_unary(&mut self, max: u32) -> Result<u32, CodecError> {
         let mut q = 0u32;
-        while self.read_bit()? {
-            q += 1;
-            if q > max {
+        loop {
+            let len = self.len_bits();
+            if self.pos >= len {
+                return Err(CodecError::Truncated { wanted: self.pos + 1, got: len });
+            }
+            let avail = (8 - self.pos % 8) as u32;
+            // remaining bits of the current byte, shifted to bit 0; the
+            // vacated high bits are zero so trailing-ones caps at `avail`
+            let window = self.b[self.pos / 8] >> (self.pos % 8);
+            let run = (!window).trailing_zeros().min(avail);
+            if run > max - q {
+                // the bit loop stops after consuming the (max+1)-th one
+                self.pos += (max - q) as usize + 1;
                 return Err(CodecError::Corrupt("unary run exceeds content bound"));
             }
+            q += run;
+            self.pos += run as usize;
+            if run < avail {
+                self.pos += 1; // the terminating zero bit
+                return Ok(q);
+            }
         }
-        Ok(q)
     }
 
     /// After all content is read: fewer than 8 bits may remain and every

@@ -39,22 +39,77 @@ fn encode_trit(s: i8) -> u8 {
     }
 }
 
+/// The 4-entry cell expansion table — **the** single decode table for the
+/// 2-bit encoding, shared by the codec paths and the packed kernels
+/// (`native::kernels`): index by cell code, get `[0, pos, neg, 0]`
+/// (the invalid 0b11 lane maps to 0 and is guarded by the callers'
+/// validity scans).
 #[inline]
-fn decode_trit(b: u8) -> Result<i8, CodecError> {
-    match b {
-        0b00 => Ok(0),
-        0b01 => Ok(1),
-        0b10 => Ok(-1),
-        _ => Err(CodecError::Corrupt("invalid trit encoding 0b11")),
+pub fn cell_table(pos: f32, neg: f32) -> [f32; 4] {
+    [0.0, pos, neg, 0.0]
+}
+
+/// Blow [`cell_table`] up to a 256-entry x 4-lane per-byte LUT: one row
+/// load expands a whole packed byte, replacing four shift/mask/branch
+/// steps with a fixed-width copy. Shared by [`unpack_dequantize`] and the
+/// packed-kernel inner loops.
+pub fn byte_expand_lut(pos: f32, neg: f32) -> [[f32; 4]; 256] {
+    let cell = cell_table(pos, neg);
+    let mut lut = [[0.0f32; 4]; 256];
+    for (b, row) in lut.iter_mut().enumerate() {
+        for (lane, v) in row.iter_mut().enumerate() {
+            *v = cell[(b >> (2 * lane)) & 3];
+        }
+    }
+    lut
+}
+
+/// The i8 twin of [`byte_expand_lut`] for sign-pattern decode, built once
+/// at compile time (it has no value parameters).
+const TRIT_LUT: [[i8; 4]; 256] = {
+    let cell = [0i8, 1, -1, 0];
+    let mut lut = [[0i8; 4]; 256];
+    let mut b = 0;
+    while b < 256 {
+        let mut lane = 0;
+        while lane < 4 {
+            lut[b][lane] = cell[(b >> (2 * lane)) & 3];
+            lane += 1;
+        }
+        b += 1;
+    }
+    lut
+};
+
+/// Pack one row of trits ({-1, 0, +1} as i8), appending
+/// `row.len().div_ceil(4)` zero-padded bytes to `out`. Chunked four
+/// elements per byte (no per-element read-modify-write on the output
+/// byte), this is the codec's — and the packed kernels' — one trit
+/// encoder.
+pub fn pack_row(row: &[i8], out: &mut Vec<u8>) {
+    let mut chunks = row.chunks_exact(4);
+    for c in &mut chunks {
+        out.push(
+            encode_trit(c[0])
+                | encode_trit(c[1]) << 2
+                | encode_trit(c[2]) << 4
+                | encode_trit(c[3]) << 6,
+        );
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut b = 0u8;
+        for (lane, &s) in rem.iter().enumerate() {
+            b |= encode_trit(s) << (2 * lane);
+        }
+        out.push(b);
     }
 }
 
 /// Pack a sign pattern ({-1, 0, +1} as i8) into 2-bit cells.
 pub fn pack_ternary(it: &[i8]) -> PackedTernary {
-    let mut bytes = vec![0u8; it.len().div_ceil(4)];
-    for (i, &s) in it.iter().enumerate() {
-        bytes[i / 4] |= encode_trit(s) << ((i % 4) * 2);
-    }
+    let mut bytes = Vec::with_capacity(it.len().div_ceil(4));
+    pack_row(it, &mut bytes);
     PackedTernary { len: it.len(), bytes }
 }
 
@@ -85,13 +140,22 @@ fn check_padding(p: &PackedTernary) -> Result<(), CodecError> {
 }
 
 /// Unpack back to the sign pattern; validates cell encoding and padding.
+/// Same structure as [`unpack_dequantize`]: validity is checked up front
+/// per byte, then the body is a branch-free 4-lane LUT expansion.
 pub fn unpack_ternary(p: &PackedTernary) -> Result<Vec<i8>, CodecError> {
     check_len(p)?;
     check_padding(p)?;
+    if p.bytes.iter().any(|&b| has_invalid_cell(b)) {
+        return Err(CodecError::Corrupt("invalid trit encoding 0b11"));
+    }
+    let full_bytes = p.len / 4;
+    let rem = p.len % 4;
     let mut out = Vec::with_capacity(p.len);
-    for i in 0..p.len {
-        let cell = (p.bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
-        out.push(decode_trit(cell)?);
+    for &b in &p.bytes[..full_bytes] {
+        out.extend_from_slice(&TRIT_LUT[b as usize]);
+    }
+    if rem != 0 {
+        out.extend_from_slice(&TRIT_LUT[p.bytes[full_bytes] as usize][..rem]);
     }
     Ok(out)
 }
@@ -122,7 +186,7 @@ pub fn unpack_dequantize(p: &PackedTernary, wq: f32) -> Result<Vec<f32>, CodecEr
     }
     let rem = p.len % 4;
 
-    let cell = [0.0f32, wq, -wq, 0.0];
+    let cell = cell_table(wq, -wq);
     let mut out = Vec::with_capacity(p.len);
 
     // below this size the 1024-entry LUT fill would cost more than the
@@ -144,14 +208,9 @@ pub fn unpack_dequantize(p: &PackedTernary, wq: f32) -> Result<Vec<f32>, CodecEr
         return Ok(out);
     }
 
-    // 256-entry x 4-lane per-byte LUT (the 0b11 lane is unreachable after
-    // the validity check; 0.0 keeps the table total)
-    let mut lut = [[0.0f32; 4]; 256];
-    for (b, row) in lut.iter_mut().enumerate() {
-        for (lane, v) in row.iter_mut().enumerate() {
-            *v = cell[(b >> (2 * lane)) & 3];
-        }
-    }
+    // the shared 256-entry x 4-lane per-byte LUT (the 0b11 lane is
+    // unreachable after the validity check; 0.0 keeps the table total)
+    let lut = byte_expand_lut(wq, -wq);
     for &b in &p.bytes[..full_bytes] {
         out.extend_from_slice(&lut[b as usize]);
     }
@@ -269,6 +328,29 @@ mod tests {
                 unpack_ternary(&p).unwrap().iter().map(|&s| wq * s as f32).collect();
             assert_eq!(dense, via_i8);
         });
+    }
+
+    #[test]
+    fn byte_lut_expands_cell_table() {
+        let lut = byte_expand_lut(0.3, -0.7);
+        let cell = cell_table(0.3, -0.7);
+        for b in 0..256usize {
+            for lane in 0..4 {
+                assert_eq!(lut[b][lane], cell[(b >> (2 * lane)) & 3], "b={b} lane={lane}");
+                assert_eq!(TRIT_LUT[b][lane], [0i8, 1, -1, 0][(b >> (2 * lane)) & 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_row_appends_byte_aligned_rows() {
+        let mut out = Vec::new();
+        pack_row(&[1, -1, 0, 1, 1], &mut out); // 2 bytes, 3 padding cells
+        pack_row(&[-1, -1], &mut out); // 1 byte, 2 padding cells
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], 0b01_00_10_01);
+        assert_eq!(out[1], 0b00_00_00_01);
+        assert_eq!(out[2], 0b00_00_10_10);
     }
 
     #[test]

@@ -364,8 +364,11 @@ impl NativeBackend {
         }
     }
 
-    /// Kernel execution policy (thread count / naive reference loops).
-    /// Results are bit-identical at every setting — only wall time moves.
+    /// Kernel execution policy (tier, thread count, reference loops).
+    /// The fp tiers are bit-identical at every setting — only wall time
+    /// moves. The packed tier computes on the 2-bit ternary cells and is
+    /// deterministic against its own contract (DESIGN.md §15) but not
+    /// byte-identical to the fp tiers.
     pub fn set_policy(&mut self, policy: KernelPolicy) {
         self.policy = policy;
     }
@@ -497,13 +500,21 @@ impl Backend for NativeBackend {
     }
 }
 
-/// Default native kernel policy: single-thread blocked kernels (the
+/// Default native kernel policy: single-thread blocked fp kernels (the
 /// round driver already fans worker threads out over clients, so nested
-/// parallelism would oversubscribe). `TFED_KERNEL_THREADS=N` opts into
-/// row-parallel kernels — useful for single-client processes like `tfed
-/// client` — and, like every [`KernelPolicy`], changes wall time only:
-/// results stay bit-identical (DESIGN.md §10).
+/// parallelism would oversubscribe). `TFED_KERNEL_TIER=<spec>` selects a
+/// full tier spec (`naive | blocked[:N] | packed[:N] | packed-naive`,
+/// see [`KernelPolicy::parse`]); the older `TFED_KERNEL_THREADS=N` opts
+/// into row-parallel fp kernels only. The fp tiers change wall time
+/// only — results stay bit-identical (DESIGN.md §10); the packed tier is
+/// a different float-op order with its own determinism contract
+/// (DESIGN.md §15).
 fn default_policy() -> KernelPolicy {
+    if let Ok(v) = std::env::var("TFED_KERNEL_TIER") {
+        if let Ok(p) = KernelPolicy::parse(&v) {
+            return p;
+        }
+    }
     if let Ok(v) = std::env::var("TFED_KERNEL_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return KernelPolicy::threaded(n.max(1));
@@ -522,9 +533,30 @@ pub fn make_backend(
     batch: usize,
     native: bool,
 ) -> Result<Box<dyn Backend>> {
+    make_backend_with_policy(engine, model, batch, native, None)
+}
+
+/// [`make_backend`] with an explicit kernel policy (CLI `--kernel`, the
+/// scenario-manifest `kernel` key). `None` keeps the env-derived default.
+/// An explicit policy is a native-kernel execution knob; asking the PJRT
+/// backend to honor one is a config error, not a silent no-op.
+pub fn make_backend_with_policy(
+    engine: Option<Arc<Engine>>,
+    model: &str,
+    batch: usize,
+    native: bool,
+    policy: Option<KernelPolicy>,
+) -> Result<Box<dyn Backend>> {
     if native {
-        Ok(Box::new(NativeBackend::for_model(model, batch)?))
+        let mut b = NativeBackend::for_model(model, batch)?;
+        if let Some(p) = policy {
+            b.set_policy(p);
+        }
+        Ok(Box::new(b))
     } else {
+        if policy.is_some() {
+            bail!("kernel tier selection applies to the native backend only");
+        }
         let engine = engine.ok_or_else(|| anyhow!("PJRT backend requires an engine"))?;
         Ok(Box::new(PjrtBackend::new(engine, model, batch)?))
     }

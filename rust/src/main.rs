@@ -44,12 +44,13 @@ use anyhow::{bail, Result};
 use tfed::compress::CodecSpec;
 use tfed::config::{ExperimentConfig, Protocol, Task};
 use tfed::coordinator::availability::AvailabilityModel;
-use tfed::coordinator::backend::make_backend;
+use tfed::coordinator::backend::{make_backend, make_backend_with_policy};
 use tfed::coordinator::server::{materialize_shard, Orchestrator};
 use tfed::coordinator::{
     AdversaryModel, AdversarySpec, AggregatorSpec, ClientAdversary, ClientRuntime,
 };
 use tfed::eval::{mb, RunMetrics};
+use tfed::native::KernelPolicy;
 use tfed::runtime::manifest::default_artifacts_dir;
 use tfed::runtime::Engine;
 use tfed::transport::{TcpBinding, TcpClient};
@@ -103,6 +104,7 @@ fn real_main() -> Result<()> {
         .opt("listen", "127.0.0.1:7878", "serve: TCP listen address (port 0 = ephemeral)")
         .opt("connect", "", "client: coordinator address to dial")
         .opt("client-id", "0", "client: this process's client id")
+        .opt("kernel", "auto", "native kernel tier: naive | blocked[:N] | packed[:N] | packed-naive | auto")
         .opt("workers", "0", "round-driver worker threads (0 = auto)")
         .opt("jobs", "1", "scenario runs: grid cells in flight (manifest only)")
         .flag("native", "use the pure-Rust layer-graph backend (registry models)")
@@ -182,6 +184,18 @@ fn build_cfg(args: &Args) -> Result<ExperimentConfig> {
     cfg.native_backend = args.flag("native");
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// The `--kernel` tier spec as an explicit native-kernel policy
+/// (`auto` = None: keep the backend's env-derived default).
+fn kernel_policy_from(args: &Args) -> Result<Option<KernelPolicy>> {
+    let v = args.get("kernel")?;
+    if v == "auto" {
+        return Ok(None);
+    }
+    KernelPolicy::parse(&v)
+        .map(Some)
+        .map_err(|e| anyhow::anyhow!("invalid --kernel: {e}"))
 }
 
 fn apply_quiet(args: &Args) {
@@ -376,11 +390,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let server = obs.serve_endpoint()?;
     let cfg = build_cfg(args)?;
     let engine = engine_for(&cfg)?;
-    let backend = make_backend(
+    let backend = make_backend_with_policy(
         engine,
         cfg.model_name(),
         cfg.batch,
         cfg.native_backend,
+        kernel_policy_from(args)?,
     )?;
     // the orchestrator takes the config by value; keep a copy only when
     // the ledger will need its identity after the run
@@ -411,7 +426,7 @@ fn cmd_run_scenario(path: &str, args: &Args) -> Result<()> {
         "alpha", "batch", "epochs", "rounds", "lr", "seed", "train-samples",
         "test-samples", "eval-every", "dropout", "straggler-prob", "straggler-delay-ms",
         "aggregator", "adversary", "adversary-fraction", "adversary-seed",
-        "workers", "listen", "connect", "client-id",
+        "kernel", "workers", "listen", "connect", "client-id",
     ];
     let offending: Vec<&str> = config_opts
         .iter()
@@ -506,11 +521,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("serve requires a federated protocol (fedavg | tfedavg)");
     }
     let engine = engine_for(&cfg)?;
-    let backend = make_backend(
+    let backend = make_backend_with_policy(
         engine,
         cfg.model_name(),
         cfg.batch,
         cfg.native_backend,
+        kernel_policy_from(args)?,
     )?;
     let binding = TcpBinding::bind(&args.get("listen")?)?;
     let addr = binding.local_addr()?;
@@ -560,11 +576,12 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     println!("client {client_id}: joined [{}]", cfg.summary());
     let engine = engine_for(&cfg)?;
-    let backend = make_backend(
+    let backend = make_backend_with_policy(
         engine,
         cfg.model_name(),
         cfg.batch,
         cfg.native_backend,
+        kernel_policy_from(args)?,
     )?;
     let shard = materialize_shard(&cfg, backend.schema().input_dim, client_id as usize)?;
     // the adversary cast is derived from the wire-delivered config, so a

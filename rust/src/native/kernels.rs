@@ -1,6 +1,7 @@
-//! Deterministic cache-blocked, row-parallel training kernels.
+//! Deterministic cache-blocked, row-parallel training kernels — plus the
+//! packed-ternary tier that computes directly on the 2-bit cells.
 //!
-//! Every kernel here obeys one contract: **per output element, the
+//! Every fp kernel here obeys one contract: **per output element, the
 //! reduction runs in the exact float-op order of the naive seed loops**
 //! (`k` ascending for the forward GEMM, batch index `i` ascending for the
 //! weight gradients, output index `o` ascending for the input gradients,
@@ -11,25 +12,43 @@
 //! `native_equiv` integration tests and the `--train` bench both assert
 //! this.
 //!
+//! The packed tier ([`packed_gemm_bias`] / [`packed_grad_input`] over
+//! [`PackedWeights`]) is a *separate* contract (DESIGN.md §15): it
+//! accumulates sign-selected sums over the packed bytes and applies the
+//! ternary scale once per output element, so its float-op order
+//! legitimately differs from the fp32 kernels. It carries its own naive
+//! reference oracles ([`packed_gemm_bias_naive`] /
+//! [`packed_grad_input_naive`]) and is bit-identical to *those* at any
+//! thread count.
+//!
 //! The naive kernels are kept as the reference implementations (they *are*
 //! the determinism contract, verbatim from the seed `NativeMlp`) and as
 //! the baseline for the `BENCH_train.json` throughput series.
 
 #![allow(clippy::too_many_arguments)]
 
+use crate::compress::ternary::{byte_expand_lut, cell_table, pack_row};
 use crate::util::parallel::parallel_map_indexed;
 
 /// Forward-GEMM column-block width: a 64-float output chunk stays hot in
-/// registers/L1 while the weight panel streams past.
+/// registers/L1 while the weight panel streams past. Kept a multiple of 4
+/// so packed-tier column blocks always start on a byte boundary.
 const COL_BLOCK: usize = 64;
+
+/// Fixed vector width for the fp inner loops: `chunks_exact` over 8 lanes
+/// gives the compiler a branch-free, known-trip-count body to vectorize.
+const LANES: usize = 8;
 
 /// Below roughly this many multiply-accumulates a call runs inline: the
 /// thread-scope setup would cost more than it saves.
 const PAR_MIN_MACS: usize = 1 << 17;
 
-/// How a layer executes its kernels: worker-thread count plus an escape
-/// hatch to the naive reference loops (bench baseline). Results are
-/// bit-identical at every setting — only wall time changes.
+/// How a layer executes its kernels: worker-thread count, an escape hatch
+/// to the naive reference loops (bench baseline), and the opt-in
+/// quantized tier that runs ternary layers directly on packed weights.
+/// Within a tier, results are bit-identical at every thread count — only
+/// wall time changes. The fp tiers (`quantized == false`) and the packed
+/// tier are *different* contracts with different float-op orders.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KernelPolicy {
     /// worker threads for row-parallel kernels (1 = inline, the default:
@@ -37,23 +56,66 @@ pub struct KernelPolicy {
     pub threads: usize,
     /// run the naive reference loops instead of the blocked kernels
     pub naive: bool,
+    /// quantized-domain tier: ternary layers keep their weights packed
+    /// (2-bit cells) and run the packed kernels; fp layers are unaffected
+    pub quantized: bool,
 }
 
 impl KernelPolicy {
     /// Blocked kernels on `threads` workers.
     pub fn threaded(threads: usize) -> KernelPolicy {
-        KernelPolicy { threads: threads.max(1), naive: false }
+        KernelPolicy { threads: threads.max(1), naive: false, quantized: false }
     }
 
     /// The naive seed loops — the determinism reference and bench baseline.
     pub fn reference() -> KernelPolicy {
-        KernelPolicy { threads: 1, naive: true }
+        KernelPolicy { threads: 1, naive: true, quantized: false }
+    }
+
+    /// Packed-ternary tier on `threads` workers: quantized layers compute
+    /// on the 2-bit representation, fp layers use the blocked kernels.
+    pub fn packed(threads: usize) -> KernelPolicy {
+        KernelPolicy { threads: threads.max(1), naive: false, quantized: true }
+    }
+
+    /// The packed tier's naive oracle loops — its own determinism
+    /// reference (the packed float-op order differs from fp32).
+    pub fn packed_reference() -> KernelPolicy {
+        KernelPolicy { threads: 1, naive: true, quantized: true }
+    }
+
+    /// Parse a CLI/manifest/env tier spec:
+    /// `naive` | `blocked[:threads]` | `packed[:threads]` | `packed-naive`.
+    pub fn parse(s: &str) -> Result<KernelPolicy, String> {
+        match s {
+            "naive" => return Ok(KernelPolicy::reference()),
+            "packed-naive" => return Ok(KernelPolicy::packed_reference()),
+            _ => {}
+        }
+        let (tier, threads) = match s.split_once(':') {
+            Some((tier, n)) => {
+                let n: usize = n
+                    .parse()
+                    .ok()
+                    .filter(|&n| (1..=1024).contains(&n))
+                    .ok_or_else(|| format!("bad thread count in kernel spec `{s}`"))?;
+                (tier, n)
+            }
+            None => (s, 1),
+        };
+        match tier {
+            "blocked" => Ok(KernelPolicy::threaded(threads)),
+            "packed" => Ok(KernelPolicy::packed(threads)),
+            _ => Err(format!(
+                "unknown kernel tier `{s}` (expected naive | blocked[:N] | packed[:N] | packed-naive)"
+            )),
+        }
     }
 }
 
 impl Default for KernelPolicy {
     fn default() -> KernelPolicy {
-        KernelPolicy { threads: 1, naive: false }
+        KernelPolicy { threads: 1, naive: false, quantized: false }
     }
 }
 
@@ -82,16 +144,17 @@ fn split_rows(n: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// `m[rows, cols]` -> `[cols, rows]`. Pure data movement (no float ops),
-/// so it never perturbs the bit-identity contract.
-fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    let mut t = vec![0f32; m.len()];
+/// `m[rows, cols]` -> `out[cols, rows]`, reusing the caller's scratch
+/// buffer (no per-call allocation). Pure data movement (no float ops), so
+/// it never perturbs the bit-identity contract.
+fn transpose_into(m: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(m.len(), 0.0);
     for r in 0..rows {
         for c in 0..cols {
-            t[c * rows + r] = m[r * cols + c];
+            out[c * rows + r] = m[r * cols + c];
         }
     }
-    t
 }
 
 // ---------------------------------------------------------------------------
@@ -125,6 +188,24 @@ pub fn gemm_bias_naive(
     }
 }
 
+/// `chunk[j] += s * src[j]` in explicitly vectorizable form: fixed
+/// `LANES`-wide bodies with no per-element branches, plus a scalar tail.
+/// Element-wise (no cross-lane reduction), so the per-element float-op
+/// order is untouched.
+#[inline]
+fn axpy_lanes(chunk: &mut [f32], src: &[f32], s: f32) {
+    let mut dst = chunk.chunks_exact_mut(LANES);
+    let mut srcs = src.chunks_exact(LANES);
+    for (d, v) in (&mut dst).zip(&mut srcs) {
+        for (dv, &sv) in d.iter_mut().zip(v) {
+            *dv += s * sv;
+        }
+    }
+    for (dv, &sv) in dst.into_remainder().iter_mut().zip(srcs.remainder()) {
+        *dv += s * sv;
+    }
+}
+
 /// One contiguous row block of the forward GEMM, column-blocked: each
 /// `COL_BLOCK`-wide output chunk accumulates while the full `k` loop
 /// streams past it, `k` ascending per element exactly like the naive
@@ -142,10 +223,7 @@ fn gemm_bias_block(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], n: usize, k
                 if xv == 0.0 {
                     continue;
                 }
-                let wrow = &w[kk * o + ob..kk * o + oe];
-                for (ov, &wv) in ochunk.iter_mut().zip(wrow) {
-                    *ov += xv * wv;
-                }
+                axpy_lanes(ochunk, &w[kk * o + ob..kk * o + oe], xv);
             }
             ob = oe;
         }
@@ -215,10 +293,10 @@ pub fn grad_weights_naive(
 }
 
 /// Blocked, weight-row-parallel gradient kernel: `g` is transposed once
-/// (data movement only) so every `dw[k, o]` reduces two contiguous
-/// length-`n` vectors; the reduction order (`i` ascending, zeros
-/// skipped) matches [`grad_weights_naive`] bit for bit. `dw`/`db` must
-/// arrive zero-filled.
+/// into the caller's `scratch` buffer (data movement only, no per-call
+/// allocation) so every `dw[k, o]` reduces two contiguous length-`n`
+/// vectors; the reduction order (`i` ascending, zeros skipped) matches
+/// [`grad_weights_naive`] bit for bit. `dw`/`db` must arrive zero-filled.
 pub fn grad_weights(
     a: &[f32],
     g: &[f32],
@@ -228,11 +306,13 @@ pub fn grad_weights(
     k: usize,
     o: usize,
     policy: &KernelPolicy,
+    scratch: &mut Vec<f32>,
 ) {
     if policy.naive {
         return grad_weights_naive(a, g, dw, db, n, k, o);
     }
-    let gt = transpose(g, n, o);
+    transpose_into(g, n, o, scratch);
+    let gt: &[f32] = scratch;
     for (oo, dv) in db.iter_mut().enumerate() {
         let grow = &gt[oo * n..(oo + 1) * n];
         let mut s = *dv;
@@ -296,8 +376,33 @@ pub fn grad_input_naive(g: &[f32], w: &[f32], dx: &mut [f32], n: usize, k: usize
     }
 }
 
-/// Row-parallel input-gradient GEMM (the inner reduction is already
-/// contiguous in both operands). Bit-identical to [`grad_input_naive`].
+/// One contiguous row block of the input-gradient GEMM over a
+/// pre-transposed weight matrix `wt[o, k]`: each `COL_BLOCK`-wide `dx`
+/// chunk accumulates while the full `o` loop streams past it, so the
+/// inner body is a contiguous branch-free lane loop. Per element the
+/// products `w[k, o] * g[i, o]` still accumulate with `o` ascending —
+/// bit-identical to [`grad_input_naive`].
+fn grad_input_block(g: &[f32], wt: &[f32], dx: &mut [f32], n: usize, k: usize, o: usize) {
+    for i in 0..n {
+        let grow = &g[i * o..(i + 1) * o];
+        let drow = &mut dx[i * k..(i + 1) * k];
+        let mut kb = 0;
+        while kb < k {
+            let ke = (kb + COL_BLOCK).min(k);
+            let chunk = &mut drow[kb..ke];
+            chunk.fill(0.0);
+            for (oo, &gv) in grow.iter().enumerate() {
+                axpy_lanes(chunk, &wt[oo * k + kb..oo * k + ke], gv);
+            }
+            kb = ke;
+        }
+    }
+}
+
+/// Blocked, row-parallel input-gradient GEMM: `w` is transposed once into
+/// the caller's `scratch` buffer (data movement only), then every row
+/// block runs the column-blocked kernel — no naive fallback at any thread
+/// count. Bit-identical to [`grad_input_naive`].
 pub fn grad_input(
     g: &[f32],
     w: &[f32],
@@ -306,24 +411,464 @@ pub fn grad_input(
     k: usize,
     o: usize,
     policy: &KernelPolicy,
+    scratch: &mut Vec<f32>,
 ) {
     if policy.naive {
         return grad_input_naive(g, w, dx, n, k, o);
     }
+    transpose_into(w, k, o, scratch);
+    let wt: &[f32] = scratch;
     let threads = effective_threads(policy.threads, n, n * k * o);
     if threads <= 1 {
-        return grad_input_naive(g, w, dx, n, k, o);
+        return grad_input_block(g, wt, dx, n, k, o);
     }
     let bounds = split_rows(n, threads);
     let chunks: Vec<Vec<f32>> = parallel_map_indexed(bounds.len(), threads, |bi| {
         let (lo, hi) = bounds[bi];
         let mut chunk = vec![0f32; (hi - lo) * k];
-        grad_input_naive(&g[lo * o..hi * o], w, &mut chunk, hi - lo, k, o);
+        grad_input_block(&g[lo * o..hi * o], wt, &mut chunk, hi - lo, k, o);
         chunk
     });
     for ((lo, hi), chunk) in bounds.into_iter().zip(chunks) {
         dx[lo * k..hi * k].copy_from_slice(&chunk);
     }
+}
+
+// ---------------------------------------------------------------------------
+// packed-ternary tier: compute on the 2-bit cells, never dequantize
+// ---------------------------------------------------------------------------
+
+/// A `[k, o]` ternary weight matrix kept in the codec's 2-bit cell
+/// encoding (00 -> 0, 01 -> +1, 10 -> -1), one byte-aligned packed row
+/// per input index `k` so column blocks start on byte boundaries. At 4
+/// trits/byte this is 1/16 the footprint of the dequantized fp32 matrix —
+/// an `mlp-large` 784x256 panel drops from ~800 KB (streams from L2/L3)
+/// to ~50 KB (lives in L1), which is where the packed tier's speed comes
+/// from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedWeights {
+    /// input dimension (logical rows)
+    pub k: usize,
+    /// output dimension (packed 4 trits/byte within a row)
+    pub o: usize,
+    /// bytes per packed row: `o.div_ceil(4)`
+    pub row_bytes: usize,
+    /// `k * row_bytes` cells, row-major, zero-padded per row
+    pub bytes: Vec<u8>,
+}
+
+impl PackedWeights {
+    /// Pack a `[k, o]` sign pattern ({-1, 0, +1} as i8, row-major) using
+    /// the codec's shared row packer — one trit encoder for wire and
+    /// kernels alike.
+    pub fn from_pattern(it: &[i8], k: usize, o: usize) -> PackedWeights {
+        assert_eq!(it.len(), k * o, "pattern length {} != {k}x{o}", it.len());
+        let row_bytes = o.div_ceil(4);
+        let mut bytes = Vec::with_capacity(k * row_bytes);
+        if o > 0 {
+            for row in it.chunks_exact(o) {
+                pack_row(row, &mut bytes);
+            }
+        }
+        PackedWeights { k, o, row_bytes, bytes }
+    }
+
+    #[inline]
+    fn row(&self, kk: usize) -> &[u8] {
+        &self.bytes[kk * self.row_bytes..(kk + 1) * self.row_bytes]
+    }
+}
+
+/// Decode one 2-bit cell of a packed row.
+#[inline]
+fn cell_code(row: &[u8], oo: usize) -> usize {
+    ((row[oo / 4] >> ((oo % 4) * 2)) & 3) as usize
+}
+
+/// Naive packed-forward oracle — **the packed tier's contract**, distinct
+/// from the fp32 one. Per output element, `k` ascends with the same
+/// zero-activation skip as the fp forward, but the accumulation is
+/// sign-selected unit sums scaled once at the end:
+///
+/// * symmetric scales (`ps` bitwise == `ns`, the FTTQ case): a single
+///   signed sum `acc += x * sign`, then `b + ps * acc`;
+/// * asymmetric scales (TTQ's `wp`/`wn`): a positive and a negative sum,
+///   then `b + (ps * pos - ns * neg)`.
+///
+/// The effective weight is `+ps` on +1 cells and `-ns` on -1 cells.
+pub fn packed_gemm_bias_naive(
+    x: &[f32],
+    pw: &PackedWeights,
+    b: &[f32],
+    ps: f32,
+    ns: f32,
+    out: &mut [f32],
+    n: usize,
+) {
+    let (k, o) = (pw.k, pw.o);
+    let sign = cell_table(1.0, -1.0);
+    let pos_t = cell_table(1.0, 0.0);
+    let neg_t = cell_table(0.0, 1.0);
+    let symmetric = ps.to_bits() == ns.to_bits();
+    for r in 0..n {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * o..(r + 1) * o];
+        for (oo, ov) in orow.iter_mut().enumerate() {
+            if symmetric {
+                let mut acc = 0f32;
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    acc += xv * sign[cell_code(pw.row(kk), oo)];
+                }
+                *ov = b[oo] + ps * acc;
+            } else {
+                let (mut pos, mut neg) = (0f32, 0f32);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let code = cell_code(pw.row(kk), oo);
+                    pos += xv * pos_t[code];
+                    neg += xv * neg_t[code];
+                }
+                *ov = b[oo] + (ps * pos - ns * neg);
+            }
+        }
+    }
+}
+
+/// One row block of the packed forward, column-blocked over byte-aligned
+/// 4-lane cells: the inner body is a branch-free LUT expansion
+/// (`byte -> 4 sign floats`) plus fused multiply-adds — fixed-width and
+/// vectorizable. Bit-identical to [`packed_gemm_bias_naive`]: per
+/// element, the same `k`-ascending sign-selected terms accumulate (the
+/// LUT's padding lanes contribute exact zeros to lanes that are never
+/// copied out).
+fn packed_gemm_block(
+    x: &[f32],
+    pw: &PackedWeights,
+    b: &[f32],
+    ps: f32,
+    ns: f32,
+    out: &mut [f32],
+    n: usize,
+) {
+    let (k, o) = (pw.k, pw.o);
+    let symmetric = ps.to_bits() == ns.to_bits();
+    let slut = byte_expand_lut(1.0, -1.0);
+    let plut = byte_expand_lut(1.0, 0.0);
+    let nlut = byte_expand_lut(0.0, 1.0);
+    for r in 0..n {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * o..(r + 1) * o];
+        let mut ob = 0;
+        while ob < o {
+            let oe = (ob + COL_BLOCK).min(o);
+            let nb = (oe - ob).div_ceil(4);
+            if symmetric {
+                let mut acc = [0f32; COL_BLOCK];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &pw.row(kk)[ob / 4..ob / 4 + nb];
+                    for (a4, &byte) in acc.chunks_exact_mut(4).zip(wrow) {
+                        let lane = &slut[byte as usize];
+                        a4[0] += xv * lane[0];
+                        a4[1] += xv * lane[1];
+                        a4[2] += xv * lane[2];
+                        a4[3] += xv * lane[3];
+                    }
+                }
+                for ((ov, &bv), &av) in orow[ob..oe].iter_mut().zip(&b[ob..oe]).zip(&acc) {
+                    *ov = bv + ps * av;
+                }
+            } else {
+                let mut pacc = [0f32; COL_BLOCK];
+                let mut nacc = [0f32; COL_BLOCK];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &pw.row(kk)[ob / 4..ob / 4 + nb];
+                    for ((p4, n4), &byte) in
+                        pacc.chunks_exact_mut(4).zip(nacc.chunks_exact_mut(4)).zip(wrow)
+                    {
+                        let pl = &plut[byte as usize];
+                        let nl = &nlut[byte as usize];
+                        p4[0] += xv * pl[0];
+                        p4[1] += xv * pl[1];
+                        p4[2] += xv * pl[2];
+                        p4[3] += xv * pl[3];
+                        n4[0] += xv * nl[0];
+                        n4[1] += xv * nl[1];
+                        n4[2] += xv * nl[2];
+                        n4[3] += xv * nl[3];
+                    }
+                }
+                for (j, (ov, &bv)) in orow[ob..oe].iter_mut().zip(&b[ob..oe]).enumerate() {
+                    *ov = bv + (ps * pacc[j] - ns * nacc[j]);
+                }
+            }
+            ob = oe;
+        }
+    }
+}
+
+/// Packed-ternary forward GEMM: `out[n, o] = x[n, k] @ W + b` where `W`
+/// is `+ps` on +1 cells and `-ns` on -1 cells, computed without ever
+/// materializing `W` in fp32. Row-parallel; bit-identical to
+/// [`packed_gemm_bias_naive`] at any `policy`.
+pub fn packed_gemm_bias(
+    x: &[f32],
+    pw: &PackedWeights,
+    b: &[f32],
+    ps: f32,
+    ns: f32,
+    out: &mut [f32],
+    n: usize,
+    policy: &KernelPolicy,
+) {
+    if policy.naive {
+        return packed_gemm_bias_naive(x, pw, b, ps, ns, out, n);
+    }
+    let (k, o) = (pw.k, pw.o);
+    let threads = effective_threads(policy.threads, n, n * k * o);
+    if threads <= 1 {
+        return packed_gemm_block(x, pw, b, ps, ns, out, n);
+    }
+    let bounds = split_rows(n, threads);
+    let chunks: Vec<Vec<f32>> = parallel_map_indexed(bounds.len(), threads, |bi| {
+        let (lo, hi) = bounds[bi];
+        let mut chunk = vec![0f32; (hi - lo) * o];
+        packed_gemm_block(&x[lo * k..hi * k], pw, b, ps, ns, &mut chunk, hi - lo);
+        chunk
+    });
+    for ((lo, hi), chunk) in bounds.into_iter().zip(chunks) {
+        out[lo * o..hi * o].copy_from_slice(&chunk);
+    }
+}
+
+/// Naive packed input-gradient oracle — the packed tier's backward
+/// contract. `dx[i, k] = sum_o g[i, o] * sign(W[k, o])`, accumulated in
+/// four lane partials (`o mod 4`, each `o`-ascending) and combined as
+/// `(a0 + a1) + (a2 + a3)` so the fast path's 4-lane byte expansion is
+/// the same float-op order; scales apply once per element like the
+/// forward.
+pub fn packed_grad_input_naive(
+    g: &[f32],
+    pw: &PackedWeights,
+    ps: f32,
+    ns: f32,
+    dx: &mut [f32],
+    n: usize,
+) {
+    let (k, o) = (pw.k, pw.o);
+    let sign = cell_table(1.0, -1.0);
+    let pos_t = cell_table(1.0, 0.0);
+    let neg_t = cell_table(0.0, 1.0);
+    let symmetric = ps.to_bits() == ns.to_bits();
+    for i in 0..n {
+        let grow = &g[i * o..(i + 1) * o];
+        let drow = &mut dx[i * k..(i + 1) * k];
+        for (kk, dv) in drow.iter_mut().enumerate() {
+            let wrow = pw.row(kk);
+            if symmetric {
+                let mut a = [0f32; 4];
+                for (oo, &gv) in grow.iter().enumerate() {
+                    a[oo % 4] += gv * sign[cell_code(wrow, oo)];
+                }
+                *dv = ps * ((a[0] + a[1]) + (a[2] + a[3]));
+            } else {
+                let mut pa = [0f32; 4];
+                let mut na = [0f32; 4];
+                for (oo, &gv) in grow.iter().enumerate() {
+                    let code = cell_code(wrow, oo);
+                    pa[oo % 4] += gv * pos_t[code];
+                    na[oo % 4] += gv * neg_t[code];
+                }
+                *dv = ps * ((pa[0] + pa[1]) + (pa[2] + pa[3]))
+                    - ns * ((na[0] + na[1]) + (na[2] + na[3]));
+            }
+        }
+    }
+}
+
+/// One row block of the packed input gradient: per `(i, k)` the packed
+/// row streams byte-by-byte through the sign LUT against four gradient
+/// lanes — branch-free and fixed-width. Bit-identical to
+/// [`packed_grad_input_naive`] (same lane partials, same combine).
+fn packed_grad_input_block(
+    g: &[f32],
+    pw: &PackedWeights,
+    ps: f32,
+    ns: f32,
+    dx: &mut [f32],
+    n: usize,
+) {
+    let (k, o) = (pw.k, pw.o);
+    let full = o / 4;
+    let rem = o % 4;
+    let symmetric = ps.to_bits() == ns.to_bits();
+    let slut = byte_expand_lut(1.0, -1.0);
+    let plut = byte_expand_lut(1.0, 0.0);
+    let nlut = byte_expand_lut(0.0, 1.0);
+    for i in 0..n {
+        let grow = &g[i * o..(i + 1) * o];
+        let drow = &mut dx[i * k..(i + 1) * k];
+        for (kk, dv) in drow.iter_mut().enumerate() {
+            let wrow = pw.row(kk);
+            if symmetric {
+                let mut a = [0f32; 4];
+                for (g4, &byte) in grow.chunks_exact(4).zip(wrow) {
+                    let lane = &slut[byte as usize];
+                    a[0] += g4[0] * lane[0];
+                    a[1] += g4[1] * lane[1];
+                    a[2] += g4[2] * lane[2];
+                    a[3] += g4[3] * lane[3];
+                }
+                if rem != 0 {
+                    let lane = &slut[wrow[full] as usize];
+                    for (j, &gv) in grow[full * 4..].iter().enumerate() {
+                        a[j] += gv * lane[j];
+                    }
+                }
+                *dv = ps * ((a[0] + a[1]) + (a[2] + a[3]));
+            } else {
+                let mut pa = [0f32; 4];
+                let mut na = [0f32; 4];
+                for (g4, &byte) in grow.chunks_exact(4).zip(wrow) {
+                    let pl = &plut[byte as usize];
+                    let nl = &nlut[byte as usize];
+                    pa[0] += g4[0] * pl[0];
+                    pa[1] += g4[1] * pl[1];
+                    pa[2] += g4[2] * pl[2];
+                    pa[3] += g4[3] * pl[3];
+                    na[0] += g4[0] * nl[0];
+                    na[1] += g4[1] * nl[1];
+                    na[2] += g4[2] * nl[2];
+                    na[3] += g4[3] * nl[3];
+                }
+                if rem != 0 {
+                    let pl = &plut[wrow[full] as usize];
+                    let nl = &nlut[wrow[full] as usize];
+                    for (j, &gv) in grow[full * 4..].iter().enumerate() {
+                        pa[j] += gv * pl[j];
+                        na[j] += gv * nl[j];
+                    }
+                }
+                *dv = ps * ((pa[0] + pa[1]) + (pa[2] + pa[3]))
+                    - ns * ((na[0] + na[1]) + (na[2] + na[3]));
+            }
+        }
+    }
+}
+
+/// Packed-ternary input-gradient GEMM. Row-parallel; bit-identical to
+/// [`packed_grad_input_naive`] at any `policy`.
+pub fn packed_grad_input(
+    g: &[f32],
+    pw: &PackedWeights,
+    ps: f32,
+    ns: f32,
+    dx: &mut [f32],
+    n: usize,
+    policy: &KernelPolicy,
+) {
+    if policy.naive {
+        return packed_grad_input_naive(g, pw, ps, ns, dx, n);
+    }
+    let (k, o) = (pw.k, pw.o);
+    let threads = effective_threads(policy.threads, n, n * k * o);
+    if threads <= 1 {
+        return packed_grad_input_block(g, pw, ps, ns, dx, n);
+    }
+    let bounds = split_rows(n, threads);
+    let chunks: Vec<Vec<f32>> = parallel_map_indexed(bounds.len(), threads, |bi| {
+        let (lo, hi) = bounds[bi];
+        let mut chunk = vec![0f32; (hi - lo) * k];
+        packed_grad_input_block(&g[lo * o..hi * o], pw, ps, ns, &mut chunk, hi - lo);
+        chunk
+    });
+    for ((lo, hi), chunk) in bounds.into_iter().zip(chunks) {
+        dx[lo * k..hi * k].copy_from_slice(&chunk);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// popcount / bit-slicing fast path for binary activations
+// ---------------------------------------------------------------------------
+
+/// Bit-sliced view of a [`PackedWeights`] matrix: per output column, one
+/// positive and one negative bit-plane over `k` (`u64` words). For
+/// `x ∈ {0, 1}` rows — the sparse post-ReLU-of-binarized case — the
+/// matmul degenerates to `popcount(x & plane)`, 64 MACs per instruction.
+///
+/// Counts are exact integers (any `k < 2^24` is exactly representable in
+/// f32), so [`BitPlanes::matvec_binary`] reproduces the dual-accumulator
+/// branch of [`packed_gemm_bias_naive`] bit for bit on binary input.
+pub struct BitPlanes {
+    /// input dimension
+    pub k: usize,
+    /// output dimension
+    pub o: usize,
+    words: usize,
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+}
+
+impl BitPlanes {
+    /// Slice a packed matrix into per-column sign planes.
+    pub fn from_packed(pw: &PackedWeights) -> BitPlanes {
+        let words = pw.k.div_ceil(64);
+        let mut pos = vec![0u64; pw.o * words];
+        let mut neg = vec![0u64; pw.o * words];
+        for kk in 0..pw.k {
+            let wrow = pw.row(kk);
+            let bit = 1u64 << (kk % 64);
+            let word = kk / 64;
+            for oo in 0..pw.o {
+                match cell_code(wrow, oo) {
+                    0b01 => pos[oo * words + word] |= bit,
+                    0b10 => neg[oo * words + word] |= bit,
+                    _ => {}
+                }
+            }
+        }
+        BitPlanes { k: pw.k, o: pw.o, words, pos, neg }
+    }
+
+    /// `out[o] = b[o] + (ps * pos_count - ns * neg_count)` for one binary
+    /// activation row packed by [`pack_activation_bits`].
+    pub fn matvec_binary(&self, xbits: &[u64], b: &[f32], ps: f32, ns: f32, out: &mut [f32]) {
+        assert_eq!(xbits.len(), self.words);
+        assert_eq!(out.len(), self.o);
+        for (oo, ov) in out.iter_mut().enumerate() {
+            let pp = &self.pos[oo * self.words..(oo + 1) * self.words];
+            let np = &self.neg[oo * self.words..(oo + 1) * self.words];
+            let mut pc = 0u32;
+            let mut nc = 0u32;
+            for ((&xw, &pv), &nv) in xbits.iter().zip(pp).zip(np) {
+                pc += (xw & pv).count_ones();
+                nc += (xw & nv).count_ones();
+            }
+            *ov = b[oo] + (ps * pc as f32 - ns * nc as f32);
+        }
+    }
+}
+
+/// Pack a `{0, 1}`-valued activation row into a bitmask (bit `k` set iff
+/// `x[k] != 0`), the input side of [`BitPlanes::matvec_binary`].
+pub fn pack_activation_bits(x: &[f32]) -> Vec<u64> {
+    let mut out = vec![0u64; x.len().div_ceil(64)];
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv != 0.0 {
+            out[kk / 64] |= 1 << (kk % 64);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -343,6 +888,10 @@ mod tests {
                 }
             })
             .collect()
+    }
+
+    fn trits(rng: &mut Pcg, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.below(3) as i8 - 1).collect()
     }
 
     fn bits(v: &[f32]) -> Vec<u32> {
@@ -378,7 +927,18 @@ mod tests {
             for threads in [1, 2, 5] {
                 let mut dw = vec![0f32; k * o];
                 let mut db = vec![0f32; o];
-                grad_weights(&a, &g, &mut dw, &mut db, n, k, o, &KernelPolicy::threaded(threads));
+                let mut scratch = Vec::new();
+                grad_weights(
+                    &a,
+                    &g,
+                    &mut dw,
+                    &mut db,
+                    n,
+                    k,
+                    o,
+                    &KernelPolicy::threaded(threads),
+                    &mut scratch,
+                );
                 assert_eq!(bits(&dw_want), bits(&dw), "dw n={n} k={k} o={o} t={threads}");
                 assert_eq!(bits(&db_want), bits(&db), "db n={n} k={k} o={o} t={threads}");
             }
@@ -395,9 +955,145 @@ mod tests {
             grad_input_naive(&g, &w, &mut want, n, k, o);
             for threads in [1, 2, 7] {
                 let mut got = vec![0f32; n * k];
-                grad_input(&g, &w, &mut got, n, k, o, &KernelPolicy::threaded(threads));
+                let mut scratch = Vec::new();
+                grad_input(
+                    &g,
+                    &w,
+                    &mut got,
+                    n,
+                    k,
+                    o,
+                    &KernelPolicy::threaded(threads),
+                    &mut scratch,
+                );
                 assert_eq!(bits(&want), bits(&got), "n={n} k={k} o={o} t={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_its_oracle_at_any_thread_count() {
+        let mut rng = Pcg::seeded(4);
+        // shapes that hit o % 4 != 0 padding, o < 4, and multi-block o
+        for &(n, k, o) in &[(1usize, 5usize, 3usize), (7, 33, 65), (13, 784, 30), (64, 130, 66)] {
+            let x = randn(&mut rng, n * k, true);
+            let b = randn(&mut rng, o, false);
+            let pw = PackedWeights::from_pattern(&trits(&mut rng, k * o), k, o);
+            for &(ps, ns) in &[(0.05f32, 0.05f32), (0.04, 0.07)] {
+                let mut want = vec![0f32; n * o];
+                packed_gemm_bias_naive(&x, &pw, &b, ps, ns, &mut want, n);
+                for threads in [1, 2, 3, 8] {
+                    let mut got = vec![0f32; n * o];
+                    packed_gemm_bias(
+                        &x,
+                        &pw,
+                        &b,
+                        ps,
+                        ns,
+                        &mut got,
+                        n,
+                        &KernelPolicy::packed(threads),
+                    );
+                    assert_eq!(
+                        bits(&want),
+                        bits(&got),
+                        "n={n} k={k} o={o} t={threads} ps={ps} ns={ns}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_grad_input_matches_its_oracle_at_any_thread_count() {
+        let mut rng = Pcg::seeded(5);
+        for &(n, k, o) in &[(2usize, 3usize, 5usize), (11, 70, 29), (64, 256, 66)] {
+            let g = randn(&mut rng, n * o, true);
+            let pw = PackedWeights::from_pattern(&trits(&mut rng, k * o), k, o);
+            for &(ps, ns) in &[(0.05f32, 0.05f32), (0.04, 0.07)] {
+                let mut want = vec![0f32; n * k];
+                packed_grad_input_naive(&g, &pw, ps, ns, &mut want, n);
+                for threads in [1, 2, 7] {
+                    let mut got = vec![0f32; n * k];
+                    packed_grad_input(
+                        &g,
+                        &pw,
+                        ps,
+                        ns,
+                        &mut got,
+                        n,
+                        &KernelPolicy::packed(threads),
+                    );
+                    assert_eq!(
+                        bits(&want),
+                        bits(&got),
+                        "n={n} k={k} o={o} t={threads} ps={ps} ns={ns}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_agrees_with_dense_gemm_on_effective_weights() {
+        // not bit-identical (different contracts) but numerically tight
+        let mut rng = Pcg::seeded(6);
+        let (n, k, o) = (5usize, 37usize, 18usize);
+        let x = randn(&mut rng, n * k, true);
+        let b = randn(&mut rng, o, false);
+        let it = trits(&mut rng, k * o);
+        let (ps, ns) = (0.04f32, 0.07f32);
+        let w: Vec<f32> = it
+            .iter()
+            .map(|&s| match s {
+                1 => ps,
+                -1 => -ns,
+                _ => 0.0,
+            })
+            .collect();
+        let pw = PackedWeights::from_pattern(&it, k, o);
+        let mut dense = vec![0f32; n * o];
+        gemm_bias_naive(&x, &w, &b, &mut dense, n, k, o);
+        let mut packed = vec![0f32; n * o];
+        packed_gemm_bias_naive(&x, &pw, &b, ps, ns, &mut packed, n);
+        for (d, p) in dense.iter().zip(&packed) {
+            assert!((d - p).abs() < 1e-4, "dense={d} packed={p}");
+        }
+    }
+
+    #[test]
+    fn popcount_matvec_matches_packed_oracle_on_binary_rows() {
+        let mut rng = Pcg::seeded(7);
+        for &(k, o) in &[(5usize, 3usize), (130, 66), (784, 30)] {
+            let x: Vec<f32> = (0..k).map(|_| (rng.below(2)) as f32).collect();
+            let b = randn(&mut rng, o, false);
+            let pw = PackedWeights::from_pattern(&trits(&mut rng, k * o), k, o);
+            // asymmetric scales force the oracle's dual pos/neg branch,
+            // which is the expression popcount reproduces exactly
+            let (ps, ns) = (0.04f32, 0.07f32);
+            let mut want = vec![0f32; o];
+            packed_gemm_bias_naive(&x, &pw, &b, ps, ns, &mut want, 1);
+            let planes = BitPlanes::from_packed(&pw);
+            let xbits = pack_activation_bits(&x);
+            let mut got = vec![0f32; o];
+            planes.matvec_binary(&xbits, &b, ps, ns, &mut got);
+            assert_eq!(bits(&want), bits(&got), "k={k} o={o}");
+        }
+    }
+
+    #[test]
+    fn kernel_policy_parses_tier_specs() {
+        assert_eq!(KernelPolicy::parse("naive").unwrap(), KernelPolicy::reference());
+        assert_eq!(KernelPolicy::parse("blocked").unwrap(), KernelPolicy::threaded(1));
+        assert_eq!(KernelPolicy::parse("blocked:4").unwrap(), KernelPolicy::threaded(4));
+        assert_eq!(KernelPolicy::parse("packed").unwrap(), KernelPolicy::packed(1));
+        assert_eq!(KernelPolicy::parse("packed:2").unwrap(), KernelPolicy::packed(2));
+        assert_eq!(
+            KernelPolicy::parse("packed-naive").unwrap(),
+            KernelPolicy::packed_reference()
+        );
+        for bad in ["", "simd", "blocked:0", "blocked:x", "packed:99999", "naive:2"] {
+            assert!(KernelPolicy::parse(bad).is_err(), "{bad}");
         }
     }
 
@@ -417,9 +1113,35 @@ mod tests {
     #[test]
     fn transpose_roundtrip() {
         let m: Vec<f32> = (0..12).map(|i| i as f32).collect();
-        let t = transpose(&m, 3, 4);
+        let mut t = Vec::new();
+        transpose_into(&m, 3, 4, &mut t);
         assert_eq!(t[0], 0.0);
         assert_eq!(t[1], 4.0); // t[c=0, r=1] = m[r=1, c=0]
-        assert_eq!(transpose(&t, 4, 3), m);
+        let mut back = Vec::new();
+        transpose_into(&t, 4, 3, &mut back);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn packed_weights_rows_are_byte_aligned() {
+        let it = trits(&mut Pcg::seeded(8), 3 * 5);
+        let pw = PackedWeights::from_pattern(&it, 3, 5);
+        assert_eq!(pw.row_bytes, 2);
+        assert_eq!(pw.bytes.len(), 6);
+        for kk in 0..3 {
+            for oo in 0..5 {
+                let code = cell_code(pw.row(kk), oo);
+                let want = match it[kk * 5 + oo] {
+                    1 => 0b01,
+                    -1 => 0b10,
+                    _ => 0b00,
+                };
+                assert_eq!(code, want, "kk={kk} oo={oo}");
+            }
+            // padding lanes in the trailing byte stay zero
+            for oo in 5..8 {
+                assert_eq!(cell_code(pw.row(kk), oo), 0, "kk={kk} pad oo={oo}");
+            }
+        }
     }
 }

@@ -11,7 +11,9 @@
 
 use crate::model::ParamSet;
 use crate::native::kernels::{self, KernelPolicy};
-use crate::native::layers::{apply_sgd, quantize_weights, Layer, QuantSlot, QuantSpec, TrainCache};
+use crate::native::layers::{
+    apply_sgd, packed_scales, quantize_weights, Layer, QuantSlot, QuantSpec, TrainCache,
+};
 
 /// Stride-1, zero-padded "same" 2-D convolution over `[h, w, cin]` NHWC
 /// input; weights `[kh, kw, cin, cout]` row-major (so the flattened
@@ -66,12 +68,18 @@ impl Layer for Conv2d {
     ) -> (Vec<f32>, TrainCache) {
         let w = &params.tensors[self.weight].data;
         let b = &params.tensors[self.bias].data;
-        let quant_cache = quantize_weights(w, self.quant, q, factors);
-        let w_eff: &[f32] = if quant_cache.w_eff.is_empty() { w } else { &quant_cache.w_eff };
+        let quant_cache = quantize_weights(w, self.quant, q, factors, kp, self.kdim(), self.cout);
         let col = im2col(x, n, self.h, self.w, self.cin, self.kh, self.kw);
         let rows = n * self.h * self.w;
         let mut out = vec![0f32; rows * self.cout];
-        kernels::gemm_bias(&col, w_eff, b, &mut out, rows, self.kdim(), self.cout, kp);
+        if let Some(pw) = &quant_cache.packed {
+            // packed tier: the lowered GEMM runs on the 2-bit cells
+            let (ps, ns) = packed_scales(self.quant.unwrap(), q, factors);
+            kernels::packed_gemm_bias(&col, pw, b, ps, ns, &mut out, rows, kp);
+        } else {
+            let w_eff: &[f32] = if quant_cache.w_eff.is_empty() { w } else { &quant_cache.w_eff };
+            kernels::gemm_bias(&col, w_eff, b, &mut out, rows, self.kdim(), self.cout, kp);
+        }
         (out, TrainCache { col, ..quant_cache })
     }
 
@@ -80,7 +88,7 @@ impl Layer for Conv2d {
         params: &mut ParamSet,
         q: QuantSpec,
         factors: &mut [f32],
-        cache: &TrainCache,
+        cache: &mut TrainCache,
         _x: &[f32],
         dy: &[f32],
         n: usize,
@@ -92,15 +100,39 @@ impl Layer for Conv2d {
         let kdim = self.kdim();
         let mut dw = vec![0f32; kdim * self.cout];
         let mut db = vec![0f32; self.cout];
-        kernels::grad_weights(&cache.col, dy, &mut dw, &mut db, rows, kdim, self.cout, kp);
+        kernels::grad_weights(
+            &cache.col,
+            dy,
+            &mut dw,
+            &mut db,
+            rows,
+            kdim,
+            self.cout,
+            kp,
+            &mut cache.scratch,
+        );
         let dx = if need_dx {
-            let w_eff: &[f32] = if cache.w_eff.is_empty() {
-                &params.tensors[self.weight].data
-            } else {
-                &cache.w_eff
-            };
             let mut dcol = vec![0f32; rows * kdim];
-            kernels::grad_input(dy, w_eff, &mut dcol, rows, kdim, self.cout, kp);
+            if let Some(pw) = &cache.packed {
+                let (ps, ns) = packed_scales(self.quant.unwrap(), q, factors);
+                kernels::packed_grad_input(dy, pw, ps, ns, &mut dcol, rows, kp);
+            } else {
+                let w_eff: &[f32] = if cache.w_eff.is_empty() {
+                    &params.tensors[self.weight].data
+                } else {
+                    &cache.w_eff
+                };
+                kernels::grad_input(
+                    dy,
+                    w_eff,
+                    &mut dcol,
+                    rows,
+                    kdim,
+                    self.cout,
+                    kp,
+                    &mut cache.scratch,
+                );
+            }
             col2im(&dcol, n, self.h, self.w, self.cin, self.kh, self.kw)
         } else {
             Vec::new()
@@ -273,7 +305,7 @@ impl Layer for AvgPool2 {
         _params: &mut ParamSet,
         _q: QuantSpec,
         _factors: &mut [f32],
-        _cache: &TrainCache,
+        _cache: &mut TrainCache,
         _x: &[f32],
         dy: &[f32],
         n: usize,
@@ -351,7 +383,7 @@ impl Layer for Flatten {
         _params: &mut ParamSet,
         _q: QuantSpec,
         _factors: &mut [f32],
-        _cache: &TrainCache,
+        _cache: &mut TrainCache,
         _x: &[f32],
         dy: &[f32],
         _n: usize,
@@ -417,7 +449,7 @@ mod tests {
             &mut params,
             fp_spec(),
             &mut [],
-            &TrainCache::default(),
+            &mut TrainCache::default(),
             &x,
             &[4.0],
             1,

@@ -2,7 +2,9 @@
 
 use crate::model::ParamSet;
 use crate::native::kernels::{self, KernelPolicy};
-use crate::native::layers::{apply_sgd, quantize_weights, Layer, QuantSlot, QuantSpec, TrainCache};
+use crate::native::layers::{
+    apply_sgd, packed_scales, quantize_weights, Layer, QuantSlot, QuantSpec, TrainCache,
+};
 
 /// `out = x @ w + b`, weights `[inp, out]` row-major at `ParamSet`
 /// index `weight`, bias `[out]` at `bias`. Quantized layers carry a
@@ -48,10 +50,16 @@ impl Layer for Dense {
     ) -> (Vec<f32>, TrainCache) {
         let w = &params.tensors[self.weight].data;
         let b = &params.tensors[self.bias].data;
-        let cache = quantize_weights(w, self.quant, q, factors);
-        let w_eff: &[f32] = if cache.w_eff.is_empty() { w } else { &cache.w_eff };
+        let cache = quantize_weights(w, self.quant, q, factors, kp, self.inp, self.out);
         let mut out = vec![0f32; n * self.out];
-        kernels::gemm_bias(x, w_eff, b, &mut out, n, self.inp, self.out, kp);
+        if let Some(pw) = &cache.packed {
+            // packed tier: compute on the 2-bit cells directly
+            let (ps, ns) = packed_scales(self.quant.unwrap(), q, factors);
+            kernels::packed_gemm_bias(x, pw, b, ps, ns, &mut out, n, kp);
+        } else {
+            let w_eff: &[f32] = if cache.w_eff.is_empty() { w } else { &cache.w_eff };
+            kernels::gemm_bias(x, w_eff, b, &mut out, n, self.inp, self.out, kp);
+        }
         (out, cache)
     }
 
@@ -60,7 +68,7 @@ impl Layer for Dense {
         params: &mut ParamSet,
         q: QuantSpec,
         factors: &mut [f32],
-        cache: &TrainCache,
+        cache: &mut TrainCache,
         x: &[f32],
         dy: &[f32],
         n: usize,
@@ -71,17 +79,41 @@ impl Layer for Dense {
         // grads of the effective (possibly ternary) weights
         let mut dw = vec![0f32; self.inp * self.out];
         let mut db = vec![0f32; self.out];
-        kernels::grad_weights(x, dy, &mut dw, &mut db, n, self.inp, self.out, kp);
+        kernels::grad_weights(
+            x,
+            dy,
+            &mut dw,
+            &mut db,
+            n,
+            self.inp,
+            self.out,
+            kp,
+            &mut cache.scratch,
+        );
         // dL/dx from the *pre-update* effective weights (seed order:
         // dprev before the parameter step)
         let dx = if need_dx {
-            let w_eff: &[f32] = if cache.w_eff.is_empty() {
-                &params.tensors[self.weight].data
-            } else {
-                &cache.w_eff
-            };
             let mut dx = vec![0f32; n * self.inp];
-            kernels::grad_input(dy, w_eff, &mut dx, n, self.inp, self.out, kp);
+            if let Some(pw) = &cache.packed {
+                let (ps, ns) = packed_scales(self.quant.unwrap(), q, factors);
+                kernels::packed_grad_input(dy, pw, ps, ns, &mut dx, n, kp);
+            } else {
+                let w_eff: &[f32] = if cache.w_eff.is_empty() {
+                    &params.tensors[self.weight].data
+                } else {
+                    &cache.w_eff
+                };
+                kernels::grad_input(
+                    dy,
+                    w_eff,
+                    &mut dx,
+                    n,
+                    self.inp,
+                    self.out,
+                    kp,
+                    &mut cache.scratch,
+                );
+            }
             dx
         } else {
             Vec::new()

@@ -37,7 +37,7 @@ pub use relu::Relu;
 
 use crate::model::registry::{dense_from_schema, model_def, LayerSpec, ModelDef, ModelError};
 use crate::model::{ModelSchema, ParamSet};
-use crate::native::kernels::KernelPolicy;
+use crate::native::kernels::{KernelPolicy, PackedWeights};
 use crate::obs::{
     self,
     metrics::{Counter, Gauge},
@@ -79,10 +79,17 @@ pub struct TrainCache {
     /// fttq/ttq: the batch's ternary pattern of the latent weights
     pub pattern: Vec<i8>,
     /// fttq/ttq: the dequantized effective weights the forward used
-    /// (empty = forward read the latent weights directly)
+    /// (empty = forward read the latent weights directly, or the packed
+    /// tier kept the weights in 2-bit cells)
     pub w_eff: Vec<f32>,
+    /// packed tier: the 2-bit effective weights the forward computed on
+    /// (`None` on the fp tiers)
+    pub packed: Option<PackedWeights>,
     /// conv: the batch's im2col matrix (reused by both gradient GEMMs)
     pub col: Vec<f32>,
+    /// kernel scratch (transpose staging), reused across the backward's
+    /// GEMMs instead of per-call allocations
+    pub scratch: Vec<f32>,
 }
 
 /// One node of the compute graph. Layers are stateless and shareable
@@ -121,7 +128,7 @@ pub trait Layer: Send + Sync {
         params: &mut ParamSet,
         q: QuantSpec,
         factors: &mut [f32],
-        cache: &TrainCache,
+        cache: &mut TrainCache,
         x: &[f32],
         dy: &[f32],
         n: usize,
@@ -131,40 +138,66 @@ pub trait Layer: Send + Sync {
     ) -> Vec<f32>;
 }
 
-/// Quantization-aware effective weights for one layer's latent tensor.
-/// Fp mode and unquantized layers return an empty cache (the caller uses
-/// the latent weights directly — no copy); fttq/ttq ternarize and cache
-/// the pattern + dequantized weights. The fttq path runs the exact seed
-/// pipeline (`fttq_quantize` then `dequantize`), preserving bit-identity.
+/// Quantization-aware effective weights for one layer's latent tensor
+/// (a logical `[k, o]` matrix). Fp mode and unquantized layers return an
+/// empty cache (the caller uses the latent weights directly — no copy);
+/// fttq/ttq ternarize and cache the pattern plus either the dequantized
+/// weights (fp tiers — the exact seed pipeline, preserving bit-identity)
+/// or, on the packed tier (`kp.quantized`), the 2-bit [`PackedWeights`]
+/// the packed kernels compute on — fp32 weights are never materialized.
 pub(crate) fn quantize_weights(
     w: &[f32],
     slot: Option<QuantSlot>,
     q: QuantSpec,
     factors: &[f32],
+    kp: &KernelPolicy,
+    k: usize,
+    o: usize,
 ) -> TrainCache {
-    match (q.mode, slot) {
-        (Mode::Fp, _) | (_, None) => TrainCache::default(),
-        (Mode::Fttq, Some(s)) => {
-            let (it, _) = quant::fttq_quantize(w, q.t_k);
-            let w_eff = quant::dequantize(&it, factors[s.q]);
-            TrainCache { pattern: it, w_eff, col: Vec::new() }
-        }
-        (Mode::Ttq, Some(s)) => {
+    let s = match (q.mode, slot) {
+        (Mode::Fp, _) | (_, None) => return TrainCache::default(),
+        (_, Some(s)) => s,
+    };
+    let it = match q.mode {
+        Mode::Fttq => quant::fttq_quantize(w, q.t_k).0,
+        Mode::Ttq => {
             // Zhu et al.: scale, eq.-5 max threshold, {+wp, 0, -wn}
             let theta_s = quant::scale(w);
             let delta = quant::threshold_max(&theta_s, q.t_k);
-            let it = quant::ternarize(&theta_s, delta);
+            quant::ternarize(&theta_s, delta)
+        }
+        Mode::Fp => unreachable!(),
+    };
+    if kp.quantized {
+        let packed = PackedWeights::from_pattern(&it, k, o);
+        return TrainCache { pattern: it, packed: Some(packed), ..TrainCache::default() };
+    }
+    let w_eff = match q.mode {
+        Mode::Fttq => quant::dequantize(&it, factors[s.q]),
+        Mode::Ttq => {
             let (wp, wn) = (factors[s.q], factors[q.nq + s.q]);
-            let w_eff = it
-                .iter()
+            it.iter()
                 .map(|t| match t.cmp(&0) {
                     Ordering::Greater => wp,
                     Ordering::Less => -wn,
                     Ordering::Equal => 0.0,
                 })
-                .collect();
-            TrainCache { pattern: it, w_eff, col: Vec::new() }
+                .collect()
         }
+        Mode::Fp => unreachable!(),
+    };
+    TrainCache { pattern: it, w_eff, ..TrainCache::default() }
+}
+
+/// The packed tier's scale pair for one quantized layer: the effective
+/// weight is `+ps` on +1 cells and `-ns` on -1 cells. FTTQ has one
+/// trained factor (`ps == ns == w^q`, the symmetric single-accumulator
+/// kernel path); TTQ has two (`w_p` / `w_n`, the dual-sum path).
+pub(crate) fn packed_scales(slot: QuantSlot, q: QuantSpec, factors: &[f32]) -> (f32, f32) {
+    match q.mode {
+        Mode::Fttq => (factors[slot.q], factors[slot.q]),
+        Mode::Ttq => (factors[slot.q], factors[q.nq + slot.q]),
+        Mode::Fp => unreachable!("fp layers have no packed weights"),
     }
 }
 
@@ -548,7 +581,7 @@ impl LayerGraph {
                 params,
                 q,
                 factors,
-                &caches[li],
+                &mut caches[li],
                 &acts[li],
                 &dact,
                 n,
@@ -807,13 +840,40 @@ mod tests {
             let dim = def.schema.input_dim;
             let (x, y) = toy_batch(&mut rng, 8, dim, def.schema.num_classes);
             for mode in [Mode::Fp, Mode::Fttq, Mode::Ttq] {
-                let net =
-                    LayerGraph::from_def(&def, mode, 0.05, KernelPolicy::threaded(2)).unwrap();
-                let mut factors = vec![0.05f32; net.factors_len()];
-                let loss = net.train_batch(&mut params, &mut factors, &x, &y, 8, 0.01).unwrap();
-                assert!(loss.is_finite(), "{name} {mode:?}");
-                assert!(params.is_finite(), "{name} {mode:?}");
+                for policy in [KernelPolicy::threaded(2), KernelPolicy::packed(2)] {
+                    let net = LayerGraph::from_def(&def, mode, 0.05, policy).unwrap();
+                    let mut factors = vec![0.05f32; net.factors_len()];
+                    let loss =
+                        net.train_batch(&mut params, &mut factors, &x, &y, 8, 0.01).unwrap();
+                    assert!(loss.is_finite(), "{name} {mode:?} {policy:?}");
+                    assert!(params.is_finite(), "{name} {mode:?} {policy:?}");
+                }
             }
         }
+    }
+
+    #[test]
+    fn packed_tier_training_tracks_the_fp_tier() {
+        // the packed tier's float-op order differs from the fp tier's, so
+        // results are not bit-identical — but the math is the same, and a
+        // short fttq training run must land in the same neighborhood with
+        // identical ternary support decisions along the way
+        let schema = small_schema();
+        let mut rng = Pcg::seeded(11);
+        let params0 = init_params(&schema, &mut rng);
+        let (x, y) = toy_batch(&mut rng, 64, 10, 4);
+        let run = |policy: KernelPolicy| {
+            let net = LayerGraph::from_schema(&schema, Mode::Fttq, 0.05, policy).unwrap();
+            let mut params = params0.clone();
+            let mut wq = vec![0.05f32, 0.05];
+            for _ in 0..30 {
+                net.train_batch(&mut params, &mut wq, &x, &y, 64, 0.1).unwrap();
+            }
+            net.evaluate(&params, &wq, &x, &y, 64)
+        };
+        let (loss_fp, acc_fp) = run(KernelPolicy::default());
+        let (loss_pk, acc_pk) = run(KernelPolicy::packed(1));
+        assert!((loss_fp - loss_pk).abs() < 0.05, "fp {loss_fp} vs packed {loss_pk}");
+        assert!((acc_fp - acc_pk).abs() < 0.15, "fp {acc_fp} vs packed {acc_pk}");
     }
 }

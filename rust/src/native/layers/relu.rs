@@ -48,7 +48,7 @@ impl Layer for Relu {
         _params: &mut ParamSet,
         _q: QuantSpec,
         _factors: &mut [f32],
-        _cache: &TrainCache,
+        _cache: &mut TrainCache,
         x: &[f32],
         dy: &[f32],
         _n: usize,
@@ -88,7 +88,7 @@ mod tests {
             &mut params,
             q,
             &mut [],
-            &TrainCache::default(),
+            &mut TrainCache::default(),
             &x,
             &dy,
             1,

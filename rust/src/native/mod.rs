@@ -24,5 +24,5 @@
 pub mod kernels;
 pub mod layers;
 
-pub use kernels::KernelPolicy;
+pub use kernels::{KernelPolicy, PackedWeights};
 pub use layers::{Layer, LayerGraph, Mode, QuantSlot, QuantSpec, TrainCache};

@@ -30,6 +30,11 @@
 //! native = true               # pure-Rust backend (no artifacts needed)
 //! aggregator = "mean"         # mean | trimmed_mean[:beta] | median |
 //!                             # norm_clip[:tau] | krum[:f]
+//! kernel = "packed:2"         # native kernel tier (DESIGN.md §15):
+//!                             # naive | blocked[:N] | packed[:N] |
+//!                             # packed-naive; needs native = true.
+//!                             # A local execution knob — never part of
+//!                             # the wire config.
 //!
 //! [fleet]
 //! partition = "nc:2"          # iid | nc:<k> | beta:<b> | dirichlet:alpha=<a>
@@ -97,6 +102,7 @@ use crate::coordinator::adversary::{behavior_names, AdversarySpec};
 use crate::coordinator::aggregation::AggregatorSpec;
 use crate::coordinator::availability::{AvailabilityModel, Phase};
 use crate::data::partition::PartitionStrategy;
+use crate::native::KernelPolicy;
 use crate::scenario::toml::TomlDoc;
 use crate::sim::{SimSpec, TierSet};
 
@@ -143,6 +149,11 @@ pub struct ScenarioManifest {
     /// protocol follows its codec (`Protocol::for_codec`), mirroring the
     /// CLI's `--codec`-implies-protocol rule.
     pub protocol_pinned: bool,
+    /// Native kernel tier from `[experiment] kernel` (None = backend
+    /// default). Lives on the manifest, NOT on `ExperimentConfig`: the
+    /// config crosses the wire in the handshake Config frame, and a local
+    /// execution knob must never change those bytes.
+    pub kernel: Option<KernelPolicy>,
     pub availability: AvailabilityModel,
     pub transport: FleetTransport,
     /// Virtual-time fleet simulation (`[sim]` table); None = real time.
@@ -241,6 +252,7 @@ const EXPERIMENT_KEYS: &[&str] = &[
     "eval_every",
     "native",
     "aggregator",
+    "kernel",
 ];
 const FLEET_KEYS: &[&str] = &["partition", "transport", "listen"];
 const AVAILABILITY_KEYS: &[&str] =
@@ -354,6 +366,19 @@ impl ScenarioManifest {
                 AggregatorSpec::parse(v.as_str().context("[experiment] aggregator")?)
                     .map_err(|e| anyhow!("[experiment] aggregator: {e}"))?;
         }
+        let kernel = match doc.get("experiment", "kernel") {
+            Some(v) => {
+                let spec = v.as_str().context("[experiment] kernel")?;
+                if !base.native_backend {
+                    bail!("[experiment] kernel selects a native kernel tier; it needs native = true");
+                }
+                Some(
+                    KernelPolicy::parse(spec)
+                        .map_err(|e| anyhow!("[experiment] kernel: {e}"))?,
+                )
+            }
+            None => None,
+        };
 
         // -- [fleet] ------------------------------------------------------
         let partition = match doc.get("fleet", "partition") {
@@ -495,6 +520,7 @@ impl ScenarioManifest {
             name,
             base,
             protocol_pinned: protocol_given,
+            kernel,
             availability,
             transport,
             sim,
@@ -896,6 +922,20 @@ mod tests {
             "[experiment]\nprotocol = \"baseline\"\naggregator = \"median\"\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn kernel_key_selects_a_native_tier() {
+        let m = parse("[experiment]\nnative = true\nkernel = \"packed:2\"\n").unwrap();
+        assert_eq!(m.kernel, Some(KernelPolicy::packed(2)));
+        // the knob never reaches the wire config
+        let plain = parse("[experiment]\nnative = true\n").unwrap();
+        assert_eq!(m.base, plain.base);
+        assert_eq!(plain.kernel, None);
+        // needs the native backend, and typos fail like everywhere else
+        assert!(parse("[experiment]\nkernel = \"packed\"\n").is_err());
+        assert!(parse("[experiment]\nnative = true\nkernel = \"simd\"\n").is_err());
+        assert!(parse("[experiment]\nnative = true\nkernel = \"packed:0\"\n").is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::backend::make_backend;
+use crate::coordinator::backend::make_backend_with_policy;
 use crate::coordinator::server::Orchestrator;
 use crate::info;
 use crate::eval::RunMetrics;
@@ -258,8 +258,13 @@ fn run_cell_metrics(
         }
         cache.clone()
     };
-    let backend =
-        make_backend(engine_ref, cfg.model_name(), cfg.batch, cfg.native_backend)?;
+    let backend = make_backend_with_policy(
+        engine_ref,
+        cfg.model_name(),
+        cfg.batch,
+        cfg.native_backend,
+        manifest.kernel,
+    )?;
     let mut orch = match (&manifest.sim, &manifest.transport) {
         (Some(sim), _) => Orchestrator::with_sim(
             cfg,

@@ -1,0 +1,215 @@
+//! Packed-ternary kernel tier property suite (DESIGN.md §15).
+//!
+//! The packed tier computes on the 2-bit ternary cells directly, so its
+//! float-op order legitimately differs from the fp32 contract — it gets
+//! its own determinism oracle instead of joining the seed-bit-identity
+//! chain. This suite asserts, at the integration level:
+//!
+//! * packed fast path ≡ naive packed oracle, bit for bit, at every
+//!   thread count, over random shapes *and* the real mlp-large / cnn
+//!   layer shapes (forward + grad_input);
+//! * |packed − fp32| stays inside a principled accumulation-error bound
+//!   against an f64 reference (the tiers compute the same math, just in
+//!   a different order);
+//! * graph-level training under the packed tier is thread-count
+//!   invariant, and a full federated protocol run on the packed tier is
+//!   deterministic across reruns (everything but wall time, bitwise).
+
+use tfed::config::{ExperimentConfig, Protocol, Task};
+use tfed::coordinator::backend::NativeBackend;
+use tfed::coordinator::server::run_experiment;
+use tfed::model::{init_params, registry};
+use tfed::native::kernels::{
+    gemm_bias, packed_gemm_bias, packed_gemm_bias_naive, packed_grad_input,
+    packed_grad_input_naive,
+};
+use tfed::native::{KernelPolicy, LayerGraph, Mode, PackedWeights};
+use tfed::util::rng::Pcg;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn trits(rng: &mut Pcg, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(3) as i8) - 1).collect()
+}
+
+fn randn(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// The quantized layers' lowered GEMM shapes: mlp-large's three dense
+/// matrices and cnn's two im2col-lowered convs plus its dense head.
+const REAL_SHAPES: &[(usize, usize)] =
+    &[(784, 256), (256, 128), (128, 10), (27, 8), (72, 16), (256, 10)];
+
+#[test]
+fn packed_forward_matches_its_oracle_on_real_and_random_shapes() {
+    let mut rng = Pcg::seeded(401);
+    let random_shapes = [(5usize, 3usize), (33, 65), (130, 66), (1, 17)];
+    for &(k, o) in REAL_SHAPES.iter().chain(&random_shapes) {
+        let n = 9usize;
+        let it = trits(&mut rng, k * o);
+        let pw = PackedWeights::from_pattern(&it, k, o);
+        let x = randn(&mut rng, n * k);
+        let b = randn(&mut rng, o);
+        // symmetric (fttq) and asymmetric (ttq) scale pairs hit both
+        // accumulator layouts of the contract
+        for (ps, ns) in [(0.05f32, 0.05f32), (0.04, 0.07)] {
+            let mut want = vec![0f32; n * o];
+            packed_gemm_bias_naive(&x, &pw, &b, ps, ns, &mut want, n);
+            for threads in [1usize, 2, 3, 8] {
+                let policy = KernelPolicy::packed(threads);
+                let mut got = vec![0f32; n * o];
+                packed_gemm_bias(&x, &pw, &b, ps, ns, &mut got, n, &policy);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "forward {k}x{o} scales ({ps},{ns}) threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_grad_input_matches_its_oracle_on_real_and_random_shapes() {
+    let mut rng = Pcg::seeded(402);
+    let random_shapes = [(5usize, 3usize), (33, 65), (130, 66)];
+    for &(k, o) in REAL_SHAPES.iter().chain(&random_shapes) {
+        let n = 7usize;
+        let it = trits(&mut rng, k * o);
+        let pw = PackedWeights::from_pattern(&it, k, o);
+        let g = randn(&mut rng, n * o);
+        for (ps, ns) in [(0.05f32, 0.05f32), (0.04, 0.07)] {
+            let mut want = vec![0f32; n * k];
+            packed_grad_input_naive(&g, &pw, ps, ns, &mut want, n);
+            for threads in [1usize, 2, 8] {
+                let policy = KernelPolicy::packed(threads);
+                let mut got = vec![0f32; n * k];
+                packed_grad_input(&g, &pw, ps, ns, &mut got, n, &policy);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "grad_input {k}x{o} scales ({ps},{ns}) threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_tracks_fp32_inside_an_accumulation_error_bound() {
+    // both tiers compute b + Σ x·(±scale on the pattern support); an f64
+    // reference bounds each of them by the standard sequential-sum error
+    // k·ε·Σ|terms|, so |packed − fp32| is bounded by twice that
+    let mut rng = Pcg::seeded(403);
+    for &(k, o) in REAL_SHAPES {
+        let n = 5usize;
+        let it = trits(&mut rng, k * o);
+        let pw = PackedWeights::from_pattern(&it, k, o);
+        let x = randn(&mut rng, n * k);
+        let b = randn(&mut rng, o);
+        let wq = 0.05f32;
+        let w_eff: Vec<f32> = it.iter().map(|&t| t as f32 * wq).collect();
+
+        let mut fp = vec![0f32; n * o];
+        gemm_bias(&x, &w_eff, &b, &mut fp, n, k, o, &KernelPolicy::threaded(2));
+        let mut packed = vec![0f32; n * o];
+        packed_gemm_bias(&x, &pw, &b, wq, wq, &mut packed, n, &KernelPolicy::packed(2));
+
+        for i in 0..n {
+            for oo in 0..o {
+                let mut acc = b[oo] as f64;
+                let mut mag = (b[oo] as f64).abs();
+                for kk in 0..k {
+                    let term = x[i * k + kk] as f64 * w_eff[kk * o + oo] as f64;
+                    acc += term;
+                    mag += term.abs();
+                }
+                let bound = 2.0 * (k as f64) * f64::from(f32::EPSILON) * mag + 1e-7;
+                let pv = packed[i * o + oo] as f64;
+                let fv = fp[i * o + oo] as f64;
+                assert!(
+                    (pv - acc).abs() <= bound,
+                    "{k}x{o} [{i},{oo}]: packed {pv} vs f64 {acc} (bound {bound})"
+                );
+                assert!(
+                    (pv - fv).abs() <= 2.0 * bound,
+                    "{k}x{o} [{i},{oo}]: packed {pv} vs fp32 {fv} (bound {})",
+                    2.0 * bound
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_training_is_thread_count_invariant_at_the_graph_level() {
+    for (model, mode) in [("mlp-large", Mode::Fttq), ("cnn", Mode::Ttq)] {
+        let def = registry::model_def(model).unwrap();
+        let dim = def.schema.input_dim;
+        let classes = def.schema.num_classes;
+        let mut data_rng = Pcg::seeded(404);
+        let x: Vec<f32> = (0..32 * dim).map(|_| data_rng.normal().max(0.0)).collect();
+        let y: Vec<u32> = (0..32).map(|_| data_rng.below(classes as u32)).collect();
+        let mut want: Option<(Vec<u32>, Vec<u32>)> = None;
+        for policy in [
+            KernelPolicy::packed_reference(),
+            KernelPolicy::packed(1),
+            KernelPolicy::packed(4),
+        ] {
+            let graph = LayerGraph::from_def(&def, mode, 0.05, policy).unwrap();
+            let mut params = init_params(&def.schema, &mut Pcg::seeded(9));
+            let mut factors = vec![0.05f32; graph.factors_len()];
+            for _ in 0..2 {
+                graph.train_batch(&mut params, &mut factors, &x, &y, 32, 0.05).unwrap();
+            }
+            let got = (
+                params
+                    .tensors
+                    .iter()
+                    .flat_map(|t| t.data.iter().map(|v| v.to_bits()))
+                    .collect::<Vec<_>>(),
+                bits(&factors),
+            );
+            match &want {
+                None => want = Some(got),
+                Some(w) => assert_eq!(w, &got, "{model} {policy:?} diverged"),
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_tier_protocol_run_is_deterministic_across_reruns() {
+    let mut cfg = ExperimentConfig::table2(Protocol::TFedAvg, Task::MnistLike, 17);
+    cfg.n_clients = 3;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.train_samples = 300;
+    cfg.test_samples = 100;
+    cfg.batch = 16;
+    cfg.native_backend = true;
+    let run = || {
+        let mut backend = NativeBackend::for_model("mlp", cfg.batch).unwrap();
+        backend.set_policy(KernelPolicy::packed(2));
+        run_experiment(cfg.clone(), &backend).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.records.len(), 2);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        // everything but the wall clock, bitwise
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
+        assert_eq!(ra.test_acc.to_bits(), rb.test_acc.to_bits());
+        assert_eq!(ra.test_loss.to_bits(), rb.test_loss.to_bits());
+        assert_eq!(ra.up_bytes, rb.up_bytes);
+        assert_eq!(ra.down_bytes, rb.down_bytes);
+        assert_eq!(ra.up_frames, rb.up_frames);
+        assert_eq!(ra.down_frames, rb.down_frames);
+        assert_eq!(bits(&ra.factors), bits(&rb.factors));
+    }
+    assert!(a.final_acc().is_finite());
+}
